@@ -1,0 +1,6 @@
+"""Repo-root pytest shim: make `compile` importable when pytest runs from
+the repository root (`pytest python/tests/`) as well as from python/."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

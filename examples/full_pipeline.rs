@@ -1,0 +1,128 @@
+//! End-to-end driver (DESIGN.md E9): the complete N-TORC toolflow on a
+//! real (simulated) workload, proving all layers compose:
+//!
+//!   Phase 0  PJRT training of the fixed `model2` artifact on simulated
+//!            DROPBEAR data, logging the loss curve (the AOT three-layer
+//!            path: Pallas kernels -> JAX train_step -> HLO -> PJRT).
+//!   Phase 1  HLS synthesis database (Vivado stand-in).
+//!   Phase 2  Random-forest cost/latency models (Table I check).
+//!   Phase 3  Multi-objective Bayesian HPO over the network family,
+//!            training candidates with the native substrate.
+//!   Phase 4  MIP reuse-factor deployment of the Pareto set under the
+//!            200 µs constraint (Table III shape), cross-checked against
+//!            the HLS simulator's ground truth.
+//!
+//! Results land in results/e2e_*.csv; the run is recorded in
+//! EXPERIMENTS.md. Run: `cargo run --release --example full_pipeline`
+//! (NTORC_E2E_FULL=1 for the larger preset).
+
+use ntorc::coordinator::{prepare_data, Pipeline, PipelineConfig};
+use ntorc::data::rmse;
+use ntorc::hls::Metric;
+use ntorc::hpo::pareto_trials;
+use ntorc::report;
+use ntorc::rng::Rng;
+use ntorc::runtime::Runtime;
+use ntorc::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("NTORC_E2E_FULL").is_ok();
+    let mut cfg = if full { PipelineConfig::default() } else { PipelineConfig::smoke() };
+    if !full {
+        // Give the smoke preset a little more substance for the E2E record.
+        cfg.hpo.n_trials = 12;
+        cfg.budget.steps = 120;
+    }
+    let t_all = std::time::Instant::now();
+
+    // ---- Phase 0: PJRT training of the fixed artifact --------------------
+    println!("== Phase 0: AOT/PJRT training of `model2` ==");
+    let sim = report::standard_simulator();
+    let rt = Runtime::new("artifacts")?;
+    let model = rt.load("model2")?;
+    let data = prepare_data(&sim, &cfg.data, model.meta.window);
+    let mut state = model.init_state(cfg.hpo.seed)?;
+    let mut rng = Rng::new(cfg.hpo.seed ^ 99);
+    let steps = if full { 400 } else { 120 };
+    let log = model.train_epochs(&mut state, &data.train, steps, &mut rng)?;
+    let curve: Vec<Vec<String>> = log
+        .losses
+        .iter()
+        .enumerate()
+        .map(|(i, l)| vec![i.to_string(), format!("{l:.6}")])
+        .collect();
+    report::write_csv("e2e_loss_curve", &["step", "loss"], &curve)?;
+    println!(
+        "   {} steps in {:.1}s ({:.1} steps/s); loss {:.4} -> {:.4}  [results/e2e_loss_curve.csv]",
+        steps,
+        log.seconds,
+        steps as f64 / log.seconds,
+        log.losses.first().unwrap(),
+        log.losses.last().unwrap()
+    );
+    let va = data.val.take(150);
+    let mut preds = Vec::new();
+    for i in 0..va.len() {
+        let x = Tensor::from_vec(&[1, model.meta.window], va.x.row(i).to_vec());
+        preds.push(model.predict_one(&state, &x)?);
+    }
+    println!("   PJRT val RMSE: {:.4}", rmse(&preds, &va.y));
+
+    // ---- Phase 1: HLS database -------------------------------------------
+    println!("== Phase 1: HLS synthesis database ==");
+    let pipe = Pipeline::new(cfg);
+    let t0 = std::time::Instant::now();
+    let db = pipe.synth_database();
+    println!("   {} unique (layer, reuse) samples in {:?}", db.len(), t0.elapsed());
+
+    // ---- Phase 2: cost/latency models --------------------------------------
+    println!("== Phase 2: random-forest cost/latency models ==");
+    let models = pipe.fit_models(&db);
+    let (h1, rows1) = report::table1_rows(&models);
+    report::write_csv("e2e_table1", &h1, &rows1)?;
+    let lat_r2: Vec<f64> = models
+        .validation
+        .iter()
+        .filter(|v| v.metric == Metric::Latency)
+        .map(|v| v.metrics.r2)
+        .collect();
+    println!("   latency R²: {lat_r2:.3?}  [results/e2e_table1.csv]");
+
+    // ---- Phase 3: HPO ------------------------------------------------------
+    println!("== Phase 3: multi-objective HPO ==");
+    let t0 = std::time::Instant::now();
+    let out = report::fig5_run(&pipe, &sim);
+    let front = pareto_trials(&out.trials);
+    println!(
+        "   {} trials in {:?}; Pareto front {} (best RMSE {:.4})",
+        out.trials.len(),
+        t0.elapsed(),
+        front.len(),
+        front.last().map(|t| t.rmse).unwrap_or(f64::NAN)
+    );
+    let (h5, rows5) = report::fig5_rows(&out);
+    report::write_csv("e2e_fig5", &h5, &rows5)?;
+
+    // ---- Phase 4: MIP deployment -------------------------------------------
+    println!("== Phase 4: MIP deployment (200 µs budget) ==");
+    let deployed = report::deploy_pareto(&pipe, &models, &out.trials);
+    let (h3, rows3) = report::table3_rows(&deployed);
+    print!("{}", report::fmt_table("deployed Pareto networks", &h3, &rows3));
+    report::write_csv("e2e_table3", &h3, &rows3)?;
+    for d in &deployed {
+        // Predicted vs simulator ground truth at the chosen assignment.
+        let lat_err = 100.0 * (d.predicted.latency - d.actual.latency).abs() / d.actual.latency;
+        println!(
+            "   {}: predicted vs actual latency error {:.1}% ({} layers)",
+            d.trial.cfg.signature(),
+            lat_err,
+            d.reuse.len()
+        );
+        assert!(
+            d.latency_us <= 200.0 + 1e-6,
+            "deployment exceeded the real-time budget"
+        );
+    }
+    println!("E2E complete in {:?}", t_all.elapsed());
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! HLS design-space explorer: interactively sweep one layer through the
+//! synthesis simulator — the Fig 4 experiment as a tool.
+//!
+//! Run: `cargo run --release --example hls_explorer -- dense 512 64`
+//! (kind n_in n_out [seq]); prints the cost/latency trade-off curve for
+//! every valid reuse factor plus the device utilization on the ZU7EV, and
+//! marks the paper-style "knee" choices a deployment would pick.
+
+use ntorc::coordinator::candidate_reuse_factors;
+use ntorc::hls::{HlsSim, ZU7EV};
+use ntorc::layers::{LayerKind, LayerSpec};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let kind = args
+        .first()
+        .and_then(|s| LayerKind::from_name(s))
+        .unwrap_or(LayerKind::Dense);
+    let n_in: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let n_out: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let seq: usize = args
+        .get(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if kind == LayerKind::Dense { 1 } else { 64 });
+
+    let spec = LayerSpec::new(kind, n_in, n_out, seq);
+    let sim = HlsSim::default();
+    println!(
+        "HLS design space for {} layer: n_in={} n_out={} seq={} (P = {} mults/step)",
+        kind.name(),
+        n_in,
+        n_out,
+        seq,
+        n_in * n_out
+    );
+    println!(
+        "{:>8} {:>10} {:>10} {:>8} {:>8} {:>8} {:>12} {:>10}",
+        "reuse", "block", "LUT", "FF", "DSP", "BRAM", "lat(cycles)", "lat(µs)"
+    );
+    let mut pareto: Vec<(f64, f64)> = Vec::new();
+    for r in candidate_reuse_factors(&spec, 28) {
+        let c = sim.synth_layer(&spec, r);
+        let us = c.latency / ZU7EV.clock_mhz;
+        println!(
+            "{:>8} {:>10} {:>10.0} {:>8.0} {:>8.0} {:>8.0} {:>12.0} {:>10.2}",
+            r,
+            spec.block_factor(r),
+            c.lut,
+            c.ff,
+            c.dsp,
+            c.bram,
+            c.latency,
+            us
+        );
+        pareto.push((c.resource_sum(), c.latency));
+    }
+    // Utilization of the fastest (R=1) point.
+    let fast = sim.synth_layer(&spec, 1);
+    println!(
+        "\nfully parallel (R=1) utilization on XCZU7EV: \
+         {:.1}% LUT, {:.1}% FF, {:.1}% DSP, {:.1}% BRAM18",
+        100.0 * fast.lut / ZU7EV.luts as f64,
+        100.0 * fast.ff / ZU7EV.ffs as f64,
+        100.0 * fast.dsp / ZU7EV.dsps as f64,
+        100.0 * fast.bram / ZU7EV.bram18 as f64,
+    );
+    let feasible = pareto
+        .iter()
+        .filter(|(_, lat)| *lat <= 50_000.0)
+        .count();
+    println!(
+        "{feasible}/{} reuse factors meet the paper's 50,000-cycle (200 µs) budget on their own",
+        pareto.len()
+    );
+}

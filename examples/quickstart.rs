@@ -1,0 +1,83 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load the AOT-compiled `quickstart` model (Pallas kernels -> JAX ->
+//!    HLO text, built once by `make artifacts`).
+//! 2. Train it through the PJRT runtime on simulated DROPBEAR data —
+//!    no Python anywhere in this process.
+//! 3. Optimize its FPGA deployment: fit cost/latency models on the HLS
+//!    simulator and assign per-layer reuse factors with the MIP solver
+//!    under the paper's 200 µs budget.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ntorc::coordinator::{prepare_data, DataConfig, Pipeline, PipelineConfig};
+use ntorc::data::rmse;
+use ntorc::dropbear::{SimConfig, Simulator};
+use ntorc::rng::Rng;
+use ntorc::runtime::Runtime;
+use ntorc::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. load the artifact --------------------------------------------
+    let rt = Runtime::new("artifacts")?;
+    let model = rt.load("quickstart")?;
+    println!(
+        "loaded quickstart: {} ({} multiplies, window {})",
+        model.meta.cfg.signature(),
+        model.meta.workload_multiplies,
+        model.meta.window
+    );
+
+    // --- 2. train through PJRT on simulated DROPBEAR ---------------------
+    let sim = Simulator::new(SimConfig::default());
+    let data = prepare_data(&sim, &DataConfig::smoke(), model.meta.window);
+    println!(
+        "dataset: {} train / {} val windows",
+        data.train.len(),
+        data.val.len()
+    );
+    let mut state = model.init_state(42)?;
+    let mut rng = Rng::new(7);
+    let log = model.train_epochs(&mut state, &data.train, 150, &mut rng)?;
+    println!(
+        "trained 150 PJRT steps in {:.2}s: loss {:.4} -> {:.4}",
+        log.seconds,
+        log.losses.first().unwrap(),
+        log.losses.last().unwrap()
+    );
+
+    // Validation RMSE via the compiled predict executable.
+    let va = data.val.take(100);
+    let mut preds = Vec::with_capacity(va.len());
+    for i in 0..va.len() {
+        let x = Tensor::from_vec(&[1, model.meta.window], va.x.row(i).to_vec());
+        preds.push(model.predict_one(&state, &x)?);
+    }
+    println!("val RMSE: {:.4} (normalized roller units)", rmse(&preds, &va.y));
+
+    // --- 3. deploy: MIP reuse-factor assignment ---------------------------
+    let pipe = Pipeline::new(PipelineConfig::smoke());
+    let db = pipe.synth_database();
+    let models = pipe.fit_models(&db);
+    let plan = model.meta.cfg.plan();
+    let prob = models.build_problem(&plan, 50_000.0, 32);
+    let (sol, stats) = ntorc::mip::solve_bb(&prob).expect("feasible deployment");
+    println!(
+        "MIP deployment ({} B&B nodes): predicted latency {:.1} µs, cost {:.0}",
+        stats.nodes,
+        sol.latency / 250.0,
+        sol.cost
+    );
+    for (i, (&j, spec)) in sol.pick.iter().zip(&plan).enumerate() {
+        let choice = &prob.layers[i][j];
+        println!(
+            "  layer {i} {:7} n_in={:4} n_out={:4} seq={:4}  -> reuse {}",
+            spec.kind.name(),
+            spec.n_in,
+            spec.n_out,
+            spec.seq,
+            choice.reuse
+        );
+    }
+    Ok(())
+}

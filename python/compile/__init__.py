@@ -1,0 +1,5 @@
+"""Build-time compile path: Layer-1 Pallas kernels + Layer-2 JAX model.
+
+Never imported at runtime; `make artifacts` runs `python -m compile.aot`
+once and the Rust binary is self-contained afterwards.
+"""

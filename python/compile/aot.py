@@ -1,0 +1,135 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+Run once at build time (`make artifacts`); Python is never on the request
+path.  For every fixed configuration in ``model.CONFIGS`` this emits
+
+    artifacts/<name>_predict.hlo.txt   (params..., x)            -> (pred,)
+    artifacts/<name>_train.hlo.txt     (params..., m..., v..., t, x, y)
+                                       -> (params'..., m'..., v'..., t', loss)
+    artifacts/<name>.meta.json         parameter manifest + layer plan
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+BATCH = 32  # training batch compiled into the artifact
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(name: str, cfg: M.NetConfig, out_dir: str) -> dict:
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = len(params)
+    p_spec = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    x_spec = jax.ShapeDtypeStruct((BATCH, cfg.window), jnp.float32)
+    x1_spec = jax.ShapeDtypeStruct((1, cfg.window), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((BATCH,), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def predict_flat(*args):
+        params, x = list(args[:n_params]), args[n_params]
+        return (M.forward(cfg, params, x),)
+
+    def train_flat(*args):
+        i = 0
+        params = list(args[i : i + n_params]); i += n_params
+        m = list(args[i : i + n_params]); i += n_params
+        v = list(args[i : i + n_params]); i += n_params
+        t, x, y = args[i], args[i + 1], args[i + 2]
+        p2, m2, v2, t2, loss = M.train_step(cfg, params, m, v, t, x, y)
+        return tuple(p2) + tuple(m2) + tuple(v2) + (t2, loss)
+
+    files = {}
+    for tag, fn, spec in (
+        ("predict", predict_flat, (*p_spec, x1_spec)),
+        ("train", train_flat, (*p_spec, *p_spec, *p_spec, t_spec, x_spec, y_spec)),
+    ):
+        lowered = jax.jit(fn).lower(*spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}_{tag}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        files[tag] = os.path.basename(path)
+        print(f"  {path}: {len(text)} chars")
+
+    meta = {
+        "name": name,
+        "window": cfg.window,
+        "batch": BATCH,
+        "conv": [list(c) for c in cfg.conv],
+        "lstm": list(cfg.lstm),
+        "dense": list(cfg.dense),
+        "workload_multiplies": M.workload_multiplies(cfg),
+        "params": M.param_manifest(cfg),
+        "layer_plan": M.layer_plan(cfg),
+        "adam": M.ADAM,
+        "files": files,
+        "arg_order": "predict: params..., x(1,window); "
+        "train: params..., m..., v..., t(), x(batch,window), y(batch)",
+        "result_order": "predict: (pred,); train: (params..., m..., v..., t, loss)",
+    }
+    meta_path = os.path.join(out_dir, f"{name}.meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1, sort_keys=True)
+    return meta
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources, for the Makefile no-op check."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _dirs, fnames in sorted(os.walk(base)):
+        for fn in sorted(fnames):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single config")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    stamp = os.path.join(args.out_dir, ".stamp")
+    fp = input_fingerprint()
+    if os.path.exists(stamp) and open(stamp).read().strip() == fp and not args.only:
+        print("artifacts up to date; nothing to do")
+        return
+
+    names = [args.only] if args.only else list(M.CONFIGS)
+    for name in names:
+        print(f"lowering {name} ...")
+        lower_config(name, M.CONFIGS[name], args.out_dir)
+    if not args.only:
+        with open(stamp, "w") as f:
+            f.write(fp)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; lowered with interpret=True)."""
+
+from .rf_gemv import (  # noqa: F401
+    rf_matmul,
+    rf_matmul_scheduled,
+    schedule_for_reuse,
+    vmem_footprint_words,
+)
+from .conv1d import conv1d_pallas  # noqa: F401
+from .lstm import lstm_cell_pallas, lstm_pallas  # noqa: F401
+from .dense import dense_pallas  # noqa: F401

@@ -1,0 +1,27 @@
+"""Layer 1 — 'valid' 1-D convolution as an im2col + blocked-matmul kernel.
+
+HLS4ML lowers Conv1D to the same folded GEMV datapath as dense layers with
+``n_in = channels * kernel`` and ``n_out = filters`` (paper §II-B1); we keep
+that structure: the data movement (im2col) happens at the jnp level where
+XLA fuses it into the surrounding graph, and the arithmetic hot-spot runs
+through the reuse-factor-blocked Pallas matmul.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .rf_gemv import rf_matmul
+
+
+def conv1d_pallas(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x (B,S,Cin), w (k,Cin,F), b (F,) -> (B, S-k+1, F)."""
+    batch, s, cin = x.shape
+    k, cin2, f = w.shape
+    assert cin == cin2, f"channel mismatch {x.shape} vs {w.shape}"
+    s_out = s - k + 1
+    patches = ref.im2col(x, k).reshape(batch * s_out, k * cin)
+    out = rf_matmul(patches, w.reshape(k * cin, f))
+    return out.reshape(batch, s_out, f) + b

@@ -1,0 +1,16 @@
+"""Layer 1 — dense layer on the blocked-matmul datapath.
+
+The HLS4ML dense layer is the canonical ``n_in x n_out`` folded GEMV; here
+it is exactly one reuse-factor-blocked Pallas matmul plus a bias add.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .rf_gemv import rf_matmul
+
+
+def dense_pallas(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x (B,F) @ w (F,N) + b (N,) -> (B,N)."""
+    return rf_matmul(x, w) + b

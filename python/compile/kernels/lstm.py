@@ -1,0 +1,45 @@
+"""Layer 1 — fused LSTM cell on the blocked-matmul datapath.
+
+HLS4ML's LSTM layer folds the per-step gate computation into one
+``n_in = features`` x ``n_out = 4 * units`` GEMV (paper §II-B1).  We fuse
+the input and recurrent contractions the same way — one
+``(features + units) x 4*units`` matmul per step — and run the sequence
+with ``lax.scan`` so the lowered HLO stays compact (a while loop, not an
+unrolled chain; DESIGN.md §7 L2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .rf_gemv import rf_matmul
+
+
+def lstm_cell_pallas(x, h, c, w, bias):
+    """One step. x (B,F), h,c (B,U), w (F+U,4U), bias (4U,) -> (h', c')."""
+    u = h.shape[1]
+    z = rf_matmul(jnp.concatenate([x, h], axis=1), w) + bias
+    i = jax.nn.sigmoid(z[:, 0 * u : 1 * u])
+    f = jax.nn.sigmoid(z[:, 1 * u : 2 * u])
+    g = jnp.tanh(z[:, 2 * u : 3 * u])
+    o = jax.nn.sigmoid(z[:, 3 * u : 4 * u])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_pallas(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Full-sequence LSTM. x (B,S,F) -> (B,S,U)."""
+    b, s, f = x.shape
+    u = w.shape[1] // 4
+    h0 = jnp.zeros((b, u), x.dtype)
+    c0 = jnp.zeros((b, u), x.dtype)
+
+    def step(carry, xt):
+        h, c = carry
+        h, c = lstm_cell_pallas(xt, h, c, w, bias)
+        return (h, c), h
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Layer-1 kernel and Layer-2 building block.
+
+These are the correctness ground truth: pytest (with hypothesis sweeps)
+asserts the Pallas kernels match these to float32 tolerance, and the Rust
+native trainer (`rust/src/nn/`) replicates exactly these semantics so that
+the PJRT-executed artifacts and the Rust substrate agree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x @ w
+
+
+def im2col(x: jax.Array, kernel: int) -> jax.Array:
+    """x (B, S, C) -> patches (B, S-kernel+1, kernel*C) ('valid')."""
+    b, s, c = x.shape
+    s_out = s - kernel + 1
+    idx = jnp.arange(s_out)[:, None] + jnp.arange(kernel)[None, :]  # (S_out, k)
+    patches = x[:, idx, :]  # (B, S_out, k, C)
+    return patches.reshape(b, s_out, kernel * c)
+
+
+def conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """'valid' 1-D convolution. x (B,S,Cin), w (k,Cin,F), b (F,) -> (B,S',F)."""
+    k, cin, f = w.shape
+    patches = im2col(x, k)  # (B, S', k*Cin)
+    return patches @ w.reshape(k * cin, f) + b
+
+
+def maxpool1d(x: jax.Array, pool: int = 2) -> jax.Array:
+    """Non-overlapping max pool along the sequence axis (floor semantics)."""
+    b, s, c = x.shape
+    s_out = s // pool
+    return x[:, : s_out * pool, :].reshape(b, s_out, pool, c).max(axis=2)
+
+
+def lstm_cell(x, h, c, w, bias):
+    """One LSTM step. x (B,F), h,c (B,U), w (F+U, 4U), bias (4U,).
+
+    Gate order i, f, g, o (matches Keras/HLS4ML).
+    """
+    u = h.shape[1]
+    z = jnp.concatenate([x, h], axis=1) @ w + bias
+    i = jax.nn.sigmoid(z[:, 0 * u : 1 * u])
+    f = jax.nn.sigmoid(z[:, 1 * u : 2 * u])
+    g = jnp.tanh(z[:, 2 * u : 3 * u])
+    o = jax.nn.sigmoid(z[:, 3 * u : 4 * u])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Full sequence LSTM returning the whole hidden sequence.
+
+    x (B,S,F) -> h_seq (B,S,U).
+    """
+    b, s, f = x.shape
+    u = w.shape[1] // 4
+    h0 = jnp.zeros((b, u), x.dtype)
+    c0 = jnp.zeros((b, u), x.dtype)
+
+    def step(carry, xt):
+        h, c = carry
+        h, c = lstm_cell(xt, h, c, w, bias)
+        return (h, c), h
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return x @ w + b
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)

@@ -1,0 +1,183 @@
+"""Layer 1 — the reuse-factor-blocked matmul Pallas kernel.
+
+HLS4ML folds every layer's ``n_in x n_out`` matrix-vector product onto
+``block_factor = ceil(n_in * n_out / R)`` physical multipliers, where ``R``
+is the *reuse factor*: the datapath is a fixed silicon tile time-multiplexed
+``R`` times over the weight matrix.
+
+The TPU analogue of that schedule is the HBM<->VMEM block schedule (see
+DESIGN.md §2 "Hardware-Adaptation"): we tile the weight matrix into
+VMEM-resident ``(block_k, block_n)`` tiles — the "instantiated multiplier
+array" — and iterate the Pallas grid over the tiles — the "reuse
+iterations".  ``schedule_for_reuse`` converts an HLS4ML-style reuse factor
+into block sizes so the same design knob drives both deployments.
+
+All kernels run ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO ops
+that any backend (including the Rust-side PJRT CPU client) can run.
+
+The op is wrapped in ``jax.custom_vjp`` so the Layer-2 model can be
+differentiated end-to-end with the *backward* passes also expressed as
+reuse-factor-blocked Pallas matmuls (dX = dY @ W^T, dW = X^T @ dY).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flip to False to bypass Pallas entirely (debugging aid; ref path).
+USE_PALLAS = True
+
+# Default VMEM tile budget, in f32 words, for automatic schedules.  Chosen
+# so that (bm*bk + bk*bn + bm*bn) stays far below real-TPU VMEM (~16 MiB)
+# while keeping grids small enough for interpret-mode speed.
+_DEFAULT_TILE_WORDS = 64 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest power-of-two block <= target, capped at the next power of
+    two above ``dim`` so padding never exceeds 2x the real extent."""
+    cap = 1
+    while cap < dim:
+        cap *= 2
+    b = 1
+    while b * 2 <= min(target, cap):
+        b *= 2
+    return b
+
+
+def schedule_for_reuse(k: int, n: int, reuse: int) -> tuple[int, int]:
+    """Map an HLS4ML reuse factor to a ``(block_k, block_n)`` VMEM tile.
+
+    ``reuse`` time-multiplexes ``block_factor = ceil(k*n / reuse)``
+    multipliers; we pick a tile with approximately ``block_factor``
+    elements, biased square-ish so both operand slabs stay small.
+    """
+    reuse = max(1, min(reuse, k * n))
+    block_elems = max(1, math.ceil(k * n / reuse))
+    bk = _pick_block(k, max(1, int(math.sqrt(block_elems))))
+    bn = _pick_block(n, max(1, block_elems // bk))
+    return bk, bn
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """Grid = (gm, gn, gk).  The output block is revisited across the k
+    dimension and used as the accumulator (interpret-friendly; on real TPU
+    this would be a VMEM scratch accumulator instead)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _rf_matmul_impl(
+    x: jax.Array,
+    w: jax.Array,
+    block_m: int,
+    block_k: int,
+    block_n: int,
+) -> jax.Array:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+
+    mp, kp, np_ = _round_up(m, block_m), _round_up(k, block_k), _round_up(n, block_n)
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+    gm, gk, gn = mp // block_m, kp // block_k, np_ // block_n
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(x, w)
+    return out[:m, :n]
+
+
+def _auto_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Pick blocks so each operand tile fits the VMEM word budget and the
+    grid stays small (interpret mode executes the grid as an HLO loop)."""
+    bm = _pick_block(m, 128)
+    bk = _pick_block(k, 256)
+    bn = _pick_block(n, 256)
+    while bm * bk + bk * bn + bm * bn > _DEFAULT_TILE_WORDS:
+        # Shrink the largest contributor first.
+        if bk >= bm and bk >= bn and bk > 1:
+            bk //= 2
+        elif bm >= bn and bm > 1:
+            bm //= 2
+        elif bn > 1:
+            bn //= 2
+        else:
+            break
+    return bm, bk, bn
+
+
+@jax.custom_vjp
+def rf_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x (M,K) @ w (K,N) -> (M,N)`` through the blocked Pallas kernel."""
+    if not USE_PALLAS:
+        return x @ w
+    bm, bk, bn = _auto_blocks(x.shape[0], x.shape[1], w.shape[1])
+    return _rf_matmul_impl(x, w, bm, bk, bn)
+
+
+def _rf_matmul_fwd(x, w):
+    return rf_matmul(x, w), (x, w)
+
+
+def _rf_matmul_bwd(res, g):
+    x, w = res
+    # Both backward contractions reuse the same blocked kernel: the HLS4ML
+    # datapath story (everything is a folded GEMM) holds for the gradients.
+    if USE_PALLAS:
+        bm, bk, bn = _auto_blocks(g.shape[0], g.shape[1], w.shape[0])
+        dx = _rf_matmul_impl(g, w.T, bm, bk, bn)
+        bm, bk, bn = _auto_blocks(x.shape[1], x.shape[0], g.shape[1])
+        dw = _rf_matmul_impl(x.T, g, bm, bk, bn)
+    else:
+        dx, dw = g @ w.T, x.T @ g
+    return dx, dw
+
+
+rf_matmul.defvjp(_rf_matmul_fwd, _rf_matmul_bwd)
+
+
+def rf_matmul_scheduled(x: jax.Array, w: jax.Array, reuse: int) -> jax.Array:
+    """Forward-only matmul with the block schedule derived from an explicit
+    HLS4ML reuse factor (used by kernel tests and the deployment-shape
+    analysis in DESIGN.md §7; the training path uses the auto schedule)."""
+    bk, bn = schedule_for_reuse(x.shape[1], w.shape[1], reuse)
+    bm = _pick_block(x.shape[0], 128)
+    return _rf_matmul_impl(x, w, bm, bk, bn)
+
+
+def vmem_footprint_words(m: int, k: int, n: int, reuse: int) -> int:
+    """Estimated per-step VMEM residency (f32 words) of the scheduled
+    kernel — the quantity bounded by real-TPU VMEM.  Used by the perf
+    analysis, not by execution."""
+    bk, bn = schedule_for_reuse(k, n, reuse)
+    bm = _pick_block(m, 128)
+    return bm * bk + bk * bn + bm * bn

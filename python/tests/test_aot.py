@@ -1,0 +1,77 @@
+"""AOT path tests: HLO text emission, manifest consistency, round-trip."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+def test_hlo_text_emission_tiny():
+    """Lowering a minimal config must produce parseable-looking HLO text
+    with an ENTRY computation and a tuple root."""
+    cfg = M.NetConfig(window=16, conv=(), lstm=(), dense=(4, 1))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    x = jax.ShapeDtypeStruct((1, 16), jnp.float32)
+
+    def f(*args):
+        return (M.forward(cfg, list(args[:-1]), args[-1]),)
+
+    text = aot.to_hlo_text(jax.jit(f).lower(*spec, x))
+    assert "ENTRY" in text and "HloModule" in text
+    assert "f32[1,16]" in text
+
+
+def test_fingerprint_stable():
+    assert aot.input_fingerprint() == aot.input_fingerprint()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/quickstart.meta.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_model():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    for name, cfg in M.CONFIGS.items():
+        meta_path = os.path.join(root, f"{name}.meta.json")
+        if not os.path.exists(meta_path):
+            continue
+        meta = json.load(open(meta_path))
+        assert meta["window"] == cfg.window
+        assert meta["workload_multiplies"] == M.workload_multiplies(cfg)
+        assert len(meta["params"]) == len(M.init_params(cfg, jax.random.PRNGKey(0)))
+        for f in meta["files"].values():
+            assert os.path.exists(os.path.join(root, f))
+
+
+def test_lowered_signature_matches_manifest():
+    """The HLO entry signature must list exactly the parameters the manifest
+    promises, in order, followed by the input window — this is the contract
+    the Rust runtime feeds buffers against.  (The full numeric round-trip
+    through the HLO *text* parser is exercised on the Rust side in
+    rust/tests/runtime_roundtrip.rs, which loads these same artifacts.)"""
+    cfg = M.NetConfig(window=12, conv=(), lstm=(), dense=(3, 1))
+    params = M.init_params(cfg, jax.random.PRNGKey(7))
+
+    def f(*args):
+        return (M.forward(cfg, list(args[:-1]), args[-1], use_pallas=False),)
+
+    spec = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    x_spec = jax.ShapeDtypeStruct((1, 12), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(f).lower(*spec, x_spec))
+
+    # Entry computation must take 4 params (w0, b0, w1, b1) + the window.
+    lines = text.splitlines()
+    entry_at = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    entry_body = "\n".join(lines[entry_at:])
+    params_decl = [l for l in entry_body.splitlines() if " parameter(" in l]
+    assert len(params_decl) == 5, params_decl
+    for shape in ("f32[12,3]", "f32[3]{0}", "f32[3,1]", "f32[1]{0}", "f32[1,12]"):
+        assert shape in entry_body, f"{shape} missing from entry"
+    # Root is a tuple (return_tuple=True).
+    assert any("ROOT" in l and "tuple(" in l for l in entry_body.splitlines())

@@ -1,0 +1,192 @@
+"""Layer-1 kernel correctness: Pallas vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compile path: hypothesis sweeps
+shapes (and the reuse-factor schedule knob) and asserts allclose against
+the reference implementations the Rust substrate also mirrors.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    conv1d_pallas,
+    dense_pallas,
+    lstm_cell_pallas,
+    lstm_pallas,
+    rf_matmul,
+    rf_matmul_scheduled,
+    schedule_for_reuse,
+    vmem_footprint_words,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rnd(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- rf_matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 33),
+    k=st.integers(1, 48),
+    n=st.integers(1, 40),
+)
+def test_rf_matmul_matches_ref(m, k, n):
+    x, w = rnd(m * 1000 + k, m, k), rnd(n, k, n)
+    np.testing.assert_allclose(
+        rf_matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(2, 40),
+    n=st.integers(2, 40),
+    reuse=st.sampled_from([1, 2, 4, 16, 64, 512]),
+)
+def test_rf_matmul_scheduled_reuse_sweep(k, n, reuse):
+    """The paper's deployment knob: any legal reuse factor must not change
+    the numerics, only the schedule."""
+    x, w = rnd(k, 5, k), rnd(n + 7, k, n)
+    np.testing.assert_allclose(
+        rf_matmul_scheduled(x, w, reuse), ref.matmul(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_rf_matmul_grad_matches_ref():
+    x, w = rnd(1, 6, 17), rnd(2, 17, 9)
+
+    def loss_pallas(x, w):
+        return (rf_matmul(x, w) ** 2).sum()
+
+    def loss_ref(x, w):
+        return ((x @ w) ** 2).sum()
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1))(x, w)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gp[0], gr[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gp[1], gr[1], rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(1, 300),
+    n=st.integers(1, 300),
+    reuse=st.integers(1, 4096),
+)
+def test_schedule_block_tracks_reuse(k, n, reuse):
+    """block_k*block_n must approximate ceil(k*n/reuse) = the HLS4ML block
+    factor (within the power-of-two rounding), and never exceed the padded
+    matrix."""
+    bk, bn = schedule_for_reuse(k, n, reuse)
+    assert bk >= 1 and bn >= 1
+    # Power-of-two blocks:
+    assert bk & (bk - 1) == 0 and bn & (bn - 1) == 0
+    # Footprint must stay within the documented VMEM budget.
+    assert vmem_footprint_words(8, k, n, reuse) <= 3 * 64 * 1024
+
+
+def test_rf_matmul_f32_dtype_preserved():
+    x, w = rnd(0, 4, 8), rnd(1, 8, 3)
+    assert rf_matmul(x, w).dtype == jnp.float32
+
+
+# ------------------------------------------------------------------- conv1d
+
+
+@settings(**SETTINGS)
+@given(
+    batch=st.integers(1, 4),
+    s=st.integers(6, 40),
+    cin=st.integers(1, 6),
+    kernel=st.integers(1, 5),
+    f=st.integers(1, 12),
+)
+def test_conv1d_matches_ref(batch, s, cin, kernel, f):
+    x = rnd(s, batch, s, cin)
+    w = rnd(f, kernel, cin, f)
+    b = rnd(cin + 1, f)
+    np.testing.assert_allclose(
+        conv1d_pallas(x, w, b), ref.conv1d(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_conv1d_valid_shape():
+    out = conv1d_pallas(rnd(0, 2, 32, 3), rnd(1, 5, 3, 7), jnp.zeros(7))
+    assert out.shape == (2, 28, 7)
+
+
+# --------------------------------------------------------------------- lstm
+
+
+@settings(**SETTINGS)
+@given(
+    batch=st.integers(1, 4),
+    s=st.integers(1, 12),
+    f=st.integers(1, 8),
+    u=st.integers(1, 10),
+)
+def test_lstm_matches_ref(batch, s, f, u):
+    x = rnd(s * 100 + f, batch, s, f)
+    w = rnd(u, f + u, 4 * u) * 0.3
+    b = rnd(u + 1, 4 * u) * 0.1
+    np.testing.assert_allclose(
+        lstm_pallas(x, w, b), ref.lstm(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_lstm_cell_matches_ref():
+    b_, f, u = 3, 5, 4
+    x, h, c = rnd(0, b_, f), rnd(1, b_, u), rnd(2, b_, u)
+    w, bias = rnd(3, f + u, 4 * u), rnd(4, 4 * u)
+    hp, cp = lstm_cell_pallas(x, h, c, w, bias)
+    hr, cr = ref.lstm_cell(x, h, c, w, bias)
+    np.testing.assert_allclose(hp, hr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(cp, cr, rtol=1e-4, atol=1e-4)
+
+
+def test_lstm_state_propagates():
+    """An impulse at t=0 must influence the final hidden state."""
+    f, u = 1, 4
+    w = jnp.ones((f + u, 4 * u), jnp.float32) * 0.5
+    b = jnp.zeros(4 * u)
+    x0 = jnp.zeros((1, 8, f))
+    x1 = x0.at[0, 0, 0].set(5.0)
+    h0 = lstm_pallas(x0, w, b)[0, -1]
+    h1 = lstm_pallas(x1, w, b)[0, -1]
+    assert float(jnp.abs(h1 - h0).max()) > 1e-4
+
+
+# -------------------------------------------------------------------- dense
+
+
+@settings(**SETTINGS)
+@given(batch=st.integers(1, 8), f=st.integers(1, 64), n=st.integers(1, 48))
+def test_dense_matches_ref(batch, f, n):
+    x, w, b = rnd(f, batch, f), rnd(n, f, n), rnd(f + n, n)
+    np.testing.assert_allclose(
+        dense_pallas(x, w, b), ref.dense(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+# ----------------------------------------------------------------- pooling
+
+
+@settings(**SETTINGS)
+@given(batch=st.integers(1, 3), s=st.integers(2, 21), c=st.integers(1, 5))
+def test_maxpool_floor_semantics(batch, s, c):
+    x = rnd(s, batch, s, c)
+    out = ref.maxpool1d(x, 2)
+    assert out.shape == (batch, s // 2, c)
+    # Each output is the max of its pair.
+    np.testing.assert_allclose(
+        out[:, 0, :], jnp.maximum(x[:, 0, :], x[:, 1, :])
+    )

@@ -1,0 +1,78 @@
+//! Ablation — latency-budget sensitivity (DESIGN.md design-choice
+//! ablation): the paper fixes the real-time constraint at 50,000 cycles
+//! (200 µs from DROPBEAR's 5 kHz rate). How does the minimum resource
+//! cost move as the budget tightens — where is the feasibility cliff?
+//!
+//! Claims checked: cost is monotone non-increasing in the budget (more
+//! time can never cost more); below the sum of minimum layer latencies
+//! the problem is infeasible; the curve flattens once every layer can run
+//! at its cheapest reuse factor.
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::PipelineConfig;
+use ntorc::report;
+
+fn main() {
+    let mut b = Bencher::new("ablation_budget");
+    let (pipe, models) = report::standard_models(PipelineConfig::default());
+
+    let headers = vec!["network", "budget_cycles", "budget_us", "cost", "latency", "feasible"];
+    let mut rows = Vec::new();
+    for (name, net) in report::table4_models() {
+        let plan = net.plan();
+        let mut prev_cost = f64::INFINITY;
+        let mut first_feasible: Option<f64> = None;
+        for budget in [2_000.0f64, 5_000.0, 10_000.0, 20_000.0, 50_000.0, 100_000.0, 250_000.0] {
+            let prob = models.build_problem(&plan, budget, pipe.cfg.max_choices_per_layer);
+            match ntorc::mip::solve_bb(&prob) {
+                Some((sol, _)) => {
+                    assert!(
+                        sol.cost <= prev_cost + 1e-6,
+                        "{name}: cost must be monotone in budget ({} @ {budget} vs {prev_cost})",
+                        sol.cost
+                    );
+                    prev_cost = sol.cost;
+                    first_feasible.get_or_insert(budget);
+                    println!(
+                        "{name} @ {budget:>8.0} cycles ({:>6.1} µs): cost {:>9.0}, latency {:>8.0}",
+                        budget / 250.0,
+                        sol.cost,
+                        sol.latency
+                    );
+                    rows.push(vec![
+                        name.to_string(),
+                        format!("{budget:.0}"),
+                        format!("{:.1}", budget / 250.0),
+                        format!("{:.0}", sol.cost),
+                        format!("{:.0}", sol.latency),
+                        "true".into(),
+                    ]);
+                }
+                None => {
+                    assert!(
+                        first_feasible.is_none(),
+                        "{name}: infeasible at {budget} after feasible at smaller budget"
+                    );
+                    println!("{name} @ {budget:>8.0} cycles: infeasible");
+                    rows.push(vec![
+                        name.to_string(),
+                        format!("{budget:.0}"),
+                        format!("{:.1}", budget / 250.0),
+                        String::new(),
+                        String::new(),
+                        "false".into(),
+                    ]);
+                }
+            }
+        }
+        // The paper's 50k-cycle point must be comfortably feasible.
+        assert!(first_feasible.unwrap_or(f64::INFINITY) <= 50_000.0, "{name} infeasible at 200 µs");
+        b.record(
+            &format!("first_feasible_budget/{name}"),
+            first_feasible.unwrap_or(f64::NAN) * 4.0, // cycles -> ns at 250 MHz
+        );
+    }
+    report::write_csv("ablation_budget", &headers, &rows).expect("csv");
+    println!("{}", report::fmt_table("latency-budget ablation", &headers, &rows));
+    b.finish();
+}

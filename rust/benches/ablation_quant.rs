@@ -1,0 +1,112 @@
+//! Ablation — quantization co-optimization (the paper's §VIII future
+//! work, implemented in `ntorc::quant`): joint (reuse × bit-width)
+//! deployment vs the paper's fixed-16-bit deployment, across latency
+//! budgets. Claim to verify: allowing narrow widths strictly reduces
+//! resource cost at equal latency, with bounded predicted RMSE inflation.
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::candidate_reuse_factors;
+use ntorc::hls::HlsSim;
+use ntorc::layers::LayerSpec;
+use ntorc::quant::{build_quant_problem, solution_rmse_penalty, synth_quantized};
+use ntorc::report;
+
+fn main() {
+    let mut b = Bencher::new("ablation_quant");
+    let sim = HlsSim::default();
+    let nets = report::table4_models();
+
+    let headers = vec![
+        "network", "budget_cycles", "mode", "cost", "latency", "rmse_penalty", "bits_used",
+    ];
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (name, net) in &nets {
+        let plan = net.plan();
+        for budget in [20_000.0f64, 50_000.0] {
+            // Fixed 16-bit (the paper's setting).
+            let predict16 = |spec: &LayerSpec, r: usize, bits: u32| {
+                let c = synth_quantized(&sim, spec, r, bits);
+                (c.resource_sum(), c.latency)
+            };
+            let (prob16, _q16) = build_quant_problem(
+                &plan,
+                budget,
+                0.0, // zero accuracy budget => only 16-bit choices
+                predict16,
+                |s| candidate_reuse_factors(s, 24),
+            );
+            // Joint optimization with a modest accuracy allowance.
+            let (prob_joint, qj) = build_quant_problem(
+                &plan,
+                budget,
+                0.02, // per-layer predicted RMSE allowance
+                predict16,
+                |s| candidate_reuse_factors(s, 24),
+            );
+            let s16 = ntorc::mip::solve_bb(&prob16);
+            let sj = ntorc::mip::solve_bb(&prob_joint);
+            let (Some((s16, _)), Some((sj, _))) = (s16, sj) else {
+                println!("{name} @ {budget}: infeasible, skipping");
+                continue;
+            };
+            let bits_used: Vec<u32> = sj
+                .pick
+                .iter()
+                .enumerate()
+                .map(|(i, &j)| qj[i][j].bits)
+                .collect();
+            let pen = solution_rmse_penalty(&qj, &sj.pick);
+            rows.push(vec![
+                name.to_string(),
+                format!("{budget:.0}"),
+                "fixed16".into(),
+                format!("{:.0}", s16.cost),
+                format!("{:.0}", s16.latency),
+                "0".into(),
+                "16".into(),
+            ]);
+            rows.push(vec![
+                name.to_string(),
+                format!("{budget:.0}"),
+                "joint".into(),
+                format!("{:.0}", sj.cost),
+                format!("{:.0}", sj.latency),
+                format!("{pen:.4}"),
+                format!("{bits_used:?}").replace(',', ";"),
+            ]);
+            // The ablation claim.
+            assert!(
+                sj.cost <= s16.cost + 1e-9,
+                "{name} @ {budget}: joint ({}) worse than fixed16 ({})",
+                sj.cost,
+                s16.cost
+            );
+            println!(
+                "{name} @ {budget:.0} cycles: fixed16 cost {:.0} -> joint {:.0} ({:.1}% saved, \
+                 predicted RMSE +{pen:.4})",
+                s16.cost,
+                sj.cost,
+                100.0 * (1.0 - sj.cost / s16.cost)
+            );
+        }
+    }
+    report::write_csv("ablation_quant", &headers, &rows).expect("csv");
+    println!("{}", report::fmt_table("quantization ablation", &headers, &rows));
+
+    // Time the joint solve (choice sets are ~4x larger).
+    let plan = nets[0].1.plan();
+    b.bench("joint_quant_solve/model1", || {
+        let (prob, _) = build_quant_problem(
+            &plan,
+            50_000.0,
+            0.05,
+            |spec, r, bits| {
+                let c = synth_quantized(&sim, spec, r, bits);
+                (c.resource_sum(), c.latency)
+            },
+            |s| candidate_reuse_factors(s, 16),
+        );
+        ntorc::mip::solve_bb(&prob).is_some()
+    });
+    b.finish();
+}

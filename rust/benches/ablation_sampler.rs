@@ -1,0 +1,57 @@
+//! Ablation — HPO sampler choice (DESIGN.md design-choice ablation):
+//! the paper uses BoTorch's Bayesian multi-objective sampler; how much
+//! does it buy over random search and NSGA-II at equal trial budgets?
+//! Metric: Pareto hypervolume of (RMSE, log workload).
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::{Pipeline, PipelineConfig};
+use ntorc::hpo::{hypervolume_2d, pareto_trials, Sampler};
+use ntorc::report;
+
+fn main() {
+    let mut b = Bencher::new("ablation_sampler");
+    let fast = std::env::var("NTORC_BENCH_FAST").is_ok();
+    let sim = report::standard_simulator();
+
+    let headers = vec!["sampler", "trials", "front_size", "hypervolume", "best_rmse", "seconds"];
+    let mut rows = Vec::new();
+    for sampler in [Sampler::Random, Sampler::Bayes, Sampler::Nsga2] {
+        let mut cfg = PipelineConfig::smoke();
+        cfg.hpo.sampler = sampler;
+        cfg.hpo.n_trials = if fast { 10 } else { 24 };
+        cfg.hpo.n_init = 6;
+        cfg.budget.steps = if fast { 40 } else { 120 };
+        cfg.hpo.space = ntorc::hpo::SearchSpace::default();
+        let pipe = Pipeline::new(cfg);
+        let t0 = std::time::Instant::now();
+        let (trials, _) = pipe.run_hpo(&sim);
+        let secs = t0.elapsed().as_secs_f64();
+        let front = pareto_trials(&trials);
+        let pts: Vec<(f64, f64)> = front
+            .iter()
+            .map(|t| (t.rmse, (t.workload + 1.0).ln()))
+            .collect();
+        let hv = hypervolume_2d(&pts, (1.0, 25.0));
+        let best = front.last().map(|t| t.rmse).unwrap_or(f64::NAN);
+        println!(
+            "{sampler:?}: {} trials, front {}, HV {:.3}, best RMSE {:.4}, {:.1}s",
+            trials.len(),
+            front.len(),
+            hv,
+            best,
+            secs
+        );
+        rows.push(vec![
+            format!("{sampler:?}"),
+            trials.len().to_string(),
+            front.len().to_string(),
+            format!("{hv:.4}"),
+            format!("{best:.4}"),
+            format!("{secs:.2}"),
+        ]);
+        b.record(&format!("hpo/{sampler:?}"), secs * 1e9);
+    }
+    report::write_csv("ablation_sampler", &headers, &rows).expect("csv");
+    println!("{}", report::fmt_table("sampler ablation", &headers, &rows));
+    b.finish();
+}

@@ -1,0 +1,40 @@
+//! Bench E1 — Fig 4: regenerate the LUT-cost / latency scaling curves for
+//! the three HLS4ML layer datapaths and time the synthesis simulator.
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::{Pipeline, PipelineConfig};
+use ntorc::layers::{LayerKind, LayerSpec};
+use ntorc::report;
+
+fn main() {
+    let mut b = Bencher::new("fig4_scaling");
+    let pipe = Pipeline::new(PipelineConfig::default());
+
+    // Regenerate the figure data.
+    let (h, rows) = report::fig4_rows(&pipe);
+    report::write_csv("fig4_scaling", &h, &rows).expect("csv");
+    println!("{}", report::fmt_table("Fig 4 — datapath scaling", &h, &rows));
+
+    // Shape checks mirroring the paper's qualitative claims.
+    let latencies = |kind: &str| -> Vec<f64> {
+        rows.iter()
+            .filter(|r| r[0] == kind)
+            .map(|r| r[9].parse::<f64>().unwrap())
+            .collect()
+    };
+    for kind in ["conv1d", "lstm", "dense"] {
+        let lat = latencies(kind);
+        assert!(
+            lat.windows(2).all(|w| w[1] >= w[0] * 0.98),
+            "{kind}: latency must rise with reuse"
+        );
+    }
+
+    // Time the simulator itself (it is inside the DB-generation loop).
+    let dense = LayerSpec::new(LayerKind::Dense, 512, 64, 1);
+    let lstm = LayerSpec::new(LayerKind::Lstm, 32, 64, 32);
+    b.bench("synth_layer/dense_512x64", || pipe.hls.synth_layer(&dense, 16));
+    b.bench("synth_layer/lstm_32x64", || pipe.hls.synth_layer(&lstm, 16));
+    b.bench("fig4_rows/full_sweep", || report::fig4_rows(&pipe).1.len());
+    b.finish();
+}

@@ -1,0 +1,47 @@
+//! Bench E2 — Fig 5: the multi-objective hyperparameter search producing
+//! the (RMSE, workload) Pareto front, with the prior-work reference
+//! points retrained on the same data. NTORC_BENCH_FAST=1 shrinks trials.
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::{Pipeline, PipelineConfig};
+use ntorc::hpo::{hypervolume_2d, pareto_trials};
+use ntorc::report;
+
+fn main() {
+    let mut b = Bencher::new("fig5_pareto");
+    let fast = std::env::var("NTORC_BENCH_FAST").is_ok();
+    let mut cfg = PipelineConfig::smoke();
+    cfg.hpo.n_trials = if fast { 10 } else { 28 };
+    cfg.hpo.n_init = if fast { 4 } else { 8 };
+    cfg.budget.steps = if fast { 60 } else { 160 };
+    cfg.hpo.space = ntorc::hpo::SearchSpace::default();
+    let pipe = Pipeline::new(cfg);
+    let sim = report::standard_simulator();
+
+    let t0 = std::time::Instant::now();
+    let out = report::fig5_run(&pipe, &sim);
+    b.record("hpo_run/total", t0.elapsed().as_nanos() as f64);
+
+    let front = pareto_trials(&out.trials);
+    let pts: Vec<(f64, f64)> = front
+        .iter()
+        .map(|t| (t.rmse, (t.workload + 1.0).ln()))
+        .collect();
+    let hv = hypervolume_2d(&pts, (1.0, 25.0));
+    println!(
+        "{} trials, front size {}, hypervolume {:.3}",
+        out.trials.len(),
+        front.len(),
+        hv
+    );
+    assert!(front.len() >= 2, "degenerate front");
+    // Front must be properly ordered: cheaper ⇒ less accurate.
+    for w in front.windows(2) {
+        assert!(w[0].rmse >= w[1].rmse && w[0].workload <= w[1].workload);
+    }
+
+    let (h, rows) = report::fig5_rows(&out);
+    println!("{}", report::fmt_table("Fig 5 — Pareto front", &h, &rows));
+    report::write_csv("fig5_pareto", &h, &rows).expect("csv");
+    b.finish();
+}

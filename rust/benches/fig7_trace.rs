@@ -1,0 +1,51 @@
+//! Bench E6 — Fig 7: train two models of different capacity and trace
+//! them against the ground-truth roller position on a standard-index test
+//! run. Shape claim: the lower-RMSE model tracks the roller better.
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::{DataConfig, TrainBudget};
+use ntorc::layers::NetConfig;
+use ntorc::report;
+
+fn main() {
+    let mut b = Bencher::new("fig7_trace");
+    let fast = std::env::var("NTORC_BENCH_FAST").is_ok();
+    let sim = report::standard_simulator();
+    let dc = DataConfig {
+        seconds_per_run: if fast { 1.0 } else { 3.0 },
+        ..DataConfig::smoke()
+    };
+    let budget = TrainBudget {
+        steps: if fast { 60 } else { 400 },
+        ..TrainBudget::smoke()
+    };
+    // "model 2" (higher capacity, conv+lstm+dense) vs "model 1" (small).
+    let configs = vec![
+        ("strong", NetConfig::new(64, vec![(3, 8)], vec![8], vec![16, 1])),
+        ("weak", NetConfig::new(32, vec![], vec![], vec![4, 1])),
+    ];
+    let named: Vec<(&str, NetConfig)> = configs.iter().map(|(n, c)| (*n, c.clone())).collect();
+
+    let t0 = std::time::Instant::now();
+    let out = report::fig7_run(&sim, &dc, &named, &budget, 0xF1607);
+    b.record("fig7_run/train+trace", t0.elapsed().as_nanos() as f64);
+
+    for (name, rmse) in &out.rmse {
+        println!("{name}: trace RMSE {rmse:.4}");
+        assert!(rmse.is_finite() && *rmse < 1.0);
+    }
+    let headers = vec!["t_s", "vibration", "roller_true", "pred_strong", "pred_weak"];
+    report::write_csv("fig7_trace", &headers, &out.rows).expect("csv");
+    println!("trace rows: {} -> results/fig7_trace.csv", out.rows.len());
+    // The capacity ordering should show up as an RMSE ordering (the Fig 7
+    // cyan-vs-red comparison); allow slack for tiny training budgets.
+    if !fast {
+        let strong = out.rmse.iter().find(|(n, _)| n == "strong").unwrap().1;
+        let weak = out.rmse.iter().find(|(n, _)| n == "weak").unwrap().1;
+        assert!(
+            strong <= weak * 1.25,
+            "higher-capacity model should track at least as well: {strong} vs {weak}"
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,44 @@
+//! Bench E7 — Fig 8: model prediction vs HLS ground truth on the paper's
+//! held-out grids (conv1d (64,16), LSTM (32,16), dense (1,512)), swept
+//! over reuse factor × layer size.
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::PipelineConfig;
+use ntorc::report;
+
+fn main() {
+    let mut b = Bencher::new("fig8_model_vs_truth");
+    let t0 = std::time::Instant::now();
+    let (pipe, models) = report::standard_models(PipelineConfig::default());
+    b.record("standard_models/build", t0.elapsed().as_nanos() as f64);
+
+    let (h, rows) = report::fig8_rows(&pipe, &models);
+    println!("{}", report::fmt_table("Fig 8 — prediction vs truth", &h, &rows));
+    report::write_csv("fig8_model_vs_truth", &h, &rows).expect("csv");
+
+    // Shape: latency predictions track truth tightly (the paper's right
+    // column); resource predictions track within tens of percent.
+    let mut lat_err = Vec::new();
+    let mut lut_err = Vec::new();
+    for r in &rows {
+        let lt: f64 = r[5].parse().unwrap();
+        let lp: f64 = r[6].parse().unwrap();
+        if lt > 0.0 {
+            lat_err.push((lp - lt).abs() / lt);
+        }
+        let ct: f64 = r[3].parse().unwrap();
+        let cp: f64 = r[4].parse().unwrap();
+        if ct > 0.0 {
+            lut_err.push((cp - ct).abs() / ct);
+        }
+    }
+    let med = |v: &mut Vec<f64>| {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let (ml, mc) = (med(&mut lat_err), med(&mut lut_err));
+    println!("median relative error: latency {:.1}%, LUT {:.1}%", 100.0 * ml, 100.0 * mc);
+    assert!(ml < 0.10, "median latency error too high: {ml}");
+    assert!(mc < 0.35, "median LUT error too high: {mc}");
+    b.finish();
+}

@@ -1,0 +1,111 @@
+//! Perf bench — the Layer-3 hot paths (EXPERIMENTS.md §Perf):
+//!   * native-trainer GEMM + full train step (HPO inner loop),
+//!   * random-forest inference (MIP candidate enumeration),
+//!   * MIP B&B solve + DP oracle,
+//!   * beam-simulator sample generation,
+//!   * PJRT train/predict step (if artifacts are built).
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::{candidate_reuse_factors, Pipeline, PipelineConfig};
+use ntorc::layers::{LayerKind, LayerSpec, NetConfig};
+use ntorc::nn::{train_step, Adam, AdamConfig, NativeModel};
+use ntorc::rng::Rng;
+use ntorc::tensor::{matmul, Tensor};
+
+fn main() {
+    let mut b = Bencher::new("perf_hotpaths");
+    let mut rng = Rng::new(1);
+
+    // --- tensor GEMM (native-trainer inner loop) -------------------------
+    for (m, k, n) in [(32, 256, 64), (64, 512, 128)] {
+        let a = Tensor::from_vec(&[m, k], (0..m * k).map(|_| rng.f32() - 0.5).collect());
+        let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.f32() - 0.5).collect());
+        let flops = 2.0 * (m * k * n) as f64;
+        let meas = b.bench(&format!("gemm/{m}x{k}x{n}"), || matmul(&a, &w));
+        let gflops = flops / meas.median_ns();
+        println!("    -> {:.2} GFLOP/s", gflops);
+    }
+
+    // --- full native train step (quickstart-scale net) -------------------
+    let cfg = NetConfig::new(64, vec![(5, 8)], vec![8], vec![16, 1]);
+    let mut model = NativeModel::init(cfg.clone(), &mut rng);
+    let mut opt = Adam::new(&model.params, AdamConfig::default());
+    let batch = 32;
+    let x = Tensor::from_vec(
+        &[batch, 64],
+        (0..batch * 64).map(|_| rng.f32() - 0.5).collect(),
+    );
+    let y: Vec<f32> = (0..batch).map(|_| rng.f32()).collect();
+    b.bench("native_train_step/quickstart_b32", || {
+        train_step(&mut model, &mut opt, &x, &y)
+    });
+
+    // --- cost-model inference + MIP ---------------------------------------
+    let pipe = Pipeline::new(PipelineConfig::default());
+    let db = pipe.synth_database();
+    let models = pipe.fit_models(&db);
+    let spec = LayerSpec::new(LayerKind::Dense, 512, 64, 1);
+    b.bench("forest_predict/one_layer", || models.predict_layer(&spec, 32));
+
+    let net = ntorc::report::table4_models()[0].1.clone();
+    let prob = models.build_problem(&net.plan(), 50_000.0, 48);
+    b.bench("mip_build_problem/model1", || {
+        models.build_problem(&net.plan(), 50_000.0, 48).layers.len()
+    });
+    b.bench("mip_solve_bb/model1", || ntorc::mip::solve_bb(&prob).is_some());
+    b.bench("mip_solve_dp/model1", || ntorc::mip::solve_dp(&prob).is_some());
+    b.bench("stochastic_1k/model1", || {
+        ntorc::search::stochastic_search(&prob, 1_000, 7).best.is_some()
+    });
+
+    // --- candidate enumeration -------------------------------------------
+    b.bench("candidate_rfs/dense_512x64", || {
+        candidate_reuse_factors(&spec, 48).len()
+    });
+
+    // --- beam simulator ----------------------------------------------------
+    let sim = ntorc::dropbear::Simulator::new(ntorc::dropbear::SimConfig {
+        table_points: 32,
+        ..Default::default()
+    });
+    let meas = b.bench("dropbear_generate/1s_run", || {
+        sim.generate(ntorc::dropbear::Profile::RandomDwell, 1.0, 3)
+            .accel
+            .len()
+    });
+    println!(
+        "    -> {:.1}x realtime at 5 kHz",
+        1e9 / meas.median_ns()
+    );
+
+    // --- PJRT steps (needs artifacts) --------------------------------------
+    if std::path::Path::new("artifacts/quickstart.meta.json").exists() {
+        let rt = ntorc::runtime::Runtime::new("artifacts").expect("client");
+        let model = rt.load("quickstart").expect("load");
+        let mut state = model.init_state(3).expect("state");
+        let bx = Tensor::from_vec(
+            &[model.meta.batch, model.meta.window],
+            (0..model.meta.batch * model.meta.window)
+                .map(|_| rng.f32() - 0.5)
+                .collect(),
+        );
+        let by: Vec<f32> = (0..model.meta.batch).map(|_| rng.f32()).collect();
+        b.bench("pjrt_train_step/quickstart_b32", || {
+            model.train_step(&mut state, &bx, &by).unwrap()
+        });
+        let px = Tensor::from_vec(
+            &[1, model.meta.window],
+            (0..model.meta.window).map(|_| rng.f32() - 0.5).collect(),
+        );
+        let meas = b.bench("pjrt_predict/quickstart", || {
+            model.predict_one(&state, &px).unwrap()
+        });
+        println!(
+            "    -> single-window inference {:.1} µs (vs the paper's 200 µs real-time bound on FPGA)",
+            meas.median_ns() / 1e3
+        );
+    } else {
+        println!("artifacts not built; skipping PJRT hot paths");
+    }
+    b.finish();
+}

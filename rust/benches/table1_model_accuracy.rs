@@ -1,0 +1,73 @@
+//! Bench E3 — Table I: regenerate the cost/latency model validation table
+//! on the full synthesis sweep and assert the paper's qualitative shape:
+//! latency nearly perfect, resources good-but-noisier, LSTM BRAM worst.
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::{CostModels, Pipeline, PipelineConfig};
+use ntorc::hls::Metric;
+use ntorc::layers::LayerKind;
+use ntorc::report;
+
+fn main() {
+    let mut b = Bencher::new("table1_model_accuracy");
+    let pipe = Pipeline::new(PipelineConfig::default());
+
+    let t0 = std::time::Instant::now();
+    let db = pipe.synth_database();
+    b.record("synth_database/full_sweep", t0.elapsed().as_nanos() as f64);
+    println!("database: {} unique (layer, reuse) samples", db.len());
+
+    let t0 = std::time::Instant::now();
+    let models = pipe.fit_models(&db);
+    b.record("fit_15_forests", t0.elapsed().as_nanos() as f64);
+
+    let (h, rows) = report::table1_rows(&models);
+    println!("{}", report::fmt_table("Table I — model validation", &h, &rows));
+    report::write_csv("table1_model_accuracy", &h, &rows).expect("csv");
+
+    assert_table1_shape(&models);
+    println!("shape checks passed: latency best; LSTM BRAM least predictable");
+
+    b.bench("predict_layer/dense", || {
+        models.predict_layer(
+            &ntorc::layers::LayerSpec::new(LayerKind::Dense, 512, 64, 1),
+            32,
+        )
+    });
+    b.finish();
+}
+
+fn assert_table1_shape(models: &CostModels) {
+    let get = |k: LayerKind, m: Metric| {
+        models
+            .validation
+            .iter()
+            .find(|v| v.kind == k && v.metric == m)
+            .expect("validation row")
+            .metrics
+    };
+    // Latency R^2 ~ 0.999 for every kind (paper: 0.9999 / 0.9988 / 0.9931).
+    for kind in [LayerKind::Conv1d, LayerKind::Lstm, LayerKind::Dense] {
+        let r2 = get(kind, Metric::Latency).r2;
+        assert!(r2 > 0.99, "{kind:?} latency r2 {r2}");
+    }
+    // All metrics strongly predictive (paper Table I: R^2 >= 0.93).
+    for v in &models.validation {
+        assert!(
+            v.metrics.r2 > 0.85,
+            "{:?} {:?} r2 {}",
+            v.kind,
+            v.metric,
+            v.metrics.r2
+        );
+    }
+    // LSTM BRAM is the least predictable resource metric (paper: MAPE
+    // 11.98 / RMSE 23.37, the worst row).
+    let lstm_bram = get(LayerKind::Lstm, Metric::Bram).mape_pct;
+    for kind in [LayerKind::Conv1d, LayerKind::Dense] {
+        assert!(
+            lstm_bram >= get(kind, Metric::Bram).mape_pct,
+            "LSTM BRAM should be the noisiest BRAM model"
+        );
+    }
+}

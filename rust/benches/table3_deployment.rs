@@ -1,0 +1,54 @@
+//! Bench E5 — Table III: MIP deployment of the Pareto set under the
+//! 200 µs constraint: every deployed model must meet the budget, and
+//! resource cost must broadly track workload (the paper notes occasional
+//! inversions from model error — we allow them but count them).
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::{Pipeline, PipelineConfig};
+use ntorc::report;
+
+fn main() {
+    let mut b = Bencher::new("table3_deployment");
+    let fast = std::env::var("NTORC_BENCH_FAST").is_ok();
+    let mut cfg = PipelineConfig::smoke();
+    cfg.hpo.n_trials = if fast { 8 } else { 20 };
+    cfg.budget.steps = if fast { 50 } else { 140 };
+    cfg.hpo.space = ntorc::hpo::SearchSpace::default();
+    // Use the full sweep for trustworthy cost models.
+    cfg.sweep = ntorc::hls::SweepConfig::default();
+    let pipe = Pipeline::new(cfg);
+
+    let t0 = std::time::Instant::now();
+    let db = pipe.synth_database();
+    let models = pipe.fit_models(&db);
+    b.record("models/build", t0.elapsed().as_nanos() as f64);
+
+    let sim = report::standard_simulator();
+    let out = report::fig5_run(&pipe, &sim);
+    let t0 = std::time::Instant::now();
+    let deployed = report::deploy_pareto(&pipe, &models, &out.trials);
+    b.record("deploy_pareto/total", t0.elapsed().as_nanos() as f64);
+    assert!(!deployed.is_empty(), "nothing deployed");
+
+    let (h, rows) = report::table3_rows(&deployed);
+    println!("{}", report::fmt_table("Table III — deployed Pareto networks", &h, &rows));
+    report::write_csv("table3_deployment", &h, &rows).expect("csv");
+
+    let mut inversions = 0;
+    for w in deployed.windows(2) {
+        // Sorted by descending RMSE => ascending workload; cost should
+        // *generally* rise (paper rows 8-11 show exceptions).
+        assert!(w[0].latency_us <= 200.0 + 1e-6);
+        assert!(w[1].latency_us <= 200.0 + 1e-6);
+        if w[1].predicted.resource_sum() < w[0].predicted.resource_sum() {
+            inversions += 1;
+        }
+    }
+    println!(
+        "{} deployments, {} cost/workload inversions (paper also shows a few)",
+        deployed.len(),
+        inversions
+    );
+    assert!(inversions <= deployed.len() / 2, "cost should broadly track workload");
+    b.finish();
+}

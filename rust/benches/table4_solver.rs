@@ -1,0 +1,73 @@
+//! Bench E8 — Table IV: N-TORC's MIP vs stochastic search vs simulated
+//! annealing on the two 11-layer target networks. The paper's headline:
+//! the baselines need ~1M trials (1000× the MIP's time) to match it.
+//!
+//! NTORC_BENCH_FAST=1 drops the 1M-trial points.
+
+use ntorc::bench::Bencher;
+use ntorc::coordinator::PipelineConfig;
+use ntorc::report;
+
+fn main() {
+    let mut b = Bencher::new("table4_solver");
+    let fast = std::env::var("NTORC_BENCH_FAST").is_ok();
+    // 100K is the largest default: the baselines scale linearly (the
+    // paper's 1M point is 10x the 100K time; `ntorc table4
+    // --trials 1000000` reproduces it when you have the minutes).
+    let trial_counts: Vec<usize> = if fast {
+        vec![1_000, 10_000]
+    } else {
+        vec![1_000, 10_000, 100_000]
+    };
+
+    let t0 = std::time::Instant::now();
+    let (pipe, models) = report::standard_models(PipelineConfig::default());
+    b.record("standard_models/build", t0.elapsed().as_nanos() as f64);
+
+    let mut all = Vec::new();
+    for (name, net) in report::table4_models() {
+        let prob = models.build_problem(
+            &net.plan(),
+            pipe.cfg.latency_budget,
+            pipe.cfg.max_choices_per_layer,
+        );
+        println!("{name}: {:.3e} RF permutations", prob.permutations());
+        let rows = report::table4_run(&pipe, &models, name, &net, &trial_counts, 0x7AB4E4);
+
+        let mip = rows.iter().find(|r| r.solver == "ntorc_mip").expect("mip");
+        b.record(&format!("mip_solve/{name}"), mip.seconds * 1e9);
+        // Quality: the MIP must be at least as cheap as every baseline at
+        // every trial count (it is exact).
+        for r in rows.iter().filter(|r| r.solver != "ntorc_mip") {
+            // The MIP's candidate set is log-thinned (48/layer), so allow
+            // a sliver of slack vs baselines sampling ALL divisors.
+            assert!(
+                mip.luts + mip.dsps <= (r.luts + r.dsps) * 1.02,
+                "{}: MIP ({:.0}) worse than {} @ {} ({:.0})",
+                name,
+                mip.luts + mip.dsps,
+                r.solver,
+                r.trials,
+                r.luts + r.dsps
+            );
+            assert!(mip.latency_us <= 200.0 + 1e-6);
+        }
+        // Timing: the largest baseline run is orders of magnitude slower.
+        if let Some(big) = rows
+            .iter()
+            .filter(|r| r.solver == "stochastic")
+            .max_by_key(|r| r.trials)
+        {
+            let speedup = big.seconds / mip.seconds.max(1e-9);
+            println!(
+                "{name}: MIP {:.4}s vs stochastic@{} {:.3}s => {:.0}x",
+                mip.seconds, big.trials, big.seconds, speedup
+            );
+        }
+        all.extend(rows);
+    }
+    let (h, rows) = report::table4_rows(&all);
+    println!("{}", report::fmt_table("Table IV — solver comparison", &h, &rows));
+    report::write_csv("table4_solver", &h, &rows).expect("csv");
+    b.finish();
+}

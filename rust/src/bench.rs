@@ -1,0 +1,193 @@
+//! Micro-benchmark harness substrate (offline environment: no criterion).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module: each
+//! bench warms up, runs timed iterations until a wall-clock budget or
+//! iteration cap is hit, and reports mean/median/p95 with outlier-robust
+//! statistics. Results are also appended as CSV under `results/` so the
+//! EXPERIMENTS.md tables can cite exact numbers.
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+/// One timed measurement series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Nanoseconds per iteration, one entry per timed sample.
+    pub samples_ns: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * p).round() as usize;
+        s[idx]
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        self.percentile_ns(0.5)
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}  median {:>12}  p95 {:>12}  (n={})",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.percentile_ns(0.95)),
+            self.samples_ns.len()
+        )
+    }
+}
+
+/// Human-friendly nanosecond formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per case.
+pub struct Bencher {
+    pub suite: String,
+    pub budget: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub measurements: Vec<Measurement>,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Self {
+        // NTORC_BENCH_FAST=1 shrinks budgets for CI-style smoke runs.
+        let fast = std::env::var("NTORC_BENCH_FAST").is_ok();
+        Bencher {
+            suite: suite.to_string(),
+            budget: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            min_samples: 5,
+            max_samples: if fast { 20 } else { 200 },
+            measurements: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; each sample is one call.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warm-up.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let first = t0.elapsed();
+
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (samples.len() < self.min_samples)
+            || (start.elapsed() < self.budget && samples.len() < self.max_samples)
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+            // Very slow cases: don't loop forever.
+            if first > self.budget && samples.len() >= self.min_samples {
+                break;
+            }
+        }
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            samples_ns: samples,
+        });
+        let m = self.measurements.last().unwrap();
+        println!("{}", m.report_line());
+        m
+    }
+
+    /// Record an externally-measured scalar series (e.g. a solver's search
+    /// time at different trial counts) so it lands in the same CSV.
+    pub fn record(&mut self, name: &str, value_ns: f64) {
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            samples_ns: vec![value_ns],
+        });
+        println!("{:<44} {:>12}", name, fmt_ns(value_ns));
+    }
+
+    /// Write `results/<suite>_timing.csv` with one row per measurement
+    /// (the `_timing` suffix keeps these clear of the table/figure CSVs
+    /// the benches also emit under the same suite name).
+    pub fn write_csv(&self) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("results")?;
+        let path = std::path::Path::new("results").join(format!("{}_timing.csv", self.suite));
+        let mut out = String::from("name,mean_ns,median_ns,p95_ns,samples\n");
+        for m in &self.measurements {
+            let _ = writeln!(
+                out,
+                "{},{:.1},{:.1},{:.1},{}",
+                m.name.replace(',', ";"),
+                m.mean_ns(),
+                m.median_ns(),
+                m.percentile_ns(0.95),
+                m.samples_ns.len()
+            );
+        }
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+
+    pub fn finish(&self) {
+        match self.write_csv() {
+            Ok(p) => println!("[{}] wrote {}", self.suite, p.display()),
+            Err(e) => eprintln!("[{}] CSV write failed: {e}", self.suite),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement {
+            name: "x".into(),
+            samples_ns: vec![10.0, 20.0, 30.0, 40.0, 100.0],
+        };
+        assert_eq!(m.mean_ns(), 40.0);
+        assert_eq!(m.median_ns(), 30.0);
+        assert!(m.percentile_ns(0.95) >= 40.0);
+    }
+
+    #[test]
+    fn bench_collects_min_samples() {
+        std::env::set_var("NTORC_BENCH_FAST", "1");
+        let mut b = Bencher::new("testsuite");
+        b.budget = Duration::from_millis(10);
+        let m = b.bench("noop", || 1 + 1);
+        assert!(m.samples_ns.len() >= 5);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Minimal CLI substrate (clap is not in the offline crate set).
+//!
+//! Grammar: `ntorc <command> [--flag value]... [--switch]...`
+//! Unknown flags are errors; `--help` everywhere.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with("--") {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument '{arg}'");
+            };
+            if name.is_empty() {
+                bail!("bare '--' not supported");
+            }
+            // `--key=value` or `--key value` or boolean `--key`.
+            if let Some((k, v)) = name.split_once('=') {
+                out.flags.entry(k.to_string()).or_default().push(v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                out.flags
+                    .entry(name.to_string())
+                    .or_default()
+                    .push(it.next().unwrap().clone());
+            } else {
+                out.flags.entry(name.to_string()).or_default().push(String::new());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Reject flags outside the allowed set (catches typos).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!(
+                    "unknown flag --{k} for '{}' (allowed: {})",
+                    self.command,
+                    allowed.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = r#"N-TORC: Native Tensor Optimizer for Real-time Constraints
+(full-system reproduction; see README.md / DESIGN.md)
+
+USAGE: ntorc <command> [flags]
+
+Pipeline commands
+  e2e             Full pipeline: HLS DB -> cost models -> HPO -> MIP deploy
+  synth-db        Phase 1 only: synthesize the layer database
+  hpo             Phase 3 only: hyperparameter search (writes fig5 CSV)
+  deploy          Deploy a fixed model with the MIP optimizer
+  train           Train a fixed AOT model through the PJRT runtime
+
+Experiment regeneration (tables/figures of the paper)
+  fig4  fig5  fig7  fig8  table1  table2  table3  table4
+
+Utilities
+  list-models     List AOT artifacts the runtime can load
+  export-dataset  Emit a simulated DROPBEAR run + beam modes as CSV
+                  (--profile standard_index|random_dwell|slow_displacement)
+  init-config     Write an example ntorc.toml
+  help            This message
+
+Common flags
+  --preset full|smoke      scale of the run (default: smoke for demos,
+                           full for experiment commands)
+  --config <path>          TOML-subset config file
+  --set key=value          override one config key (repeatable)
+  --seed <n>               reseed the experiment
+  --out <name>             CSV basename under results/
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse(&["hpo", "--preset", "smoke", "--seed=42", "--verbose"]);
+        assert_eq!(a.command, "hpo");
+        assert_eq!(a.get("preset"), Some("smoke"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn repeatable_flags_accumulate() {
+        let a = parse(&["e2e", "--set", "a=1", "--set", "b=2"]);
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn numeric_helpers() {
+        let a = parse(&["x", "--n", "7"]);
+        assert_eq!(a.usize_or("n", 1).unwrap(), 7);
+        assert_eq!(a.usize_or("missing", 9).unwrap(), 9);
+        assert!(parse(&["x", "--n", "abc"]).usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse(&["fig4", "--bogus", "1"]);
+        assert!(a.check_known(&["preset", "seed"]).is_err());
+        assert!(a.check_known(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn positional_after_command_rejected() {
+        let r = Args::parse(&["cmd".to_string(), "stray".to_string()]);
+        assert!(r.is_err());
+    }
+}

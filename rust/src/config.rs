@@ -1,0 +1,224 @@
+//! Launcher configuration: TOML-subset file + CLI overrides -> the
+//! [`PipelineConfig`](crate::coordinator::PipelineConfig) every command
+//! consumes.
+//!
+//! Precedence: defaults < `--preset` < config file (`--config path`) <
+//! individual `--set key=value` overrides.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::PipelineConfig;
+use crate::hpo::{Sampler, SearchSpace};
+use crate::ser::{parse_toml_subset, Json};
+
+/// Named presets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// Paper-scale-ish run (minutes on one core).
+    Full,
+    /// Fast smoke run (seconds).
+    Smoke,
+}
+
+impl Preset {
+    pub fn parse(s: &str) -> Result<Preset> {
+        match s {
+            "full" => Ok(Preset::Full),
+            "smoke" => Ok(Preset::Smoke),
+            other => bail!("unknown preset '{other}' (full | smoke)"),
+        }
+    }
+
+    pub fn pipeline(self) -> PipelineConfig {
+        match self {
+            Preset::Full => PipelineConfig::default(),
+            Preset::Smoke => PipelineConfig::smoke(),
+        }
+    }
+}
+
+/// Apply a flat `section.key -> value` map onto a PipelineConfig.
+pub fn apply_settings(cfg: &mut PipelineConfig, map: &BTreeMap<String, Json>) -> Result<()> {
+    for (key, value) in map {
+        apply_one(cfg, key, value).with_context(|| format!("config key '{key}'"))?;
+    }
+    Ok(())
+}
+
+fn as_usize(v: &Json) -> Result<usize> {
+    v.as_f64()
+        .map(|f| f as usize)
+        .ok_or_else(|| anyhow!("expected number"))
+}
+
+fn as_f64(v: &Json) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("expected number"))
+}
+
+fn as_usize_list(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(as_usize)
+        .collect()
+}
+
+fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
+    match key {
+        // top-level
+        "workers" => cfg.workers = as_usize(v)?,
+        "latency_budget_cycles" => cfg.latency_budget = as_f64(v)?,
+        "max_choices_per_layer" => cfg.max_choices_per_layer = as_usize(v)?,
+        "hls_seed" => cfg.hls_seed = as_usize(v)? as u64,
+        // [data]
+        "data.seconds_per_run" => cfg.data.seconds_per_run = as_f64(v)?,
+        "data.scale" => cfg.data.scale = as_f64(v)?,
+        "data.per_cat_train" => cfg.data.per_cat_train = as_usize(v)?,
+        "data.per_cat_test" => cfg.data.per_cat_test = as_usize(v)?,
+        "data.stride" => cfg.data.stride = as_usize(v)?,
+        "data.seed" => cfg.data.seed = as_usize(v)? as u64,
+        // [hpo]
+        "hpo.trials" => cfg.hpo.n_trials = as_usize(v)?,
+        "hpo.init" => cfg.hpo.n_init = as_usize(v)?,
+        "hpo.candidates" => cfg.hpo.n_candidates = as_usize(v)?,
+        "hpo.seed" => cfg.hpo.seed = as_usize(v)? as u64,
+        "hpo.sampler" => {
+            cfg.hpo.sampler = match v.as_str().unwrap_or("") {
+                "bayes" => Sampler::Bayes,
+                "random" => Sampler::Random,
+                "nsga2" => Sampler::Nsga2,
+                other => bail!("unknown sampler '{other}'"),
+            }
+        }
+        "hpo.windows" => cfg.hpo.space.windows = as_usize_list(v)?,
+        "hpo.space" => {
+            cfg.hpo.space = match v.as_str().unwrap_or("") {
+                "default" => SearchSpace::default(),
+                "small" => SearchSpace::small(),
+                other => bail!("unknown space '{other}'"),
+            }
+        }
+        // [train]
+        "train.steps" => cfg.budget.steps = as_usize(v)?,
+        "train.batch" => cfg.budget.batch = as_usize(v)?,
+        "train.lr" => cfg.budget.lr = as_f64(v)? as f32,
+        "train.max_train_windows" => cfg.budget.max_train_windows = as_usize(v)?,
+        "train.max_val_windows" => cfg.budget.max_val_windows = as_usize(v)?,
+        // [forest]
+        "forest.trees" => cfg.forest.n_trees = as_usize(v)?,
+        "forest.max_depth" => cfg.forest.max_depth = as_usize(v)?,
+        "forest.min_leaf" => cfg.forest.min_leaf = as_usize(v)?,
+        "forest.seed" => cfg.forest.seed = as_usize(v)? as u64,
+        other => bail!("unknown config key '{other}'"),
+    }
+    Ok(())
+}
+
+/// Load a config file and apply it.
+pub fn load_file(cfg: &mut PipelineConfig, path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+    let map = parse_toml_subset(&text)?;
+    apply_settings(cfg, &map)
+}
+
+/// Parse a single `--set key=value` override.
+pub fn apply_override(cfg: &mut PipelineConfig, kv: &str) -> Result<()> {
+    let (k, v) = kv
+        .split_once('=')
+        .ok_or_else(|| anyhow!("--set expects key=value, got '{kv}'"))?;
+    let value = if let Ok(n) = v.trim().parse::<f64>() {
+        Json::Num(n)
+    } else if v.trim() == "true" || v.trim() == "false" {
+        Json::Bool(v.trim() == "true")
+    } else if v.trim().starts_with('[') {
+        crate::ser::parse_json(v.trim())?
+    } else {
+        Json::Str(v.trim().to_string())
+    };
+    apply_one(cfg, k.trim(), &value)
+}
+
+/// A documented example config (written by `ntorc init-config`).
+pub const EXAMPLE_CONFIG: &str = r#"# N-TORC pipeline configuration (TOML subset).
+# Values below mirror the `full` preset; uncomment to override.
+
+workers = 1
+latency_budget_cycles = 50000    # 200 us at 250 MHz
+max_choices_per_layer = 48
+
+[data]
+seconds_per_run = 4.0
+scale = 0.15          # 1.0 = the paper's 150 runs
+per_cat_train = 4
+per_cat_test = 1
+stride = 16
+
+[hpo]
+trials = 60
+init = 12
+candidates = 256
+sampler = "bayes"     # bayes | random | nsga2
+
+[train]
+steps = 300
+batch = 32
+lr = 0.002
+max_train_windows = 4000
+max_val_windows = 1000
+
+[forest]
+trees = 60
+max_depth = 24
+min_leaf = 1
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_differ() {
+        let full = Preset::Full.pipeline();
+        let smoke = Preset::Smoke.pipeline();
+        assert!(full.hpo.n_trials > smoke.hpo.n_trials);
+        assert!(full.budget.steps > smoke.budget.steps);
+    }
+
+    #[test]
+    fn example_config_round_trips() {
+        let mut cfg = Preset::Full.pipeline();
+        let map = parse_toml_subset(EXAMPLE_CONFIG).unwrap();
+        apply_settings(&mut cfg, &map).unwrap();
+        assert_eq!(cfg.hpo.n_trials, 60);
+        assert_eq!(cfg.budget.batch, 32);
+        assert_eq!(cfg.forest.n_trees, 60);
+        assert_eq!(cfg.latency_budget, 50_000.0);
+    }
+
+    #[test]
+    fn override_parsing() {
+        let mut cfg = Preset::Smoke.pipeline();
+        apply_override(&mut cfg, "hpo.trials=33").unwrap();
+        assert_eq!(cfg.hpo.n_trials, 33);
+        apply_override(&mut cfg, "hpo.sampler=random").unwrap();
+        assert_eq!(cfg.hpo.sampler, Sampler::Random);
+        apply_override(&mut cfg, "hpo.windows=[32, 64]").unwrap();
+        assert_eq!(cfg.hpo.space.windows, vec![32, 64]);
+        assert!(apply_override(&mut cfg, "nonsense").is_err());
+        assert!(apply_override(&mut cfg, "bad.key=1").is_err());
+    }
+
+    #[test]
+    fn unknown_sampler_rejected() {
+        let mut cfg = Preset::Smoke.pipeline();
+        assert!(apply_override(&mut cfg, "hpo.sampler=genetic").is_err());
+    }
+
+    #[test]
+    fn file_missing_is_error() {
+        let mut cfg = Preset::Smoke.pipeline();
+        assert!(load_file(&mut cfg, "/nonexistent/ntorc.toml").is_err());
+    }
+}

@@ -1,0 +1,593 @@
+//! The N-TORC coordinator — the pipeline in Fig 6 of the paper.
+//!
+//! Left side of the figure (build the knowledge base):
+//!   1. [`Pipeline::synth_database`] — sweep layer configurations through
+//!      the HLS simulator (Vivado stand-in);
+//!   2. [`CostModels::fit`] — train the 15 random-forest cost/latency
+//!      models (3 layer kinds × 5 metrics) on an 80/20 split.
+//!
+//! Right side (per-target-network optimization):
+//!   3. [`Pipeline::run_hpo`] — multi-objective search over the model
+//!      family, training candidates on simulated DROPBEAR data with the
+//!      native substrate (arbitrary architectures) while the fixed
+//!      headline models train through PJRT;
+//!   4. [`CostModels::build_problem`] + `mip::solve_bb` — assign per-layer
+//!      reuse factors meeting the 200 µs budget at minimum resource cost.
+//!
+//! A small worker pool parallelizes trial evaluation (std threads — the
+//! offline image has no tokio; training is CPU-bound anyway).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::data::{self, WindowedData};
+use crate::dropbear::Simulator;
+#[cfg(test)]
+use crate::dropbear::SimConfig;
+use crate::forest::{regression_metrics, Forest, ForestConfig, FeatureMatrix, RegMetrics};
+use crate::hls::{
+    self, features_of, DbSample, HlsSim, LayerCost, Metric, SweepConfig,
+};
+use crate::hpo::{self, HpoConfig, Trial};
+use crate::layers::{LayerKind, LayerSpec, NetConfig};
+use crate::mip::{self, Choice, DeployProblem, Solution};
+use crate::nn::{Adam, AdamConfig, NativeModel};
+use crate::rng::Rng;
+
+/// 200 µs at 250 MHz (paper §IV-B).
+pub const LATENCY_BUDGET_CYCLES: f64 = 50_000.0;
+
+// ---------------------------------------------------------------------------
+// Cost models (the 15 forests)
+// ---------------------------------------------------------------------------
+
+/// Per-(kind, metric) validation result for Table I.
+#[derive(Clone, Debug)]
+pub struct ModelValidation {
+    pub kind: LayerKind,
+    pub metric: Metric,
+    pub metrics: RegMetrics,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+/// The trained cost/latency models.
+pub struct CostModels {
+    forests: HashMap<(LayerKind, Metric), Forest>,
+    pub validation: Vec<ModelValidation>,
+    /// Unique-layer counts per kind (reported like the paper's 5962/496/4195).
+    pub db_counts: HashMap<LayerKind, usize>,
+}
+
+impl CostModels {
+    /// Fit on a synthesis database with an 80/20 split (paper §IV).
+    pub fn fit(db: &[DbSample], forest_cfg: ForestConfig, split_seed: u64) -> CostModels {
+        let mut forests = HashMap::new();
+        let mut validation = Vec::new();
+        let mut db_counts = HashMap::new();
+        for kind in [LayerKind::Conv1d, LayerKind::Lstm, LayerKind::Dense] {
+            let samples: Vec<&DbSample> = db.iter().filter(|s| s.spec.kind == kind).collect();
+            db_counts.insert(kind, samples.len());
+            if samples.len() < 10 {
+                continue;
+            }
+            let (train_idx, test_idx) =
+                crate::forest::train_test_split(samples.len(), 0.2, split_seed);
+            let x_train = FeatureMatrix::from_rows(
+                &train_idx.iter().map(|&i| samples[i].features()).collect::<Vec<_>>(),
+            );
+            let x_test: Vec<Vec<f64>> =
+                test_idx.iter().map(|&i| samples[i].features()).collect();
+            for metric in Metric::ALL {
+                let y_train: Vec<f64> =
+                    train_idx.iter().map(|&i| metric.of(&samples[i].cost)).collect();
+                let y_test: Vec<f64> =
+                    test_idx.iter().map(|&i| metric.of(&samples[i].cost)).collect();
+                let forest = Forest::fit(&x_train, &y_train, forest_cfg);
+                let pred: Vec<f64> = x_test.iter().map(|r| forest.predict(r)).collect();
+                validation.push(ModelValidation {
+                    kind,
+                    metric,
+                    metrics: regression_metrics(&pred, &y_test),
+                    n_train: train_idx.len(),
+                    n_test: test_idx.len(),
+                });
+                forests.insert((kind, metric), forest);
+            }
+        }
+        CostModels { forests, validation, db_counts }
+    }
+
+    /// Predicted cost/latency of one layer at one reuse factor.
+    pub fn predict_layer(&self, spec: &LayerSpec, reuse: usize) -> LayerCost {
+        let row = features_of(spec, reuse);
+        let get = |m: Metric| {
+            self.forests
+                .get(&(spec.kind, m))
+                .map(|f| f.predict(&row).max(0.0))
+                .unwrap_or(0.0)
+        };
+        LayerCost {
+            lut: get(Metric::Lut),
+            ff: get(Metric::Ff),
+            dsp: get(Metric::Dsp),
+            bram: get(Metric::Bram),
+            latency: get(Metric::Latency),
+        }
+    }
+
+    pub fn has_kind(&self, kind: LayerKind) -> bool {
+        self.forests.contains_key(&(kind, Metric::Lut))
+    }
+
+    /// The paper's RF→MIP collapse: per layer, evaluate the forests at
+    /// every candidate reuse factor (all other features fixed) to produce
+    /// the per-choice constants of the multiple-choice knapsack.
+    pub fn build_problem(
+        &self,
+        plan: &[LayerSpec],
+        latency_budget: f64,
+        max_choices_per_layer: usize,
+    ) -> DeployProblem {
+        let layers = plan
+            .iter()
+            .map(|spec| {
+                let rfs = candidate_reuse_factors(spec, max_choices_per_layer);
+                rfs.iter()
+                    .map(|&r| {
+                        let c = self.predict_layer(spec, r);
+                        Choice { reuse: r, cost: c.resource_sum(), latency: c.latency }
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        DeployProblem { layers, latency_budget }
+    }
+}
+
+/// Candidate reuse factors for a layer: all divisors of n_in·n_out,
+/// thinned log-uniformly to at most `cap` (the paper's solver considers
+/// the full divisor set; we keep the count bounded for the LP tableau).
+pub fn candidate_reuse_factors(spec: &LayerSpec, cap: usize) -> Vec<usize> {
+    let all = spec.valid_reuse_factors(usize::MAX);
+    if all.len() <= cap || cap == 0 {
+        return all;
+    }
+    let mut picked = Vec::with_capacity(cap);
+    for i in 0..cap {
+        let idx = (i as f64 / (cap - 1) as f64 * (all.len() - 1) as f64).round() as usize;
+        if picked.last() != Some(&all[idx]) {
+            picked.push(all[idx]);
+        }
+    }
+    picked
+}
+
+// ---------------------------------------------------------------------------
+// Trial training (the HPO accuracy objective)
+// ---------------------------------------------------------------------------
+
+/// Training budget for one HPO trial.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainBudget {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    /// Cap on training windows (subsampled evenly).
+    pub max_train_windows: usize,
+    pub max_val_windows: usize,
+}
+
+impl Default for TrainBudget {
+    fn default() -> Self {
+        TrainBudget {
+            steps: 300,
+            batch: 32,
+            lr: 2e-3,
+            max_train_windows: 4_000,
+            max_val_windows: 1_000,
+        }
+    }
+}
+
+impl TrainBudget {
+    pub fn smoke() -> Self {
+        TrainBudget {
+            steps: 60,
+            batch: 16,
+            lr: 3e-3,
+            max_train_windows: 600,
+            max_val_windows: 200,
+        }
+    }
+}
+
+/// Train one architecture natively and return its validation RMSE.
+pub fn train_trial(
+    cfg: &NetConfig,
+    train: &WindowedData,
+    val: &WindowedData,
+    budget: &TrainBudget,
+    seed: u64,
+) -> f64 {
+    assert_eq!(train.window, cfg.window);
+    let mut rng = Rng::new(seed);
+    let mut model = NativeModel::init(cfg.clone(), &mut rng);
+    let mut opt = Adam::new(
+        &model.params,
+        AdamConfig { lr: budget.lr, ..AdamConfig::default() },
+    );
+    let tr = train.take(budget.max_train_windows);
+    for _ in 0..budget.steps {
+        let (x, y) = tr.batch(budget.batch, &mut rng);
+        crate::nn::train_step(&mut model, &mut opt, &x, &y);
+    }
+    let va = val.take(budget.max_val_windows);
+    model.rmse(&va.x, &va.y)
+}
+
+// ---------------------------------------------------------------------------
+// Dataset preparation (paper §III-A protocol)
+// ---------------------------------------------------------------------------
+
+/// Windowed train/val/test sets for one window size.
+pub struct PreparedData {
+    pub train: WindowedData,
+    pub val: WindowedData,
+    /// "Test Dataset 1": held-out runs, windowed.
+    pub test: WindowedData,
+    pub norm: data::Normalizer,
+}
+
+/// Dataset-generation knobs.
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    pub seconds_per_run: f64,
+    /// 1.0 = the paper's 150 runs; smaller scales each category count.
+    pub scale: f64,
+    pub per_cat_train: usize,
+    pub per_cat_test: usize,
+    pub stride: usize,
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            seconds_per_run: 4.0,
+            scale: 0.15, // 3 + 15 + 5 = 23 runs
+            per_cat_train: 4,
+            per_cat_test: 1,
+            stride: 16,
+            seed: 0xD47A,
+        }
+    }
+}
+
+impl DataConfig {
+    pub fn smoke() -> Self {
+        DataConfig {
+            seconds_per_run: 0.8,
+            scale: 0.05,
+            per_cat_train: 1,
+            per_cat_test: 1,
+            stride: 24,
+            seed: 0xD47A,
+        }
+    }
+}
+
+/// Generate the simulated DROPBEAR dataset and window it for `window`.
+pub fn prepare_data(sim: &Simulator, dc: &DataConfig, window: usize) -> PreparedData {
+    let runs = sim.generate_dataset(dc.seconds_per_run, dc.scale, dc.seed);
+    let mut rng = Rng::new(dc.seed ^ 0x5EED);
+    let split = data::split_runs(&runs, dc.per_cat_train, dc.per_cat_test, &mut rng);
+    let norm = data::Normalizer::fit(&split.train);
+    let train_parts: Vec<WindowedData> = split
+        .train
+        .iter()
+        .map(|r| data::window_run(r, window, dc.stride, &norm))
+        .collect();
+    let all_train = WindowedData::concat(&train_parts);
+    let (train, val) = data::train_val_split(&all_train, 0.3, &mut rng);
+    let test_parts: Vec<WindowedData> = split
+        .test
+        .iter()
+        .map(|r| data::window_run(r, window, dc.stride, &norm))
+        .collect();
+    PreparedData { train, val, test: WindowedData::concat(&test_parts), norm }
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool
+// ---------------------------------------------------------------------------
+
+/// Run `jobs` closures on `workers` threads, preserving output order.
+/// With workers == 1 this degrades to a simple loop (our 1-core testbed).
+pub fn parallel_map<T: Send + 'static>(
+    workers: usize,
+    jobs: Vec<Box<dyn FnOnce() -> T + Send>>,
+) -> Vec<T> {
+    let n = jobs.len();
+    if workers <= 1 || n <= 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let queue: Arc<Mutex<Vec<(usize, Box<dyn FnOnce() -> T + Send>)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
+    let results: Arc<Mutex<Vec<Option<T>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let mut handles = Vec::new();
+    for _ in 0..workers.min(n) {
+        let queue = Arc::clone(&queue);
+        let results = Arc::clone(&results);
+        handles.push(std::thread::spawn(move || loop {
+            let job = queue.lock().unwrap().pop();
+            match job {
+                Some((i, f)) => {
+                    let out = f();
+                    results.lock().unwrap()[i] = Some(out);
+                }
+                None => break,
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    Arc::try_unwrap(results)
+        .unwrap_or_else(|_| panic!("results still shared"))
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("missing result"))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// The pipeline
+// ---------------------------------------------------------------------------
+
+/// Everything the end-to-end flow needs.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub sweep: SweepConfig,
+    pub forest: ForestConfig,
+    pub hls_seed: u64,
+    pub data: DataConfig,
+    pub hpo: HpoConfig,
+    pub budget: TrainBudget,
+    pub latency_budget: f64,
+    pub max_choices_per_layer: usize,
+    pub workers: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            sweep: SweepConfig::default(),
+            forest: ForestConfig::default(),
+            hls_seed: 0xD0_0DBEA7,
+            data: DataConfig::default(),
+            hpo: HpoConfig::default(),
+            budget: TrainBudget::default(),
+            latency_budget: LATENCY_BUDGET_CYCLES,
+            max_choices_per_layer: 48,
+            workers: 1,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Fast preset for tests / smoke runs.
+    pub fn smoke() -> Self {
+        PipelineConfig {
+            sweep: SweepConfig::small(),
+            forest: ForestConfig { n_trees: 16, max_depth: 10, ..Default::default() },
+            data: DataConfig::smoke(),
+            hpo: HpoConfig {
+                space: hpo::SearchSpace::small(),
+                n_trials: 8,
+                n_init: 4,
+                n_candidates: 64,
+                ..Default::default()
+            },
+            budget: TrainBudget::smoke(),
+            ..Default::default()
+        }
+    }
+}
+
+/// One deployed Pareto model (a Table III row).
+#[derive(Clone, Debug)]
+pub struct DeployedModel {
+    pub trial: Trial,
+    pub solution: Solution,
+    /// Per-layer reuse factors in plan order.
+    pub reuse: Vec<usize>,
+    /// Predicted totals from the cost models.
+    pub predicted: LayerCost,
+    /// Ground-truth totals from the HLS simulator at the same assignment.
+    pub actual: LayerCost,
+    pub latency_us: f64,
+}
+
+pub struct Pipeline {
+    pub cfg: PipelineConfig,
+    pub hls: HlsSim,
+}
+
+impl Pipeline {
+    pub fn new(cfg: PipelineConfig) -> Pipeline {
+        let hls = HlsSim::new(hls::HlsConfig { seed: cfg.hls_seed, ..Default::default() });
+        Pipeline { cfg, hls }
+    }
+
+    /// Phase 1: synthesize the layer database.
+    pub fn synth_database(&self) -> Vec<DbSample> {
+        hls::generate_database(&self.hls, &self.cfg.sweep)
+    }
+
+    /// Phase 2: train the cost/latency models.
+    pub fn fit_models(&self, db: &[DbSample]) -> CostModels {
+        CostModels::fit(db, self.cfg.forest, 0x5B117)
+    }
+
+    /// Phase 3: hyperparameter search with native training as the
+    /// accuracy objective. Returns all trials (Pareto extracted later).
+    pub fn run_hpo(&self, sim: &Simulator) -> (Vec<Trial>, HashMap<usize, PreparedData>) {
+        // Pre-window the dataset once per distinct window size.
+        let mut datasets: HashMap<usize, PreparedData> = HashMap::new();
+        for &w in &self.cfg.hpo.space.windows {
+            datasets.insert(w, prepare_data(sim, &self.cfg.data, w));
+        }
+        let budget = self.cfg.budget;
+        let trials = hpo::run_hpo(&self.cfg.hpo, |net, seed| {
+            let d = &datasets[&net.window];
+            train_trial(net, &d.train, &d.val, &budget, seed)
+        });
+        (trials, datasets)
+    }
+
+    /// Phase 4: deploy one network — MIP reuse-factor assignment.
+    pub fn deploy(&self, models: &CostModels, trial: &Trial) -> Option<DeployedModel> {
+        let plan = trial.cfg.plan();
+        let prob = models.build_problem(&plan, self.cfg.latency_budget, self.cfg.max_choices_per_layer);
+        let (sol, _stats) = mip::solve_bb(&prob)?;
+        let reuse: Vec<usize> = sol
+            .pick
+            .iter()
+            .enumerate()
+            .map(|(i, &j)| prob.layers[i][j].reuse)
+            .collect();
+        let predicted = plan
+            .iter()
+            .zip(&reuse)
+            .map(|(spec, &r)| models.predict_layer(spec, r))
+            .fold(LayerCost::ZERO, |acc, c| acc.add(&c));
+        let (_, actual) = self.hls.synth_network(&plan, &reuse);
+        let latency_us = predicted.latency / (hls::ZU7EV.clock_mhz);
+        Some(DeployedModel {
+            trial: trial.clone(),
+            solution: sol,
+            reuse,
+            predicted,
+            actual,
+            latency_us,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_models() -> CostModels {
+        let pipe = Pipeline::new(PipelineConfig::smoke());
+        let db = pipe.synth_database();
+        pipe.fit_models(&db)
+    }
+
+    #[test]
+    fn cost_models_fit_all_kinds() {
+        let models = tiny_models();
+        assert!(models.has_kind(LayerKind::Dense));
+        assert!(models.has_kind(LayerKind::Conv1d));
+        assert!(models.has_kind(LayerKind::Lstm));
+        assert_eq!(models.validation.len(), 15);
+    }
+
+    #[test]
+    fn latency_models_are_most_accurate() {
+        // Table I structure: latency R² must beat the worst resource R².
+        let models = tiny_models();
+        let lat_r2: Vec<f64> = models
+            .validation
+            .iter()
+            .filter(|v| v.metric == Metric::Latency)
+            .map(|v| v.metrics.r2)
+            .collect();
+        let worst_resource = models
+            .validation
+            .iter()
+            .filter(|v| v.metric != Metric::Latency)
+            .map(|v| v.metrics.r2)
+            .fold(f64::INFINITY, f64::min);
+        // The smoke sweep is deliberately tiny; the full-sweep run (see
+        // bench table1_model_accuracy) reaches R^2 >= 0.999 like Table I.
+        for r2 in &lat_r2 {
+            assert!(*r2 > 0.85, "latency r2 {r2}");
+        }
+        let mean_lat = lat_r2.iter().sum::<f64>() / lat_r2.len() as f64;
+        assert!(mean_lat >= worst_resource - 0.05, "{mean_lat} vs {worst_resource}");
+    }
+
+    #[test]
+    fn predicted_layer_cost_is_nonnegative() {
+        let models = tiny_models();
+        let spec = LayerSpec::new(LayerKind::Dense, 48, 16, 1);
+        for r in candidate_reuse_factors(&spec, 16) {
+            let c = models.predict_layer(&spec, r);
+            assert!(c.lut >= 0.0 && c.latency >= 0.0);
+        }
+    }
+
+    #[test]
+    fn candidate_rfs_are_valid_divisors_and_bounded() {
+        let spec = LayerSpec::new(LayerKind::Dense, 256, 64, 1);
+        let rfs = candidate_reuse_factors(&spec, 20);
+        assert!(rfs.len() <= 20);
+        assert_eq!(rfs.first(), Some(&1));
+        assert_eq!(rfs.last(), Some(&(256 * 64)));
+        for r in &rfs {
+            assert_eq!((256 * 64) % r, 0);
+        }
+    }
+
+    #[test]
+    fn build_problem_then_solve_meets_budget() {
+        let models = tiny_models();
+        let net = NetConfig::new(64, vec![(3, 8)], vec![8], vec![16, 1]);
+        let prob = models.build_problem(&net.plan(), LATENCY_BUDGET_CYCLES, 24);
+        let (sol, _) = mip::solve_bb(&prob).expect("feasible");
+        assert!(sol.latency <= LATENCY_BUDGET_CYCLES);
+    }
+
+    #[test]
+    fn train_trial_learns_on_simulated_data() {
+        let sim = Simulator::new(SimConfig { table_points: 12, ..Default::default() });
+        let dc = DataConfig::smoke();
+        let prepared = prepare_data(&sim, &dc, 32);
+        let net = NetConfig::new(32, vec![], vec![], vec![16, 1]);
+        let rmse = train_trial(&net, &prepared.train, &prepared.val, &TrainBudget::smoke(), 1);
+        // Roller target is in [0,1]; predicting the mean gives ~0.29 on
+        // this data. Training must beat a constant predictor.
+        assert!(rmse < 0.5, "rmse {rmse}");
+        assert!(rmse.is_finite());
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..16usize)
+            .map(|i| Box::new(move || i * 2) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = parallel_map(4, jobs);
+        assert_eq!(out, (0..16usize).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deploy_smoke_pipeline() {
+        let pipe = Pipeline::new(PipelineConfig::smoke());
+        let db = pipe.synth_database();
+        let models = pipe.fit_models(&db);
+        let trial = Trial {
+            genome: vec![0; hpo::SearchSpace::GENES],
+            cfg: NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]),
+            rmse: 0.1,
+            workload: 1000.0,
+        };
+        let deployed = pipe.deploy(&models, &trial).expect("deployable");
+        assert_eq!(deployed.reuse.len(), trial.cfg.plan().len());
+        assert!(deployed.latency_us <= 200.0 + 1e-6);
+        assert!(deployed.actual.latency > 0.0);
+    }
+}

@@ -1,0 +1,374 @@
+//! Data pipeline: windowing (Takens embedding), normalization, the paper's
+//! split protocol, and evaluation metrics.
+//!
+//! Protocol (paper §III-A): from each of the three experiment categories
+//! select 15 runs — 12 for training, 3 for testing ("Test Dataset 1"); the
+//! training windows are shuffled and split 70/30 into train/validation
+//! ("Test Dataset 2"). Inputs are standardized by training-set statistics;
+//! the roller target is scaled to [0,1] over the physical travel so RMSE
+//! values are comparable to the paper's normalized errors (~0.07–0.17).
+
+use crate::dropbear::{Profile, Run, ROLLER_MAX_M, ROLLER_MIN_M};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Normalization parameters, frozen from the training split.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Normalizer {
+    pub accel_mean: f32,
+    pub accel_std: f32,
+    pub roller_min: f32,
+    pub roller_max: f32,
+}
+
+impl Normalizer {
+    /// Fit on raw training signals.
+    pub fn fit(runs: &[&Run]) -> Self {
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        for r in runs {
+            sum += r.accel.iter().map(|&x| x as f64).sum::<f64>();
+            count += r.accel.len();
+        }
+        let mean = if count == 0 { 0.0 } else { sum / count as f64 };
+        let mut var = 0.0f64;
+        for r in runs {
+            var += r
+                .accel
+                .iter()
+                .map(|&x| (x as f64 - mean) * (x as f64 - mean))
+                .sum::<f64>();
+        }
+        let std = if count == 0 { 1.0 } else { (var / count as f64).sqrt().max(1e-9) };
+        Normalizer {
+            accel_mean: mean as f32,
+            accel_std: std as f32,
+            roller_min: ROLLER_MIN_M as f32,
+            roller_max: ROLLER_MAX_M as f32,
+        }
+    }
+
+    #[inline]
+    pub fn norm_accel(&self, x: f32) -> f32 {
+        (x - self.accel_mean) / self.accel_std
+    }
+
+    #[inline]
+    pub fn norm_roller(&self, x: f32) -> f32 {
+        (x - self.roller_min) / (self.roller_max - self.roller_min)
+    }
+
+    /// Back to meters.
+    #[inline]
+    pub fn denorm_roller(&self, y: f32) -> f32 {
+        self.roller_min + y * (self.roller_max - self.roller_min)
+    }
+}
+
+/// A windowed supervised dataset: x (N, window) normalized acceleration,
+/// y (N,) normalized roller position at the window's final sample.
+#[derive(Clone, Debug)]
+pub struct WindowedData {
+    pub x: Tensor,
+    pub y: Vec<f32>,
+    pub window: usize,
+}
+
+impl WindowedData {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Random mini-batch.
+    pub fn batch(&self, size: usize, rng: &mut Rng) -> (Tensor, Vec<f32>) {
+        let n = self.len();
+        let size = size.min(n);
+        let mut xb = Vec::with_capacity(size * self.window);
+        let mut yb = Vec::with_capacity(size);
+        for _ in 0..size {
+            let i = rng.below(n);
+            xb.extend_from_slice(self.x.row(i));
+            yb.push(self.y[i]);
+        }
+        (Tensor::from_vec(&[size, self.window], xb), yb)
+    }
+
+    /// Deterministic subsample of at most `max` windows (evenly spaced).
+    pub fn take(&self, max: usize) -> WindowedData {
+        let n = self.len();
+        if n <= max {
+            return self.clone();
+        }
+        let mut xb = Vec::with_capacity(max * self.window);
+        let mut yb = Vec::with_capacity(max);
+        for j in 0..max {
+            let i = j * n / max;
+            xb.extend_from_slice(self.x.row(i));
+            yb.push(self.y[i]);
+        }
+        WindowedData {
+            x: Tensor::from_vec(&[max, self.window], xb),
+            y: yb,
+            window: self.window,
+        }
+    }
+
+    /// Concatenate datasets with equal window size.
+    pub fn concat(parts: &[WindowedData]) -> WindowedData {
+        assert!(!parts.is_empty());
+        let window = parts[0].window;
+        let mut xb = Vec::new();
+        let mut yb = Vec::new();
+        for p in parts {
+            assert_eq!(p.window, window);
+            xb.extend_from_slice(&p.x.data);
+            yb.extend_from_slice(&p.y);
+        }
+        WindowedData {
+            x: Tensor::from_vec(&[yb.len(), window], xb),
+            y: yb,
+            window,
+        }
+    }
+}
+
+/// Slide a window of length `window` over a run with `stride`, predicting
+/// the roller position at the final sample of each window.
+pub fn window_run(run: &Run, window: usize, stride: usize, norm: &Normalizer) -> WindowedData {
+    assert!(stride >= 1);
+    let n = run.accel.len();
+    if n < window {
+        return WindowedData { x: Tensor::zeros(&[0, window]), y: vec![], window };
+    }
+    let count = (n - window) / stride + 1;
+    let mut x = Vec::with_capacity(count * window);
+    let mut y = Vec::with_capacity(count);
+    for w in 0..count {
+        let start = w * stride;
+        for &a in &run.accel[start..start + window] {
+            x.push(norm.norm_accel(a));
+        }
+        y.push(norm.norm_roller(run.roller[start + window - 1]));
+    }
+    WindowedData { x: Tensor::from_vec(&[count, window], x), y, window }
+}
+
+/// The paper's split: per category, `per_cat_train` train runs and
+/// `per_cat_test` test runs (paper: 12 + 3).
+pub struct Split<'a> {
+    pub train: Vec<&'a Run>,
+    pub test: Vec<&'a Run>,
+}
+
+pub fn split_runs<'a>(
+    runs: &'a [Run],
+    per_cat_train: usize,
+    per_cat_test: usize,
+    rng: &mut Rng,
+) -> Split<'a> {
+    let mut train = Vec::new();
+    let mut test = Vec::new();
+    for profile in Profile::ALL {
+        let mut cat: Vec<&Run> = runs.iter().filter(|r| r.profile == profile).collect();
+        rng.shuffle(&mut cat);
+        let want = per_cat_train + per_cat_test;
+        assert!(
+            cat.len() >= want.min(cat.len()),
+            "category {profile:?} underpopulated"
+        );
+        let n_test = per_cat_test.min(cat.len());
+        let n_train = per_cat_train.min(cat.len().saturating_sub(n_test));
+        test.extend(cat.drain(..n_test));
+        train.extend(cat.drain(..n_train));
+    }
+    Split { train, test }
+}
+
+/// Shuffled 70/30 split of windowed data ("Test Dataset 2" protocol).
+pub fn train_val_split(data: &WindowedData, val_frac: f64, rng: &mut Rng) -> (WindowedData, WindowedData) {
+    let n = data.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let n_val = ((n as f64) * val_frac).round() as usize;
+    let (val_idx, train_idx) = idx.split_at(n_val);
+    let gather = |ids: &[usize]| {
+        let mut xb = Vec::with_capacity(ids.len() * data.window);
+        let mut yb = Vec::with_capacity(ids.len());
+        for &i in ids {
+            xb.extend_from_slice(data.x.row(i));
+            yb.push(data.y[i]);
+        }
+        WindowedData {
+            x: Tensor::from_vec(&[ids.len(), data.window], xb),
+            y: yb,
+            window: data.window,
+        }
+    };
+    (gather(train_idx), gather(val_idx))
+}
+
+/// Root-mean-square error between predictions and targets.
+pub fn rmse(pred: &[f32], target: &[f32]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let mse = pred
+        .iter()
+        .zip(target)
+        .map(|(&p, &t)| ((p - t) as f64).powi(2))
+        .sum::<f64>()
+        / pred.len() as f64;
+    mse.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropbear::{SimConfig, Simulator};
+
+    fn tiny_runs() -> Vec<Run> {
+        let sim = Simulator::new(SimConfig { table_points: 8, ..Default::default() });
+        sim.generate_dataset(0.2, 0.05, 7) // 1 + 5 + 2 runs
+    }
+
+    #[test]
+    fn normalizer_standardizes_train_accel() {
+        let runs = tiny_runs();
+        let refs: Vec<&Run> = runs.iter().collect();
+        let norm = Normalizer::fit(&refs);
+        // Normalized training data must be ~zero-mean unit-std.
+        let mut all = Vec::new();
+        for r in &runs {
+            all.extend(r.accel.iter().map(|&a| norm.norm_accel(a) as f64));
+        }
+        let mean = all.iter().sum::<f64>() / all.len() as f64;
+        let var = all.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / all.len() as f64;
+        assert!(mean.abs() < 1e-3, "mean {mean}");
+        assert!((var - 1.0).abs() < 1e-2, "var {var}");
+    }
+
+    #[test]
+    fn roller_normalization_round_trip() {
+        let norm = Normalizer {
+            accel_mean: 0.0,
+            accel_std: 1.0,
+            roller_min: 0.058,
+            roller_max: 0.141,
+        };
+        let x = 0.1f32;
+        let y = norm.norm_roller(x);
+        assert!((0.0..=1.0).contains(&y));
+        assert!((norm.denorm_roller(y) - x).abs() < 1e-6);
+    }
+
+    #[test]
+    fn window_count_and_alignment() {
+        let runs = tiny_runs();
+        let refs: Vec<&Run> = runs.iter().collect();
+        let norm = Normalizer::fit(&refs);
+        let w = window_run(&runs[0], 64, 16, &norm);
+        let expect = (runs[0].accel.len() - 64) / 16 + 1;
+        assert_eq!(w.len(), expect);
+        assert_eq!(w.x.shape, vec![expect, 64]);
+        // Target aligns with the last sample of each window.
+        let y0 = norm.norm_roller(runs[0].roller[63]);
+        assert!((w.y[0] - y0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn window_run_shorter_than_window_is_empty() {
+        let run = Run {
+            profile: Profile::RandomDwell,
+            seed: 0,
+            accel: vec![0.0; 10],
+            roller: vec![0.1; 10],
+        };
+        let norm = Normalizer {
+            accel_mean: 0.0,
+            accel_std: 1.0,
+            roller_min: 0.058,
+            roller_max: 0.141,
+        };
+        assert!(window_run(&run, 64, 1, &norm).is_empty());
+    }
+
+    #[test]
+    fn split_respects_categories() {
+        // scale 0.1 -> 2 standard / 10 dwell / 3 slow runs.
+        let sim = Simulator::new(SimConfig { table_points: 8, ..Default::default() });
+        let runs = sim.generate_dataset(0.1, 0.1, 21);
+        let mut rng = Rng::new(1);
+        let split = split_runs(&runs, 1, 1, &mut rng);
+        // 3 categories, 1 train + 1 test each (capped by availability).
+        assert_eq!(split.test.len(), 3);
+        assert!(split.train.len() >= 3);
+        // No overlap.
+        for tr in &split.train {
+            for te in &split.test {
+                assert!(!std::ptr::eq(*tr, *te));
+            }
+        }
+    }
+
+    #[test]
+    fn train_val_split_is_partition() {
+        let runs = tiny_runs();
+        let refs: Vec<&Run> = runs.iter().collect();
+        let norm = Normalizer::fit(&refs);
+        let data = window_run(&runs[1], 32, 8, &norm);
+        let mut rng = Rng::new(3);
+        let (train, val) = train_val_split(&data, 0.3, &mut rng);
+        assert_eq!(train.len() + val.len(), data.len());
+        let expected_val = ((data.len() as f64) * 0.3).round() as usize;
+        assert_eq!(val.len(), expected_val);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        assert!((rmse(&[1.0, 2.0], &[0.0, 4.0]) - (2.5f64).sqrt()).abs() < 1e-9);
+        assert_eq!(rmse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn batch_draws_valid_rows() {
+        let runs = tiny_runs();
+        let refs: Vec<&Run> = runs.iter().collect();
+        let norm = Normalizer::fit(&refs);
+        let data = window_run(&runs[0], 16, 4, &norm);
+        let mut rng = Rng::new(5);
+        let (xb, yb) = data.batch(8, &mut rng);
+        assert_eq!(xb.shape, vec![8, 16]);
+        assert_eq!(yb.len(), 8);
+        for &y in &yb {
+            assert!((-0.01..=1.01).contains(&y));
+        }
+    }
+
+    #[test]
+    fn take_subsamples_evenly() {
+        let runs = tiny_runs();
+        let refs: Vec<&Run> = runs.iter().collect();
+        let norm = Normalizer::fit(&refs);
+        let data = window_run(&runs[0], 16, 1, &norm);
+        let small = data.take(10);
+        assert_eq!(small.len(), 10);
+        assert_eq!(small.x.shape, vec![10, 16]);
+    }
+
+    #[test]
+    fn concat_preserves_rows() {
+        let runs = tiny_runs();
+        let refs: Vec<&Run> = runs.iter().collect();
+        let norm = Normalizer::fit(&refs);
+        let a = window_run(&runs[0], 16, 8, &norm);
+        let b = window_run(&runs[1], 16, 8, &norm);
+        let c = WindowedData::concat(&[a.clone(), b.clone()]);
+        assert_eq!(c.len(), a.len() + b.len());
+        assert_eq!(c.x.row(a.len()), b.x.row(0));
+    }
+}

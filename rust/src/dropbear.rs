@@ -1,0 +1,605 @@
+//! DROPBEAR testbed simulator (substitute for the physical rig — DESIGN.md
+//! §1).
+//!
+//! The Dynamic Reproduction of Projectiles in Ballistic Environments for
+//! Advanced Research testbed is a cantilever beam whose boundary condition
+//! is altered by a movable roller (pin) support; an accelerometer measures
+//! the beam's vibration and the learning task is the *inverse* problem:
+//! infer the roller position from the acceleration signal.
+//!
+//! This module reproduces the causal structure of the rig:
+//!
+//! 1. **Beam modal model** — the clamped/(pin at `a`)/free Euler–Bernoulli
+//!    beam's characteristic equation is solved numerically (8×8 boundary
+//!    determinant, bisection on sign changes) giving the first three
+//!    natural frequencies as a function of roller position `a`. A lookup
+//!    table over `a` is interpolated at runtime.
+//! 2. **Response synthesis** — three time-varying second-order resonators
+//!    track the instantaneous modal frequencies and are driven by
+//!    roller-motion impulses (the beam is self-excited by support
+//!    movement) plus broadband ambient forcing; their sum plus sensor
+//!    noise is the accelerometer output at 5 kHz.
+//! 3. **Motion profiles** — the paper's three experiment types (standard
+//!    index set / random dwell / slow positional displacement), all
+//!    slew-limited to 250 mm/s, roller range 58–141 mm.
+
+use crate::rng::Rng;
+
+/// Sample rate of the testbed (paper: 5 kHz, 200 µs per sample).
+pub const SAMPLE_RATE_HZ: f64 = 5_000.0;
+/// Roller travel limits (paper §II).
+pub const ROLLER_MIN_M: f64 = 0.058;
+pub const ROLLER_MAX_M: f64 = 0.141;
+/// Max roller speed (paper §II).
+pub const ROLLER_MAX_SPEED_MPS: f64 = 0.250;
+
+/// Beam physical parameters (steel strip comparable to the DROPBEAR rig).
+#[derive(Clone, Copy, Debug)]
+pub struct Beam {
+    /// Young's modulus (Pa).
+    pub e: f64,
+    /// Second moment of area (m^4).
+    pub i: f64,
+    /// Density (kg/m^3).
+    pub rho: f64,
+    /// Cross-section area (m^2).
+    pub area: f64,
+    /// Beam length (m).
+    pub length: f64,
+}
+
+impl Default for Beam {
+    fn default() -> Self {
+        // 50.8 mm x 6.35 mm steel strip, 350 mm long.
+        let b = 0.0508;
+        let h = 0.00635;
+        Beam {
+            e: 200e9,
+            i: b * h * h * h / 12.0,
+            rho: 7850.0,
+            area: b * h,
+            length: 0.350,
+        }
+    }
+}
+
+impl Beam {
+    /// sqrt(EI / rho A): converts beta^2 to angular frequency.
+    fn wave_coeff(&self) -> f64 {
+        (self.e * self.i / (self.rho * self.area)).sqrt()
+    }
+
+    /// Natural frequency (Hz) for a wavenumber beta (1/m).
+    pub fn freq_of_beta(&self, beta: f64) -> f64 {
+        beta * beta * self.wave_coeff() / (2.0 * std::f64::consts::PI)
+    }
+
+    /// Boundary-condition determinant for the clamped/(pin at a)/free beam.
+    ///
+    /// Unknowns: [A1,B1,C1,D1] on [0,a] and [A2,B2,C2,D2] on local
+    /// coordinate xi = x - a over [0, L-a], with shape
+    /// w = A sin(b x) + B cos(b x) + C sinh(b x) + D cosh(b x).
+    pub fn char_determinant(&self, a: f64, beta: f64) -> f64 {
+        let l2 = self.length - a;
+        let (s_a, c_a) = (beta * a).sin_cos();
+        let (sh_a, ch_a) = ((beta * a).sinh(), (beta * a).cosh());
+        let (s_l, c_l) = (beta * l2).sin_cos();
+        let (sh_l, ch_l) = ((beta * l2).sinh(), (beta * l2).cosh());
+
+        // Rows: conditions; columns: A1 B1 C1 D1 A2 B2 C2 D2.
+        // Common beta^k factors are dropped (they do not move the roots).
+        let m: [[f64; 8]; 8] = [
+            // w1(0) = 0
+            [0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0],
+            // w1'(0) = 0
+            [1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            // w1(a) = 0
+            [s_a, c_a, sh_a, ch_a, 0.0, 0.0, 0.0, 0.0],
+            // w2(0) = 0
+            [0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 1.0],
+            // w1'(a) - w2'(0) = 0
+            [c_a, -s_a, ch_a, sh_a, -1.0, 0.0, -1.0, 0.0],
+            // w1''(a) - w2''(0) = 0
+            [-s_a, -c_a, sh_a, ch_a, 0.0, 1.0, 0.0, -1.0],
+            // w2''(L-a) = 0
+            [0.0, 0.0, 0.0, 0.0, -s_l, -c_l, sh_l, ch_l],
+            // w2'''(L-a) = 0
+            [0.0, 0.0, 0.0, 0.0, -c_l, s_l, ch_l, sh_l],
+        ];
+        det8(m)
+    }
+
+    /// First `n` natural frequencies (Hz) with the pin at `a` (m).
+    pub fn natural_frequencies(&self, a: f64, n: usize) -> Vec<f64> {
+        assert!(a > 0.0 && a < self.length, "pin position {a} outside beam");
+        let mut roots: Vec<f64> = Vec::with_capacity(n);
+        let step = 0.25;
+        let mut beta = 1.0;
+        let mut prev = self.char_determinant(a, beta);
+        while roots.len() < n && beta < 400.0 {
+            let next_beta = beta + step;
+            let cur = self.char_determinant(a, next_beta);
+            if prev == 0.0 {
+                roots.push(beta);
+            } else if prev.signum() != cur.signum() {
+                // Bisection refine.
+                let (mut lo, mut hi) = (beta, next_beta);
+                let mut flo = prev;
+                for _ in 0..60 {
+                    let mid = 0.5 * (lo + hi);
+                    let fm = self.char_determinant(a, mid);
+                    if fm == 0.0 {
+                        lo = mid;
+                        hi = mid;
+                        break;
+                    }
+                    if flo.signum() != fm.signum() {
+                        hi = mid;
+                    } else {
+                        lo = mid;
+                        flo = fm;
+                    }
+                }
+                roots.push(0.5 * (lo + hi));
+            }
+            beta = next_beta;
+            prev = cur;
+        }
+        roots.into_iter().map(|b| self.freq_of_beta(b)).collect()
+    }
+}
+
+/// 8x8 determinant by Gaussian elimination with partial pivoting.
+fn det8(mut m: [[f64; 8]; 8]) -> f64 {
+    let mut det = 1.0;
+    for col in 0..8 {
+        let mut piv = col;
+        for r in col + 1..8 {
+            if m[r][col].abs() > m[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv][col] == 0.0 {
+            return 0.0;
+        }
+        if piv != col {
+            m.swap(piv, col);
+            det = -det;
+        }
+        det *= m[col][col];
+        let inv = 1.0 / m[col][col];
+        for r in col + 1..8 {
+            let f = m[r][col] * inv;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..8 {
+                m[r][c] -= f * m[col][c];
+            }
+        }
+    }
+    det
+}
+
+// ---------------------------------------------------------------------------
+// Frequency lookup table
+// ---------------------------------------------------------------------------
+
+/// Precomputed f_k(a) over the roller travel, linearly interpolated.
+pub struct FreqTable {
+    pub positions: Vec<f64>,
+    /// freqs[k][i] = mode-k frequency at positions[i].
+    pub freqs: Vec<Vec<f64>>,
+}
+
+impl FreqTable {
+    pub fn build(beam: &Beam, n_modes: usize, n_points: usize) -> Self {
+        assert!(n_points >= 2);
+        let positions: Vec<f64> = (0..n_points)
+            .map(|i| {
+                ROLLER_MIN_M
+                    + (ROLLER_MAX_M - ROLLER_MIN_M) * i as f64 / (n_points - 1) as f64
+            })
+            .collect();
+        let mut freqs = vec![Vec::with_capacity(n_points); n_modes];
+        for &a in &positions {
+            let f = beam.natural_frequencies(a, n_modes);
+            assert_eq!(f.len(), n_modes, "missing modes at a={a}");
+            for (k, fk) in f.iter().enumerate() {
+                freqs[k].push(*fk);
+            }
+        }
+        FreqTable { positions, freqs }
+    }
+
+    /// Interpolated mode-k frequency at roller position a (clamped).
+    pub fn freq(&self, k: usize, a: f64) -> f64 {
+        let xs = &self.positions;
+        let ys = &self.freqs[k];
+        if a <= xs[0] {
+            return ys[0];
+        }
+        if a >= *xs.last().unwrap() {
+            return *ys.last().unwrap();
+        }
+        let dx = xs[1] - xs[0];
+        let idx = (((a - xs[0]) / dx).floor() as usize).min(xs.len() - 2);
+        let t = (a - xs[idx]) / dx;
+        ys[idx] * (1.0 - t) + ys[idx + 1] * t
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Roller motion profiles
+// ---------------------------------------------------------------------------
+
+/// The paper's three experiment categories (§III-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Profile {
+    /// Square waves of increasing magnitude, then abs(sin) of increasing
+    /// magnitude, then min(sin, 0) of increasing magnitude.
+    StandardIndex,
+    /// Random target positions at fixed intervals.
+    RandomDwell,
+    /// Staircase up to max then back down, pausing at each step.
+    SlowDisplacement,
+}
+
+impl Profile {
+    pub fn name(self) -> &'static str {
+        match self {
+            Profile::StandardIndex => "standard_index",
+            Profile::RandomDwell => "random_dwell",
+            Profile::SlowDisplacement => "slow_displacement",
+        }
+    }
+
+    pub const ALL: [Profile; 3] = [
+        Profile::StandardIndex,
+        Profile::RandomDwell,
+        Profile::SlowDisplacement,
+    ];
+}
+
+/// Generate the roller *command* trajectory (m) for `n` samples; the
+/// executed trajectory is slew-limited afterwards.
+fn command_trajectory(profile: Profile, n: usize, rng: &mut Rng) -> Vec<f64> {
+    let dt = 1.0 / SAMPLE_RATE_HZ;
+    let mid = 0.5 * (ROLLER_MIN_M + ROLLER_MAX_M);
+    let half = 0.5 * (ROLLER_MAX_M - ROLLER_MIN_M);
+    let mut out = Vec::with_capacity(n);
+    match profile {
+        Profile::StandardIndex => {
+            // Three phases of equal length; envelope ramps 0.2 -> 1.0
+            // within each phase (paper Fig 3: increasing magnitude).
+            let phase_len = (n / 3).max(1);
+            for i in 0..n {
+                let (phase, j) = (i / phase_len, i % phase_len);
+                let env = 0.2 + 0.8 * j as f64 / phase_len as f64;
+                let t = j as f64 * dt;
+                let w = 2.0 * std::f64::consts::PI * 0.5; // 0.5 Hz pattern
+                let x = match phase {
+                    0 => {
+                        if t.fract() < 0.5 {
+                            1.0
+                        } else {
+                            -1.0
+                        }
+                    }
+                    1 => (w * t).sin().abs() * 2.0 - 1.0,
+                    _ => (w * t).sin().min(0.0) * 2.0 + 1.0,
+                };
+                out.push(mid + half * env * x);
+            }
+        }
+        Profile::RandomDwell => {
+            let dwell = (0.4 * SAMPLE_RATE_HZ) as usize; // 400 ms dwells
+            let mut target = rng.range_f64(ROLLER_MIN_M, ROLLER_MAX_M);
+            for i in 0..n {
+                if i % dwell == 0 {
+                    target = rng.range_f64(ROLLER_MIN_M, ROLLER_MAX_M);
+                }
+                out.push(target);
+            }
+        }
+        Profile::SlowDisplacement => {
+            let steps = 12usize;
+            let half_n = (n / 2).max(1);
+            for i in 0..n {
+                let k = if i < half_n {
+                    (i * (steps + 1) / half_n).min(steps)
+                } else {
+                    steps - ((i - half_n) * (steps + 1) / (n - half_n).max(1)).min(steps)
+                };
+                let frac = k as f64 / steps as f64;
+                out.push(ROLLER_MIN_M + (ROLLER_MAX_M - ROLLER_MIN_M) * frac);
+            }
+        }
+    }
+    out
+}
+
+/// Apply the rig's 250 mm/s slew limit to a command trajectory.
+pub fn slew_limit(cmd: &[f64], max_speed: f64) -> Vec<f64> {
+    let dt = 1.0 / SAMPLE_RATE_HZ;
+    let max_step = max_speed * dt;
+    let mut out = Vec::with_capacity(cmd.len());
+    let mut pos = cmd.first().copied().unwrap_or(0.0);
+    for &c in cmd {
+        let delta = (c - pos).clamp(-max_step, max_step);
+        pos += delta;
+        out.push(pos);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Response synthesis
+// ---------------------------------------------------------------------------
+
+/// One experimental run: acceleration input and roller-position target.
+#[derive(Clone, Debug)]
+pub struct Run {
+    pub profile: Profile,
+    pub seed: u64,
+    /// Accelerometer signal (arbitrary units), 5 kHz.
+    pub accel: Vec<f32>,
+    /// Executed roller position (m), 5 kHz.
+    pub roller: Vec<f32>,
+}
+
+/// Simulator configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub beam: Beam,
+    pub n_modes: usize,
+    /// Modal damping ratio.
+    pub zeta: f64,
+    /// Per-mode output weights (accelerometer at the tip).
+    pub mode_weights: Vec<f64>,
+    /// Broadband ambient forcing RMS.
+    pub ambient: f64,
+    /// Impulse gain per unit roller velocity.
+    pub impulse_gain: f64,
+    /// Accelerometer noise RMS.
+    pub sensor_noise: f64,
+    /// Frequency-table resolution.
+    pub table_points: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            beam: Beam::default(),
+            n_modes: 3,
+            zeta: 0.02,
+            mode_weights: vec![1.0, 0.45, 0.18],
+            ambient: 0.08,
+            impulse_gain: 60.0,
+            sensor_noise: 0.02,
+            table_points: 96,
+        }
+    }
+}
+
+/// The simulator: build once (eigen-solve table), then generate runs.
+pub struct Simulator {
+    pub cfg: SimConfig,
+    pub table: FreqTable,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig) -> Self {
+        let table = FreqTable::build(&cfg.beam, cfg.n_modes, cfg.table_points);
+        Simulator { cfg, table }
+    }
+
+    /// Generate one run of `seconds` duration.
+    ///
+    /// The response is a bank of time-varying two-pole resonators
+    /// (impulse-invariant discretization of the damped modal oscillators)
+    /// tracking f_k(a(t)), driven by slew-limited roller velocity
+    /// (self-excitation) plus ambient broadband forcing.
+    pub fn generate(&self, profile: Profile, seconds: f64, seed: u64) -> Run {
+        let n = (seconds * SAMPLE_RATE_HZ) as usize;
+        let mut rng = Rng::new(seed);
+        let cmd = command_trajectory(profile, n, &mut rng);
+        let roller = slew_limit(&cmd, ROLLER_MAX_SPEED_MPS);
+
+        let dt = 1.0 / SAMPLE_RATE_HZ;
+        let n_modes = self.cfg.n_modes;
+        let mut y1 = vec![0.0f64; n_modes]; // resonator state y[n-1]
+        let mut y2 = vec![0.0f64; n_modes]; // y[n-2]
+        let mut accel = Vec::with_capacity(n);
+        let mut prev_pos = roller[0];
+        for &pos in roller.iter() {
+            let vel = (pos - prev_pos) / dt;
+            prev_pos = pos;
+            // Excitation: impulses from roller motion + ambient forcing.
+            let e = self.cfg.impulse_gain * vel * dt + self.cfg.ambient * rng.normal();
+            let mut sample = 0.0f64;
+            for k in 0..n_modes {
+                let f = self.table.freq(k, pos);
+                let w = 2.0 * std::f64::consts::PI * f;
+                let wd = w * (1.0 - self.cfg.zeta * self.cfg.zeta).sqrt();
+                let r = (-self.cfg.zeta * w * dt).exp();
+                let a1 = 2.0 * r * (wd * dt).cos();
+                let a2 = -r * r;
+                let y0 = a1 * y1[k] + a2 * y2[k] + e;
+                y2[k] = y1[k];
+                y1[k] = y0;
+                sample += self.cfg.mode_weights[k] * y0;
+            }
+            sample += self.cfg.sensor_noise * rng.normal();
+            accel.push(sample as f32);
+        }
+        Run {
+            profile,
+            seed,
+            accel,
+            roller: roller.into_iter().map(|x| x as f32).collect(),
+        }
+    }
+
+    /// Generate a whole dataset in the paper's 20/100/30 category mix,
+    /// scaled by `scale` (scale=1.0 gives 150 runs; scale=0.05 gives 8).
+    pub fn generate_dataset(&self, seconds: f64, scale: f64, seed: u64) -> Vec<Run> {
+        let counts = [
+            (Profile::StandardIndex, (20.0 * scale).ceil() as usize),
+            (Profile::RandomDwell, (100.0 * scale).ceil() as usize),
+            (Profile::SlowDisplacement, (30.0 * scale).ceil() as usize),
+        ];
+        let mut rng = Rng::new(seed);
+        let mut runs = Vec::new();
+        for (profile, count) in counts {
+            for _ in 0..count {
+                let s = rng.next_u64();
+                runs.push(self.generate(profile, seconds, s));
+            }
+        }
+        runs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn beam() -> Beam {
+        Beam::default()
+    }
+
+    #[test]
+    fn cantilever_limit_frequency_sane() {
+        // With the pin very close to the clamp the beam approaches a plain
+        // cantilever of length L: f1 ≈ (1.875^2 / 2π) sqrt(EI/ρA) / L^2.
+        let b = beam();
+        let f = b.natural_frequencies(0.002, 1)[0];
+        let analytic = 1.875f64.powi(2) / (2.0 * std::f64::consts::PI)
+            * (b.e * b.i / (b.rho * b.area)).sqrt()
+            / (b.length * b.length);
+        assert!(
+            (f - analytic).abs() / analytic < 0.08,
+            "f1 {f} vs cantilever {analytic}"
+        );
+    }
+
+    #[test]
+    fn frequencies_increase_with_pin_position() {
+        // Moving the pin toward the tip shortens the overhang: f1 rises.
+        let b = beam();
+        let mut prev = 0.0;
+        for i in 0..8 {
+            let a = ROLLER_MIN_M + (ROLLER_MAX_M - ROLLER_MIN_M) * i as f64 / 7.0;
+            let f = b.natural_frequencies(a, 1)[0];
+            assert!(f > prev, "f1 not increasing at a={a}: {f} <= {prev}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn modes_are_ordered() {
+        let f = beam().natural_frequencies(0.1, 3);
+        assert_eq!(f.len(), 3);
+        assert!(f[0] < f[1] && f[1] < f[2]);
+        assert!(f[0] > 10.0 && f[2] < 20_000.0, "{f:?}");
+    }
+
+    #[test]
+    fn freq_table_interpolates_between_grid_points() {
+        let b = beam();
+        let table = FreqTable::build(&b, 2, 24);
+        let a = 0.1003;
+        let fi = table.freq(0, a);
+        let exact = b.natural_frequencies(a, 1)[0];
+        assert!((fi - exact).abs() / exact < 0.01, "{fi} vs {exact}");
+        // Clamping outside the range.
+        assert_eq!(table.freq(0, 0.0), table.freqs[0][0]);
+        assert_eq!(table.freq(0, 1.0), *table.freqs[0].last().unwrap());
+    }
+
+    #[test]
+    fn det8_diagonal() {
+        let mut m = [[0.0; 8]; 8];
+        for (i, row) in m.iter_mut().enumerate() {
+            row[i] = (i + 1) as f64;
+        }
+        assert!((det8(m) - 40320.0).abs() < 1e-9); // 8!
+    }
+
+    #[test]
+    fn det8_row_swap_flips_sign() {
+        let mut m = [[0.0; 8]; 8];
+        for (i, row) in m.iter_mut().enumerate() {
+            row[i] = 1.0;
+        }
+        m.swap(0, 1);
+        // Permutation matrix with one swap: det = -1.
+        assert!((det8(m) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slew_limit_enforced() {
+        let cmd = vec![0.058, 0.141, 0.141, 0.058];
+        let lim = slew_limit(&cmd, ROLLER_MAX_SPEED_MPS);
+        let max_step = ROLLER_MAX_SPEED_MPS / SAMPLE_RATE_HZ;
+        for w in lim.windows(2) {
+            assert!((w[1] - w[0]).abs() <= max_step + 1e-12);
+        }
+    }
+
+    #[test]
+    fn run_shapes_and_ranges() {
+        let sim = Simulator::new(SimConfig { table_points: 16, ..Default::default() });
+        for profile in Profile::ALL {
+            let run = sim.generate(profile, 0.5, 1);
+            assert_eq!(run.accel.len(), 2500);
+            assert_eq!(run.roller.len(), 2500);
+            for &p in &run.roller {
+                assert!(
+                    (ROLLER_MIN_M as f32 - 1e-6..=ROLLER_MAX_M as f32 + 1e-6).contains(&p),
+                    "roller {p} out of range"
+                );
+            }
+            assert!(run.accel.iter().all(|a| a.is_finite()));
+        }
+    }
+
+    #[test]
+    fn generation_deterministic_by_seed() {
+        let sim = Simulator::new(SimConfig { table_points: 16, ..Default::default() });
+        let a = sim.generate(Profile::RandomDwell, 0.2, 9);
+        let b = sim.generate(Profile::RandomDwell, 0.2, 9);
+        assert_eq!(a.accel, b.accel);
+        let c = sim.generate(Profile::RandomDwell, 0.2, 10);
+        assert_ne!(a.accel, c.accel);
+    }
+
+    #[test]
+    fn roller_motion_excites_vibration() {
+        // A moving roller must produce substantially more vibration energy
+        // than a stationary roller with no ambient/sensor noise.
+        let sim = Simulator::new(SimConfig { table_points: 16, ..Default::default() });
+        let moving = sim.generate(Profile::StandardIndex, 0.5, 3);
+        let cfg_still = SimConfig {
+            impulse_gain: 0.0,
+            ambient: 0.0,
+            sensor_noise: 0.0,
+            table_points: 16,
+            ..Default::default()
+        };
+        let still = Simulator::new(cfg_still).generate(Profile::StandardIndex, 0.5, 3);
+        let energy = |xs: &[f32]| xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        assert!(energy(&moving.accel) > 10.0 * energy(&still.accel));
+    }
+
+    #[test]
+    fn dataset_mix_matches_paper_ratio() {
+        let sim = Simulator::new(SimConfig { table_points: 16, ..Default::default() });
+        let runs = sim.generate_dataset(0.1, 0.05, 42);
+        let count = |p: Profile| runs.iter().filter(|r| r.profile == p).count();
+        assert_eq!(count(Profile::StandardIndex), 1);
+        assert_eq!(count(Profile::RandomDwell), 5);
+        assert_eq!(count(Profile::SlowDisplacement), 2);
+    }
+}

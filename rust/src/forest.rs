@@ -1,0 +1,447 @@
+//! Random-forest regression (scikit-learn substitute — DESIGN.md §1).
+//!
+//! The paper trains one random-forest regressor per (layer type × metric):
+//! 3 layer kinds × {BRAM, LUT, FF, DSP, latency} = 15 models, fit on the
+//! synthesis database with an 80/20 split, and reports R², MAPE and RMSE%
+//! (Table I / Table II). This is a from-scratch CART + bagging
+//! implementation with the same knobs (tree count, depth, min-leaf,
+//! feature subsampling, bootstrap) and the same metrics.
+//!
+//! For the MIP collapse (paper §IV-B) the forest also exposes
+//! `predict_const`: with every feature fixed except the reuse factor the
+//! ensemble degenerates to a constant per candidate reuse value, which is
+//! exactly what Gurobi exploits to linearize the model.
+
+use crate::rng::Rng;
+
+/// Flat matrix of feature rows.
+#[derive(Clone, Debug)]
+pub struct FeatureMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl FeatureMatrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        FeatureMatrix { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols);
+            data.extend_from_slice(r);
+        }
+        FeatureMatrix { rows: rows.len(), cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CART regression tree
+// ---------------------------------------------------------------------------
+
+/// Flattened tree: nodes in a Vec, children by index.
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+/// Training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ForestConfig {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    /// Features tried per split (0 = all).
+    pub max_features: usize,
+    pub bootstrap: bool,
+    pub seed: u64,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        // sklearn-like defaults: deep trees, single-sample leaves.
+        ForestConfig {
+            n_trees: 60,
+            max_depth: 24,
+            min_leaf: 1,
+            max_features: 0,
+            bootstrap: true,
+            seed: 0xF0_4E57,
+        }
+    }
+}
+
+impl Tree {
+    /// Fit on the index subset `idx` of (x, y).
+    fn fit(
+        x: &FeatureMatrix,
+        y: &[f64],
+        idx: &mut [usize],
+        cfg: &ForestConfig,
+        rng: &mut Rng,
+    ) -> Tree {
+        let mut nodes = Vec::new();
+        Self::build(x, y, idx, cfg, rng, 0, &mut nodes);
+        Tree { nodes }
+    }
+
+    fn build(
+        x: &FeatureMatrix,
+        y: &[f64],
+        idx: &mut [usize],
+        cfg: &ForestConfig,
+        rng: &mut Rng,
+        depth: usize,
+        nodes: &mut Vec<Node>,
+    ) -> usize {
+        let mean = idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64;
+        if depth >= cfg.max_depth || idx.len() < 2 * cfg.min_leaf {
+            nodes.push(Node::Leaf { value: mean });
+            return nodes.len() - 1;
+        }
+        // Variance-reduction split search over a feature subset.
+        let n_feat = x.cols;
+        let k = if cfg.max_features == 0 || cfg.max_features >= n_feat {
+            n_feat
+        } else {
+            cfg.max_features
+        };
+        let feats = rng.sample_indices(n_feat, k);
+        let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, score)
+        let parent_sse = {
+            let s: f64 = idx.iter().map(|&i| (y[i] - mean) * (y[i] - mean)).sum();
+            s
+        };
+        let mut vals: Vec<(f64, f64)> = Vec::with_capacity(idx.len());
+        for &f in &feats {
+            vals.clear();
+            vals.extend(idx.iter().map(|&i| (x.row(i)[f], y[i])));
+            vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // Prefix sums for O(n) split evaluation.
+            let n = vals.len();
+            let total: f64 = vals.iter().map(|v| v.1).sum();
+            let total_sq: f64 = vals.iter().map(|v| v.1 * v.1).sum();
+            let mut lsum = 0.0;
+            let mut lsq = 0.0;
+            for i in 0..n - 1 {
+                lsum += vals[i].1;
+                lsq += vals[i].1 * vals[i].1;
+                if vals[i].0 == vals[i + 1].0 {
+                    continue; // cannot split between equal values
+                }
+                let nl = (i + 1) as f64;
+                let nr = (n - i - 1) as f64;
+                if (i + 1) < cfg.min_leaf || (n - i - 1) < cfg.min_leaf {
+                    continue;
+                }
+                let sse_l = lsq - lsum * lsum / nl;
+                let rsum = total - lsum;
+                let rsq = total_sq - lsq;
+                let sse_r = rsq - rsum * rsum / nr;
+                let score = sse_l + sse_r;
+                if best.map_or(true, |(_, _, s)| score < s) {
+                    let thr = 0.5 * (vals[i].0 + vals[i + 1].0);
+                    best = Some((f, thr, score));
+                }
+            }
+        }
+        match best {
+            Some((f, thr, score)) if score < parent_sse - 1e-12 => {
+                // Partition idx in place.
+                let mut lo = 0usize;
+                let mut hi = idx.len();
+                while lo < hi {
+                    if x.row(idx[lo])[f] <= thr {
+                        lo += 1;
+                    } else {
+                        hi -= 1;
+                        idx.swap(lo, hi);
+                    }
+                }
+                if lo == 0 || lo == idx.len() {
+                    nodes.push(Node::Leaf { value: mean });
+                    return nodes.len() - 1;
+                }
+                let slot = nodes.len();
+                nodes.push(Node::Leaf { value: mean }); // placeholder
+                let (l_idx, r_idx) = idx.split_at_mut(lo);
+                let left = Self::build(x, y, l_idx, cfg, rng, depth + 1, nodes);
+                let right = Self::build(x, y, r_idx, cfg, rng, depth + 1, nodes);
+                nodes[slot] = Node::Split { feature: f, threshold: thr, left, right };
+                slot
+            }
+            _ => {
+                nodes.push(Node::Leaf { value: mean });
+                nodes.len() - 1
+            }
+        }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let mut at = 0usize;
+        loop {
+            match &self.nodes[at] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    at = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[Node], at: usize) -> usize {
+            match &nodes[at] {
+                Node::Leaf { .. } => 1,
+                Node::Split { left, right, .. } => 1 + walk(nodes, *left).max(walk(nodes, *right)),
+            }
+        }
+        // Root is the first *returned* index of build for subtrees, but the
+        // top-level call always places the root at 0 (placeholder slot).
+        walk(&self.nodes, 0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forest
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    pub cfg: ForestConfig,
+}
+
+impl Forest {
+    pub fn fit(x: &FeatureMatrix, y: &[f64], cfg: ForestConfig) -> Forest {
+        assert_eq!(x.rows, y.len());
+        assert!(x.rows >= 2, "need at least 2 samples");
+        let mut rng = Rng::new(cfg.seed);
+        let mut trees = Vec::with_capacity(cfg.n_trees);
+        for t in 0..cfg.n_trees {
+            let mut trng = rng.fork(t as u64);
+            let mut idx: Vec<usize> = if cfg.bootstrap {
+                (0..x.rows).map(|_| trng.below(x.rows)).collect()
+            } else {
+                (0..x.rows).collect()
+            };
+            trees.push(Tree::fit(x, y, &mut idx, &cfg, &mut trng));
+        }
+        Forest { trees, cfg }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let s: f64 = self.trees.iter().map(|t| t.predict(row)).sum();
+        s / self.trees.len() as f64
+    }
+
+    pub fn predict_batch(&self, x: &FeatureMatrix) -> Vec<f64> {
+        (0..x.rows).map(|i| self.predict(x.row(i))).collect()
+    }
+
+    /// The paper's MIP collapse: fix all features, vary only `var_feature`
+    /// over `values`, returning the per-value constants the MIP consumes.
+    pub fn predict_const(&self, base: &[f64], var_feature: usize, values: &[f64]) -> Vec<f64> {
+        let mut row = base.to_vec();
+        values
+            .iter()
+            .map(|&v| {
+                row[var_feature] = v;
+                self.predict(&row)
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics (Table I / II definitions)
+// ---------------------------------------------------------------------------
+
+/// Validation metrics: R², MAPE%, RMSE% of range.
+#[derive(Clone, Copy, Debug)]
+pub struct RegMetrics {
+    pub r2: f64,
+    pub mape_pct: f64,
+    pub rmse_pct: f64,
+    pub value_min: f64,
+    pub value_max: f64,
+}
+
+pub fn regression_metrics(pred: &[f64], truth: &[f64]) -> RegMetrics {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let n = truth.len() as f64;
+    let mean = truth.iter().sum::<f64>() / n;
+    let ss_tot: f64 = truth.iter().map(|&t| (t - mean) * (t - mean)).sum();
+    let ss_res: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(&p, &t)| (p - t) * (p - t))
+        .sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    // MAPE over samples with nonzero truth (sklearn-style guard).
+    let mut mape = 0.0;
+    let mut mape_n = 0usize;
+    for (&p, &t) in pred.iter().zip(truth) {
+        if t.abs() > 1e-9 {
+            mape += ((p - t) / t).abs();
+            mape_n += 1;
+        }
+    }
+    let mape_pct = if mape_n > 0 { 100.0 * mape / mape_n as f64 } else { 0.0 };
+    let vmin = truth.iter().cloned().fold(f64::INFINITY, f64::min);
+    let vmax = truth.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let range = (vmax - vmin).max(1e-9);
+    let rmse_pct = 100.0 * (ss_res / n).sqrt() / range;
+    RegMetrics { r2, mape_pct, rmse_pct, value_min: vmin, value_max: vmax }
+}
+
+/// Deterministic 80/20 train/test split of row indices.
+pub fn train_test_split(n: usize, test_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let test = idx[..n_test].to_vec();
+    let train = idx[n_test..].to_vec();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_like_data(n: usize, seed: u64) -> (FeatureMatrix, Vec<f64>) {
+        // Nonlinear target a tree can model but a line cannot.
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.f64() * 10.0;
+            let b = rng.f64() * 10.0;
+            rows.push(vec![a, b]);
+            y.push(if (a > 5.0) ^ (b > 5.0) { 100.0 } else { 10.0 });
+        }
+        (FeatureMatrix::from_rows(&rows), y)
+    }
+
+    #[test]
+    fn tree_fits_step_function() {
+        let (x, y) = xor_like_data(400, 1);
+        let cfg = ForestConfig { n_trees: 1, bootstrap: false, ..Default::default() };
+        let mut idx: Vec<usize> = (0..x.rows).collect();
+        let mut rng = Rng::new(2);
+        let tree = Tree::fit(&x, &y, &mut idx, &cfg, &mut rng);
+        assert!((tree.predict(&[2.0, 2.0]) - 10.0).abs() < 1.0);
+        assert!((tree.predict(&[8.0, 2.0]) - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn forest_beats_mean_predictor() {
+        let (x, y) = xor_like_data(500, 3);
+        let (train, test) = train_test_split(x.rows, 0.2, 7);
+        let xt = FeatureMatrix::from_rows(&train.iter().map(|&i| x.row(i).to_vec()).collect::<Vec<_>>());
+        let yt: Vec<f64> = train.iter().map(|&i| y[i]).collect();
+        let forest = Forest::fit(&xt, &yt, ForestConfig::default());
+        let pred: Vec<f64> = test.iter().map(|&i| forest.predict(x.row(i))).collect();
+        let truth: Vec<f64> = test.iter().map(|&i| y[i]).collect();
+        let m = regression_metrics(&pred, &truth);
+        assert!(m.r2 > 0.9, "r2 {}", m.r2);
+    }
+
+    #[test]
+    fn forest_deterministic_given_seed() {
+        let (x, y) = xor_like_data(200, 5);
+        let f1 = Forest::fit(&x, &y, ForestConfig::default());
+        let f2 = Forest::fit(&x, &y, ForestConfig::default());
+        assert_eq!(f1.predict(&[3.3, 7.7]), f2.predict(&[3.3, 7.7]));
+    }
+
+    #[test]
+    fn min_leaf_respected_on_constant_target() {
+        // Constant target -> single leaf, no split.
+        let x = FeatureMatrix::from_rows(&(0..50).map(|i| vec![i as f64]).collect::<Vec<_>>());
+        let y = vec![5.0; 50];
+        let f = Forest::fit(&x, &y, ForestConfig { n_trees: 3, ..Default::default() });
+        assert_eq!(f.predict(&[25.0]), 5.0);
+        for t in &f.trees {
+            assert_eq!(t.depth(), 1);
+        }
+    }
+
+    #[test]
+    fn predict_const_collapses_over_one_feature() {
+        let (x, y) = xor_like_data(300, 9);
+        let forest = Forest::fit(&x, &y, ForestConfig::default());
+        let vals = [1.0, 3.0, 6.0, 9.0];
+        let consts = forest.predict_const(&[2.0, 2.0], 1, &vals);
+        assert_eq!(consts.len(), 4);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(consts[i], forest.predict(&[2.0, v]));
+        }
+    }
+
+    #[test]
+    fn metrics_perfect_prediction() {
+        let m = regression_metrics(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]);
+        assert!((m.r2 - 1.0).abs() < 1e-12);
+        assert_eq!(m.mape_pct, 0.0);
+        assert_eq!(m.rmse_pct, 0.0);
+    }
+
+    #[test]
+    fn metrics_mean_prediction_r2_zero() {
+        let truth = [1.0, 2.0, 3.0, 4.0];
+        let mean = 2.5;
+        let m = regression_metrics(&[mean; 4], &truth);
+        assert!(m.r2.abs() < 1e-12);
+        assert_eq!(m.value_min, 1.0);
+        assert_eq!(m.value_max, 4.0);
+    }
+
+    #[test]
+    fn split_is_partition_and_deterministic() {
+        let (a1, b1) = train_test_split(100, 0.2, 42);
+        let (a2, b2) = train_test_split(100, 0.2, 42);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        assert_eq!(a1.len(), 80);
+        assert_eq!(b1.len(), 20);
+        let mut all: Vec<usize> = a1.iter().chain(&b1).cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn feature_subsampling_still_learns() {
+        let (x, y) = xor_like_data(500, 11);
+        let cfg = ForestConfig { max_features: 1, n_trees: 80, ..Default::default() };
+        let forest = Forest::fit(&x, &y, cfg);
+        let pred: Vec<f64> = (0..x.rows).map(|i| forest.predict(x.row(i))).collect();
+        let m = regression_metrics(&pred, &y);
+        assert!(m.r2 > 0.8, "r2 {}", m.r2);
+    }
+}

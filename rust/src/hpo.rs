@@ -1,0 +1,860 @@
+//! Multi-objective hyperparameter optimization (Optuna/BoTorch substitute —
+//! paper §III).
+//!
+//! The paper runs a multi-objective Bayesian search (BoTorch's quasi-Monte
+//! Carlo acquisition through optuna-integration) over the network family,
+//! minimizing (validation RMSE, workload-in-multiplies), and keeps the
+//! Pareto-optimal set (Fig 5 / Table III). This module implements the same
+//! algorithmic family from scratch:
+//!
+//! * [`Sampler::Bayes`] — Gaussian-process surrogate per scalarization
+//!   (ParEGO: random augmented-Tchebycheff weights per iteration, expected
+//!   improvement maximized over a quasi-random candidate pool);
+//! * [`Sampler::Random`] — the baseline Optuna would call `RandomSampler`;
+//! * [`Sampler::Nsga2`] — an evolutionary baseline (non-dominated sorting +
+//!   crowding distance), Optuna's default multi-objective sampler.
+//!
+//! Pareto utilities ([`pareto_front`], [`hypervolume_2d`]) are shared with
+//! the reporting code.
+
+use crate::layers::NetConfig;
+use crate::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Search space (paper §II-B2 scale, discretized)
+// ---------------------------------------------------------------------------
+
+/// Discrete search space for the DROPBEAR model family.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub windows: Vec<usize>,
+    pub max_conv: usize,
+    pub filters: Vec<usize>,
+    pub kernels: Vec<usize>,
+    pub max_lstm: usize,
+    pub units: Vec<usize>,
+    pub max_dense: usize, // hidden dense layers (1..=max, + output head)
+    pub neurons: Vec<usize>,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        // The paper allows up to 512 inputs, 5 conv blocks (<=256 maps),
+        // 3 LSTM layers (<=425 units), 5 dense (<=512). We keep the same
+        // structure with a tractable value grid; the Pareto-relevant
+        // networks live at 10-40K multiplies (paper §II-B2) which this
+        // grid covers densely.
+        SearchSpace {
+            windows: vec![32, 64, 128, 256, 512],
+            max_conv: 5,
+            filters: vec![4, 8, 16, 32, 64],
+            kernels: vec![3, 5, 7],
+            max_lstm: 3,
+            units: vec![4, 8, 16, 32, 64],
+            max_dense: 4,
+            neurons: vec![8, 16, 32, 64, 128],
+        }
+    }
+}
+
+impl SearchSpace {
+    /// A smaller space for tests and fast demos.
+    pub fn small() -> Self {
+        SearchSpace {
+            windows: vec![32, 64],
+            max_conv: 2,
+            filters: vec![4, 8],
+            kernels: vec![3, 5],
+            max_lstm: 1,
+            units: vec![4, 8],
+            max_dense: 2,
+            neurons: vec![8, 16],
+        }
+    }
+
+    /// Genome: [window_i, n_conv, filter_i, kernel_i, n_lstm, units_i,
+    /// n_dense, neurons_i] — all small ints.
+    pub const GENES: usize = 8;
+
+    pub fn gene_card(&self, g: usize) -> usize {
+        match g {
+            0 => self.windows.len(),
+            1 => self.max_conv + 1,
+            2 => self.filters.len(),
+            3 => self.kernels.len(),
+            4 => self.max_lstm + 1,
+            5 => self.units.len(),
+            6 => self.max_dense,
+            7 => self.neurons.len(),
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn sample_genome(&self, rng: &mut Rng) -> Vec<usize> {
+        (0..Self::GENES).map(|g| rng.below(self.gene_card(g))).collect()
+    }
+
+    /// Decode a genome into a network configuration. Invalid combinations
+    /// (window too small for the conv stack) are repaired by dropping conv
+    /// blocks.
+    pub fn decode(&self, genome: &[usize]) -> NetConfig {
+        assert_eq!(genome.len(), Self::GENES);
+        let window = self.windows[genome[0]];
+        let mut n_conv = genome[1];
+        let filters = self.filters[genome[2]];
+        let kernel = self.kernels[genome[3]];
+        let n_lstm = genome[4];
+        let units = self.units[genome[5]];
+        let n_dense = genome[6] + 1; // at least one hidden dense
+        let neurons = self.neurons[genome[7]];
+
+        // Repair: ensure the window survives the conv stack.
+        loop {
+            let mut s = window;
+            let mut ok = true;
+            for _ in 0..n_conv {
+                if s < kernel + 1 {
+                    ok = false;
+                    break;
+                }
+                s = (s - kernel + 1) / 2;
+            }
+            if ok && s >= 1 {
+                break;
+            }
+            n_conv -= 1;
+        }
+        let mut dense: Vec<usize> = vec![neurons; n_dense];
+        dense.push(1);
+        NetConfig {
+            window,
+            conv: vec![(kernel, filters); n_conv],
+            lstm: vec![units; n_lstm],
+            dense,
+        }
+    }
+
+    /// Normalized feature vector in [0,1]^8 for the GP kernel.
+    pub fn features(&self, genome: &[usize]) -> Vec<f64> {
+        (0..Self::GENES)
+            .map(|g| {
+                let card = self.gene_card(g);
+                if card <= 1 {
+                    0.0
+                } else {
+                    genome[g] as f64 / (card - 1) as f64
+                }
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pareto utilities
+// ---------------------------------------------------------------------------
+
+/// Indices of the Pareto-optimal points (minimization in every dimension).
+pub fn pareto_front(points: &[Vec<f64>]) -> Vec<usize> {
+    let dominates = |a: &[f64], b: &[f64]| {
+        a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+    };
+    (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, p)| j != i && dominates(p, &points[i]))
+        })
+        .collect()
+}
+
+/// 2-D hypervolume (minimization) w.r.t. a reference point that must
+/// dominate no front point.
+pub fn hypervolume_2d(front: &[(f64, f64)], reference: (f64, f64)) -> f64 {
+    let mut pts: Vec<(f64, f64)> = front
+        .iter()
+        .cloned()
+        .filter(|p| p.0 <= reference.0 && p.1 <= reference.1)
+        .collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut hv = 0.0;
+    let mut prev_y = reference.1;
+    for (x, y) in pts {
+        if y < prev_y {
+            hv += (reference.0 - x) * (prev_y - y);
+            prev_y = y;
+        }
+    }
+    hv
+}
+
+// ---------------------------------------------------------------------------
+// Gaussian process (squared-exponential, Cholesky)
+// ---------------------------------------------------------------------------
+
+/// Minimal GP regressor for the Bayesian sampler.
+pub struct Gp {
+    x: Vec<Vec<f64>>,
+    alpha: Vec<f64>,       // K^-1 y
+    chol: Vec<Vec<f64>>,   // lower-triangular L with K = L L^T
+    pub lengthscale: f64,
+    pub signal_var: f64,
+    pub noise_var: f64,
+    y_mean: f64,
+    y_std: f64,
+}
+
+fn sqexp(a: &[f64], b: &[f64], ls: f64, sv: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    sv * (-0.5 * d2 / (ls * ls)).exp()
+}
+
+impl Gp {
+    /// Fit with fixed hyperparameters (standardizes y internally).
+    pub fn fit(x: Vec<Vec<f64>>, y: &[f64], lengthscale: f64, noise_var: f64) -> Gp {
+        let n = x.len();
+        assert_eq!(n, y.len());
+        assert!(n >= 1);
+        let y_mean = y.iter().sum::<f64>() / n as f64;
+        let y_std = (y.iter().map(|v| (v - y_mean) * (v - y_mean)).sum::<f64>() / n as f64)
+            .sqrt()
+            .max(1e-9);
+        let ys: Vec<f64> = y.iter().map(|v| (v - y_mean) / y_std).collect();
+        let signal_var = 1.0;
+        // Build K + noise I and its Cholesky factor.
+        let mut k = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = sqexp(&x[i], &x[j], lengthscale, signal_var)
+                    + if i == j { noise_var } else { 0.0 };
+                k[i][j] = v;
+                k[j][i] = v;
+            }
+        }
+        let chol = cholesky(&k).expect("GP kernel matrix not PD");
+        let alpha = chol_solve(&chol, &ys);
+        Gp { x, alpha, chol, lengthscale, signal_var, noise_var, y_mean, y_std }
+    }
+
+    /// Posterior mean and variance at a point (de-standardized).
+    pub fn posterior(&self, q: &[f64]) -> (f64, f64) {
+        let n = self.x.len();
+        let kq: Vec<f64> = (0..n)
+            .map(|i| sqexp(&self.x[i], q, self.lengthscale, self.signal_var))
+            .collect();
+        let mu_std: f64 = kq.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+        // v = L^-1 kq; var = k(q,q) - v.v
+        let v = forward_sub(&self.chol, &kq);
+        let var_std = (self.signal_var - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (
+            mu_std * self.y_std + self.y_mean,
+            var_std * self.y_std * self.y_std,
+        )
+    }
+}
+
+/// Dense Cholesky (lower). Returns None if not positive definite.
+pub fn cholesky(a: &[Vec<f64>]) -> Option<Vec<Vec<f64>>> {
+    let n = a.len();
+    let mut l = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i][j];
+            for k in 0..j {
+                s -= l[i][k] * l[j][k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i][j] = s.sqrt();
+            } else {
+                l[i][j] = s / l[j][j];
+            }
+        }
+    }
+    Some(l)
+}
+
+fn forward_sub(l: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
+        }
+        y[i] = s / l[i][i];
+    }
+    y
+}
+
+fn back_sub(l: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    // Solves L^T x = y.
+    let n = y.len();
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k][i] * x[k];
+        }
+        x[i] = s / l[i][i];
+    }
+    x
+}
+
+fn chol_solve(l: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    back_sub(l, &forward_sub(l, b))
+}
+
+/// Expected improvement for minimization.
+pub fn expected_improvement(mu: f64, var: f64, best: f64) -> f64 {
+    let sigma = var.sqrt();
+    if sigma < 1e-12 {
+        return (best - mu).max(0.0);
+    }
+    let z = (best - mu) / sigma;
+    (best - mu) * phi_cdf(z) + sigma * phi_pdf(z)
+}
+
+fn phi_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+fn phi_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Abramowitz–Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = x.signum();
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+// ---------------------------------------------------------------------------
+// The optimizer
+// ---------------------------------------------------------------------------
+
+/// One evaluated trial.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub genome: Vec<usize>,
+    pub cfg: NetConfig,
+    /// Objective 1: validation RMSE (normalized units).
+    pub rmse: f64,
+    /// Objective 2: forward-pass multiplies.
+    pub workload: f64,
+}
+
+/// Sampling strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sampler {
+    Random,
+    /// GP + ParEGO scalarization + EI (the paper's Bayesian family).
+    Bayes,
+    /// NSGA-II evolutionary baseline.
+    Nsga2,
+}
+
+/// HPO driver configuration.
+#[derive(Clone, Debug)]
+pub struct HpoConfig {
+    pub space: SearchSpace,
+    pub sampler: Sampler,
+    pub n_trials: usize,
+    /// Random warm-up trials before the model-based sampler kicks in.
+    pub n_init: usize,
+    /// Candidate pool size per Bayesian acquisition round.
+    pub n_candidates: usize,
+    pub seed: u64,
+}
+
+impl Default for HpoConfig {
+    fn default() -> Self {
+        HpoConfig {
+            space: SearchSpace::default(),
+            sampler: Sampler::Bayes,
+            n_trials: 60,
+            n_init: 12,
+            n_candidates: 256,
+            seed: 0x40_77_1234,
+        }
+    }
+}
+
+/// Run the search. `evaluate` maps a NetConfig to its validation RMSE
+/// (workload is computed analytically). Duplicate genomes are not
+/// re-evaluated.
+pub fn run_hpo(
+    cfg: &HpoConfig,
+    mut evaluate: impl FnMut(&NetConfig, u64) -> f64,
+) -> Vec<Trial> {
+    match cfg.sampler {
+        Sampler::Nsga2 => return run_nsga2(cfg, evaluate),
+        Sampler::Random | Sampler::Bayes => {}
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut trials: Vec<Trial> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+
+    let eval_genome = |genome: Vec<usize>,
+                           trials: &mut Vec<Trial>,
+                           seen: &mut std::collections::HashSet<Vec<usize>>,
+                           rng: &mut Rng,
+                           evaluate: &mut dyn FnMut(&NetConfig, u64) -> f64| {
+        if !seen.insert(genome.clone()) {
+            return;
+        }
+        let net = cfg.space.decode(&genome);
+        let rmse = evaluate(&net, rng.next_u64());
+        let workload = net.workload_multiplies() as f64;
+        trials.push(Trial { genome, cfg: net, rmse, workload });
+    };
+
+    // Warm-up.
+    let mut guard = 0;
+    while trials.len() < cfg.n_init.min(cfg.n_trials) && guard < cfg.n_trials * 20 {
+        let g = cfg.space.sample_genome(&mut rng);
+        eval_genome(g, &mut trials, &mut seen, &mut rng, &mut evaluate);
+        guard += 1;
+    }
+
+    while trials.len() < cfg.n_trials {
+        let genome = match cfg.sampler {
+            Sampler::Random => cfg.space.sample_genome(&mut rng),
+            Sampler::Bayes => {
+                // ParEGO: random weight, augmented Tchebycheff scalarization
+                // over normalized objectives, GP + EI over a candidate pool.
+                let lambda = rng.f64();
+                let (f1, f2): (Vec<f64>, Vec<f64>) = (
+                    trials.iter().map(|t| t.rmse).collect(),
+                    trials.iter().map(|t| (t.workload + 1.0).ln()).collect(),
+                );
+                let norm = |v: &[f64]| {
+                    let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+                    let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let d = (hi - lo).max(1e-12);
+                    v.iter().map(|x| (x - lo) / d).collect::<Vec<f64>>()
+                };
+                let (n1, n2) = (norm(&f1), norm(&f2));
+                let scal: Vec<f64> = n1
+                    .iter()
+                    .zip(&n2)
+                    .map(|(&a, &b)| {
+                        let w = (lambda * a).max((1.0 - lambda) * b);
+                        w + 0.05 * (lambda * a + (1.0 - lambda) * b)
+                    })
+                    .collect();
+                let x: Vec<Vec<f64>> =
+                    trials.iter().map(|t| cfg.space.features(&t.genome)).collect();
+                let gp = Gp::fit(x, &scal, 0.35, 1e-4);
+                let best = scal.iter().cloned().fold(f64::INFINITY, f64::min);
+                let mut best_g: Option<(Vec<usize>, f64)> = None;
+                for _ in 0..cfg.n_candidates {
+                    let g = cfg.space.sample_genome(&mut rng);
+                    if seen.contains(&g) {
+                        continue;
+                    }
+                    let (mu, var) = gp.posterior(&cfg.space.features(&g));
+                    let ei = expected_improvement(mu, var, best);
+                    if best_g.as_ref().map_or(true, |(_, b)| ei > *b) {
+                        best_g = Some((g, ei));
+                    }
+                }
+                best_g
+                    .map(|(g, _)| g)
+                    .unwrap_or_else(|| cfg.space.sample_genome(&mut rng))
+            }
+            Sampler::Nsga2 => unreachable!(),
+        };
+        let before = trials.len();
+        eval_genome(genome, &mut trials, &mut seen, &mut rng, &mut evaluate);
+        if trials.len() == before {
+            // Duplicate: fall back to random to guarantee progress.
+            let g = cfg.space.sample_genome(&mut rng);
+            eval_genome(g, &mut trials, &mut seen, &mut rng, &mut evaluate);
+        }
+        if seen.len() > cfg.n_trials * 50 {
+            break; // space exhausted
+        }
+    }
+    trials
+}
+
+// ---------------------------------------------------------------------------
+// NSGA-II
+// ---------------------------------------------------------------------------
+
+fn run_nsga2(cfg: &HpoConfig, mut evaluate: impl FnMut(&NetConfig, u64) -> f64) -> Vec<Trial> {
+    let mut rng = Rng::new(cfg.seed);
+    let pop_size = (cfg.n_init.max(8)).min(cfg.n_trials);
+    let mut all: Vec<Trial> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    let mut eval = |genome: Vec<usize>, all: &mut Vec<Trial>, rng: &mut Rng| -> usize {
+        if let Some(pos) = all.iter().position(|t| t.genome == genome) {
+            return pos;
+        }
+        seen.insert(genome.clone());
+        let net = cfg.space.decode(&genome);
+        let rmse = evaluate(&net, rng.next_u64());
+        let workload = net.workload_multiplies() as f64;
+        all.push(Trial { genome, cfg: net, rmse, workload });
+        all.len() - 1
+    };
+
+    let mut pop: Vec<usize> = (0..pop_size)
+        .map(|_| {
+            let g = cfg.space.sample_genome(&mut rng);
+            eval(g, &mut all, &mut rng)
+        })
+        .collect();
+
+    while all.len() < cfg.n_trials {
+        // Offspring via tournament + uniform crossover + mutation.
+        let objectives: Vec<Vec<f64>> = pop
+            .iter()
+            .map(|&i| vec![all[i].rmse, (all[i].workload + 1.0).ln()])
+            .collect();
+        let ranks = nondominated_ranks(&objectives);
+        let tournament = |rng: &mut Rng| -> usize {
+            let a = rng.below(pop.len());
+            let b = rng.below(pop.len());
+            if ranks[a] <= ranks[b] {
+                pop[a]
+            } else {
+                pop[b]
+            }
+        };
+        let pa = tournament(&mut rng);
+        let pb = tournament(&mut rng);
+        let mut child: Vec<usize> = (0..SearchSpace::GENES)
+            .map(|g| {
+                if rng.bool(0.5) {
+                    all[pa].genome[g]
+                } else {
+                    all[pb].genome[g]
+                }
+            })
+            .collect();
+        // Mutation.
+        for g in 0..SearchSpace::GENES {
+            if rng.bool(0.2) {
+                child[g] = rng.below(cfg.space.gene_card(g));
+            }
+        }
+        let idx = eval(child, &mut all, &mut rng);
+        if !pop.contains(&idx) {
+            pop.push(idx);
+        } else {
+            let g = cfg.space.sample_genome(&mut rng);
+            let idx = eval(g, &mut all, &mut rng);
+            if !pop.contains(&idx) {
+                pop.push(idx);
+            }
+        }
+        // Environmental selection back to pop_size.
+        if pop.len() > pop_size {
+            let objs: Vec<Vec<f64>> = pop
+                .iter()
+                .map(|&i| vec![all[i].rmse, (all[i].workload + 1.0).ln()])
+                .collect();
+            let ranks = nondominated_ranks(&objs);
+            let crowd = crowding_distance(&objs);
+            let mut order: Vec<usize> = (0..pop.len()).collect();
+            order.sort_by(|&a, &b| {
+                ranks[a]
+                    .cmp(&ranks[b])
+                    .then(crowd[b].partial_cmp(&crowd[a]).unwrap())
+            });
+            pop = order[..pop_size].iter().map(|&k| pop[k]).collect();
+        }
+    }
+    all
+}
+
+/// Non-dominated sorting: rank 0 = Pareto front, etc.
+pub fn nondominated_ranks(objs: &[Vec<f64>]) -> Vec<usize> {
+    let n = objs.len();
+    let dominates = |a: &[f64], b: &[f64]| {
+        a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+    };
+    let mut rank = vec![usize::MAX; n];
+    let mut remaining: Vec<usize> = (0..n).collect();
+    let mut level = 0;
+    while !remaining.is_empty() {
+        let front: Vec<usize> = remaining
+            .iter()
+            .cloned()
+            .filter(|&i| {
+                !remaining
+                    .iter()
+                    .any(|&j| j != i && dominates(&objs[j], &objs[i]))
+            })
+            .collect();
+        for &i in &front {
+            rank[i] = level;
+        }
+        remaining.retain(|i| !front.contains(i));
+        level += 1;
+        if front.is_empty() {
+            // All remaining are mutually equal: same rank.
+            for &i in &remaining {
+                rank[i] = level;
+            }
+            break;
+        }
+    }
+    rank
+}
+
+/// NSGA-II crowding distance.
+pub fn crowding_distance(objs: &[Vec<f64>]) -> Vec<f64> {
+    let n = objs.len();
+    if n == 0 {
+        return vec![];
+    }
+    let m = objs[0].len();
+    let mut dist = vec![0.0f64; n];
+    for k in 0..m {
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| objs[a][k].partial_cmp(&objs[b][k]).unwrap());
+        dist[order[0]] = f64::INFINITY;
+        dist[order[n - 1]] = f64::INFINITY;
+        let lo = objs[order[0]][k];
+        let hi = objs[order[n - 1]][k];
+        let range = (hi - lo).max(1e-12);
+        for w in 1..n - 1 {
+            dist[order[w]] += (objs[order[w + 1]][k] - objs[order[w - 1]][k]) / range;
+        }
+    }
+    dist
+}
+
+/// Extract the Pareto-optimal trials (min rmse, min workload), sorted by
+/// descending RMSE (the Table III presentation order).
+pub fn pareto_trials(trials: &[Trial]) -> Vec<&Trial> {
+    let pts: Vec<Vec<f64>> = trials.iter().map(|t| vec![t.rmse, t.workload]).collect();
+    let mut front: Vec<&Trial> = pareto_front(&pts).into_iter().map(|i| &trials[i]).collect();
+    front.sort_by(|a, b| b.rmse.partial_cmp(&a.rmse).unwrap());
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop_check;
+
+    #[test]
+    fn pareto_front_simple() {
+        let pts = vec![
+            vec![1.0, 5.0],
+            vec![2.0, 4.0],
+            vec![3.0, 3.0],
+            vec![2.5, 4.5], // dominated by (2,4)
+            vec![1.0, 5.0], // duplicate: both kept (neither strictly dominates)
+        ];
+        let f = pareto_front(&pts);
+        assert!(f.contains(&0) && f.contains(&1) && f.contains(&2));
+        assert!(!f.contains(&3));
+    }
+
+    #[test]
+    fn property_front_is_dominance_free() {
+        prop_check("front-dominance-free", 30, |g| {
+            let n = g.int(1, 40);
+            let pts: Vec<Vec<f64>> = (0..n)
+                .map(|_| vec![g.f64(0.0, 10.0), g.f64(0.0, 10.0)])
+                .collect();
+            let front = pareto_front(&pts);
+            if front.is_empty() {
+                return Err("empty front".into());
+            }
+            for &i in &front {
+                for &j in &front {
+                    if i != j
+                        && pts[j][0] <= pts[i][0]
+                        && pts[j][1] <= pts[i][1]
+                        && (pts[j][0] < pts[i][0] || pts[j][1] < pts[i][1])
+                    {
+                        return Err(format!("front point {i} dominated by {j}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hypervolume_known_value() {
+        // Single point (0,0) vs ref (1,1): HV = 1.
+        assert!((hypervolume_2d(&[(0.0, 0.0)], (1.0, 1.0)) - 1.0).abs() < 1e-12);
+        // Two points forming a staircase.
+        let hv = hypervolume_2d(&[(0.0, 0.5), (0.5, 0.0)], (1.0, 1.0));
+        assert!((hv - 0.75).abs() < 1e-12);
+        // Point outside the reference contributes nothing.
+        assert_eq!(hypervolume_2d(&[(2.0, 2.0)], (1.0, 1.0)), 0.0);
+    }
+
+    #[test]
+    fn hypervolume_monotone_in_points() {
+        let base = hypervolume_2d(&[(0.5, 0.5)], (1.0, 1.0));
+        let more = hypervolume_2d(&[(0.5, 0.5), (0.2, 0.8)], (1.0, 1.0));
+        assert!(more >= base);
+    }
+
+    #[test]
+    fn gp_interpolates_training_points() {
+        let x = vec![vec![0.0], vec![0.5], vec![1.0]];
+        let y = vec![1.0, 3.0, 2.0];
+        let gp = Gp::fit(x.clone(), &y, 0.3, 1e-6);
+        for (xi, yi) in x.iter().zip(&y) {
+            let (mu, var) = gp.posterior(xi);
+            assert!((mu - yi).abs() < 0.05, "mu {mu} vs {yi}");
+            assert!(var < 0.1);
+        }
+        // Far away: variance grows toward the prior.
+        let (_, var_far) = gp.posterior(&[5.0]);
+        assert!(var_far > 0.5);
+    }
+
+    #[test]
+    fn cholesky_round_trip() {
+        let a = vec![
+            vec![4.0, 2.0, 0.6],
+            vec![2.0, 5.0, 1.2],
+            vec![0.6, 1.2, 3.0],
+        ];
+        let l = cholesky(&a).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l[i][k] * l[j][k];
+                }
+                assert!((s - a[i][j]).abs() < 1e-9);
+            }
+        }
+        // Non-PD rejected.
+        assert!(cholesky(&vec![vec![1.0, 2.0], vec![2.0, 1.0]]).is_none());
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        assert!((erf(0.0)).abs() < 1e-6); // A&S 7.1.26 absolute error bound
+        assert!((erf(1.0) - 0.8427007).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427007).abs() < 1e-5);
+        assert!((erf(3.0) - 0.9999779).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ei_zero_when_certain_and_worse() {
+        assert_eq!(expected_improvement(5.0, 0.0, 4.0), 0.0);
+        assert!(expected_improvement(3.0, 0.0, 4.0) > 0.9);
+        // Uncertainty adds value.
+        assert!(expected_improvement(4.0, 1.0, 4.0) > 0.0);
+    }
+
+    #[test]
+    fn decode_always_valid() {
+        let space = SearchSpace::default();
+        let mut rng = Rng::new(3);
+        for _ in 0..300 {
+            let g = space.sample_genome(&mut rng);
+            let cfg = space.decode(&g);
+            assert!(cfg.is_valid(), "invalid decode: {cfg:?} from {g:?}");
+        }
+    }
+
+    fn synthetic_eval(cfg: &NetConfig, _seed: u64) -> f64 {
+        // Smooth synthetic objective: accuracy improves (rmse falls) with
+        // log-workload, with diminishing returns + structure bonuses.
+        let w = cfg.workload_multiplies() as f64;
+        let base = 0.3 / (1.0 + (w / 5000.0)).ln().max(0.1);
+        let lstm_bonus = if cfg.lstm.is_empty() { 0.02 } else { 0.0 };
+        base + lstm_bonus
+    }
+
+    #[test]
+    fn random_hpo_produces_requested_trials() {
+        let cfg = HpoConfig {
+            space: SearchSpace::small(),
+            sampler: Sampler::Random,
+            n_trials: 20,
+            n_init: 5,
+            n_candidates: 32,
+            seed: 7,
+        };
+        let trials = run_hpo(&cfg, synthetic_eval);
+        assert!(trials.len() >= 15, "{}", trials.len());
+        let front = pareto_trials(&trials);
+        assert!(!front.is_empty());
+        // Front sorted by descending rmse and ascending workload.
+        for w in front.windows(2) {
+            assert!(w[0].rmse >= w[1].rmse);
+            assert!(w[0].workload <= w[1].workload);
+        }
+    }
+
+    #[test]
+    fn bayes_hpo_beats_or_matches_random_on_synthetic() {
+        let mk = |sampler| HpoConfig {
+            space: SearchSpace::default(),
+            sampler,
+            n_trials: 30,
+            n_init: 8,
+            n_candidates: 128,
+            seed: 11,
+        };
+        let bayes = run_hpo(&mk(Sampler::Bayes), synthetic_eval);
+        let random = run_hpo(&mk(Sampler::Random), synthetic_eval);
+        let hv = |trials: &[Trial]| {
+            let front: Vec<(f64, f64)> = pareto_trials(trials)
+                .iter()
+                .map(|t| (t.rmse, (t.workload + 1.0).ln()))
+                .collect();
+            hypervolume_2d(&front, (1.0, 25.0))
+        };
+        // Bayesian should do at least ~as well on this smooth landscape.
+        assert!(hv(&bayes) >= 0.85 * hv(&random), "hv {} vs {}", hv(&bayes), hv(&random));
+    }
+
+    #[test]
+    fn nsga2_runs_and_covers_front() {
+        let cfg = HpoConfig {
+            space: SearchSpace::small(),
+            sampler: Sampler::Nsga2,
+            n_trials: 25,
+            n_init: 8,
+            n_candidates: 0,
+            seed: 13,
+        };
+        let trials = run_hpo(&cfg, synthetic_eval);
+        assert!(trials.len() >= 20);
+        assert!(pareto_trials(&trials).len() >= 2);
+    }
+
+    #[test]
+    fn ranks_and_crowding_shapes() {
+        let objs = vec![
+            vec![0.0, 1.0],
+            vec![1.0, 0.0],
+            vec![1.0, 1.0], // dominated
+            vec![0.5, 0.5],
+        ];
+        let ranks = nondominated_ranks(&objs);
+        assert_eq!(ranks[0], 0);
+        assert_eq!(ranks[1], 0);
+        assert_eq!(ranks[3], 0);
+        assert_eq!(ranks[2], 1);
+        let crowd = crowding_distance(&objs);
+        assert_eq!(crowd.len(), 4);
+        assert!(crowd[0].is_infinite() || crowd[1].is_infinite());
+    }
+}

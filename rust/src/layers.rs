@@ -1,0 +1,299 @@
+//! Shared network/layer descriptions.
+//!
+//! The whole toolflow keys on the same three HLS4ML layer features the
+//! paper's cost models use (§II-B, §IV): layer kind, `n_in`/`n_out` (the
+//! folded GEMV dimensions), and the sequence length `seq` (trip count of
+//! the loop enclosing the GEMV). This module is the single source of truth
+//! for walking a network configuration into those features — it mirrors
+//! `python/compile/model.py::layer_plan` exactly and the artifact manifest
+//! cross-checks the two in the integration tests.
+
+use std::fmt;
+
+/// The three HLS4ML layer types the paper targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    Conv1d,
+    Lstm,
+    Dense,
+}
+
+impl LayerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerKind::Conv1d => "conv1d",
+            LayerKind::Lstm => "lstm",
+            LayerKind::Dense => "dense",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "conv1d" => Some(LayerKind::Conv1d),
+            "lstm" => Some(LayerKind::Lstm),
+            "dense" => Some(LayerKind::Dense),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for LayerKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// HLS4ML-facing features of one deployed layer.
+///
+/// `n_in * n_out` is the folded matrix-vector product; `seq` is the number
+/// of trips through the enclosing sequential loop (conv output positions /
+/// LSTM timesteps; 1 for dense).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LayerSpec {
+    pub kind: LayerKind,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub seq: usize,
+}
+
+impl LayerSpec {
+    pub fn new(kind: LayerKind, n_in: usize, n_out: usize, seq: usize) -> Self {
+        assert!(n_in >= 1 && n_out >= 1 && seq >= 1);
+        LayerSpec { kind, n_in, n_out, seq }
+    }
+
+    /// Total multiplies of the folded GEMV across the sequence loop.
+    pub fn gemv_mults(&self) -> u64 {
+        self.n_in as u64 * self.n_out as u64 * self.seq as u64
+    }
+
+    /// Valid HLS4ML reuse factors: divisors of n_in*n_out (Eq. 1 requires
+    /// R to evenly divide the product), capped for tractability.
+    pub fn valid_reuse_factors(&self, cap: usize) -> Vec<usize> {
+        let prod = self.n_in * self.n_out;
+        let mut out = Vec::new();
+        let mut small = Vec::new();
+        let mut large = Vec::new();
+        let mut d = 1usize;
+        while d * d <= prod {
+            if prod % d == 0 {
+                small.push(d);
+                if d != prod / d {
+                    large.push(prod / d);
+                }
+            }
+            d += 1;
+        }
+        out.extend(small);
+        large.reverse();
+        out.extend(large);
+        out.retain(|&r| r <= cap);
+        out
+    }
+
+    /// `block_factor = ceil(n_in * n_out / R)` — Eq. 1.
+    pub fn block_factor(&self, reuse: usize) -> usize {
+        let prod = self.n_in * self.n_out;
+        prod.div_ceil(reuse)
+    }
+}
+
+/// A member of the paper's network family: conv blocks, LSTM layers, dense
+/// stack (§II-A). Mirrors `python/compile/model.py::NetConfig`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct NetConfig {
+    /// Input window length n (Takens embedding size).
+    pub window: usize,
+    /// (kernel, filters) per conv block (conv 'valid' + ReLU + maxpool 2).
+    pub conv: Vec<(usize, usize)>,
+    /// Units per LSTM layer.
+    pub lstm: Vec<usize>,
+    /// Neurons per dense layer; last must be 1 (linear head).
+    pub dense: Vec<usize>,
+}
+
+impl NetConfig {
+    pub fn new(
+        window: usize,
+        conv: Vec<(usize, usize)>,
+        lstm: Vec<usize>,
+        dense: Vec<usize>,
+    ) -> Self {
+        let cfg = NetConfig { window, conv, lstm, dense };
+        assert!(cfg.is_valid(), "invalid NetConfig: {cfg:?}");
+        cfg
+    }
+
+    /// Structural validity: dense head present, window survives the conv
+    /// stack, all sizes >= 1.
+    pub fn is_valid(&self) -> bool {
+        if self.dense.is_empty() || *self.dense.last().unwrap() != 1 {
+            return false;
+        }
+        if self.window == 0 {
+            return false;
+        }
+        let mut s = self.window;
+        for &(k, f) in &self.conv {
+            // Need s_out = s - k + 1 >= 2 so the maxpool(2) output is >= 1.
+            if k == 0 || f == 0 || s < k + 1 {
+                return false;
+            }
+            s = (s - k + 1) / 2;
+        }
+        if s == 0 {
+            return false;
+        }
+        self.lstm.iter().all(|&u| u >= 1) && self.dense.iter().all(|&n| n >= 1)
+    }
+
+    /// Walk the network into per-layer HLS4ML features. Mirrors
+    /// `model.py::layer_plan`.
+    pub fn plan(&self) -> Vec<LayerSpec> {
+        let mut plan = Vec::new();
+        let (mut s, mut c) = (self.window, 1usize);
+        for &(k, f) in &self.conv {
+            let s_out = s - k + 1;
+            plan.push(LayerSpec::new(LayerKind::Conv1d, c * k, f, s_out));
+            s = s_out / 2;
+            c = f;
+        }
+        for &u in &self.lstm {
+            plan.push(LayerSpec::new(LayerKind::Lstm, c + u, 4 * u, s));
+            c = u;
+        }
+        let mut feat = if self.lstm.is_empty() { s * c } else { c };
+        for &n in &self.dense {
+            plan.push(LayerSpec::new(LayerKind::Dense, feat, n, 1));
+            feat = n;
+        }
+        plan
+    }
+
+    /// Forward-pass multiplies, paper §II-A formulas (mirrors
+    /// `model.py::workload_multiplies`).
+    pub fn workload_multiplies(&self) -> u64 {
+        let mut total = 0u64;
+        let (mut s, mut c) = (self.window, 1usize);
+        for &(k, f) in &self.conv {
+            let s_out = s - k + 1;
+            total += (s_out * k * c * f) as u64;
+            s = s_out / 2;
+            c = f;
+        }
+        for &u in &self.lstm {
+            total += ((s * c + u) * 4 * u) as u64;
+            c = u;
+        }
+        let mut feat = if self.lstm.is_empty() { s * c } else { c };
+        for &n in &self.dense {
+            total += (feat * n) as u64;
+            feat = n;
+        }
+        total
+    }
+
+    /// Number of trainable parameter tensors (w+b per layer).
+    pub fn num_param_tensors(&self) -> usize {
+        2 * (self.conv.len() + self.lstm.len() + self.dense.len())
+    }
+
+    /// Compact human-readable signature, e.g. `w256 c3x8,3x16 l16 d32,1`.
+    pub fn signature(&self) -> String {
+        let conv = self
+            .conv
+            .iter()
+            .map(|(k, f)| format!("{k}x{f}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let lstm = self
+            .lstm
+            .iter()
+            .map(|u| u.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        let dense = self
+            .dense
+            .iter()
+            .map(|n| n.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        format!("w{} c[{}] l[{}] d[{}]", self.window, conv, lstm, dense)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> NetConfig {
+        NetConfig::new(32, vec![(3, 4)], vec![5], vec![6, 1])
+    }
+
+    #[test]
+    fn plan_matches_python_model() {
+        // Mirrors python test_workload_formulas_match_paper fixture.
+        let plan = demo().plan();
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan[0], LayerSpec::new(LayerKind::Conv1d, 3, 4, 30));
+        assert_eq!(plan[1], LayerSpec::new(LayerKind::Lstm, 4 + 5, 20, 15));
+        assert_eq!(plan[2], LayerSpec::new(LayerKind::Dense, 5, 6, 1));
+        assert_eq!(plan[3], LayerSpec::new(LayerKind::Dense, 6, 1, 1));
+    }
+
+    #[test]
+    fn workload_matches_hand_computation() {
+        // conv 360 + lstm 1300 + dense 30 + dense 6 — same instance as the
+        // python test_workload_formulas_match_paper.
+        assert_eq!(demo().workload_multiplies(), 360 + 1300 + 30 + 6);
+    }
+
+    #[test]
+    fn plan_includes_all_dense_layers() {
+        let cfg = NetConfig::new(16, vec![], vec![], vec![8, 4, 1]);
+        assert_eq!(cfg.plan().len(), 3);
+        assert_eq!(cfg.plan()[2].n_in, 4);
+    }
+
+    #[test]
+    fn dense_flattens_conv_output_when_no_lstm() {
+        let cfg = NetConfig::new(32, vec![(3, 4)], vec![], vec![1]);
+        // s_out = 30, pooled 15, flattened 15*4 = 60.
+        assert_eq!(cfg.plan()[1], LayerSpec::new(LayerKind::Dense, 60, 1, 1));
+    }
+
+    #[test]
+    fn reuse_factors_divide_product() {
+        let spec = LayerSpec::new(LayerKind::Dense, 12, 10, 1);
+        let rfs = spec.valid_reuse_factors(10_000);
+        assert!(rfs.contains(&1) && rfs.contains(&120));
+        for r in &rfs {
+            assert_eq!(120 % r, 0);
+        }
+        // Sorted ascending and unique.
+        let mut sorted = rfs.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(rfs, sorted);
+    }
+
+    #[test]
+    fn block_factor_eq1() {
+        let spec = LayerSpec::new(LayerKind::Dense, 16, 8, 1);
+        assert_eq!(spec.block_factor(1), 128);
+        assert_eq!(spec.block_factor(128), 1);
+        assert_eq!(spec.block_factor(3), 43); // ceil(128/3)
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(!NetConfig { window: 8, conv: vec![(9, 4)], lstm: vec![], dense: vec![1] }.is_valid());
+        assert!(!NetConfig { window: 8, conv: vec![], lstm: vec![], dense: vec![] }.is_valid());
+        assert!(!NetConfig { window: 8, conv: vec![], lstm: vec![], dense: vec![4] }.is_valid());
+    }
+
+    #[test]
+    fn signature_is_stable() {
+        assert_eq!(demo().signature(), "w32 c[3x4] l[5] d[6,1]");
+    }
+}

@@ -1,0 +1,47 @@
+//! # N-TORC: Native Tensor Optimizer for Real-time Constraints
+//!
+//! Full-system reproduction of the N-TORC toolflow (Singh et al., CS.AR
+//! 2025): simultaneous neural-architecture search and FPGA deployment
+//! optimization for sub-millisecond cyber-physical inference.
+//!
+//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack
+//! (see `DESIGN.md`):
+//!
+//! * Layer 1 — Pallas kernels (`python/compile/kernels/`) implement the
+//!   reuse-factor-blocked GEMV datapaths; build-time only.
+//! * Layer 2 — JAX model family (`python/compile/model.py`) lowered once to
+//!   HLO text artifacts by `python/compile/aot.py`.
+//! * Layer 3 — this crate: loads the artifacts via PJRT ([`runtime`]) and
+//!   owns every runtime subsystem: the HLS4ML synthesis simulator ([`hls`]),
+//!   random-forest cost/latency models ([`forest`]), the MIP reuse-factor
+//!   optimizer ([`mip`]), stochastic/SA baselines ([`search`]),
+//!   multi-objective Bayesian hyperparameter search ([`hpo`]), the DROPBEAR
+//!   beam simulator ([`dropbear`]), the native training substrate ([`nn`],
+//!   [`tensor`]), and the pipeline coordinator ([`coordinator`]).
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `ntorc` binary is self-contained.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dropbear;
+pub mod forest;
+pub mod hls;
+pub mod hpo;
+pub mod layers;
+pub mod mip;
+pub mod nn;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod search;
+pub mod ser;
+pub mod tensor;
+pub mod testkit;
+
+/// Crate-wide result alias (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,331 @@
+//! `ntorc` — the Layer-3 leader binary.
+//!
+//! Wires the CLI to the coordinator pipeline and the experiment
+//! regeneration functions. After `make artifacts` this binary is fully
+//! self-contained (no Python on any path it executes).
+
+use anyhow::{bail, Result};
+
+use ntorc::cli::{Args, USAGE};
+use ntorc::config::{self, Preset};
+use ntorc::coordinator::{Pipeline, PipelineConfig};
+use ntorc::hpo::pareto_trials;
+use ntorc::report;
+use ntorc::rng::Rng;
+use ntorc::runtime::Runtime;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    match run(&raw) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+const COMMON_FLAGS: &[&str] = &["preset", "config", "set", "seed", "out", "help"];
+
+fn pipeline_config(args: &Args, default_preset: Preset) -> Result<PipelineConfig> {
+    let preset = match args.get("preset") {
+        Some(p) => Preset::parse(p)?,
+        None => default_preset,
+    };
+    let mut cfg = preset.pipeline();
+    if let Some(path) = args.get("config") {
+        config::load_file(&mut cfg, path)?;
+    }
+    for kv in args.get_all("set") {
+        config::apply_override(&mut cfg, kv)?;
+    }
+    if let Some(seed) = args.get("seed") {
+        let s: u64 = seed.parse()?;
+        cfg.hpo.seed = s;
+        cfg.data.seed = s ^ 0xD47A;
+        cfg.hls_seed = s ^ 0xD00D;
+    }
+    Ok(cfg)
+}
+
+fn emit(args: &Args, default_name: &str, title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    let name = args.get("out").unwrap_or(default_name);
+    print!("{}", report::fmt_table(title, headers, rows));
+    match report::write_csv(name, headers, rows) {
+        Ok(()) => println!("[csv] results/{name}.csv ({} rows)", rows.len()),
+        Err(e) => eprintln!("[csv] write failed: {e}"),
+    }
+}
+
+fn run(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw)?;
+    if args.command.is_empty() || args.command == "help" || args.has("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.command.as_str() {
+        "synth-db" => {
+            args.check_known(COMMON_FLAGS)?;
+            let cfg = pipeline_config(&args, Preset::Full)?;
+            let pipe = Pipeline::new(cfg);
+            let t0 = std::time::Instant::now();
+            let db = pipe.synth_database();
+            println!(
+                "synthesized {} unique (layer, reuse) samples in {:?}",
+                db.len(),
+                t0.elapsed()
+            );
+            let mut counts = std::collections::BTreeMap::new();
+            for s in &db {
+                *counts.entry(s.spec.kind.name()).or_insert(0usize) += 1;
+            }
+            for (k, n) in counts {
+                println!("  {k}: {n}");
+            }
+        }
+        "table1" => {
+            args.check_known(COMMON_FLAGS)?;
+            let cfg = pipeline_config(&args, Preset::Full)?;
+            let (_pipe, models) = report::standard_models(cfg);
+            let (h, rows) = report::table1_rows(&models);
+            emit(&args, "table1_model_accuracy", "Table I — cost/latency model validation", &h, &rows);
+        }
+        "table2" => {
+            args.check_known(COMMON_FLAGS)?;
+            let cfg = pipeline_config(&args, Preset::Full)?;
+            let (_pipe, models) = report::standard_models(cfg);
+            let (h, rows) = report::table2_rows(&models);
+            emit(&args, "table2_mape", "Table II — MAPE vs Wu et al. [26]", &h, &rows);
+        }
+        "fig4" => {
+            args.check_known(COMMON_FLAGS)?;
+            let cfg = pipeline_config(&args, Preset::Full)?;
+            let pipe = Pipeline::new(cfg);
+            let (h, rows) = report::fig4_rows(&pipe);
+            emit(&args, "fig4_scaling", "Fig 4 — GEMV datapath cost/latency scaling", &h, &rows);
+        }
+        "fig8" => {
+            args.check_known(COMMON_FLAGS)?;
+            let cfg = pipeline_config(&args, Preset::Full)?;
+            let (pipe, models) = report::standard_models(cfg);
+            let (h, rows) = report::fig8_rows(&pipe, &models);
+            emit(&args, "fig8_model_vs_truth", "Fig 8 — predicted vs ground truth", &h, &rows);
+        }
+        "hpo" | "fig5" => {
+            args.check_known(COMMON_FLAGS)?;
+            let cfg = pipeline_config(&args, Preset::Smoke)?;
+            let pipe = Pipeline::new(cfg);
+            let sim = report::standard_simulator();
+            let t0 = std::time::Instant::now();
+            let out = report::fig5_run(&pipe, &sim);
+            println!(
+                "{} trials in {:?}; Pareto front size {}",
+                out.trials.len(),
+                t0.elapsed(),
+                pareto_trials(&out.trials).len()
+            );
+            let (h, rows) = report::fig5_rows(&out);
+            emit(&args, "fig5_pareto", "Fig 5 — Pareto front (RMSE vs workload)", &h, &rows);
+        }
+        "table3" | "deploy" => {
+            args.check_known(COMMON_FLAGS)?;
+            let cfg = pipeline_config(&args, Preset::Smoke)?;
+            let (pipe, models) = report::standard_models(cfg);
+            let sim = report::standard_simulator();
+            let out = report::fig5_run(&pipe, &sim);
+            let deployed = report::deploy_pareto(&pipe, &models, &out.trials);
+            let (h, rows) = report::table3_rows(&deployed);
+            emit(&args, "table3_deployment", "Table III — deployed Pareto networks (200 µs budget)", &h, &rows);
+        }
+        "table4" | "solve-compare" => {
+            args.check_known(&[COMMON_FLAGS, &["trials"]].concat())?;
+            let cfg = pipeline_config(&args, Preset::Full)?;
+            let seed = args.u64_or("seed", 0x7AB4E4)?;
+            let (pipe, models) = report::standard_models(cfg);
+            let trial_counts: Vec<usize> = match args.get("trials") {
+                Some(t) => t.split(',').map(|x| x.parse().unwrap_or(1000)).collect(),
+                None => vec![1_000, 10_000, 100_000, 1_000_000],
+            };
+            let mut rows = Vec::new();
+            for (name, net) in report::table4_models() {
+                let prob = models.build_problem(
+                    &net.plan(),
+                    pipe.cfg.latency_budget,
+                    pipe.cfg.max_choices_per_layer,
+                );
+                println!("{name}: {:.3e} RF permutations", prob.permutations());
+                rows.extend(report::table4_run(&pipe, &models, name, &net, &trial_counts, seed));
+            }
+            let (h, out_rows) = report::table4_rows(&rows);
+            emit(&args, "table4_solver", "Table IV — N-TORC vs stochastic vs SA", &h, &out_rows);
+        }
+        "fig7" => {
+            args.check_known(COMMON_FLAGS)?;
+            let cfg = pipeline_config(&args, Preset::Smoke)?;
+            let sim = report::standard_simulator();
+            let configs = vec![
+                (
+                    "model2_like",
+                    ntorc::layers::NetConfig::new(64, vec![(3, 8)], vec![8], vec![16, 1]),
+                ),
+                (
+                    "model1_like",
+                    ntorc::layers::NetConfig::new(64, vec![(3, 8), (3, 8)], vec![], vec![32, 16, 1]),
+                ),
+            ];
+            let named: Vec<(&str, ntorc::layers::NetConfig)> =
+                configs.iter().map(|(n, c)| (*n, c.clone())).collect();
+            let out = report::fig7_run(&sim, &cfg.data, &named, &cfg.budget, cfg.hpo.seed);
+            for (name, rmse) in &out.rmse {
+                println!("{name}: trace RMSE {rmse:.4}");
+            }
+            let headers = vec!["t_s", "vibration", "roller_true", "pred_model2", "pred_model1"];
+            emit(&args, "fig7_trace", "Fig 7 — predicted vs true roller trace", &headers, &out.rows);
+        }
+        "e2e" => {
+            args.check_known(COMMON_FLAGS)?;
+            let cfg = pipeline_config(&args, Preset::Smoke)?;
+            run_e2e(cfg, &args)?;
+        }
+        "train" => {
+            args.check_known(&[COMMON_FLAGS, &["model", "steps", "artifacts"]].concat())?;
+            let cfg = pipeline_config(&args, Preset::Smoke)?;
+            let name = args.get("model").unwrap_or("quickstart");
+            let steps = args.usize_or("steps", 100)?;
+            let dir = args.get("artifacts").unwrap_or("artifacts");
+            let rt = Runtime::new(dir)?;
+            let model = rt.load(name)?;
+            println!(
+                "loaded {name}: window={} batch={} params={}",
+                model.meta.window,
+                model.meta.batch,
+                model.meta.param_shapes.len()
+            );
+            let sim = report::standard_simulator();
+            let prepared = ntorc::coordinator::prepare_data(&sim, &cfg.data, model.meta.window);
+            let mut state = model.init_state(cfg.hpo.seed)?;
+            let mut rng = Rng::new(cfg.hpo.seed ^ 1);
+            let log = model.train_epochs(&mut state, &prepared.train, steps, &mut rng)?;
+            println!(
+                "trained {steps} steps in {:.2}s ({:.1} steps/s); loss {:.5} -> {:.5}",
+                log.seconds,
+                steps as f64 / log.seconds,
+                log.losses.first().unwrap_or(&0.0),
+                log.losses.last().unwrap_or(&0.0)
+            );
+            // Validation RMSE through the PJRT predict path.
+            let va = prepared.val.take(200);
+            let mut preds = Vec::new();
+            for i in 0..va.len() {
+                let x = ntorc::tensor::Tensor::from_vec(&[1, model.meta.window], va.x.row(i).to_vec());
+                preds.push(model.predict_one(&state, &x)?);
+            }
+            println!("val RMSE (PJRT path): {:.4}", ntorc::data::rmse(&preds, &va.y));
+        }
+        "list-models" => {
+            args.check_known(&[COMMON_FLAGS, &["artifacts"]].concat())?;
+            let dir = args.get("artifacts").unwrap_or("artifacts");
+            let rt = Runtime::new(dir)?;
+            for name in rt.available_models()? {
+                let m = rt.load(&name)?;
+                println!(
+                    "{name}: {} | window {} | {} multiplies",
+                    m.meta.cfg.signature(),
+                    m.meta.window,
+                    m.meta.workload_multiplies
+                );
+            }
+        }
+        "export-dataset" => {
+            // Figs 2-3 of the paper: an acceleration trace and the roller
+            // position that caused it, as CSV (plus the beam's modal
+            // frequencies vs roller position — the physics the simulator
+            // substitutes for the rig).
+            args.check_known(&[COMMON_FLAGS, &["profile", "seconds"]].concat())?;
+            let profile = match args.get("profile").unwrap_or("standard_index") {
+                "standard_index" => ntorc::dropbear::Profile::StandardIndex,
+                "random_dwell" => ntorc::dropbear::Profile::RandomDwell,
+                "slow_displacement" => ntorc::dropbear::Profile::SlowDisplacement,
+                other => bail!("unknown profile '{other}'"),
+            };
+            let seconds: f64 = args.get("seconds").unwrap_or("4").parse()?;
+            let seed = args.u64_or("seed", 8)?;
+            let sim = report::standard_simulator();
+            let run = sim.generate(profile, seconds, seed);
+            let rows: Vec<Vec<String>> = (0..run.accel.len())
+                .step_by(4)
+                .map(|i| {
+                    vec![
+                        format!("{:.6}", i as f64 / ntorc::dropbear::SAMPLE_RATE_HZ),
+                        format!("{:.6}", run.accel[i]),
+                        format!("{:.6}", run.roller[i] * 1000.0), // mm like Fig 3
+                    ]
+                })
+                .collect();
+            emit(&args, "dropbear_run", "Figs 2-3 — DROPBEAR run (decimated 4x)",
+                 &["t_s", "accel", "roller_mm"], &rows[..rows.len().min(12)]);
+            report::write_csv(args.get("out").unwrap_or("dropbear_run"),
+                              &["t_s", "accel", "roller_mm"], &rows)?;
+            // Modal frequencies vs roller position (the simulator's core).
+            let freq_rows: Vec<Vec<String>> = sim
+                .table
+                .positions
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| {
+                    let mut row = vec![format!("{:.4}", a * 1000.0)];
+                    for k in 0..sim.table.freqs.len() {
+                        row.push(format!("{:.2}", sim.table.freqs[k][i]));
+                    }
+                    row
+                })
+                .collect();
+            report::write_csv("dropbear_modes", &["roller_mm", "f1_hz", "f2_hz", "f3_hz"], &freq_rows)?;
+            println!("[csv] results/dropbear_modes.csv ({} rows)", freq_rows.len());
+        }
+        "init-config" => {
+            args.check_known(&[COMMON_FLAGS, &["path"]].concat())?;
+            let path = args.get("path").unwrap_or("ntorc.toml");
+            std::fs::write(path, config::EXAMPLE_CONFIG)?;
+            println!("wrote {path}");
+        }
+        other => bail!("unknown command '{other}' — try `ntorc help`"),
+    }
+    Ok(())
+}
+
+/// The end-to-end pipeline (also exercised by examples/full_pipeline.rs).
+fn run_e2e(cfg: PipelineConfig, args: &Args) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    println!("[1/4] synthesizing HLS layer database ...");
+    let pipe = Pipeline::new(cfg);
+    let db = pipe.synth_database();
+    println!("      {} unique (layer, reuse) samples", db.len());
+
+    println!("[2/4] fitting cost/latency models ...");
+    let models = pipe.fit_models(&db);
+    let worst = models
+        .validation
+        .iter()
+        .min_by(|a, b| a.metrics.r2.partial_cmp(&b.metrics.r2).unwrap())
+        .unwrap();
+    println!(
+        "      15 forests fit; worst R² = {:.3} ({} {})",
+        worst.metrics.r2,
+        worst.kind.name(),
+        worst.metric.name()
+    );
+
+    println!("[3/4] hyperparameter search on simulated DROPBEAR ...");
+    let sim = report::standard_simulator();
+    let out = report::fig5_run(&pipe, &sim);
+    let front = pareto_trials(&out.trials);
+    println!("      {} trials, Pareto front {}", out.trials.len(), front.len());
+
+    println!("[4/4] MIP deployment of the Pareto set (200 µs budget) ...");
+    let deployed = report::deploy_pareto(&pipe, &models, &out.trials);
+    let (h, rows) = report::table3_rows(&deployed);
+    emit(args, "e2e_table3", "E2E — deployed Pareto networks", &h, &rows);
+    println!("e2e complete in {:?}", t0.elapsed());
+    Ok(())
+}

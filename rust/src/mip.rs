@@ -1,0 +1,793 @@
+//! Mixed-integer reuse-factor optimizer (Gurobi substitute — paper §IV-B).
+//!
+//! The deployment problem: for each layer i pick one reuse factor
+//! R_i (a divisor of n_in·n_out), minimizing the summed predicted resource
+//! cost (LUT+FF+BRAM+DSP) subject to the summed predicted latency staying
+//! within the real-time budget (50,000 cycles = 200 µs at 250 MHz).
+//!
+//! With every feature fixed except the reuse factor, the random-forest
+//! models collapse to per-(layer, R) constants (paper §IV-B), so the MIP is
+//! exactly a **multiple-choice knapsack**: binary x_{i,j}, Σ_j x_{i,j} = 1,
+//! min Σ c_{i,j} x_{i,j} s.t. Σ l_{i,j} x_{i,j} ≤ L.
+//!
+//! Two exact solvers are provided and cross-checked in the tests:
+//!
+//! * [`solve_bb`] — the Gurobi-shaped path: LP relaxation by a two-phase
+//!   dense **simplex**, branch-and-bound on the most fractional layer,
+//!   dominance pruning. This is what `N-TORC` timing claims run on.
+//! * [`solve_dp`] — dynamic programming over the integer latency budget;
+//!   slower but an independent oracle for the optimum.
+
+use std::collections::HashMap;
+
+/// One reuse-factor option for a layer.
+#[derive(Clone, Copy, Debug)]
+pub struct Choice {
+    pub reuse: usize,
+    pub cost: f64,
+    pub latency: f64,
+}
+
+/// A deployment instance.
+#[derive(Clone, Debug)]
+pub struct DeployProblem {
+    /// Per-layer candidate choices (non-empty).
+    pub layers: Vec<Vec<Choice>>,
+    /// Total latency budget in cycles.
+    pub latency_budget: f64,
+}
+
+/// A reuse-factor assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Solution {
+    /// Index into `layers[i]` for each layer.
+    pub pick: Vec<usize>,
+    pub cost: f64,
+    pub latency: f64,
+}
+
+impl DeployProblem {
+    /// Total number of assignments (the paper's "RF permutations").
+    pub fn permutations(&self) -> f64 {
+        self.layers.iter().map(|l| l.len() as f64).product()
+    }
+
+    pub fn evaluate(&self, pick: &[usize]) -> Solution {
+        assert_eq!(pick.len(), self.layers.len());
+        let mut cost = 0.0;
+        let mut latency = 0.0;
+        for (i, &j) in pick.iter().enumerate() {
+            cost += self.layers[i][j].cost;
+            latency += self.layers[i][j].latency;
+        }
+        Solution { pick: pick.to_vec(), cost, latency }
+    }
+
+    pub fn is_feasible(&self, pick: &[usize]) -> bool {
+        self.evaluate(pick).latency <= self.latency_budget + 1e-9
+    }
+
+    /// Remove dominated choices per layer (another choice has <= latency
+    /// and <= cost, one strict). Returns the pruned problem and, per
+    /// layer, the original index of each surviving choice.
+    pub fn prune_dominated(&self) -> (DeployProblem, Vec<Vec<usize>>) {
+        let mut layers = Vec::with_capacity(self.layers.len());
+        let mut maps = Vec::with_capacity(self.layers.len());
+        for choices in &self.layers {
+            let mut order: Vec<usize> = (0..choices.len()).collect();
+            // Sort by latency asc, then cost asc.
+            order.sort_by(|&a, &b| {
+                choices[a]
+                    .latency
+                    .partial_cmp(&choices[b].latency)
+                    .unwrap()
+                    .then(choices[a].cost.partial_cmp(&choices[b].cost).unwrap())
+            });
+            let mut kept: Vec<usize> = Vec::new();
+            let mut best_cost = f64::INFINITY;
+            for &j in &order {
+                if choices[j].cost < best_cost - 1e-12 {
+                    kept.push(j);
+                    best_cost = choices[j].cost;
+                }
+            }
+            maps.push(kept.clone());
+            layers.push(kept.iter().map(|&j| choices[j]).collect());
+        }
+        (
+            DeployProblem { layers, latency_budget: self.latency_budget },
+            maps,
+        )
+    }
+
+    /// Quick feasibility check: even the min-latency assignment must fit.
+    pub fn min_latency(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.iter().map(|c| c.latency).fold(f64::INFINITY, f64::min))
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Two-phase dense simplex (min c.x, A_eq x = b_eq, A_ub x <= b_ub, x >= 0)
+// ---------------------------------------------------------------------------
+
+/// LP in standard inequality/equality form.
+#[derive(Clone, Debug, Default)]
+pub struct Lp {
+    pub n: usize,
+    pub c: Vec<f64>,
+    pub a_eq: Vec<Vec<f64>>,
+    pub b_eq: Vec<f64>,
+    pub a_ub: Vec<Vec<f64>>,
+    pub b_ub: Vec<f64>,
+}
+
+/// LP outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LpResult {
+    Optimal { x: Vec<f64>, obj: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+/// Two-phase primal simplex with Bland's rule (anti-cycling). Dense
+/// tableau; sized for the MCKP relaxations this crate generates
+/// (hundreds of columns, tens of rows).
+pub fn solve_lp(lp: &Lp) -> LpResult {
+    let n = lp.n;
+    let m_ub = lp.a_ub.len();
+    let m_eq = lp.a_eq.len();
+    let m = m_ub + m_eq;
+    // Columns: n structural + m_ub slack + m artificial; rows: m + 1 (obj).
+    let n_slack = m_ub;
+    let n_art = m;
+    let cols = n + n_slack + n_art + 1; // + RHS
+    let rhs_col = cols - 1;
+    let mut t = vec![vec![0.0f64; cols]; m + 1];
+    let mut basis = vec![0usize; m];
+
+    // Fill rows: first the ub rows, then the eq rows; make RHS >= 0.
+    for (r, (row, &b)) in lp.a_ub.iter().zip(&lp.b_ub).enumerate() {
+        let sign = if b < 0.0 { -1.0 } else { 1.0 };
+        for j in 0..n {
+            t[r][j] = sign * row[j];
+        }
+        t[r][n + r] = sign; // slack (may flip to surplus with sign)
+        t[r][rhs_col] = sign * b;
+    }
+    for (k, (row, &b)) in lp.a_eq.iter().zip(&lp.b_eq).enumerate() {
+        let r = m_ub + k;
+        let sign = if b < 0.0 { -1.0 } else { 1.0 };
+        for j in 0..n {
+            t[r][j] = sign * row[j];
+        }
+        t[r][rhs_col] = sign * b;
+    }
+    // Artificials on every row for a uniform phase-1 start.
+    for r in 0..m {
+        t[r][n + n_slack + r] = 1.0;
+        basis[r] = n + n_slack + r;
+    }
+
+    // Phase 1 objective: minimize the sum of artificials. Reduced cost of
+    // column j is c_j - z_j; the artificials are basic with cost 1, so
+    // their reduced costs are 0 and every other column gets -(sum of its
+    // constraint coefficients).
+    for j in 0..cols {
+        if (n + n_slack..n + n_slack + n_art).contains(&j) {
+            t[m][j] = 0.0;
+            continue;
+        }
+        let mut s = 0.0;
+        for r in 0..m {
+            s += t[r][j];
+        }
+        t[m][j] = -s;
+    }
+
+    fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, cols: usize) {
+        let m = basis.len();
+        let p = t[row][col];
+        for j in 0..cols {
+            t[row][j] /= p;
+        }
+        for r in 0..=m {
+            if r != row && t[r][col].abs() > 1e-12 {
+                let f = t[r][col];
+                for j in 0..cols {
+                    t[r][j] -= f * t[row][j];
+                }
+            }
+        }
+        basis[row] = col;
+    }
+
+    let run_simplex = |t: &mut Vec<Vec<f64>>, basis: &mut Vec<usize>, active_cols: usize| -> bool {
+        // Returns false on unbounded.
+        loop {
+            // Bland: entering = smallest index with negative reduced cost.
+            let m = basis.len();
+            let mut enter = None;
+            for j in 0..active_cols {
+                if t[m][j] < -1e-9 {
+                    enter = Some(j);
+                    break;
+                }
+            }
+            let Some(col) = enter else { return true };
+            // Ratio test (Bland: smallest basis index tie-break).
+            let mut leave: Option<(usize, f64)> = None;
+            for r in 0..m {
+                if t[r][col] > 1e-9 {
+                    let ratio = t[r][rhs_col] / t[r][col];
+                    match leave {
+                        None => leave = Some((r, ratio)),
+                        Some((br, bratio)) => {
+                            if ratio < bratio - 1e-12
+                                || ((ratio - bratio).abs() <= 1e-12 && basis[r] < basis[br])
+                            {
+                                leave = Some((r, ratio));
+                            }
+                        }
+                    }
+                }
+            }
+            let Some((row, _)) = leave else { return false };
+            pivot(t, basis, row, col, cols);
+        }
+    };
+
+    // Phase 1.
+    if !run_simplex(&mut t, &mut basis, n + n_slack + n_art) {
+        return LpResult::Unbounded; // cannot happen in phase 1, defensive
+    }
+    if t[m][rhs_col].abs() > 1e-7 {
+        // Artificials still in the objective -> infeasible. Note t[m][rhs]
+        // is -(sum of artificials).
+        return LpResult::Infeasible;
+    }
+    // Drive any artificial still in the basis out (degenerate).
+    for r in 0..m {
+        if basis[r] >= n + n_slack {
+            // Find a non-artificial column with nonzero entry to pivot in.
+            if let Some(col) = (0..n + n_slack).find(|&j| t[r][j].abs() > 1e-9) {
+                pivot(&mut t, &mut basis, r, col, cols);
+            }
+        }
+    }
+
+    // Phase 2: rebuild the objective row from the real costs.
+    for j in 0..cols {
+        t[m][j] = 0.0;
+    }
+    for j in 0..n {
+        t[m][j] = lp.c[j];
+    }
+    // Make reduced costs consistent with the basis.
+    for r in 0..m {
+        let bj = basis[r];
+        if bj < n && lp.c[bj].abs() > 1e-15 {
+            let f = lp.c[bj];
+            for j in 0..cols {
+                t[m][j] -= f * t[r][j];
+            }
+        }
+    }
+    if !run_simplex(&mut t, &mut basis, n + n_slack) {
+        return LpResult::Unbounded;
+    }
+
+    let mut x = vec![0.0f64; n];
+    for r in 0..m {
+        if basis[r] < n {
+            x[basis[r]] = t[r][rhs_col];
+        }
+    }
+    let obj = x.iter().zip(&lp.c).map(|(xi, ci)| xi * ci).sum();
+    LpResult::Optimal { x, obj }
+}
+
+// ---------------------------------------------------------------------------
+// LP relaxation of the MCKP
+// ---------------------------------------------------------------------------
+
+fn relaxation(prob: &DeployProblem, fixed: &[Option<usize>]) -> Lp {
+    // Variables: one per (layer, choice) of the *unfixed* layers; fixed
+    // layers contribute constants moved to the RHS.
+    let mut var_of: Vec<Vec<Option<usize>>> = Vec::new();
+    let mut n = 0usize;
+    let mut c = Vec::new();
+    let mut fixed_cost = 0.0;
+    let mut fixed_lat = 0.0;
+    for (i, choices) in prob.layers.iter().enumerate() {
+        let mut row = vec![None; choices.len()];
+        match fixed[i] {
+            Some(j) => {
+                fixed_cost += choices[j].cost;
+                fixed_lat += choices[j].latency;
+            }
+            None => {
+                for (j, ch) in choices.iter().enumerate() {
+                    row[j] = Some(n);
+                    c.push(ch.cost);
+                    n += 1;
+                }
+            }
+        }
+        var_of.push(row);
+    }
+    let _ = fixed_cost;
+    let mut a_eq = Vec::new();
+    let mut b_eq = Vec::new();
+    for (i, choices) in prob.layers.iter().enumerate() {
+        if fixed[i].is_some() {
+            continue;
+        }
+        let mut row = vec![0.0; n];
+        for j in 0..choices.len() {
+            if let Some(v) = var_of[i][j] {
+                row[v] = 1.0;
+            }
+        }
+        a_eq.push(row);
+        b_eq.push(1.0);
+    }
+    let mut lat_row = vec![0.0; n];
+    for (i, choices) in prob.layers.iter().enumerate() {
+        for (j, ch) in choices.iter().enumerate() {
+            if let Some(v) = var_of[i][j] {
+                lat_row[v] = ch.latency;
+            }
+        }
+    }
+    Lp {
+        n,
+        c,
+        a_eq,
+        b_eq,
+        a_ub: vec![lat_row],
+        b_ub: vec![prob.latency_budget - fixed_lat],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Branch and bound
+// ---------------------------------------------------------------------------
+
+/// Solver statistics (for Table IV timing/quality reporting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BbStats {
+    pub nodes: u64,
+    pub lp_solves: u64,
+}
+
+/// Exact MCKP solve by LP-based branch & bound over the dominance-pruned
+/// problem. Returns None if no assignment satisfies the budget.
+pub fn solve_bb(prob: &DeployProblem) -> Option<(Solution, BbStats)> {
+    let (pruned, maps) = prob.prune_dominated();
+    if pruned.min_latency() > pruned.latency_budget + 1e-9 {
+        return None;
+    }
+    // Incumbent: per-layer minimum-latency choice (always feasible here).
+    let greedy: Vec<usize> = pruned
+        .layers
+        .iter()
+        .map(|l| {
+            l.iter()
+                .enumerate()
+                .min_by(|a, b| a.1.latency.partial_cmp(&b.1.latency).unwrap())
+                .map(|(j, _)| j)
+                .unwrap()
+        })
+        .collect();
+    let mut best = pruned.evaluate(&greedy);
+    let mut stats = BbStats::default();
+
+    fn var_values(
+        pruned: &DeployProblem,
+        fixed: &[Option<usize>],
+        x: &[f64],
+    ) -> Vec<Vec<f64>> {
+        let mut vals = Vec::with_capacity(pruned.layers.len());
+        let mut v = 0usize;
+        for (i, choices) in pruned.layers.iter().enumerate() {
+            let mut row = vec![0.0; choices.len()];
+            if fixed[i].is_none() {
+                for slot in row.iter_mut() {
+                    *slot = x[v];
+                    v += 1;
+                }
+            } else if let Some(j) = fixed[i] {
+                row[j] = 1.0;
+            }
+            vals.push(row);
+        }
+        vals
+    }
+
+    fn bb(
+        pruned: &DeployProblem,
+        fixed: &mut Vec<Option<usize>>,
+        best: &mut Solution,
+        stats: &mut BbStats,
+    ) {
+        stats.nodes += 1;
+        let lp = relaxation(pruned, fixed);
+        stats.lp_solves += 1;
+        let (x, bound) = match solve_lp(&lp) {
+            LpResult::Optimal { x, obj } => {
+                let fixed_cost: f64 = fixed
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, f)| f.map(|j| pruned.layers[i][j].cost))
+                    .sum();
+                (x, obj + fixed_cost)
+            }
+            LpResult::Infeasible => return,
+            LpResult::Unbounded => return,
+        };
+        if bound >= best.cost - 1e-9 {
+            return; // prune
+        }
+        let vals = var_values(pruned, fixed, &x);
+        // Find the most fractional layer.
+        let mut frac_layer: Option<(usize, f64)> = None;
+        for (i, row) in vals.iter().enumerate() {
+            if fixed[i].is_some() {
+                continue;
+            }
+            let maxv = row.iter().cloned().fold(0.0, f64::max);
+            let fracness = (maxv - 1.0).abs();
+            if maxv < 1.0 - 1e-6 {
+                if frac_layer.map_or(true, |(_, f)| fracness > f) {
+                    frac_layer = Some((i, fracness));
+                }
+            }
+        }
+        match frac_layer {
+            None => {
+                // Integral LP solution: extract assignment.
+                let mut pick = vec![0usize; pruned.layers.len()];
+                for (i, row) in vals.iter().enumerate() {
+                    pick[i] = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(j, _)| j)
+                        .unwrap();
+                }
+                let sol = pruned.evaluate(&pick);
+                if sol.latency <= pruned.latency_budget + 1e-6 && sol.cost < best.cost {
+                    *best = sol;
+                }
+            }
+            Some((i, _)) => {
+                // Branch: try choices in decreasing LP weight.
+                let mut order: Vec<usize> = (0..pruned.layers[i].len()).collect();
+                order.sort_by(|&a, &b| vals[i][b].partial_cmp(&vals[i][a]).unwrap());
+                for j in order {
+                    fixed[i] = Some(j);
+                    // Feasibility pre-check on min-latency completion.
+                    let lat_fixed: f64 = fixed
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(k, f)| f.map(|jj| pruned.layers[k][jj].latency))
+                        .sum();
+                    let lat_min_rest: f64 = pruned
+                        .layers
+                        .iter()
+                        .enumerate()
+                        .filter(|(k, _)| fixed[*k].is_none())
+                        .map(|(_, l)| l.iter().map(|c| c.latency).fold(f64::INFINITY, f64::min))
+                        .sum();
+                    if lat_fixed + lat_min_rest <= pruned.latency_budget + 1e-9 {
+                        bb(pruned, fixed, best, stats);
+                    }
+                    fixed[i] = None;
+                }
+            }
+        }
+    }
+
+    let mut fixed: Vec<Option<usize>> = vec![None; pruned.layers.len()];
+    bb(&pruned, &mut fixed, &mut best, &mut stats);
+
+    // Map picks back to original indices.
+    let pick: Vec<usize> = best
+        .pick
+        .iter()
+        .enumerate()
+        .map(|(i, &j)| maps[i][j])
+        .collect();
+    let sol = prob.evaluate(&pick);
+    Some((sol, stats))
+}
+
+// ---------------------------------------------------------------------------
+// DP oracle
+// ---------------------------------------------------------------------------
+
+/// Exact solve by dynamic programming over the (integerized) latency
+/// budget. Independent oracle for `solve_bb` in tests and benches.
+pub fn solve_dp(prob: &DeployProblem) -> Option<Solution> {
+    let budget = prob.latency_budget.floor() as i64;
+    if budget < 0 {
+        return None;
+    }
+    // Scale latencies to integers (they are cycle counts already).
+    let lat = |c: &Choice| c.latency.ceil() as i64;
+    let b = budget as usize;
+    const INF: f64 = f64::INFINITY;
+    // dp[l] = min cost to reach exactly <= l latency after processed layers
+    let mut dp = vec![INF; b + 1];
+    let mut back: Vec<HashMap<usize, usize>> = Vec::new(); // per layer: l -> choice
+    dp[0] = 0.0;
+    // To reconstruct we store the chosen option per (layer, latency).
+    let mut traces: Vec<Vec<i32>> = Vec::new();
+    for choices in &prob.layers {
+        let mut ndp = vec![INF; b + 1];
+        let mut trace = vec![-1i32; b + 1];
+        for l in 0..=b {
+            if dp[l] == INF {
+                continue;
+            }
+            for (j, ch) in choices.iter().enumerate() {
+                let nl = l as i64 + lat(ch);
+                if nl <= budget {
+                    let nl = nl as usize;
+                    let nc = dp[l] + ch.cost;
+                    if nc < ndp[nl] {
+                        ndp[nl] = nc;
+                        trace[nl] = j as i32;
+                    }
+                }
+            }
+        }
+        dp = ndp;
+        traces.push(trace);
+        back.push(HashMap::new());
+    }
+    // Find the best end state.
+    let mut best_l = None;
+    let mut best_c = INF;
+    for l in 0..=b {
+        if dp[l] < best_c {
+            best_c = dp[l];
+            best_l = Some(l);
+        }
+    }
+    let mut l = best_l?;
+    // Reconstruct backwards.
+    let mut pick = vec![0usize; prob.layers.len()];
+    for i in (0..prob.layers.len()).rev() {
+        let j = traces[i][l];
+        debug_assert!(j >= 0);
+        pick[i] = j as usize;
+        l -= lat(&prob.layers[i][j as usize]) as usize;
+    }
+    Some(prob.evaluate(&pick))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testkit::prop_check;
+
+    fn ch(reuse: usize, cost: f64, latency: f64) -> Choice {
+        Choice { reuse, cost, latency }
+    }
+
+    fn random_problem(rng: &mut Rng, n_layers: usize, n_choices: usize) -> DeployProblem {
+        let layers: Vec<Vec<Choice>> = (0..n_layers)
+            .map(|_| {
+                (0..n_choices)
+                    .map(|j| {
+                        // Correlated like the real trade-off: higher reuse,
+                        // lower cost, higher latency + noise.
+                        let r = 1usize << j;
+                        let cost = 1000.0 / (j + 1) as f64 + rng.range_f64(0.0, 50.0);
+                        let lat = (10 * (j + 1)) as f64 + rng.range_f64(0.0, 5.0).floor();
+                        ch(r, cost, lat)
+                    })
+                    .collect()
+            })
+            .collect();
+        let min_lat: f64 = layers
+            .iter()
+            .map(|l| l.iter().map(|c| c.latency).fold(f64::INFINITY, f64::min))
+            .sum();
+        let max_lat: f64 = layers
+            .iter()
+            .map(|l| l.iter().map(|c| c.latency).fold(0.0, f64::max))
+            .sum();
+        let budget = rng.range_f64(min_lat, max_lat).floor();
+        DeployProblem { layers, latency_budget: budget }
+    }
+
+    #[test]
+    fn lp_simple_known_solution() {
+        // min -x - y, x + y <= 1 -> obj -1 on the segment; with x,y >= 0.
+        let lp = Lp {
+            n: 2,
+            c: vec![-1.0, -1.0],
+            a_eq: vec![],
+            b_eq: vec![],
+            a_ub: vec![vec![1.0, 1.0]],
+            b_ub: vec![1.0],
+        };
+        match solve_lp(&lp) {
+            LpResult::Optimal { obj, x } => {
+                assert!((obj + 1.0).abs() < 1e-9);
+                assert!((x[0] + x[1] - 1.0).abs() < 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lp_equality_constraint() {
+        // min x + 2y s.t. x + y = 1 -> x=1, y=0, obj 1.
+        let lp = Lp {
+            n: 2,
+            c: vec![1.0, 2.0],
+            a_eq: vec![vec![1.0, 1.0]],
+            b_eq: vec![1.0],
+            a_ub: vec![],
+            b_ub: vec![],
+        };
+        match solve_lp(&lp) {
+            LpResult::Optimal { obj, x } => {
+                assert!((obj - 1.0).abs() < 1e-9);
+                assert!((x[0] - 1.0).abs() < 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lp_detects_infeasible() {
+        // x <= -1 with x >= 0.
+        let lp = Lp {
+            n: 1,
+            c: vec![1.0],
+            a_eq: vec![],
+            b_eq: vec![],
+            a_ub: vec![vec![1.0], vec![-1.0]],
+            b_ub: vec![-1.0, -2.0], // x <= -1 and x >= 2: infeasible
+        };
+        assert_eq!(solve_lp(&lp), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn lp_detects_unbounded() {
+        // min -x with no constraints.
+        let lp = Lp {
+            n: 1,
+            c: vec![-1.0],
+            a_eq: vec![],
+            b_eq: vec![],
+            a_ub: vec![],
+            b_ub: vec![],
+        };
+        assert_eq!(solve_lp(&lp), LpResult::Unbounded);
+    }
+
+    #[test]
+    fn bb_solves_tiny_instance_exactly() {
+        // Two layers, clear optimum under budget 20:
+        let prob = DeployProblem {
+            layers: vec![
+                vec![ch(1, 100.0, 5.0), ch(2, 60.0, 10.0), ch(4, 30.0, 20.0)],
+                vec![ch(1, 80.0, 5.0), ch(2, 50.0, 10.0)],
+            ],
+            latency_budget: 20.0,
+        };
+        let (sol, _) = solve_bb(&prob).unwrap();
+        // Best: layer0 j=1 (60, 10) + layer1 j=1 (50, 10) = 110 @ 20.
+        assert_eq!(sol.cost, 110.0);
+        assert_eq!(sol.latency, 20.0);
+        assert_eq!(solve_dp(&prob).unwrap().cost, 110.0);
+    }
+
+    #[test]
+    fn bb_infeasible_when_budget_too_tight() {
+        let prob = DeployProblem {
+            layers: vec![vec![ch(1, 1.0, 100.0)]],
+            latency_budget: 50.0,
+        };
+        assert!(solve_bb(&prob).is_none());
+        assert!(solve_dp(&prob).is_none());
+    }
+
+    #[test]
+    fn prune_keeps_pareto_choices_only() {
+        let prob = DeployProblem {
+            layers: vec![vec![
+                ch(1, 100.0, 10.0),
+                ch(2, 120.0, 12.0), // dominated (worse both ways)
+                ch(4, 50.0, 20.0),
+                ch(8, 50.0, 30.0), // dominated (same cost, more latency)
+            ]],
+            latency_budget: 100.0,
+        };
+        let (pruned, maps) = prob.prune_dominated();
+        assert_eq!(pruned.layers[0].len(), 2);
+        assert_eq!(maps[0], vec![0, 2]);
+    }
+
+    #[test]
+    fn property_bb_matches_dp_oracle() {
+        prop_check("bb-equals-dp", 40, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let n_layers = g.int(1, 6);
+            let n_choices = g.int(2, 6);
+            let prob = random_problem(&mut rng, n_layers, n_choices);
+            let bb = solve_bb(&prob);
+            let dp = solve_dp(&prob);
+            match (bb, dp) {
+                (None, None) => Ok(()),
+                (Some((b, _)), Some(d)) => {
+                    if (b.cost - d.cost).abs() < 1e-6 {
+                        Ok(())
+                    } else {
+                        Err(format!(
+                            "bb cost {} != dp cost {} (budget {})",
+                            b.cost, d.cost, prob.latency_budget
+                        ))
+                    }
+                }
+                (b, d) => Err(format!(
+                    "feasibility disagreement: bb {:?} dp {:?}",
+                    b.map(|x| x.0.cost),
+                    d.map(|x| x.cost)
+                )),
+            }
+        });
+    }
+
+    #[test]
+    fn property_solutions_respect_budget() {
+        prop_check("solutions-within-budget", 30, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let prob = random_problem(&mut rng, g.int(1, 8), g.int(2, 8));
+            if let Some((sol, _)) = solve_bb(&prob) {
+                if sol.latency > prob.latency_budget + 1e-6 {
+                    return Err(format!(
+                        "bb latency {} exceeds budget {}",
+                        sol.latency, prob.latency_budget
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn permutation_count() {
+        let prob = DeployProblem {
+            layers: vec![
+                vec![ch(1, 0.0, 0.0); 10],
+                vec![ch(1, 0.0, 0.0); 20],
+                vec![ch(1, 0.0, 0.0); 3],
+            ],
+            latency_budget: 1.0,
+        };
+        assert_eq!(prob.permutations(), 600.0);
+    }
+
+    #[test]
+    fn bb_on_realistic_scale_fast() {
+        // ~11 layers x ~40 choices: must solve in well under a second.
+        let mut rng = Rng::new(77);
+        let prob = random_problem(&mut rng, 11, 40);
+        let t0 = std::time::Instant::now();
+        let sol = solve_bb(&prob);
+        assert!(sol.is_some());
+        // Debug builds are ~20x slower than release; the perf bench
+        // (perf_hotpaths) tracks the release-mode number (~0.1 s).
+        assert!(t0.elapsed().as_secs_f64() < 20.0, "{:?}", t0.elapsed());
+    }
+}

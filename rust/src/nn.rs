@@ -1,0 +1,773 @@
+//! Native training substrate: conv1d / LSTM / dense with hand-derived
+//! backprop and Adam.
+//!
+//! Why this exists (DESIGN.md §1): the hyperparameter search trains
+//! *arbitrary* sampled architectures, which cannot be AOT-lowered without
+//! putting Python on the runtime path. This module replicates the Layer-2
+//! JAX model semantics exactly — same layer order, 'valid' convolution,
+//! floor maxpool, i/f/g/o LSTM gates, Glorot init, identical Adam — and is
+//! cross-validated against the PJRT-executed artifacts in
+//! `rust/tests/runtime_roundtrip.rs` (same parameters ⇒ same forward
+//! outputs to f32 tolerance).
+//!
+//! The fixed headline models still train through the PJRT path; this is
+//! the search-time substrate.
+
+use crate::layers::NetConfig;
+use crate::rng::Rng;
+use crate::tensor::{hconcat, matmul, matmul_nt, matmul_tn, Tensor};
+
+// ---------------------------------------------------------------------------
+// Activations
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// ReLU forward.
+pub fn relu(x: &Tensor) -> Tensor {
+    x.map(|v| v.max(0.0))
+}
+
+/// ReLU backward: pass-through where the *input* was positive.
+pub fn relu_bwd(x: &Tensor, dy: &Tensor) -> Tensor {
+    x.zip(dy, |xi, di| if xi > 0.0 { di } else { 0.0 })
+}
+
+// ---------------------------------------------------------------------------
+// im2col / col2im (shared by conv fwd+bwd)
+// ---------------------------------------------------------------------------
+
+/// x (B,S,C) -> patches (B*S_out, k*C), 'valid'.
+pub fn im2col(x: &Tensor, k: usize) -> Tensor {
+    let (b, s, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    assert!(s >= k);
+    let s_out = s - k + 1;
+    let mut out = Vec::with_capacity(b * s_out * k * c);
+    for bi in 0..b {
+        for t in 0..s_out {
+            let start = (bi * s + t) * c;
+            out.extend_from_slice(&x.data[start..start + k * c]);
+        }
+    }
+    Tensor::from_vec(&[b * s_out, k * c], out)
+}
+
+/// Scatter-add the patch gradient back: (B*S_out, k*C) -> (B,S,C).
+pub fn col2im(dpatches: &Tensor, b: usize, s: usize, c: usize, k: usize) -> Tensor {
+    let s_out = s - k + 1;
+    assert_eq!(dpatches.shape, vec![b * s_out, k * c]);
+    let mut dx = vec![0.0f32; b * s * c];
+    for bi in 0..b {
+        for t in 0..s_out {
+            let prow = dpatches.row(bi * s_out + t);
+            let base = (bi * s + t) * c;
+            for (off, &g) in prow.iter().enumerate() {
+                dx[base + off] += g;
+            }
+        }
+    }
+    Tensor::from_vec(&[b, s, c], dx)
+}
+
+// ---------------------------------------------------------------------------
+// Conv1d block: conv('valid') + ReLU + maxpool(2)
+// ---------------------------------------------------------------------------
+
+/// Cache for the conv block backward pass.
+pub struct ConvCache {
+    patches: Tensor,     // (B*S_out, k*C)
+    pre_relu: Tensor,    // (B, S_out, F)
+    post_relu: Tensor,   // (B, S_out, F)
+    in_shape: (usize, usize, usize),
+}
+
+/// Forward: x (B,S,C), w (k*C, F) [flattened conv weights], b (F,)
+/// -> pooled (B, S_out/2, F).
+pub fn conv_block_fwd(x: &Tensor, w: &Tensor, bias: &Tensor, k: usize) -> (Tensor, ConvCache) {
+    let (b, s, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let f = w.shape[1];
+    let s_out = s - k + 1;
+    let patches = im2col(x, k);
+    let pre = matmul(&patches, w)
+        .add_row_vec(bias)
+        .reshape(&[b, s_out, f]);
+    let post = relu(&pre);
+    let pooled = maxpool2_fwd(&post);
+    (
+        pooled,
+        ConvCache { patches, pre_relu: pre, post_relu: post, in_shape: (b, s, c) },
+    )
+}
+
+/// Backward: returns (dx, dw, db).
+pub fn conv_block_bwd(
+    cache: &ConvCache,
+    w: &Tensor,
+    k: usize,
+    dpooled: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (b, s, c) = cache.in_shape;
+    let f = w.shape[1];
+    let s_out = s - k + 1;
+    let dpost = maxpool2_bwd(&cache.post_relu, dpooled);
+    let dpre = relu_bwd(&cache.pre_relu, &dpost).reshape(&[b * s_out, f]);
+    let dw = matmul_tn(&cache.patches, &dpre);
+    let db = dpre.sum_rows();
+    let dpatches = matmul_nt(&dpre, w);
+    let dx = col2im(&dpatches, b, s, c, k);
+    (dx, dw, db)
+}
+
+/// Non-overlapping max pool (pool=2, floor) along the sequence axis.
+pub fn maxpool2_fwd(x: &Tensor) -> Tensor {
+    let (b, s, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let s_out = s / 2;
+    let mut out = vec![0.0f32; b * s_out * c];
+    for bi in 0..b {
+        for t in 0..s_out {
+            for ch in 0..c {
+                let a = x.at3(bi, 2 * t, ch);
+                let bb = x.at3(bi, 2 * t + 1, ch);
+                out[(bi * s_out + t) * c + ch] = a.max(bb);
+            }
+        }
+    }
+    Tensor::from_vec(&[b, s_out, c], out)
+}
+
+/// Max-pool backward: route gradient to the argmax of each pair (ties go to
+/// the first element, matching jnp.max-over-reshape gradient convention).
+pub fn maxpool2_bwd(x: &Tensor, dy: &Tensor) -> Tensor {
+    let (b, s, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let s_out = s / 2;
+    assert_eq!(dy.shape, vec![b, s_out, c]);
+    let mut dx = Tensor::zeros(&[b, s, c]);
+    for bi in 0..b {
+        for t in 0..s_out {
+            for ch in 0..c {
+                let a = x.at3(bi, 2 * t, ch);
+                let bb = x.at3(bi, 2 * t + 1, ch);
+                let g = dy.at3(bi, t, ch);
+                if a >= bb {
+                    *dx.at3_mut(bi, 2 * t, ch) += g;
+                } else {
+                    *dx.at3_mut(bi, 2 * t + 1, ch) += g;
+                }
+            }
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// LSTM (full-sequence, BPTT)
+// ---------------------------------------------------------------------------
+
+/// Per-timestep cache for BPTT.
+struct LstmStep {
+    zin: Tensor,  // (B, F+U) concat [x_t, h_prev]
+    i: Tensor,
+    f: Tensor,
+    g: Tensor,
+    o: Tensor,
+    c_prev: Tensor,
+    c: Tensor,
+}
+
+/// Cache over the whole sequence.
+pub struct LstmCache {
+    steps: Vec<LstmStep>,
+    in_shape: (usize, usize, usize),
+}
+
+/// Forward: x (B,S,F), w (F+U, 4U), bias (4U,) -> h_seq (B,S,U).
+/// Gate order i, f, g, o; forget-gate bias convention handled at init.
+pub fn lstm_fwd(x: &Tensor, w: &Tensor, bias: &Tensor) -> (Tensor, LstmCache) {
+    let (b, s, feat) = (x.shape[0], x.shape[1], x.shape[2]);
+    let u = w.shape[1] / 4;
+    assert_eq!(w.shape[0], feat + u, "lstm weight shape");
+    let mut h = Tensor::zeros(&[b, u]);
+    let mut c = Tensor::zeros(&[b, u]);
+    let mut hs = Vec::with_capacity(b * s * u);
+    let mut steps = Vec::with_capacity(s);
+    for t in 0..s {
+        // x_t (B, F)
+        let mut xt = Vec::with_capacity(b * feat);
+        for bi in 0..b {
+            let base = (bi * s + t) * feat;
+            xt.extend_from_slice(&x.data[base..base + feat]);
+        }
+        let xt = Tensor::from_vec(&[b, feat], xt);
+        let zin = hconcat(&xt, &h);
+        let z = matmul(&zin, w).add_row_vec(bias); // (B, 4U)
+        let mut i = Tensor::zeros(&[b, u]);
+        let mut f = Tensor::zeros(&[b, u]);
+        let mut g = Tensor::zeros(&[b, u]);
+        let mut o = Tensor::zeros(&[b, u]);
+        for bi in 0..b {
+            for j in 0..u {
+                i.data[bi * u + j] = sigmoid(z.at2(bi, j));
+                f.data[bi * u + j] = sigmoid(z.at2(bi, u + j));
+                g.data[bi * u + j] = z.at2(bi, 2 * u + j).tanh();
+                o.data[bi * u + j] = sigmoid(z.at2(bi, 3 * u + j));
+            }
+        }
+        let c_prev = c.clone();
+        c = f.mul(&c_prev).add(&i.mul(&g));
+        let tanh_c = c.map(f32::tanh);
+        h = o.mul(&tanh_c);
+        for bi in 0..b {
+            hs.extend_from_slice(h.row(bi));
+        }
+        steps.push(LstmStep { zin, i, f, g, o, c_prev, c: c.clone() });
+    }
+    // hs was appended time-major (t, b, u); transpose to (b, s, u).
+    let mut out = vec![0.0f32; b * s * u];
+    for t in 0..s {
+        for bi in 0..b {
+            let src = (t * b + bi) * u;
+            let dst = (bi * s + t) * u;
+            out[dst..dst + u].copy_from_slice(&hs[src..src + u]);
+        }
+    }
+    (
+        Tensor::from_vec(&[b, s, u], out),
+        LstmCache { steps, in_shape: (b, s, feat) },
+    )
+}
+
+/// BPTT backward. dh_seq (B,S,U) is the gradient w.r.t. every hidden
+/// output. Returns (dx (B,S,F), dw, dbias).
+pub fn lstm_bwd(
+    cache: &LstmCache,
+    w: &Tensor,
+    dh_seq: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (b, s, feat) = cache.in_shape;
+    let u = w.shape[1] / 4;
+    let mut dw = Tensor::zeros(&[feat + u, 4 * u]);
+    let mut dbias = Tensor::zeros(&[4 * u]);
+    let mut dx = Tensor::zeros(&[b, s, feat]);
+    let mut dh_next = Tensor::zeros(&[b, u]); // grad flowing from t+1 into h_t
+    let mut dc_next = Tensor::zeros(&[b, u]);
+    for t in (0..s).rev() {
+        let st = &cache.steps[t];
+        // Total grad into h_t: from the output sequence + recurrence.
+        let mut dh = dh_next.clone();
+        for bi in 0..b {
+            for j in 0..u {
+                dh.data[bi * u + j] += dh_seq.at3(bi, t, j);
+            }
+        }
+        let tanh_c = st.c.map(f32::tanh);
+        // dc = dh * o * (1 - tanh(c)^2) + dc_next
+        let mut dc = dc_next.clone();
+        for idx in 0..b * u {
+            dc.data[idx] += dh.data[idx] * st.o.data[idx] * (1.0 - tanh_c.data[idx] * tanh_c.data[idx]);
+        }
+        // Gate gradients (pre-activation z).
+        let mut dz = Tensor::zeros(&[b, 4 * u]);
+        for bi in 0..b {
+            for j in 0..u {
+                let idx = bi * u + j;
+                let di = dc.data[idx] * st.g.data[idx];
+                let df = dc.data[idx] * st.c_prev.data[idx];
+                let dg = dc.data[idx] * st.i.data[idx];
+                let do_ = dh.data[idx] * tanh_c.data[idx];
+                dz.data[bi * 4 * u + j] = di * st.i.data[idx] * (1.0 - st.i.data[idx]);
+                dz.data[bi * 4 * u + u + j] = df * st.f.data[idx] * (1.0 - st.f.data[idx]);
+                dz.data[bi * 4 * u + 2 * u + j] = dg * (1.0 - st.g.data[idx] * st.g.data[idx]);
+                dz.data[bi * 4 * u + 3 * u + j] = do_ * st.o.data[idx] * (1.0 - st.o.data[idx]);
+            }
+        }
+        dw.axpy(1.0, &matmul_tn(&st.zin, &dz));
+        dbias.axpy(1.0, &dz.sum_rows());
+        let dzin = matmul_nt(&dz, w); // (B, F+U)
+        for bi in 0..b {
+            for ff in 0..feat {
+                *dx.at3_mut(bi, t, ff) += dzin.at2(bi, ff);
+            }
+            for j in 0..u {
+                dh_next.data[bi * u + j] = dzin.at2(bi, feat + j);
+            }
+        }
+        // dc flowing to t-1 through the forget gate.
+        dc_next = dc.mul(&st.f);
+    }
+    (dx, dw, dbias)
+}
+
+// ---------------------------------------------------------------------------
+// Dense
+// ---------------------------------------------------------------------------
+
+/// Forward: x (B,F) @ w (F,N) + b.
+pub fn dense_fwd(x: &Tensor, w: &Tensor, bias: &Tensor) -> Tensor {
+    matmul(x, w).add_row_vec(bias)
+}
+
+/// Backward: returns (dx, dw, db).
+pub fn dense_bwd(x: &Tensor, w: &Tensor, dy: &Tensor) -> (Tensor, Tensor, Tensor) {
+    let dx = matmul_nt(dy, w);
+    let dw = matmul_tn(x, dy);
+    let db = dy.sum_rows();
+    (dx, dw, db)
+}
+
+// ---------------------------------------------------------------------------
+// The full model
+// ---------------------------------------------------------------------------
+
+/// A trainable instance of one `NetConfig`.
+///
+/// Parameter layout matches `python/compile/model.py::init_params`:
+/// per layer `[w, b]`, conv weights stored flattened as `(k*C, F)`
+/// (the jax `(k, C, F)` array in row-major order is identical memory).
+pub struct NativeModel {
+    pub cfg: NetConfig,
+    pub params: Vec<Tensor>,
+}
+
+impl NativeModel {
+    /// Glorot-uniform init (zero biases; LSTM forget bias = 1), mirroring
+    /// the Layer-2 initializer semantics.
+    pub fn init(cfg: NetConfig, rng: &mut Rng) -> Self {
+        let mut params = Vec::new();
+        let glorot = |rng: &mut Rng, rows: usize, cols: usize, fan_in: usize, fan_out: usize| {
+            let lim = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            Tensor::from_vec(
+                &[rows, cols],
+                (0..rows * cols)
+                    .map(|_| rng.range_f64(-lim, lim) as f32)
+                    .collect(),
+            )
+        };
+        let (mut _s, mut c) = (cfg.window, 1usize);
+        for &(k, f) in &cfg.conv {
+            params.push(glorot(rng, k * c, f, k * c, f));
+            params.push(Tensor::zeros(&[f]));
+            _s = (_s - k + 1) / 2;
+            c = f;
+        }
+        for &u in &cfg.lstm {
+            params.push(glorot(rng, c + u, 4 * u, c + u, 4 * u));
+            let mut bias = Tensor::zeros(&[4 * u]);
+            for j in u..2 * u {
+                bias.data[j] = 1.0; // forget-gate bias
+            }
+            params.push(bias);
+            c = u;
+        }
+        let mut feat = if cfg.lstm.is_empty() {
+            let mut s = cfg.window;
+            for &(k, _) in &cfg.conv {
+                s = (s - k + 1) / 2;
+            }
+            s * c
+        } else {
+            c
+        };
+        for &n in &cfg.dense {
+            params.push(glorot(rng, feat, n, feat, n));
+            params.push(Tensor::zeros(&[n]));
+            feat = n;
+        }
+        NativeModel { cfg, params }
+    }
+
+    /// Build from an externally supplied flat parameter list (e.g. read
+    /// back from the PJRT training loop) — shapes are validated.
+    pub fn from_params(cfg: NetConfig, params: Vec<Tensor>) -> Self {
+        assert_eq!(params.len(), cfg.num_param_tensors());
+        NativeModel { cfg, params }
+    }
+
+    /// Forward only: x (B, window) -> predictions (B,).
+    pub fn forward(&self, x: &Tensor) -> Vec<f32> {
+        self.forward_cached(x).0
+    }
+
+    /// Forward with caches for backprop.
+    #[allow(clippy::type_complexity)]
+    fn forward_cached(
+        &self,
+        x: &Tensor,
+    ) -> (Vec<f32>, Vec<ConvCache>, Vec<(Tensor, LstmCache)>, Vec<(Tensor, Tensor)>, Tensor) {
+        let b = x.shape[0];
+        assert_eq!(x.shape[1], self.cfg.window);
+        let mut h = x.clone().reshape(&[b, self.cfg.window, 1]);
+        let mut p = 0;
+        let mut conv_caches = Vec::new();
+        for &(k, _f) in &self.cfg.conv {
+            let (out, cache) = conv_block_fwd(&h, &self.params[p], &self.params[p + 1], k);
+            conv_caches.push(cache);
+            h = out;
+            p += 2;
+        }
+        let mut lstm_caches: Vec<(Tensor, LstmCache)> = Vec::new();
+        if !self.cfg.lstm.is_empty() {
+            for _u in &self.cfg.lstm {
+                let (out, cache) = lstm_fwd(&h, &self.params[p], &self.params[p + 1]);
+                lstm_caches.push((h.clone(), cache));
+                h = out;
+                p += 2;
+            }
+            // take last timestep
+            let (bb, s, u) = (h.shape[0], h.shape[1], h.shape[2]);
+            let mut last = Vec::with_capacity(bb * u);
+            for bi in 0..bb {
+                let base = (bi * s + (s - 1)) * u;
+                last.extend_from_slice(&h.data[base..base + u]);
+            }
+            h = Tensor::from_vec(&[bb, u], last);
+        } else {
+            let flat: usize = h.shape[1] * h.shape[2];
+            h = h.reshape(&[b, flat]);
+        }
+        let mut dense_caches: Vec<(Tensor, Tensor)> = Vec::new(); // (input, pre-activation)
+        let nd = self.cfg.dense.len();
+        for (i, _n) in self.cfg.dense.iter().enumerate() {
+            let pre = dense_fwd(&h, &self.params[p], &self.params[p + 1]);
+            dense_caches.push((h.clone(), pre.clone()));
+            h = if i + 1 < nd { relu(&pre) } else { pre };
+            p += 2;
+        }
+        let preds = h.data.clone();
+        (preds, conv_caches, lstm_caches, dense_caches, h)
+    }
+
+    /// MSE loss + full gradient, replicating the Layer-2 `mse_loss`.
+    pub fn loss_and_grad(&self, x: &Tensor, y: &[f32]) -> (f32, Vec<Tensor>) {
+        let b = x.shape[0];
+        assert_eq!(y.len(), b);
+        let (preds, conv_caches, lstm_caches, dense_caches, _out) = self.forward_cached(x);
+        let loss = preds
+            .iter()
+            .zip(y)
+            .map(|(&p, &t)| (p - t) * (p - t))
+            .sum::<f32>()
+            / b as f32;
+        // dL/dpred = 2 (pred - y) / B
+        let mut dout = Tensor::from_vec(
+            &[b, 1],
+            preds
+                .iter()
+                .zip(y)
+                .map(|(&p, &t)| 2.0 * (p - t) / b as f32)
+                .collect(),
+        );
+
+        let mut grads: Vec<Tensor> = self.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let mut p = self.params.len();
+
+        // Dense stack backward (reverse order).
+        let nd = self.cfg.dense.len();
+        for i in (0..nd).rev() {
+            p -= 2;
+            let (ref input, ref pre) = dense_caches[i];
+            let dpre = if i + 1 < nd { relu_bwd(pre, &dout) } else { dout.clone() };
+            let (dx, dw, db) = dense_bwd(input, &self.params[p], &dpre);
+            grads[p] = dw;
+            grads[p + 1] = db;
+            dout = dx;
+        }
+
+        // LSTM stack backward.
+        if !self.cfg.lstm.is_empty() {
+            let nl = self.cfg.lstm.len();
+            // dout is (B, U_last) w.r.t. the last timestep only; expand.
+            for i in (0..nl).rev() {
+                p -= 2;
+                let (ref input, ref cache) = lstm_caches[i];
+                let (b_, s_, _f_) = cache.in_shape;
+                let u = self.cfg.lstm[i];
+                let dh_seq = if i == nl - 1 {
+                    let mut d = Tensor::zeros(&[b_, s_, u]);
+                    for bi in 0..b_ {
+                        for j in 0..u {
+                            *d.at3_mut(bi, s_ - 1, j) = dout.at2(bi, j);
+                        }
+                    }
+                    d
+                } else {
+                    dout.clone()
+                };
+                let (dx, dw, db) = lstm_bwd(cache, &self.params[p], &dh_seq);
+                grads[p] = dw;
+                grads[p + 1] = db;
+                let _ = input;
+                dout = dx;
+            }
+        } else if !self.cfg.conv.is_empty() {
+            // un-flatten to (B, S, C) for the conv backward.
+            let mut s = self.cfg.window;
+            let mut c = 1;
+            for &(k, f) in &self.cfg.conv {
+                s = (s - k + 1) / 2;
+                c = f;
+            }
+            dout = dout.reshape(&[b, s, c]);
+        } else {
+            dout = dout.reshape(&[b, self.cfg.window, 1]);
+        }
+
+        // Conv stack backward.
+        for i in (0..self.cfg.conv.len()).rev() {
+            p -= 2;
+            let k = self.cfg.conv[i].0;
+            if self.cfg.lstm.is_empty() && i == self.cfg.conv.len() - 1 && dout.rank() == 2 {
+                // (handled above by reshape; kept for clarity)
+            }
+            let (dx, dw, db) = conv_block_bwd(&conv_caches[i], &self.params[p], k, &dout);
+            grads[p] = dw;
+            grads[p + 1] = db;
+            dout = dx;
+        }
+        debug_assert_eq!(p, 0);
+        (loss, grads)
+    }
+
+    /// RMSE over a dataset, batched.
+    pub fn rmse(&self, x: &Tensor, y: &[f32]) -> f64 {
+        let preds = self.forward(x);
+        let mse = preds
+            .iter()
+            .zip(y)
+            .map(|(&p, &t)| ((p - t) as f64).powi(2))
+            .sum::<f64>()
+            / y.len() as f64;
+        mse.sqrt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adam
+// ---------------------------------------------------------------------------
+
+/// Adam hyperparameters — identical to `model.py::ADAM`.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-3, b1: 0.9, b2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// Adam state over a flat parameter list.
+pub struct Adam {
+    pub cfg: AdamConfig,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub t: f32,
+}
+
+impl Adam {
+    pub fn new(params: &[Tensor], cfg: AdamConfig) -> Self {
+        Adam {
+            cfg,
+            m: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            v: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            t: 0.0,
+        }
+    }
+
+    /// One bias-corrected Adam update, in place.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        self.t += 1.0;
+        let (lr, b1, b2, eps) = (self.cfg.lr, self.cfg.b1, self.cfg.b2, self.cfg.eps);
+        let bc1 = 1.0 - b1.powf(self.t);
+        let bc2 = 1.0 - b2.powf(self.t);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            for i in 0..p.data.len() {
+                let gi = g.data[i];
+                m.data[i] = b1 * m.data[i] + (1.0 - b1) * gi;
+                v.data[i] = b2 * v.data[i] + (1.0 - b2) * gi * gi;
+                let mhat = m.data[i] / bc1;
+                let vhat = v.data[i] / bc2;
+                p.data[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+    }
+}
+
+/// One training step (forward, backward, Adam). Returns the batch loss.
+pub fn train_step(model: &mut NativeModel, opt: &mut Adam, x: &Tensor, y: &[f32]) -> f32 {
+    let (loss, grads) = model.loss_and_grad(x, y);
+    opt.step(&mut model.params, &grads);
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::NetConfig;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        Tensor::from_vec(
+            shape,
+            (0..shape.iter().product::<usize>())
+                .map(|_| rng.gauss(0.0, 0.5) as f32)
+                .collect(),
+        )
+    }
+
+    /// Central-difference gradient check for a scalar loss.
+    fn numeric_grad(
+        f: &dyn Fn(&[Tensor]) -> f32,
+        params: &[Tensor],
+        pi: usize,
+        idx: usize,
+        eps: f32,
+    ) -> f32 {
+        let mut plus = params.to_vec();
+        plus[pi].data[idx] += eps;
+        let mut minus = params.to_vec();
+        minus[pi].data[idx] -= eps;
+        (f(&plus) - f(&minus)) / (2.0 * eps)
+    }
+
+    fn grad_check(cfg: NetConfig, seed: u64, tol: f32) {
+        let mut rng = Rng::new(seed);
+        let model = NativeModel::init(cfg.clone(), &mut rng);
+        let b = 3;
+        let x = rand_tensor(&mut rng, &[b, cfg.window]);
+        let y: Vec<f32> = (0..b).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+        let (_, grads) = model.loss_and_grad(&x, &y);
+        let loss_fn = |ps: &[Tensor]| {
+            let m = NativeModel::from_params(cfg.clone(), ps.to_vec());
+            let preds = m.forward(&x);
+            preds
+                .iter()
+                .zip(&y)
+                .map(|(&p, &t)| (p - t) * (p - t))
+                .sum::<f32>()
+                / b as f32
+        };
+        let mut rng2 = Rng::new(seed + 1);
+        for pi in 0..model.params.len() {
+            // Spot-check a few entries per tensor.
+            let len = model.params[pi].data.len();
+            for _ in 0..3.min(len) {
+                let idx = rng2.below(len);
+                let num = numeric_grad(&loss_fn, &model.params, pi, idx, 1e-3);
+                let ana = grads[pi].data[idx];
+                assert!(
+                    (num - ana).abs() <= tol + 0.05 * num.abs().max(ana.abs()),
+                    "param {pi} idx {idx}: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_check_dense_only() {
+        grad_check(NetConfig::new(8, vec![], vec![], vec![6, 1]), 1, 2e-3);
+    }
+
+    #[test]
+    fn grad_check_conv_dense() {
+        grad_check(NetConfig::new(16, vec![(3, 3)], vec![], vec![4, 1]), 2, 2e-3);
+    }
+
+    #[test]
+    fn grad_check_lstm_dense() {
+        grad_check(NetConfig::new(6, vec![], vec![4], vec![1]), 3, 2e-3);
+    }
+
+    #[test]
+    fn grad_check_full_stack() {
+        grad_check(
+            NetConfig::new(20, vec![(3, 2)], vec![3], vec![4, 1]),
+            4,
+            3e-3,
+        );
+    }
+
+    #[test]
+    fn grad_check_stacked_lstm() {
+        grad_check(NetConfig::new(5, vec![], vec![3, 2], vec![1]), 5, 2e-3);
+    }
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), p> == <x, col2im(p)> (adjoint property).
+        let mut rng = Rng::new(7);
+        let x = rand_tensor(&mut rng, &[2, 9, 3]);
+        let k = 4;
+        let patches = im2col(&x, k);
+        let p = rand_tensor(&mut rng, &patches.shape.clone());
+        let lhs: f32 = patches.data.iter().zip(&p.data).map(|(a, b)| a * b).sum();
+        let back = col2im(&p, 2, 9, 3, k);
+        let rhs: f32 = x.data.iter().zip(&back.data).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_argmax() {
+        let x = Tensor::from_vec(&[1, 4, 1], vec![1.0, 5.0, 2.0, 0.5]);
+        let dy = Tensor::from_vec(&[1, 2, 1], vec![10.0, 20.0]);
+        let dx = maxpool2_bwd(&x, &dy);
+        assert_eq!(dx.data, vec![0.0, 10.0, 20.0, 0.0]);
+    }
+
+    #[test]
+    fn training_reduces_loss_quickstart_shape() {
+        let cfg = NetConfig::new(32, vec![(5, 4)], vec![4], vec![8, 1]);
+        let mut rng = Rng::new(11);
+        let mut model = NativeModel::init(cfg.clone(), &mut rng);
+        let mut opt = Adam::new(
+            &model.params,
+            AdamConfig { lr: 5e-3, ..AdamConfig::default() },
+        );
+        let b = 16;
+        let x = rand_tensor(&mut rng, &[b, cfg.window]);
+        // Window mean: learnable by every architecture in the family.
+        let y: Vec<f32> = (0..b)
+            .map(|i| x.row(i).iter().sum::<f32>() / cfg.window as f32)
+            .collect();
+        let first = train_step(&mut model, &mut opt, &x, &y);
+        let mut last = first;
+        for _ in 0..250 {
+            last = train_step(&mut model, &mut opt, &x, &y);
+        }
+        assert!(last < first * 0.5, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn forward_deterministic() {
+        let cfg = NetConfig::new(16, vec![(3, 2)], vec![], vec![4, 1]);
+        let mut rng = Rng::new(13);
+        let model = NativeModel::init(cfg.clone(), &mut rng);
+        let x = rand_tensor(&mut rng, &[2, 16]);
+        assert_eq!(model.forward(&x), model.forward(&x));
+    }
+
+    #[test]
+    fn lstm_impulse_propagates_to_last_state() {
+        let mut rng = Rng::new(17);
+        let w = rand_tensor(&mut rng, &[1 + 4, 16]);
+        let bias = Tensor::zeros(&[16]);
+        let x0 = Tensor::zeros(&[1, 8, 1]);
+        let mut x1 = x0.clone();
+        x1.data[0] = 5.0;
+        let (h0, _) = lstm_fwd(&x0, &w, &bias);
+        let (h1, _) = lstm_fwd(&x1, &w, &bias);
+        let d: f32 = (0..h0.shape[2])
+            .map(|j| (h0.at3(0, 7, j) - h1.at3(0, 7, j)).abs())
+            .sum();
+        assert!(d > 1e-5);
+    }
+}

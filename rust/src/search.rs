@@ -1,0 +1,327 @@
+//! Baseline deployment optimizers (paper §VI-C / Table IV):
+//! naive stochastic search and simulated annealing.
+//!
+//! Both operate on the same [`DeployProblem`] the MIP consumes, sampling
+//! full reuse-factor assignments from the *unpruned* choice sets (the
+//! paper's 1.3e11 / 3.4e11 "RF permutations" are over raw assignments),
+//! so the timing comparison against N-TORC's exact solver is fair.
+
+use crate::mip::{DeployProblem, Solution};
+use crate::rng::Rng;
+
+/// Cost oracle for the paper-faithful baselines: maps a full reuse-factor
+/// assignment (choice index per layer) to (resource cost, latency).
+///
+/// N-TORC's MIP collapses the random forests into per-choice constants
+/// *once*; the stochastic/SA baselines of §VI-C instead "estimate the
+/// resultant resource cost and latency" per trial — i.e. they pay a full
+/// forest inference for every candidate. [`stochastic_search_oracle`] /
+/// [`simulated_annealing_oracle`] reproduce that cost structure, which is
+/// where the paper's 1000x search-time gap comes from.
+pub trait CostOracle {
+    fn evaluate(&mut self, pick: &[usize]) -> (f64, f64);
+}
+
+impl<F: FnMut(&[usize]) -> (f64, f64)> CostOracle for F {
+    fn evaluate(&mut self, pick: &[usize]) -> (f64, f64) {
+        self(pick)
+    }
+}
+
+/// Search outcome with timing (for Table IV).
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub best: Option<Solution>,
+    pub trials: usize,
+    pub seconds: f64,
+}
+
+/// Naive stochastic search over a per-trial cost oracle (the paper's
+/// baseline: every trial re-evaluates the cost/latency models).
+pub fn stochastic_search_oracle(
+    choices_per_layer: &[usize],
+    latency_budget: f64,
+    oracle: &mut dyn CostOracle,
+    trials: usize,
+    seed: u64,
+) -> SearchResult {
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(seed);
+    let mut best: Option<Solution> = None;
+    let mut pick = vec![0usize; choices_per_layer.len()];
+    for _ in 0..trials {
+        for (i, &n) in choices_per_layer.iter().enumerate() {
+            pick[i] = rng.below(n);
+        }
+        let (cost, latency) = oracle.evaluate(&pick);
+        if latency <= latency_budget && best.as_ref().map_or(true, |b| cost < b.cost) {
+            best = Some(Solution { pick: pick.clone(), cost, latency });
+        }
+    }
+    SearchResult { best, trials, seconds: t0.elapsed().as_secs_f64() }
+}
+
+/// Simulated annealing over a per-trial cost oracle (paper §VI-C setup:
+/// t0 = 100, 1%/iteration cooling, accept worse feasible assignments with
+/// probability exp((r_best - r_proposed)/t)).
+pub fn simulated_annealing_oracle(
+    choices_per_layer: &[usize],
+    latency_budget: f64,
+    oracle: &mut dyn CostOracle,
+    iterations: usize,
+    cfg: SaConfig,
+    seed: u64,
+) -> SearchResult {
+    let t0c = std::time::Instant::now();
+    let mut rng = Rng::new(seed);
+    let n = choices_per_layer.len();
+    let mut pick: Vec<usize> = (0..n).map(|i| rng.below(choices_per_layer[i])).collect();
+    let (mut cur_cost, mut cur_lat) = oracle.evaluate(&pick);
+    let mut best: Option<Solution> = if cur_lat <= latency_budget {
+        Some(Solution { pick: pick.clone(), cost: cur_cost, latency: cur_lat })
+    } else {
+        None
+    };
+    let mut temp = cfg.t0;
+    for _ in 0..iterations {
+        let i = rng.below(n);
+        let old = pick[i];
+        let mut j = rng.below(choices_per_layer[i]);
+        if choices_per_layer[i] > 1 {
+            while j == old {
+                j = rng.below(choices_per_layer[i]);
+            }
+        }
+        pick[i] = j;
+        let (cost, lat) = oracle.evaluate(&pick);
+        let feasible = lat <= latency_budget;
+        let accept = if feasible {
+            match &best {
+                None => true,
+                Some(b) => {
+                    cost < b.cost
+                        || rng.f64() < ((b.cost - cost) / temp.max(cfg.t_min)).exp().min(1.0)
+                }
+            }
+        } else {
+            lat < cur_lat
+        };
+        if accept {
+            cur_cost = cost;
+            cur_lat = lat;
+            if feasible && best.as_ref().map_or(true, |b| cur_cost < b.cost) {
+                best = Some(Solution { pick: pick.clone(), cost: cur_cost, latency: cur_lat });
+            }
+        } else {
+            pick[i] = old;
+        }
+        temp = (temp * cfg.cooling).max(cfg.t_min);
+    }
+    SearchResult { best, trials: iterations, seconds: t0c.elapsed().as_secs_f64() }
+}
+
+/// Naive stochastic search over a pre-tabulated problem (memoized fast
+/// path; used for unit-level cross-checks where per-trial model inference
+/// is not the point).
+pub fn stochastic_search(prob: &DeployProblem, trials: usize, seed: u64) -> SearchResult {
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(seed);
+    let mut best: Option<Solution> = None;
+    let mut pick = vec![0usize; prob.layers.len()];
+    for _ in 0..trials {
+        for (i, choices) in prob.layers.iter().enumerate() {
+            pick[i] = rng.below(choices.len());
+        }
+        let sol = prob.evaluate(&pick);
+        if sol.latency <= prob.latency_budget
+            && best.as_ref().map_or(true, |b| sol.cost < b.cost)
+        {
+            best = Some(sol);
+        }
+    }
+    SearchResult { best, trials, seconds: t0.elapsed().as_secs_f64() }
+}
+
+/// Simulated-annealing parameters (paper §VI-C: t0 = 100, 1%/iter cooling).
+#[derive(Clone, Copy, Debug)]
+pub struct SaConfig {
+    pub t0: f64,
+    pub cooling: f64,
+    /// Floor so late iterations still explore a little.
+    pub t_min: f64,
+}
+
+impl Default for SaConfig {
+    fn default() -> Self {
+        SaConfig { t0: 100.0, cooling: 0.99, t_min: 1e-3 }
+    }
+}
+
+/// Simulated annealing: start from a random assignment, mutate one layer
+/// per iteration; accept improvements, or feasible worsenings with
+/// probability exp((r_best - r_proposed) / t).
+pub fn simulated_annealing(
+    prob: &DeployProblem,
+    iterations: usize,
+    cfg: SaConfig,
+    seed: u64,
+) -> SearchResult {
+    let t0c = std::time::Instant::now();
+    let mut rng = Rng::new(seed);
+    let n = prob.layers.len();
+    let mut pick: Vec<usize> = (0..n).map(|i| rng.below(prob.layers[i].len())).collect();
+    let mut cur = prob.evaluate(&pick);
+    let mut best: Option<Solution> = if cur.latency <= prob.latency_budget {
+        Some(cur.clone())
+    } else {
+        None
+    };
+    let mut temp = cfg.t0;
+    for _ in 0..iterations {
+        // Mutate one randomly chosen layer.
+        let i = rng.below(n);
+        let old = pick[i];
+        let mut j = rng.below(prob.layers[i].len());
+        if prob.layers[i].len() > 1 {
+            while j == old {
+                j = rng.below(prob.layers[i].len());
+            }
+        }
+        pick[i] = j;
+        let prop = prob.evaluate(&pick);
+        let feasible = prop.latency <= prob.latency_budget;
+        let accept = if feasible {
+            match &best {
+                None => true,
+                Some(b) => {
+                    prop.cost < b.cost
+                        || rng.f64() < ((b.cost - prop.cost) / temp.max(cfg.t_min)).exp().min(1.0)
+                }
+            }
+        } else {
+            // Infeasible proposals: only random-walk toward feasibility by
+            // accepting latency improvements.
+            prop.latency < cur.latency
+        };
+        if accept {
+            cur = prop;
+            if cur.latency <= prob.latency_budget
+                && best.as_ref().map_or(true, |b| cur.cost < b.cost)
+            {
+                best = Some(cur.clone());
+            }
+        } else {
+            pick[i] = old;
+        }
+        temp = (temp * cfg.cooling).max(cfg.t_min);
+    }
+    SearchResult { best, trials: iterations, seconds: t0c.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mip::{solve_bb, Choice};
+    use crate::testkit::prop_check;
+
+    fn ch(reuse: usize, cost: f64, latency: f64) -> Choice {
+        Choice { reuse, cost, latency }
+    }
+
+    fn toy() -> DeployProblem {
+        DeployProblem {
+            layers: vec![
+                vec![ch(1, 100.0, 5.0), ch(2, 60.0, 10.0), ch(4, 30.0, 20.0)],
+                vec![ch(1, 80.0, 5.0), ch(2, 50.0, 10.0), ch(4, 25.0, 25.0)],
+                vec![ch(1, 40.0, 2.0), ch(2, 20.0, 8.0)],
+            ],
+            latency_budget: 35.0,
+        }
+    }
+
+    #[test]
+    fn stochastic_finds_feasible_on_toy() {
+        let res = stochastic_search(&toy(), 500, 1);
+        let best = res.best.expect("feasible solution exists");
+        assert!(best.latency <= 35.0);
+        // 3*3*2 = 18 assignments; 500 trials should find the optimum.
+        let (opt, _) = solve_bb(&toy()).unwrap();
+        assert_eq!(best.cost, opt.cost);
+    }
+
+    #[test]
+    fn sa_finds_feasible_on_toy() {
+        let res = simulated_annealing(&toy(), 2000, SaConfig::default(), 3);
+        let best = res.best.expect("feasible solution exists");
+        assert!(best.latency <= 35.0);
+        let (opt, _) = solve_bb(&toy()).unwrap();
+        assert!(best.cost <= opt.cost * 1.25, "sa {} vs opt {}", best.cost, opt.cost);
+    }
+
+    #[test]
+    fn more_trials_never_worse() {
+        let prob = toy();
+        let small = stochastic_search(&prob, 20, 9);
+        let large = stochastic_search(&prob, 2000, 9);
+        if let (Some(s), Some(l)) = (&small.best, &large.best) {
+            assert!(l.cost <= s.cost);
+        }
+    }
+
+    #[test]
+    fn property_baselines_never_beat_exact() {
+        prop_check("baselines-never-beat-mip", 20, |g| {
+            let mut rng = crate::rng::Rng::new(g.rng.next_u64());
+            let n_layers = g.int(1, 5);
+            let n_choices = g.int(2, 5);
+            let layers: Vec<Vec<Choice>> = (0..n_layers)
+                .map(|_| {
+                    (0..n_choices)
+                        .map(|j| {
+                            ch(
+                                1 << j,
+                                rng.range_f64(10.0, 1000.0),
+                                rng.range_f64(1.0, 50.0).floor(),
+                            )
+                        })
+                        .collect()
+                })
+                .collect();
+            let budget = rng.range_f64(20.0, 120.0).floor();
+            let prob = DeployProblem { layers, latency_budget: budget };
+            let exact = solve_bb(&prob);
+            let st = stochastic_search(&prob, 300, rng.next_u64());
+            let sa = simulated_annealing(&prob, 300, SaConfig::default(), rng.next_u64());
+            match exact {
+                None => {
+                    if st.best.is_some() || sa.best.is_some() {
+                        return Err("baseline found solution where exact found none".into());
+                    }
+                }
+                Some((opt, _)) => {
+                    for (name, res) in [("stochastic", &st), ("sa", &sa)] {
+                        if let Some(b) = &res.best {
+                            if b.cost < opt.cost - 1e-6 {
+                                return Err(format!(
+                                    "{name} beat the exact optimum: {} < {}",
+                                    b.cost, opt.cost
+                                ));
+                            }
+                            if b.latency > prob.latency_budget + 1e-9 {
+                                return Err(format!("{name} violated the budget"));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = stochastic_search(&toy(), 100, 5).best;
+        let b = stochastic_search(&toy(), 100, 5).best;
+        assert_eq!(a.map(|s| s.pick), b.map(|s| s.pick));
+    }
+}

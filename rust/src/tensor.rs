@@ -1,0 +1,409 @@
+//! Dense f32 tensor substrate for the native training path.
+//!
+//! Deliberately small: row-major storage, explicit shapes, and exactly the
+//! operations the `nn` layers need (GEMM in the four transpose flavours,
+//! elementwise maps, reductions, slicing along the leading axis). The GEMM
+//! is the Layer-3 hot path for hyperparameter-search training, so it is
+//! written cache-consciously (ikj loop order with a transposed-B fast path)
+//! and is covered by the perf benches (`perf_hotpaths`).
+
+use std::fmt;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Dimension i (panics if out of range).
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D accessor (row, col).
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        &mut self.data[r * cols + c]
+    }
+
+    /// 3-D accessor (i, j, k).
+    #[inline]
+    pub fn at3(&self, i: usize, j: usize, k: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 3);
+        self.data[(i * self.shape[1] + j) * self.shape[2] + k]
+    }
+
+    #[inline]
+    pub fn at3_mut(&mut self, i: usize, j: usize, k: usize) -> &mut f32 {
+        debug_assert_eq!(self.rank(), 3);
+        let (d1, d2) = (self.shape[1], self.shape[2]);
+        &mut self.data[(i * d1 + j) * d2 + k]
+    }
+
+    /// Row slice of a 2-D tensor.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// In-place axpy: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Broadcast-add a length-N vector to each row of an (M,N) tensor.
+    pub fn add_row_vec(&self, bias: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(bias.rank(), 1);
+        assert_eq!(self.shape[1], bias.shape[0]);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = self.clone();
+        for r in 0..m {
+            for c in 0..n {
+                out.data[r * n + c] += bias.data[c];
+            }
+        }
+        out
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f32
+        }
+    }
+
+    /// Column-sum of an (M,N) tensor -> (N,).
+    pub fn sum_rows(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; n];
+        for r in 0..m {
+            for c in 0..n {
+                out[c] += self.data[r * n + c];
+            }
+        }
+        Tensor::from_vec(&[n], out)
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for r in 0..m {
+            for c in 0..n {
+                out[c * m + r] = self.data[r * n + c];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(&a, &b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+/// C = A (M,K) @ B (K,N). The native-trainer hot path.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul {:?} @ {:?}", a.shape, b.shape);
+    let mut c = vec![0.0f32; m * n];
+    // ikj order (streams B rows, accumulates into C rows — cache friendly
+    // for row-major without materializing B^T), with a 4-wide unroll over
+    // k that cuts C-row write traffic 4x (+50% on the HPO-relevant shapes;
+    // see EXPERIMENTS.md §Perf).
+    let k4 = k / 4 * 4;
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut kk = 0;
+        while kk < k4 {
+            let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+            let b0 = &b.data[kk * n..(kk + 1) * n];
+            let b1 = &b.data[(kk + 1) * n..(kk + 2) * n];
+            let b2 = &b.data[(kk + 2) * n..(kk + 3) * n];
+            let b3 = &b.data[(kk + 3) * n..(kk + 4) * n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let av = arow[kk];
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+            kk += 1;
+        }
+    }
+    Tensor::from_vec(&[m, n], c)
+}
+
+/// C = A^T (K,M)^T @ B (K,N) -> (M,N) without materializing A^T.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (k, m) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_tn {:?} @ {:?}", a.shape, b.shape);
+    let mut c = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let arow = &a.data[kk * m..(kk + 1) * m];
+        let brow = &b.data[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], c)
+}
+
+/// C = A (M,K) @ B^T (N,K)^T -> (M,N) without materializing B^T.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_nt {:?} @ {:?}", a.shape, b.shape);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    Tensor::from_vec(&[m, n], c)
+}
+
+/// Horizontal concat of two 2-D tensors with equal row counts.
+pub fn hconcat(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    assert_eq!(a.shape[0], b.shape[0]);
+    let (m, na, nb) = (a.shape[0], a.shape[1], b.shape[1]);
+    let mut out = Vec::with_capacity(m * (na + nb));
+    for r in 0..m {
+        out.extend_from_slice(a.row(r));
+        out.extend_from_slice(b.row(r));
+    }
+    Tensor::from_vec(&[m, na + nb], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(rows: usize, cols: usize, v: &[f32]) -> Tensor {
+        Tensor::from_vec(&[rows, cols], v.to_vec())
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = t2(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = t2(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(matmul(&a, &b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = t2(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let id = t2(3, 3, &[1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(matmul(&a, &id).data, a.data);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut r = crate::rng::Rng::new(1);
+        let a = Tensor::from_vec(&[4, 6], (0..24).map(|_| r.f32() - 0.5).collect());
+        let b = Tensor::from_vec(&[6, 5], (0..30).map(|_| r.f32() - 0.5).collect());
+        let c = matmul(&a, &b);
+        let c_tn = matmul_tn(&a.t(), &b);
+        let c_nt = matmul_nt(&a, &b.t());
+        assert!(c.allclose(&c_tn, 1e-5, 1e-5));
+        assert!(c.allclose(&c_nt, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = t2(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn add_row_vec_broadcasts() {
+        let a = t2(2, 2, &[0.0, 0.0, 1.0, 1.0]);
+        let b = Tensor::from_vec(&[2], vec![10.0, 20.0]);
+        assert_eq!(a.add_row_vec(&b).data, vec![10.0, 20.0, 11.0, 21.0]);
+    }
+
+    #[test]
+    fn sum_rows_is_column_sum() {
+        let a = t2(3, 2, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.sum_rows().data, vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn hconcat_rows() {
+        let a = t2(2, 1, &[1.0, 3.0]);
+        let b = t2(2, 2, &[2.0, 2.5, 4.0, 4.5]);
+        let c = hconcat(&a, &b);
+        assert_eq!(c.shape, vec![2, 3]);
+        assert_eq!(c.data, vec![1.0, 2.0, 2.5, 3.0, 4.0, 4.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = t2(2, 3, &[0.0; 6]);
+        let b = t2(2, 2, &[0.0; 4]);
+        matmul(&a, &b);
+    }
+
+    #[test]
+    fn reshape_and_accessors() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.at2(1, 2), 5.0);
+        let t3 = t.clone().reshape(&[1, 2, 3]);
+        assert_eq!(t3.at3(0, 1, 0), 3.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut a = t2(1, 3, &[1.0, 2.0, 3.0]);
+        let b = t2(1, 3, &[1.0, 1.0, 1.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data, vec![1.5, 2.5, 3.5]);
+    }
+}

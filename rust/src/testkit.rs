@@ -1,0 +1,151 @@
+//! Property-testing substrate (offline environment: no proptest).
+//!
+//! `prop_check` runs a property over N seeded random cases; on failure it
+//! performs a bounded greedy shrink (re-running the generator with "smaller"
+//! size hints) and reports the smallest failing seed/case it found, so
+//! failures are reproducible by seed.
+
+use crate::rng::Rng;
+
+/// Generator context: a seeded RNG plus a size hint that shrinking lowers.
+pub struct GenCtx {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl GenCtx {
+    pub fn new(seed: u64, size: usize) -> Self {
+        GenCtx { rng: Rng::new(seed), size }
+    }
+
+    /// Integer in [lo, min(hi, lo+size)] — range narrows as we shrink.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = hi.min(lo + self.size.max(1));
+        lo + self.rng.below(hi_eff - lo + 1)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| self.rng.range_f64(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+}
+
+/// Outcome of a property run.
+pub struct PropResult {
+    pub cases: usize,
+    pub failure: Option<String>,
+}
+
+/// Run `prop` over `cases` seeded cases. `prop` returns Err(message) to
+/// signal failure. Panics with a reproducible report on failure.
+pub fn prop_check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut GenCtx) -> Result<(), String>,
+{
+    let base_seed = crate::rng::fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut ctx = GenCtx::new(seed, 64);
+        if let Err(msg) = prop(&mut ctx) {
+            // Greedy shrink: retry the same seed with smaller size hints.
+            let mut best: Option<(usize, String)> = Some((64, msg));
+            let mut size = 32usize;
+            while size >= 1 {
+                let mut sctx = GenCtx::new(seed, size);
+                if let Err(m) = prop(&mut sctx) {
+                    best = Some((size, m));
+                }
+                if size == 1 {
+                    break;
+                }
+                size /= 2;
+            }
+            let (size, msg) = best.unwrap();
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}, size {size}):\n  {msg}\n\
+                 reproduce with GenCtx::new({seed}, {size})"
+            );
+        }
+    }
+}
+
+/// Assert two f64 values are close; returns Err for use inside prop_check.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        prop_check("always-true", 50, |ctx| {
+            n += 1;
+            let v = ctx.int(0, 100);
+            if v <= 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_reports_seed() {
+        prop_check("always-false", 10, |_ctx| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_reduces_size_hint() {
+        // A property that fails only for size > 4: the shrinker should
+        // fail at 64/32/16/8 and report those; we just check it panics
+        // with a size in the message (shrink path executes).
+        let result = std::panic::catch_unwind(|| {
+            prop_check("fails-when-big", 1, |ctx| {
+                let v = ctx.int(0, 1000);
+                if ctx.size > 4 && v > 0 {
+                    Err(format!("too big: {v}"))
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn close_tolerates_relative_error() {
+        assert!(close(1000.0, 1000.5, 1e-3, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-3, "x").is_err());
+    }
+
+    #[test]
+    fn genctx_deterministic() {
+        let mut a = GenCtx::new(9, 64);
+        let mut b = GenCtx::new(9, 64);
+        for _ in 0..20 {
+            assert_eq!(a.int(0, 50), b.int(0, 50));
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration: the full coordinator pipeline (HLS DB -> cost models ->
+//! HPO -> MIP deployment) at smoke scale, plus cross-module invariants
+//! that no single unit test can see.
+
+use ntorc::coordinator::{
+    prepare_data, Pipeline, PipelineConfig, TrainBudget, LATENCY_BUDGET_CYCLES,
+};
+use ntorc::hpo::{pareto_trials, Sampler};
+use ntorc::layers::NetConfig;
+use ntorc::report;
+use ntorc::testkit::prop_check;
+
+fn smoke_pipe() -> Pipeline {
+    Pipeline::new(PipelineConfig::smoke())
+}
+
+#[test]
+fn database_to_models_to_deployment() {
+    let pipe = smoke_pipe();
+    let db = pipe.synth_database();
+    assert!(db.len() > 100);
+    let models = pipe.fit_models(&db);
+    // Deploy a hand-picked network through the full path.
+    let net = NetConfig::new(64, vec![(3, 8)], vec![8], vec![16, 1]);
+    let trial = ntorc::hpo::Trial {
+        genome: vec![0; ntorc::hpo::SearchSpace::GENES],
+        cfg: net.clone(),
+        rmse: 0.1,
+        workload: net.workload_multiplies() as f64,
+    };
+    let deployed = pipe.deploy(&models, &trial).expect("deployable");
+    // The real-time contract.
+    assert!(deployed.latency_us <= 200.0 + 1e-6);
+    assert_eq!(deployed.reuse.len(), net.plan().len());
+    // Every chosen reuse factor divides its layer's GEMV product.
+    for (spec, &r) in net.plan().iter().zip(&deployed.reuse) {
+        assert_eq!((spec.n_in * spec.n_out) % r, 0, "invalid reuse {r}");
+    }
+    // Predicted latency within 25% of the simulator's ground truth at the
+    // same assignment (the models were trained on this simulator).
+    let rel = (deployed.predicted.latency - deployed.actual.latency).abs()
+        / deployed.actual.latency.max(1.0);
+    assert!(rel < 0.25, "latency prediction error {rel}");
+}
+
+#[test]
+fn hpo_front_shrinks_with_budget() {
+    // The Pareto front must trade off: min-workload trial has the max
+    // RMSE among front members and vice versa.
+    let mut cfg = PipelineConfig::smoke();
+    cfg.hpo.n_trials = 10;
+    let pipe = Pipeline::new(cfg);
+    let sim = report::standard_simulator();
+    let (trials, _) = pipe.run_hpo(&sim);
+    assert!(trials.len() >= 8);
+    let front = pareto_trials(&trials);
+    assert!(!front.is_empty());
+    for w in front.windows(2) {
+        assert!(w[0].rmse >= w[1].rmse);
+        assert!(w[0].workload <= w[1].workload);
+    }
+}
+
+#[test]
+fn samplers_explore_the_same_space() {
+    // Every sampler must produce valid, in-space configurations.
+    for sampler in [Sampler::Random, Sampler::Bayes, Sampler::Nsga2] {
+        let mut cfg = PipelineConfig::smoke();
+        cfg.hpo.sampler = sampler;
+        cfg.hpo.n_trials = 6;
+        cfg.budget = TrainBudget { steps: 10, ..TrainBudget::smoke() };
+        let pipe = Pipeline::new(cfg);
+        let sim = report::standard_simulator();
+        let (trials, _) = pipe.run_hpo(&sim);
+        assert!(trials.len() >= 5, "{sampler:?} produced {}", trials.len());
+        for t in &trials {
+            assert!(t.cfg.is_valid());
+            assert!(t.rmse.is_finite() && t.rmse > 0.0);
+            assert_eq!(t.workload, t.cfg.workload_multiplies() as f64);
+        }
+    }
+}
+
+#[test]
+fn prepared_data_respects_protocol() {
+    let sim = report::standard_simulator();
+    let dc = ntorc::coordinator::DataConfig::smoke();
+    let prepared = prepare_data(&sim, &dc, 32);
+    assert!(!prepared.train.is_empty());
+    assert!(!prepared.val.is_empty());
+    assert!(!prepared.test.is_empty());
+    // 70/30 split within 10% tolerance.
+    let frac = prepared.val.len() as f64
+        / (prepared.train.len() + prepared.val.len()) as f64;
+    assert!((frac - 0.3).abs() < 0.1, "val fraction {frac}");
+    // Targets are normalized to [0,1].
+    for &y in prepared.train.y.iter().take(500) {
+        assert!((-0.01..=1.01).contains(&y));
+    }
+}
+
+#[test]
+fn property_deployments_always_meet_budget() {
+    // Across random small networks, any returned deployment satisfies the
+    // latency constraint and uses valid reuse factors.
+    let pipe = smoke_pipe();
+    let db = pipe.synth_database();
+    let models = pipe.fit_models(&db);
+    let space = ntorc::hpo::SearchSpace::small();
+    prop_check("deployments-meet-budget", 15, |g| {
+        let genome = (0..ntorc::hpo::SearchSpace::GENES)
+            .map(|i| g.int(0, space.gene_card(i) - 1))
+            .collect::<Vec<_>>();
+        let net = space.decode(&genome);
+        let trial = ntorc::hpo::Trial {
+            genome,
+            cfg: net.clone(),
+            rmse: 0.1,
+            workload: net.workload_multiplies() as f64,
+        };
+        match pipe.deploy(&models, &trial) {
+            None => Ok(()), // infeasible is a legal outcome
+            Some(d) => {
+                if d.solution.latency > LATENCY_BUDGET_CYCLES + 1e-6 {
+                    return Err(format!("budget violated: {}", d.solution.latency));
+                }
+                for (spec, &r) in net.plan().iter().zip(&d.reuse) {
+                    if (spec.n_in * spec.n_out) % r != 0 {
+                        return Err(format!("invalid reuse {r} for {spec:?}"));
+                    }
+                }
+                Ok(())
+            }
+        }
+    });
+}

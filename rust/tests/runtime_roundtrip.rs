@@ -1,0 +1,141 @@
+//! Integration: the python-AOT -> rust-PJRT round trip, and the numeric
+//! agreement between the PJRT-executed artifacts and the native Rust
+//! training substrate. Requires `make artifacts`.
+
+use ntorc::layers::NetConfig;
+use ntorc::nn::NativeModel;
+use ntorc::rng::Rng;
+use ntorc::runtime::Runtime;
+use ntorc::tensor::Tensor;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("quickstart.meta.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("PJRT CPU client"))
+}
+
+#[test]
+fn artifacts_discovered() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.available_models().unwrap();
+    assert!(names.contains(&"quickstart".to_string()), "{names:?}");
+    assert!(names.contains(&"model1".to_string()));
+    assert!(names.contains(&"model2".to_string()));
+}
+
+#[test]
+fn manifest_matches_rust_layer_walk() {
+    // The manifest's workload must equal the Rust-side formula — the two
+    // layer walks (python model.py / rust layers.rs) stay in lockstep.
+    let Some(rt) = runtime() else { return };
+    for name in rt.available_models().unwrap() {
+        let model = rt.load(&name).unwrap();
+        let cfg: &NetConfig = &model.meta.cfg;
+        assert_eq!(
+            cfg.workload_multiplies(),
+            model.meta.workload_multiplies,
+            "workload mismatch for {name}"
+        );
+        assert_eq!(model.meta.param_shapes.len(), cfg.num_param_tensors());
+    }
+}
+
+#[test]
+fn pjrt_forward_matches_native_forward() {
+    // Same parameters through (a) the AOT HLO predict executable and
+    // (b) the native Rust forward must agree to f32 tolerance. This is the
+    // core cross-validation that lets the native trainer stand in for the
+    // PJRT path during hyperparameter search (DESIGN.md §1).
+    let Some(rt) = runtime() else { return };
+    let model = rt.load("quickstart").unwrap();
+    let mut rng = Rng::new(42);
+    let native = NativeModel::init(model.meta.cfg.clone(), &mut rng);
+    let state = model.state_from_params(&native.params).unwrap();
+
+    let mut rng2 = Rng::new(7);
+    for case in 0..4 {
+        let x = Tensor::from_vec(
+            &[1, model.meta.window],
+            (0..model.meta.window)
+                .map(|_| rng2.gauss(0.0, 1.0) as f32)
+                .collect(),
+        );
+        let pjrt = model.predict_one(&state, &x).unwrap();
+        let native_out = native.forward(&x)[0];
+        assert!(
+            (pjrt - native_out).abs() <= 1e-4 + 1e-3 * native_out.abs(),
+            "case {case}: pjrt {pjrt} vs native {native_out}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_training_reduces_loss() {
+    // A few Adam steps through the AOT train executable must reduce the
+    // loss on a fixed synthetic batch (the E2E example then does this on
+    // real simulated DROPBEAR data).
+    let Some(rt) = runtime() else { return };
+    let model = rt.load("quickstart").unwrap();
+    let mut state = model.init_state(3).unwrap();
+    let b = model.meta.batch;
+    let w = model.meta.window;
+    let mut rng = Rng::new(5);
+    let x = Tensor::from_vec(
+        &[b, w],
+        (0..b * w).map(|_| rng.gauss(0.0, 0.5) as f32).collect(),
+    );
+    let y: Vec<f32> = (0..b)
+        .map(|i| x.row(i).iter().sum::<f32>() / w as f32)
+        .collect();
+    let first = model.train_step(&mut state, &x, &y).unwrap();
+    let mut last = first;
+    for _ in 0..40 {
+        last = model.train_step(&mut state, &x, &y).unwrap();
+    }
+    assert!(
+        last < first * 0.9,
+        "PJRT training did not reduce loss: {first} -> {last}"
+    );
+    assert_eq!(state.steps, 41);
+}
+
+#[test]
+fn pjrt_step_matches_native_step() {
+    // One full Adam step: PJRT artifact vs native substrate, identical
+    // params and batch. Verifies gradients + optimizer bit-for-bit
+    // semantics (to f32 tolerance).
+    let Some(rt) = runtime() else { return };
+    let model = rt.load("quickstart").unwrap();
+    let mut rng = Rng::new(11);
+    let mut native = NativeModel::init(model.meta.cfg.clone(), &mut rng);
+    let mut state = model.state_from_params(&native.params).unwrap();
+
+    let b = model.meta.batch;
+    let w = model.meta.window;
+    let x = Tensor::from_vec(
+        &[b, w],
+        (0..b * w).map(|_| rng.gauss(0.0, 0.5) as f32).collect(),
+    );
+    let y: Vec<f32> = (0..b).map(|_| rng.gauss(0.0, 0.3) as f32).collect();
+
+    let pjrt_loss = model.train_step(&mut state, &x, &y).unwrap();
+    let mut opt = ntorc::nn::Adam::new(&native.params, ntorc::nn::AdamConfig::default());
+    let native_loss = ntorc::nn::train_step(&mut native, &mut opt, &x, &y);
+    assert!(
+        (pjrt_loss - native_loss).abs() <= 1e-5 + 1e-4 * native_loss.abs(),
+        "loss mismatch: {pjrt_loss} vs {native_loss}"
+    );
+    // Parameters after the step must agree.
+    let pjrt_params = model.params_to_tensors(&state).unwrap();
+    for (i, (a, b)) in pjrt_params.iter().zip(&native.params).enumerate() {
+        assert_eq!(a.shape, b.shape, "param {i} shape");
+        assert!(
+            a.allclose(b, 5e-4, 5e-3),
+            "param {i} diverged after one step (max|Δ| = {})",
+            a.sub(b).max_abs()
+        );
+    }
+}
