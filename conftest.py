@@ -1,6 +1,24 @@
 """Repo-root pytest shim: make `compile` importable when pytest runs from
-the repository root (`pytest python/tests/`) as well as from python/."""
+the repository root (`pytest python/tests/`) as well as from python/.
+
+Also degrades gracefully on machines without the Layer-1/2 dependencies
+(e.g. the Rust-focused CI runners): the suites import jax (and
+test_kernels additionally imports hypothesis) at module scope, so collect
+each module only when its imports are available — skip, don't fail.
+"""
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))
+
+
+def _missing(module):
+    return importlib.util.find_spec(module) is None
+
+
+collect_ignore_glob = []
+if _missing("jax"):
+    collect_ignore_glob.append("python/tests/*")
+elif _missing("hypothesis"):
+    collect_ignore_glob.append("python/tests/test_kernels.py")

@@ -26,7 +26,8 @@ fn main() -> anyhow::Result<()> {
     let mut all_rows = Vec::new();
     for (name, net) in report::table4_models() {
         let plan = net.plan();
-        let prob = models.build_problem(&plan, pipe.cfg.latency_budget, pipe.cfg.max_choices_per_layer);
+        let prob =
+            models.build_problem(&plan, pipe.cfg.latency_budget, pipe.cfg.max_choices_per_layer);
         println!(
             "\n{name}: {} layers, {:.3e} RF permutations, budget 50,000 cycles",
             plan.len(),

@@ -1,13 +1,17 @@
 //! Perf bench — the Layer-3 hot paths (EXPERIMENTS.md §Perf):
 //!   * native-trainer GEMM + full train step (HPO inner loop),
 //!   * random-forest inference (MIP candidate enumeration),
+//!   * batched vs unbatched cost-model grid evaluation (crate::eval),
 //!   * MIP B&B solve + DP oracle,
 //!   * beam-simulator sample generation,
 //!   * PJRT train/predict step (if artifacts are built).
 
 use ntorc::bench::Bencher;
 use ntorc::coordinator::{candidate_reuse_factors, Pipeline, PipelineConfig};
+use ntorc::eval::BatchEvaluator;
+use ntorc::hls::LayerCost;
 use ntorc::layers::{LayerKind, LayerSpec, NetConfig};
+use ntorc::mip::{Choice, DeployProblem};
 use ntorc::nn::{train_step, Adam, AdamConfig, NativeModel};
 use ntorc::rng::Rng;
 use ntorc::tensor::{matmul, Tensor};
@@ -45,10 +49,104 @@ fn main() {
     let db = pipe.synth_database();
     let models = pipe.fit_models(&db);
     let spec = LayerSpec::new(LayerKind::Dense, 512, 64, 1);
-    b.bench("forest_predict/one_layer", || models.predict_layer(&spec, 32));
+    b.bench("forest_predict/one_layer_uncached", || {
+        models.predict_layer_uncached(&spec, 32)
+    });
+    b.bench("forest_predict/one_layer_cached", || models.predict_layer(&spec, 32));
 
+    // --- batched vs unbatched grid evaluation ------------------------------
+    // The candidate grid the MIP collapse needs: every unique
+    // (layer, reuse) of model1 at the default 48-choice cap.
     let net = ntorc::report::table4_models()[0].1.clone();
-    let prob = models.build_problem(&net.plan(), 50_000.0, 48);
+    let plan = net.plan();
+    let rfs: Vec<Vec<usize>> = plan
+        .iter()
+        .map(|s| candidate_reuse_factors(s, 48))
+        .collect();
+
+    // Unbatched reference: one full forest walk per metric per row.
+    let t0 = std::time::Instant::now();
+    let unbatched_grid: Vec<Vec<LayerCost>> = plan
+        .iter()
+        .zip(&rfs)
+        .map(|(s, list)| {
+            list.iter()
+                .map(|&r| models.predict_layer_uncached(s, r))
+                .collect()
+        })
+        .collect();
+    let unbatched_ns = t0.elapsed().as_nanos() as f64;
+    let unbatched_meas = b.record("grid_eval/unbatched", unbatched_ns).clone();
+
+    // Batched: exactly one Forest::predict_batch per (model, layer-grid),
+    // verified against the process-wide forest counters.
+    models.cache().clear();
+    ntorc::forest::reset_prediction_counters();
+    let t0 = std::time::Instant::now();
+    let evaluator = BatchEvaluator::new(&models, 1);
+    let stats = evaluator.prime(&plan, &rfs);
+    let batched_ns = t0.elapsed().as_nanos() as f64;
+    let batched_meas = b.record("grid_eval/batched", batched_ns).clone();
+    assert_eq!(
+        stats.batch_calls, stats.forests,
+        "exactly one predict_batch per (model, layer-grid)"
+    );
+    assert_eq!(
+        ntorc::forest::predict_batch_calls(),
+        stats.forests as u64,
+        "forest counters must agree with the evaluator's stats"
+    );
+    assert_eq!(
+        ntorc::forest::predict_calls(),
+        0,
+        "the batched path must issue no per-row predicts"
+    );
+    println!(
+        "    -> {} rows through {} forests in {} predict_batch calls, {:.1}x vs unbatched",
+        stats.rows,
+        stats.forests,
+        stats.batch_calls,
+        ntorc::bench::speedup(&unbatched_meas, &batched_meas)
+    );
+
+    // Bit-identity: the cached grid and solve_bb results match the
+    // uncached path exactly.
+    for (i, s) in plan.iter().enumerate() {
+        for (k, &r) in rfs[i].iter().enumerate() {
+            assert_eq!(
+                models.predict_layer(s, r),
+                unbatched_grid[i][k],
+                "cached cost differs at layer {i} reuse {r}"
+            );
+        }
+    }
+    let prob = models.build_problem(&plan, 50_000.0, 48);
+    let prob_uncached = DeployProblem {
+        layers: unbatched_grid
+            .iter()
+            .zip(&rfs)
+            .map(|(costs, list)| {
+                costs
+                    .iter()
+                    .zip(list)
+                    .map(|(c, &r)| Choice {
+                        reuse: r,
+                        cost: c.resource_sum(),
+                        latency: c.latency,
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect(),
+        latency_budget: 50_000.0,
+    };
+    let sol_cached = ntorc::mip::solve_bb(&prob).map(|(s, _)| s);
+    let sol_uncached = ntorc::mip::solve_bb(&prob_uncached).map(|(s, _)| s);
+    assert_eq!(
+        sol_cached, sol_uncached,
+        "solve_bb must be bit-identical with and without the cache"
+    );
+    println!("    -> solve_bb bit-identical with and without the cache");
+
     b.bench("mip_build_problem/model1", || {
         models.build_problem(&net.plan(), 50_000.0, 48).layers.len()
     });

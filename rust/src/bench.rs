@@ -51,6 +51,12 @@ impl Measurement {
     }
 }
 
+/// Median-over-median speedup of `contender` relative to `baseline`
+/// (e.g. unbatched-vs-batched grid evaluation in `perf_hotpaths`).
+pub fn speedup(baseline: &Measurement, contender: &Measurement) -> f64 {
+    baseline.median_ns() / contender.median_ns().max(1e-9)
+}
+
 /// Human-friendly nanosecond formatting.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -121,12 +127,13 @@ impl Bencher {
 
     /// Record an externally-measured scalar series (e.g. a solver's search
     /// time at different trial counts) so it lands in the same CSV.
-    pub fn record(&mut self, name: &str, value_ns: f64) {
+    pub fn record(&mut self, name: &str, value_ns: f64) -> &Measurement {
         self.measurements.push(Measurement {
             name: name.to_string(),
             samples_ns: vec![value_ns],
         });
         println!("{:<44} {:>12}", name, fmt_ns(value_ns));
+        self.measurements.last().unwrap()
     }
 
     /// Write `results/<suite>_timing.csv` with one row per measurement
@@ -181,6 +188,13 @@ mod tests {
         b.budget = Duration::from_millis(10);
         let m = b.bench("noop", || 1 + 1);
         assert!(m.samples_ns.len() >= 5);
+    }
+
+    #[test]
+    fn speedup_from_medians() {
+        let slow = Measurement { name: "a".into(), samples_ns: vec![100.0, 100.0, 100.0] };
+        let fast = Measurement { name: "b".into(), samples_ns: vec![10.0, 10.0, 10.0] };
+        assert!((speedup(&slow, &fast) - 10.0).abs() < 1e-9);
     }
 
     #[test]

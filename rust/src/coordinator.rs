@@ -24,13 +24,14 @@ use crate::data::{self, WindowedData};
 use crate::dropbear::Simulator;
 #[cfg(test)]
 use crate::dropbear::SimConfig;
+use crate::eval::{BatchEvaluator, CostCache};
 use crate::forest::{regression_metrics, Forest, ForestConfig, FeatureMatrix, RegMetrics};
 use crate::hls::{
     self, features_of, DbSample, HlsSim, LayerCost, Metric, SweepConfig,
 };
 use crate::hpo::{self, HpoConfig, Trial};
 use crate::layers::{LayerKind, LayerSpec, NetConfig};
-use crate::mip::{self, Choice, DeployProblem, Solution};
+use crate::mip::{self, DeployProblem, Solution};
 use crate::nn::{Adam, AdamConfig, NativeModel};
 use crate::rng::Rng;
 
@@ -52,11 +53,17 @@ pub struct ModelValidation {
 }
 
 /// The trained cost/latency models.
+///
+/// Forests are held behind `Arc` so batched evaluation can fan per-model
+/// `predict_batch` jobs out over the worker pool; every per-layer query
+/// goes through a shared [`CostCache`], so a solve pays forest inference
+/// for each unique `(layer, reuse)` exactly once.
 pub struct CostModels {
-    forests: HashMap<(LayerKind, Metric), Forest>,
+    forests: HashMap<(LayerKind, Metric), Arc<Forest>>,
     pub validation: Vec<ModelValidation>,
     /// Unique-layer counts per kind (reported like the paper's 5962/496/4195).
     pub db_counts: HashMap<LayerKind, usize>,
+    cache: CostCache,
 }
 
 impl CostModels {
@@ -92,14 +99,26 @@ impl CostModels {
                     n_train: train_idx.len(),
                     n_test: test_idx.len(),
                 });
-                forests.insert((kind, metric), forest);
+                forests.insert((kind, metric), Arc::new(forest));
             }
         }
-        CostModels { forests, validation, db_counts }
+        CostModels { forests, validation, db_counts, cache: CostCache::new() }
     }
 
-    /// Predicted cost/latency of one layer at one reuse factor.
+    /// Predicted cost/latency of one layer at one reuse factor, memoized
+    /// through the shared [`CostCache`] (the solver hot path).
     pub fn predict_layer(&self, spec: &LayerSpec, reuse: usize) -> LayerCost {
+        self.cache
+            .get_or_compute(spec, reuse, || self.predict_layer_uncached(spec, reuse))
+    }
+
+    /// Uncached per-row prediction: one full forest walk per metric.
+    ///
+    /// This is the cost structure the paper's stochastic/SA baselines pay
+    /// on every trial (§VI-C), so the Table IV comparison keeps calling
+    /// it explicitly; everything on the N-TORC path should prefer
+    /// [`predict_layer`](Self::predict_layer).
+    pub fn predict_layer_uncached(&self, spec: &LayerSpec, reuse: usize) -> LayerCost {
         let row = features_of(spec, reuse);
         let get = |m: Metric| {
             self.forests
@@ -116,32 +135,49 @@ impl CostModels {
         }
     }
 
+    /// The shared query cache (exposed for instrumentation and benches).
+    pub fn cache(&self) -> &CostCache {
+        &self.cache
+    }
+
+    /// Handle to one fitted forest (for batched evaluation).
+    pub(crate) fn forest(&self, kind: LayerKind, metric: Metric) -> Option<Arc<Forest>> {
+        self.forests.get(&(kind, metric)).cloned()
+    }
+
     pub fn has_kind(&self, kind: LayerKind) -> bool {
         self.forests.contains_key(&(kind, Metric::Lut))
     }
 
     /// The paper's RF→MIP collapse: per layer, evaluate the forests at
     /// every candidate reuse factor (all other features fixed) to produce
-    /// the per-choice constants of the multiple-choice knapsack.
+    /// the per-choice constants of the multiple-choice knapsack. The grid
+    /// is materialized through [`BatchEvaluator`] — one
+    /// `Forest::predict_batch` per (kind, metric) model — and lands in
+    /// the shared cache.
     pub fn build_problem(
         &self,
         plan: &[LayerSpec],
         latency_budget: f64,
         max_choices_per_layer: usize,
     ) -> DeployProblem {
-        let layers = plan
-            .iter()
-            .map(|spec| {
-                let rfs = candidate_reuse_factors(spec, max_choices_per_layer);
-                rfs.iter()
-                    .map(|&r| {
-                        let c = self.predict_layer(spec, r);
-                        Choice { reuse: r, cost: c.resource_sum(), latency: c.latency }
-                    })
-                    .collect::<Vec<_>>()
-            })
-            .collect();
-        DeployProblem { layers, latency_budget }
+        self.build_problem_parallel(plan, latency_budget, max_choices_per_layer, 1)
+    }
+
+    /// [`build_problem`](Self::build_problem) with grid materialization
+    /// parallelized over `workers` threads of the coordinator pool.
+    pub fn build_problem_parallel(
+        &self,
+        plan: &[LayerSpec],
+        latency_budget: f64,
+        max_choices_per_layer: usize,
+        workers: usize,
+    ) -> DeployProblem {
+        BatchEvaluator::new(self, workers).build_problem(
+            plan,
+            latency_budget,
+            max_choices_per_layer,
+        )
     }
 }
 
@@ -448,10 +484,17 @@ impl Pipeline {
         (trials, datasets)
     }
 
-    /// Phase 4: deploy one network — MIP reuse-factor assignment.
+    /// Phase 4: deploy one network — MIP reuse-factor assignment. The
+    /// candidate grid is batched through the worker pool; the per-layer
+    /// `predict_layer` calls below then hit the primed cache.
     pub fn deploy(&self, models: &CostModels, trial: &Trial) -> Option<DeployedModel> {
         let plan = trial.cfg.plan();
-        let prob = models.build_problem(&plan, self.cfg.latency_budget, self.cfg.max_choices_per_layer);
+        let prob = models.build_problem_parallel(
+            &plan,
+            self.cfg.latency_budget,
+            self.cfg.max_choices_per_layer,
+            self.cfg.workers,
+        );
         let (sol, _stats) = mip::solve_bb(&prob)?;
         let reuse: Vec<usize> = sol
             .pick
@@ -519,6 +562,34 @@ mod tests {
         }
         let mean_lat = lat_r2.iter().sum::<f64>() / lat_r2.len() as f64;
         assert!(mean_lat >= worst_resource - 0.05, "{mean_lat} vs {worst_resource}");
+    }
+
+    #[test]
+    fn predict_layer_is_memoized_and_identical_to_uncached() {
+        let models = tiny_models();
+        let spec = LayerSpec::new(LayerKind::Dense, 48, 16, 1);
+        models.cache().clear();
+        let first = models.predict_layer(&spec, 8);
+        assert_eq!(models.cache().misses(), 1);
+        let second = models.predict_layer(&spec, 8);
+        assert_eq!(models.cache().hits(), 1, "second query must be a cache hit");
+        assert_eq!(first, second);
+        assert_eq!(first, models.predict_layer_uncached(&spec, 8));
+    }
+
+    #[test]
+    fn build_problem_evaluates_each_query_once() {
+        let models = tiny_models();
+        let net = NetConfig::new(64, vec![(3, 8)], vec![8], vec![16, 1]);
+        let plan = net.plan();
+        models.cache().clear();
+        let prob = models.build_problem(&plan, LATENCY_BUDGET_CYCLES, 16);
+        let unique: usize = models.cache().len();
+        assert!(unique > 0);
+        // Rebuilding is pure cache hits: no new entries.
+        let prob2 = models.build_problem(&plan, LATENCY_BUDGET_CYCLES, 16);
+        assert_eq!(models.cache().len(), unique);
+        assert_eq!(prob.layers, prob2.layers);
     }
 
     #[test]

@@ -189,7 +189,11 @@ pub fn split_runs<'a>(
 }
 
 /// Shuffled 70/30 split of windowed data ("Test Dataset 2" protocol).
-pub fn train_val_split(data: &WindowedData, val_frac: f64, rng: &mut Rng) -> (WindowedData, WindowedData) {
+pub fn train_val_split(
+    data: &WindowedData,
+    val_frac: f64,
+    rng: &mut Rng,
+) -> (WindowedData, WindowedData) {
     let n = data.len();
     let mut idx: Vec<usize> = (0..n).collect();
     rng.shuffle(&mut idx);

@@ -1,0 +1,387 @@
+//! Batched, cached cost-model evaluation engine.
+//!
+//! The MIP collapse (paper §IV-B), the stochastic/SA baselines (§VI-C)
+//! and the HPO deployment loop all query the same 15 random forests with
+//! heavily overlapping `(layer, reuse)` rows. Before this module existed
+//! every query walked every tree again; the N-TORC headline ("matches
+//! stochastic search in 1000x less time") only holds when the collapse
+//! itself is cheap. Two pieces fix that:
+//!
+//! * [`CostCache`] — a thread-safe memo table from the hashable layer
+//!   signature `(LayerSpec, reuse)` to its [`LayerCost`]. Every
+//!   [`CostModels::predict_layer`](crate::coordinator::CostModels::predict_layer)
+//!   call consults it, so a solve evaluates each unique query exactly
+//!   once no matter how many times the solver re-asks.
+//! * [`BatchEvaluator`] — pre-materializes the full candidate grid
+//!   (`candidate_reuse_factors` x layers) through **one**
+//!   `Forest::predict_batch` call per (kind, metric) model, fanning the
+//!   per-forest batches out over the coordinator's
+//!   [`parallel_map`](crate::coordinator::parallel_map) worker pool, and
+//!   deposits the results in the shared cache.
+//!
+//! Cached and uncached paths are bit-identical: the batch path builds the
+//! same feature rows (`features_of`) and applies the same `max(0.0)`
+//! clamp per metric, and `predict_batch` runs the same per-row tree walk
+//! as `predict`. `perf_hotpaths` asserts both the single-batch-call
+//! property and `solve_bb` bit-identity.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{candidate_reuse_factors, parallel_map, CostModels};
+use crate::forest::FeatureMatrix;
+use crate::hls::{features_of, LayerCost, Metric};
+use crate::layers::{LayerKind, LayerSpec};
+use crate::mip::{Choice, DeployProblem};
+
+/// Hashable signature of one cost-model query.
+pub type LayerQuery = (LayerSpec, usize);
+
+/// Thread-safe `(LayerSpec, reuse) -> LayerCost` memo table.
+///
+/// Lookups and inserts take a mutex (queries are micro-seconds of forest
+/// work vs nano-seconds of locking, so contention is irrelevant); hit and
+/// miss counters are lock-free.
+#[derive(Default)]
+pub struct CostCache {
+    map: Mutex<HashMap<LayerQuery, LayerCost>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CostCache {
+    pub fn new() -> CostCache {
+        CostCache::default()
+    }
+
+    /// Counting lookup (updates hit/miss statistics).
+    pub fn get(&self, spec: &LayerSpec, reuse: usize) -> Option<LayerCost> {
+        let got = self.peek(spec, reuse);
+        if got.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// Non-counting lookup (used when filtering batch grids).
+    pub fn peek(&self, spec: &LayerSpec, reuse: usize) -> Option<LayerCost> {
+        self.map.lock().unwrap().get(&(*spec, reuse)).copied()
+    }
+
+    pub fn insert(&self, spec: LayerSpec, reuse: usize, cost: LayerCost) {
+        self.map.lock().unwrap().insert((spec, reuse), cost);
+    }
+
+    /// Memoized evaluation: cache hit, or compute-and-store. The compute
+    /// runs outside the lock; racing threads may both compute, but the
+    /// models are deterministic so both store the identical value.
+    pub fn get_or_compute(
+        &self,
+        spec: &LayerSpec,
+        reuse: usize,
+        compute: impl FnOnce() -> LayerCost,
+    ) -> LayerCost {
+        if let Some(c) = self.get(spec, reuse) {
+            return c;
+        }
+        let c = compute();
+        self.insert(*spec, reuse, c);
+        c
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop all entries and zero the statistics.
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Statistics from one grid materialization.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GridStats {
+    /// Unique uncached (layer, reuse) rows materialized.
+    pub rows: usize,
+    /// Distinct (kind, metric) forests evaluated.
+    pub forests: usize,
+    /// `Forest::predict_batch` invocations issued — equals `forests`:
+    /// exactly one batch call per (model, layer-grid).
+    pub batch_calls: usize,
+}
+
+/// Batched grid evaluator over a set of fitted [`CostModels`].
+pub struct BatchEvaluator<'m> {
+    models: &'m CostModels,
+    workers: usize,
+}
+
+impl<'m> BatchEvaluator<'m> {
+    pub fn new(models: &'m CostModels, workers: usize) -> BatchEvaluator<'m> {
+        BatchEvaluator { models, workers: workers.max(1) }
+    }
+
+    /// Pre-materialize every `(layer, reuse)` candidate through one
+    /// `Forest::predict_batch` per (kind, metric) model, in parallel over
+    /// the worker pool. Results land in the models' shared [`CostCache`];
+    /// already-cached rows are skipped.
+    pub fn prime(&self, plan: &[LayerSpec], rfs: &[Vec<usize>]) -> GridStats {
+        assert_eq!(plan.len(), rfs.len(), "one reuse-factor list per layer");
+        // Deduplicate queries and group them by layer kind (each kind has
+        // its own five forests).
+        let mut seen: HashSet<LayerQuery> = HashSet::new();
+        let mut grid: Vec<(LayerKind, Vec<LayerQuery>)> = Vec::new();
+        for (spec, list) in plan.iter().zip(rfs) {
+            for &r in list {
+                if !seen.insert((*spec, r)) {
+                    continue;
+                }
+                if self.models.cache().peek(spec, r).is_some() {
+                    continue;
+                }
+                match grid.iter_mut().find(|(k, _)| *k == spec.kind) {
+                    Some((_, v)) => v.push((*spec, r)),
+                    None => grid.push((spec.kind, vec![(*spec, r)])),
+                }
+            }
+        }
+        // One job per (kind, metric) forest: a single predict_batch over
+        // that kind's full row block.
+        let mut jobs: Vec<Box<dyn FnOnce() -> (LayerKind, Metric, Vec<f64>) + Send>> = Vec::new();
+        let mut rows_total = 0usize;
+        for (kind, queries) in &grid {
+            rows_total += queries.len();
+            let rows: Vec<Vec<f64>> =
+                queries.iter().map(|(s, r)| features_of(s, *r)).collect();
+            let x = Arc::new(FeatureMatrix::from_rows(&rows));
+            for metric in Metric::ALL {
+                if let Some(forest) = self.models.forest(*kind, metric) {
+                    let x = Arc::clone(&x);
+                    let kind = *kind;
+                    jobs.push(Box::new(move || (kind, metric, forest.predict_batch(&x))));
+                }
+            }
+        }
+        let batch_calls = jobs.len();
+        // Independent count of the (kind, metric) models the grid needs,
+        // so the one-batch-call-per-model assertions compare two
+        // separately derived numbers.
+        let forests: usize = grid
+            .iter()
+            .map(|(kind, _)| {
+                Metric::ALL
+                    .iter()
+                    .filter(|&&m| self.models.forest(*kind, m).is_some())
+                    .count()
+            })
+            .sum();
+        let outs = parallel_map(self.workers, jobs);
+        // Reassemble metric columns into per-query LayerCosts, with the
+        // same `max(0.0)` clamp the per-row path applies.
+        let mut columns: HashMap<(LayerKind, Metric), Vec<f64>> = HashMap::new();
+        for (kind, metric, preds) in outs {
+            columns.insert((kind, metric), preds);
+        }
+        for (kind, queries) in &grid {
+            for (i, (spec, r)) in queries.iter().enumerate() {
+                let get = |m: Metric| {
+                    columns
+                        .get(&(*kind, m))
+                        .map(|v| v[i].max(0.0))
+                        .unwrap_or(0.0)
+                };
+                let cost = LayerCost {
+                    lut: get(Metric::Lut),
+                    ff: get(Metric::Ff),
+                    dsp: get(Metric::Dsp),
+                    bram: get(Metric::Bram),
+                    latency: get(Metric::Latency),
+                };
+                self.models.cache().insert(*spec, *r, cost);
+            }
+        }
+        GridStats { rows: rows_total, forests, batch_calls }
+    }
+
+    /// The RF->MIP collapse, batched: materialize the full candidate grid
+    /// in one pass, then assemble the multiple-choice knapsack from cache
+    /// hits.
+    pub fn build_problem(
+        &self,
+        plan: &[LayerSpec],
+        latency_budget: f64,
+        max_choices_per_layer: usize,
+    ) -> DeployProblem {
+        let rfs: Vec<Vec<usize>> = plan
+            .iter()
+            .map(|s| candidate_reuse_factors(s, max_choices_per_layer))
+            .collect();
+        self.prime(plan, &rfs);
+        let layers = plan
+            .iter()
+            .zip(&rfs)
+            .map(|(spec, list)| {
+                list.iter()
+                    .map(|&r| {
+                        let c = self.models.predict_layer(spec, r);
+                        Choice { reuse: r, cost: c.resource_sum(), latency: c.latency }
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        DeployProblem { layers, latency_budget }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Pipeline, PipelineConfig};
+    use crate::layers::NetConfig;
+
+    fn tiny_models() -> CostModels {
+        let pipe = Pipeline::new(PipelineConfig::smoke());
+        let db = pipe.synth_database();
+        pipe.fit_models(&db)
+    }
+
+    fn tiny_plan() -> Vec<LayerSpec> {
+        NetConfig::new(64, vec![(3, 8)], vec![8], vec![16, 1]).plan()
+    }
+
+    #[test]
+    fn cache_memoizes_and_counts() {
+        let cache = CostCache::new();
+        let spec = LayerSpec::new(LayerKind::Dense, 8, 4, 1);
+        assert!(cache.get(&spec, 2).is_none());
+        assert_eq!(cache.misses(), 1);
+        let mut computes = 0;
+        let c1 = cache.get_or_compute(&spec, 2, || {
+            computes += 1;
+            LayerCost { lut: 1.0, ff: 2.0, dsp: 3.0, bram: 4.0, latency: 5.0 }
+        });
+        let c2 = cache.get_or_compute(&spec, 2, || {
+            computes += 1;
+            LayerCost::ZERO
+        });
+        assert_eq!(computes, 1, "second query must hit the cache");
+        assert_eq!(c1, c2);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.hits(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn batched_grid_is_bit_identical_to_per_row() {
+        let models = tiny_models();
+        let plan = tiny_plan();
+        let rfs: Vec<Vec<usize>> =
+            plan.iter().map(|s| candidate_reuse_factors(s, 8)).collect();
+        // Per-row reference, before anything is cached.
+        let reference: Vec<Vec<LayerCost>> = plan
+            .iter()
+            .zip(&rfs)
+            .map(|(s, list)| {
+                list.iter().map(|&r| models.predict_layer_uncached(s, r)).collect()
+            })
+            .collect();
+        models.cache().clear();
+        let ev = BatchEvaluator::new(&models, 1);
+        let stats = ev.prime(&plan, &rfs);
+        // One batch call per (kind, metric) model present in the plan.
+        let kinds: HashSet<LayerKind> = plan.iter().map(|s| s.kind).collect();
+        assert_eq!(stats.batch_calls, kinds.len() * Metric::ALL.len());
+        assert_eq!(stats.forests, stats.batch_calls);
+        assert_eq!(stats.rows, models.cache().len());
+        for (i, spec) in plan.iter().enumerate() {
+            for (k, &r) in rfs[i].iter().enumerate() {
+                let cached = models.predict_layer(spec, r);
+                assert_eq!(cached, reference[i][k], "layer {i} reuse {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn prime_skips_cached_rows_and_reprime_is_free() {
+        let models = tiny_models();
+        let plan = tiny_plan();
+        let rfs: Vec<Vec<usize>> =
+            plan.iter().map(|s| candidate_reuse_factors(s, 6)).collect();
+        models.cache().clear();
+        let ev = BatchEvaluator::new(&models, 1);
+        let first = ev.prime(&plan, &rfs);
+        assert!(first.rows > 0);
+        let second = ev.prime(&plan, &rfs);
+        assert_eq!(second, GridStats::default(), "everything already cached");
+    }
+
+    #[test]
+    fn parallel_prime_matches_uncached_per_row() {
+        let models = tiny_models();
+        let plan = tiny_plan();
+        let rfs: Vec<Vec<usize>> =
+            plan.iter().map(|s| candidate_reuse_factors(s, 8)).collect();
+        models.cache().clear();
+        BatchEvaluator::new(&models, 4).prime(&plan, &rfs);
+        for (spec, list) in plan.iter().zip(&rfs) {
+            for &r in list {
+                assert_eq!(
+                    models.cache().peek(spec, r),
+                    Some(models.predict_layer_uncached(spec, r)),
+                    "worker count must not change results"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn build_problem_matches_unbatched_and_solves_identically() {
+        let models = tiny_models();
+        let plan = tiny_plan();
+        let cap = 8;
+        let rfs: Vec<Vec<usize>> =
+            plan.iter().map(|s| candidate_reuse_factors(s, cap)).collect();
+        let unbatched = DeployProblem {
+            layers: plan
+                .iter()
+                .zip(&rfs)
+                .map(|(spec, list)| {
+                    list.iter()
+                        .map(|&r| {
+                            let c = models.predict_layer_uncached(spec, r);
+                            Choice { reuse: r, cost: c.resource_sum(), latency: c.latency }
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .collect(),
+            latency_budget: 50_000.0,
+        };
+        models.cache().clear();
+        let batched =
+            BatchEvaluator::new(&models, 2).build_problem(&plan, 50_000.0, cap);
+        assert_eq!(batched.layers, unbatched.layers);
+        let a = crate::mip::solve_bb(&batched).map(|(s, _)| s);
+        let b = crate::mip::solve_bb(&unbatched).map(|(s, _)| s);
+        assert_eq!(a, b, "solve_bb must be bit-identical with and without the cache");
+    }
+}

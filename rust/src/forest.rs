@@ -12,7 +12,35 @@
 //! ensemble degenerates to a constant per candidate reuse value, which is
 //! exactly what Gurobi exploits to linearize the model.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::rng::Rng;
+
+// Process-wide counters over the *top-level* prediction entry points.
+// They let the perf benches prove batching claims ("exactly one
+// predict_batch per model per grid, zero per-row predicts"); counts are
+// monotone and racy-safe, so concurrent tests may only ever observe
+// larger deltas than their own calls.
+static PREDICT_CALLS: AtomicU64 = AtomicU64::new(0);
+static PREDICT_BATCH_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Total `Forest::predict` invocations since start (or the last reset).
+pub fn predict_calls() -> u64 {
+    PREDICT_CALLS.load(Ordering::Relaxed)
+}
+
+/// Total `Forest::predict_batch` invocations since start (or the last
+/// reset).
+pub fn predict_batch_calls() -> u64 {
+    PREDICT_BATCH_CALLS.load(Ordering::Relaxed)
+}
+
+/// Zero both counters (single-threaded benches only — concurrent tests
+/// observing the globals should assert on deltas, not absolutes).
+pub fn reset_prediction_counters() {
+    PREDICT_CALLS.store(0, Ordering::Relaxed);
+    PREDICT_BATCH_CALLS.store(0, Ordering::Relaxed);
+}
 
 /// Flat matrix of feature rows.
 #[derive(Clone, Debug)]
@@ -131,10 +159,7 @@ impl Tree {
         };
         let feats = rng.sample_indices(n_feat, k);
         let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, score)
-        let parent_sse = {
-            let s: f64 = idx.iter().map(|&i| (y[i] - mean) * (y[i] - mean)).sum();
-            s
-        };
+        let parent_sse: f64 = idx.iter().map(|&i| (y[i] - mean) * (y[i] - mean)).sum();
         let mut vals: Vec<(f64, f64)> = Vec::with_capacity(idx.len());
         for &f in &feats {
             vals.clear();
@@ -254,12 +279,24 @@ impl Forest {
     }
 
     pub fn predict(&self, row: &[f64]) -> f64 {
+        PREDICT_CALLS.fetch_add(1, Ordering::Relaxed);
+        self.predict_row(row)
+    }
+
+    /// Shared per-row ensemble walk (not counted: the public entry points
+    /// above and below do the counting).
+    #[inline]
+    fn predict_row(&self, row: &[f64]) -> f64 {
         let s: f64 = self.trees.iter().map(|t| t.predict(row)).sum();
         s / self.trees.len() as f64
     }
 
+    /// Predict every row of `x` in one call. Counted as a single batch
+    /// invocation — the batched evaluation engine (`crate::eval`) relies
+    /// on issuing exactly one of these per (model, grid).
     pub fn predict_batch(&self, x: &FeatureMatrix) -> Vec<f64> {
-        (0..x.rows).map(|i| self.predict(x.row(i))).collect()
+        PREDICT_BATCH_CALLS.fetch_add(1, Ordering::Relaxed);
+        (0..x.rows).map(|i| self.predict_row(x.row(i))).collect()
     }
 
     /// The paper's MIP collapse: fix all features, vary only `var_feature`
@@ -270,7 +307,7 @@ impl Forest {
             .iter()
             .map(|&v| {
                 row[var_feature] = v;
-                self.predict(&row)
+                self.predict_row(&row)
             })
             .collect()
     }
@@ -363,7 +400,8 @@ mod tests {
     fn forest_beats_mean_predictor() {
         let (x, y) = xor_like_data(500, 3);
         let (train, test) = train_test_split(x.rows, 0.2, 7);
-        let xt = FeatureMatrix::from_rows(&train.iter().map(|&i| x.row(i).to_vec()).collect::<Vec<_>>());
+        let xt =
+            FeatureMatrix::from_rows(&train.iter().map(|&i| x.row(i).to_vec()).collect::<Vec<_>>());
         let yt: Vec<f64> = train.iter().map(|&i| y[i]).collect();
         let forest = Forest::fit(&xt, &yt, ForestConfig::default());
         let pred: Vec<f64> = test.iter().map(|&i| forest.predict(x.row(i))).collect();
@@ -402,6 +440,22 @@ mod tests {
         for (i, &v) in vals.iter().enumerate() {
             assert_eq!(consts[i], forest.predict(&[2.0, v]));
         }
+    }
+
+    #[test]
+    fn predict_batch_matches_per_row_and_counts_once() {
+        let (x, y) = xor_like_data(200, 21);
+        let forest = Forest::fit(&x, &y, ForestConfig { n_trees: 8, ..Default::default() });
+        let before_batch = predict_batch_calls();
+        let before_row = predict_calls();
+        let batched = forest.predict_batch(&x);
+        // One batch call, zero per-row predicts charged by the batch path
+        // (counters are global and monotone, so other tests can only push
+        // the deltas higher — assert with >= / exact where safe).
+        assert!(predict_batch_calls() >= before_batch + 1);
+        let rows: Vec<f64> = (0..x.rows).map(|i| forest.predict(x.row(i))).collect();
+        assert!(predict_calls() >= before_row + x.rows as u64);
+        assert_eq!(batched, rows, "batched and per-row predictions must be bit-identical");
     }
 
     #[test]

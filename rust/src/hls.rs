@@ -304,7 +304,11 @@ impl HlsSim {
     }
 
     /// Synthesize a whole network: per-layer costs + totals.
-    pub fn synth_network(&self, plan: &[LayerSpec], reuse: &[usize]) -> (Vec<LayerCost>, LayerCost) {
+    pub fn synth_network(
+        &self,
+        plan: &[LayerSpec],
+        reuse: &[usize],
+    ) -> (Vec<LayerCost>, LayerCost) {
         assert_eq!(plan.len(), reuse.len());
         let costs: Vec<LayerCost> = plan
             .iter()
@@ -423,45 +427,46 @@ impl SweepConfig {
 /// Returns deduplicated (spec, reuse) samples — the paper likewise averages
 /// all samples having identical features into a single observation.
 pub fn generate_database(sim: &HlsSim, sweep: &SweepConfig) -> Vec<DbSample> {
-    let mut seen = std::collections::HashSet::new();
-    let mut out = Vec::new();
+    // Enumerate the valid configurations first (the permutation nest is
+    // eight levels deep), then synthesize their deduplicated layers.
+    let mut configs: Vec<crate::layers::NetConfig> = Vec::new();
     for &inputs in &sweep.feature_inputs {
         for &n_conv in &sweep.conv_layers {
             for &ch in &sweep.conv_channels {
                 for &kernel in &sweep.conv_kernels {
-                for &n_lstm in &sweep.lstm_layers {
-                    for &units in &sweep.lstm_units {
-                        for &n_dense in &sweep.dense_layers {
-                            for &neurons in &sweep.dense_neurons {
-                                let cfg = crate::layers::NetConfig {
-                                    window: inputs,
-                                    conv: vec![(kernel, ch); n_conv],
-                                    lstm: vec![units; n_lstm],
-                                    dense: {
-                                        let mut d = vec![neurons; n_dense];
-                                        d.push(1);
-                                        d
-                                    },
-                                };
-                                if !cfg.is_valid() {
-                                    continue;
-                                }
-                                for spec in cfg.plan() {
-                                    for &raw in &sweep.raw_reuse {
-                                        let r = correct_reuse(&spec, raw);
-                                        if seen.insert((spec, r)) {
-                                            out.push(DbSample {
-                                                spec,
-                                                reuse: r,
-                                                cost: sim.synth_layer(&spec, r),
-                                            });
-                                        }
+                    for &n_lstm in &sweep.lstm_layers {
+                        for &units in &sweep.lstm_units {
+                            for &n_dense in &sweep.dense_layers {
+                                for &neurons in &sweep.dense_neurons {
+                                    let cfg = crate::layers::NetConfig {
+                                        window: inputs,
+                                        conv: vec![(kernel, ch); n_conv],
+                                        lstm: vec![units; n_lstm],
+                                        dense: {
+                                            let mut d = vec![neurons; n_dense];
+                                            d.push(1);
+                                            d
+                                        },
+                                    };
+                                    if cfg.is_valid() {
+                                        configs.push(cfg);
                                     }
                                 }
                             }
                         }
                     }
                 }
+            }
+        }
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for cfg in configs {
+        for spec in cfg.plan() {
+            for &raw in &sweep.raw_reuse {
+                let r = correct_reuse(&spec, raw);
+                if seen.insert((spec, r)) {
+                    out.push(DbSample { spec, reuse: r, cost: sim.synth_layer(&spec, r) });
                 }
             }
         }

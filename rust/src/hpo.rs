@@ -496,15 +496,19 @@ fn run_nsga2(cfg: &HpoConfig, mut evaluate: impl FnMut(&NetConfig, u64) -> f64) 
     let mut rng = Rng::new(cfg.seed);
     let pop_size = (cfg.n_init.max(8)).min(cfg.n_trials);
     let mut all: Vec<Trial> = Vec::new();
-    let mut seen = std::collections::HashSet::new();
+    // genome -> trial index: duplicate offspring are O(1) lookups instead
+    // of a linear rescan of every evaluated trial (the HPO loop's own
+    // each-unique-query-evaluated-once memoization).
+    let mut index: std::collections::HashMap<Vec<usize>, usize> =
+        std::collections::HashMap::new();
     let mut eval = |genome: Vec<usize>, all: &mut Vec<Trial>, rng: &mut Rng| -> usize {
-        if let Some(pos) = all.iter().position(|t| t.genome == genome) {
+        if let Some(&pos) = index.get(&genome) {
             return pos;
         }
-        seen.insert(genome.clone());
         let net = cfg.space.decode(&genome);
         let rmse = evaluate(&net, rng.next_u64());
         let workload = net.workload_multiplies() as f64;
+        index.insert(genome.clone(), all.len());
         all.push(Trial { genome, cfg: net, rmse, workload });
         all.len() - 1
     };

@@ -287,7 +287,8 @@ mod tests {
 
     #[test]
     fn invalid_configs_rejected() {
-        assert!(!NetConfig { window: 8, conv: vec![(9, 4)], lstm: vec![], dense: vec![1] }.is_valid());
+        let big_kernel = NetConfig { window: 8, conv: vec![(9, 4)], lstm: vec![], dense: vec![1] };
+        assert!(!big_kernel.is_valid());
         assert!(!NetConfig { window: 8, conv: vec![], lstm: vec![], dense: vec![] }.is_valid());
         assert!(!NetConfig { window: 8, conv: vec![], lstm: vec![], dense: vec![4] }.is_valid());
     }

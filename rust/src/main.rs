@@ -88,7 +88,13 @@ fn run(raw: &[String]) -> Result<()> {
             let cfg = pipeline_config(&args, Preset::Full)?;
             let (_pipe, models) = report::standard_models(cfg);
             let (h, rows) = report::table1_rows(&models);
-            emit(&args, "table1_model_accuracy", "Table I — cost/latency model validation", &h, &rows);
+            emit(
+                &args,
+                "table1_model_accuracy",
+                "Table I — cost/latency model validation",
+                &h,
+                &rows,
+            );
         }
         "table2" => {
             args.check_known(COMMON_FLAGS)?;
@@ -135,7 +141,13 @@ fn run(raw: &[String]) -> Result<()> {
             let out = report::fig5_run(&pipe, &sim);
             let deployed = report::deploy_pareto(&pipe, &models, &out.trials);
             let (h, rows) = report::table3_rows(&deployed);
-            emit(&args, "table3_deployment", "Table III — deployed Pareto networks (200 µs budget)", &h, &rows);
+            emit(
+                &args,
+                "table3_deployment",
+                "Table III — deployed Pareto networks (200 µs budget)",
+                &h,
+                &rows,
+            );
         }
         "table4" | "solve-compare" => {
             args.check_known(&[COMMON_FLAGS, &["trials"]].concat())?;
@@ -170,7 +182,12 @@ fn run(raw: &[String]) -> Result<()> {
                 ),
                 (
                     "model1_like",
-                    ntorc::layers::NetConfig::new(64, vec![(3, 8), (3, 8)], vec![], vec![32, 16, 1]),
+                    ntorc::layers::NetConfig::new(
+                        64,
+                        vec![(3, 8), (3, 8)],
+                        vec![],
+                        vec![32, 16, 1],
+                    ),
                 ),
             ];
             let named: Vec<(&str, ntorc::layers::NetConfig)> =
@@ -180,7 +197,13 @@ fn run(raw: &[String]) -> Result<()> {
                 println!("{name}: trace RMSE {rmse:.4}");
             }
             let headers = vec!["t_s", "vibration", "roller_true", "pred_model2", "pred_model1"];
-            emit(&args, "fig7_trace", "Fig 7 — predicted vs true roller trace", &headers, &out.rows);
+            emit(
+                &args,
+                "fig7_trace",
+                "Fig 7 — predicted vs true roller trace",
+                &headers,
+                &out.rows,
+            );
         }
         "e2e" => {
             args.check_known(COMMON_FLAGS)?;
@@ -217,7 +240,8 @@ fn run(raw: &[String]) -> Result<()> {
             let va = prepared.val.take(200);
             let mut preds = Vec::new();
             for i in 0..va.len() {
-                let x = ntorc::tensor::Tensor::from_vec(&[1, model.meta.window], va.x.row(i).to_vec());
+                let x =
+                    ntorc::tensor::Tensor::from_vec(&[1, model.meta.window], va.x.row(i).to_vec());
                 preds.push(model.predict_one(&state, &x)?);
             }
             println!("val RMSE (PJRT path): {:.4}", ntorc::data::rmse(&preds, &va.y));
@@ -280,7 +304,11 @@ fn run(raw: &[String]) -> Result<()> {
                     row
                 })
                 .collect();
-            report::write_csv("dropbear_modes", &["roller_mm", "f1_hz", "f2_hz", "f3_hz"], &freq_rows)?;
+            report::write_csv(
+                "dropbear_modes",
+                &["roller_mm", "f1_hz", "f2_hz", "f3_hz"],
+                &freq_rows,
+            )?;
             println!("[csv] results/dropbear_modes.csv ({} rows)", freq_rows.len());
         }
         "init-config" => {

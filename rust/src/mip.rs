@@ -21,7 +21,7 @@
 use std::collections::HashMap;
 
 /// One reuse-factor option for a layer.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Choice {
     pub reuse: usize,
     pub cost: f64,
@@ -384,6 +384,14 @@ pub fn solve_bb(prob: &DeployProblem) -> Option<(Solution, BbStats)> {
         .collect();
     let mut best = pruned.evaluate(&greedy);
     let mut stats = BbStats::default();
+    // Per-layer minimum latencies, memoized once per solve: the branch
+    // feasibility pre-check below runs at every node and used to rescan
+    // every choice list (O(layers x choices) per branch).
+    let min_lat: Vec<f64> = pruned
+        .layers
+        .iter()
+        .map(|l| l.iter().map(|c| c.latency).fold(f64::INFINITY, f64::min))
+        .collect();
 
     fn var_values(
         pruned: &DeployProblem,
@@ -409,6 +417,7 @@ pub fn solve_bb(prob: &DeployProblem) -> Option<(Solution, BbStats)> {
 
     fn bb(
         pruned: &DeployProblem,
+        min_lat: &[f64],
         fixed: &mut Vec<Option<usize>>,
         best: &mut Solution,
         stats: &mut BbStats,
@@ -440,10 +449,8 @@ pub fn solve_bb(prob: &DeployProblem) -> Option<(Solution, BbStats)> {
             }
             let maxv = row.iter().cloned().fold(0.0, f64::max);
             let fracness = (maxv - 1.0).abs();
-            if maxv < 1.0 - 1e-6 {
-                if frac_layer.map_or(true, |(_, f)| fracness > f) {
-                    frac_layer = Some((i, fracness));
-                }
+            if maxv < 1.0 - 1e-6 && frac_layer.map_or(true, |(_, f)| fracness > f) {
+                frac_layer = Some((i, fracness));
             }
         }
         match frac_layer {
@@ -469,21 +476,21 @@ pub fn solve_bb(prob: &DeployProblem) -> Option<(Solution, BbStats)> {
                 order.sort_by(|&a, &b| vals[i][b].partial_cmp(&vals[i][a]).unwrap());
                 for j in order {
                     fixed[i] = Some(j);
-                    // Feasibility pre-check on min-latency completion.
+                    // Feasibility pre-check on min-latency completion
+                    // (per-layer minima come from the memoized table).
                     let lat_fixed: f64 = fixed
                         .iter()
                         .enumerate()
                         .filter_map(|(k, f)| f.map(|jj| pruned.layers[k][jj].latency))
                         .sum();
-                    let lat_min_rest: f64 = pruned
-                        .layers
+                    let lat_min_rest: f64 = min_lat
                         .iter()
                         .enumerate()
                         .filter(|(k, _)| fixed[*k].is_none())
-                        .map(|(_, l)| l.iter().map(|c| c.latency).fold(f64::INFINITY, f64::min))
+                        .map(|(_, &m)| m)
                         .sum();
                     if lat_fixed + lat_min_rest <= pruned.latency_budget + 1e-9 {
-                        bb(pruned, fixed, best, stats);
+                        bb(pruned, min_lat, fixed, best, stats);
                     }
                     fixed[i] = None;
                 }
@@ -492,7 +499,7 @@ pub fn solve_bb(prob: &DeployProblem) -> Option<(Solution, BbStats)> {
     }
 
     let mut fixed: Vec<Option<usize>> = vec![None; pruned.layers.len()];
-    bb(&pruned, &mut fixed, &mut best, &mut stats);
+    bb(&pruned, &min_lat, &mut fixed, &mut best, &mut stats);
 
     // Map picks back to original indices.
     let pick: Vec<usize> = best

@@ -266,7 +266,8 @@ pub fn lstm_bwd(
         // dc = dh * o * (1 - tanh(c)^2) + dc_next
         let mut dc = dc_next.clone();
         for idx in 0..b * u {
-            dc.data[idx] += dh.data[idx] * st.o.data[idx] * (1.0 - tanh_c.data[idx] * tanh_c.data[idx]);
+            dc.data[idx] +=
+                dh.data[idx] * st.o.data[idx] * (1.0 - tanh_c.data[idx] * tanh_c.data[idx]);
         }
         // Gate gradients (pre-activation z).
         let mut dz = Tensor::zeros(&[b, 4 * u]);

@@ -150,9 +150,12 @@ pub const WU_MAPE: [(&str, f64, f64, f64); 4] = [
 pub fn table2_rows(models: &CostModels) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let headers = vec![
         "metric",
-        "best_wu", "best_ours",
-        "median_wu", "median_ours",
-        "worst_wu", "worst_ours",
+        "best_wu",
+        "best_ours",
+        "median_wu",
+        "median_ours",
+        "worst_wu",
+        "worst_ours",
     ];
     let ours = |metric: Metric| -> (f64, f64, f64) {
         let mut mapes: Vec<f64> = models
@@ -176,14 +179,23 @@ pub fn table2_rows(models: &CostModels) -> (Vec<&'static str>, Vec<Vec<String>>)
         let (b, m, w) = ours(metric);
         rows.push(vec![
             name.to_string(),
-            f(wb, 2), f(b, 2),
-            f(wm, 2), f(m, 2),
-            f(ww, 2), f(w, 2),
+            f(wb, 2),
+            f(b, 2),
+            f(wm, 2),
+            f(m, 2),
+            f(ww, 2),
+            f(w, 2),
         ]);
     }
     let (b, m, w) = ours(Metric::Bram);
     rows.push(vec![
-        "BRAM".into(), "N/A".into(), f(b, 2), "N/A".into(), f(m, 2), "N/A".into(), f(w, 2),
+        "BRAM".into(),
+        "N/A".into(),
+        f(b, 2),
+        "N/A".into(),
+        f(m, 2),
+        "N/A".into(),
+        f(w, 2),
     ]);
     (headers, rows)
 }
@@ -228,9 +240,12 @@ pub fn fig8_rows(pipe: &Pipeline, models: &CostModels) -> (Vec<&'static str>, Ve
                     kind.name().to_string(),
                     size.to_string(),
                     r.to_string(),
-                    f(truth.lut, 0), f(pred.lut, 0),
-                    f(truth.latency, 0), f(pred.latency, 0),
-                    f(truth.dsp, 0), f(pred.dsp, 0),
+                    f(truth.lut, 0),
+                    f(pred.lut, 0),
+                    f(truth.latency, 0),
+                    f(pred.latency, 0),
+                    f(truth.dsp, 0),
+                    f(pred.dsp, 0),
                 ]);
             }
         }
@@ -472,11 +487,14 @@ pub fn table4_run(
     let mut rows = Vec::new();
     // Per-trial oracle: full forest inference for each layer (what the
     // paper's baselines pay), returning (LUT+FF+BRAM+DSP, latency cycles).
+    // Deliberately the *uncached* path: memoizing it (`predict_layer` /
+    // `search::TabulatedOracle`) would erase the §VI-C cost structure the
+    // 1000x search-time comparison is about.
     let mut oracle = |pick: &[usize]| -> (f64, f64) {
         let mut cost = 0.0;
         let mut lat = 0.0;
         for (i, &j) in pick.iter().enumerate() {
-            let c = models.predict_layer(&plan[i], full_rfs[i][j]);
+            let c = models.predict_layer_uncached(&plan[i], full_rfs[i][j]);
             cost += c.resource_sum();
             lat += c.latency;
         }
@@ -488,7 +506,7 @@ pub fn table4_run(
         let mut dsp = 0.0;
         let mut lat = 0.0;
         for (i, &j) in pick.iter().enumerate() {
-            let c = models.predict_layer(&plan[i], full_rfs[i][j]);
+            let c = models.predict_layer_uncached(&plan[i], full_rfs[i][j]);
             lut += c.lut;
             dsp += c.dsp;
             lat += c.latency;

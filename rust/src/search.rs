@@ -28,6 +28,58 @@ impl<F: FnMut(&[usize]) -> (f64, f64)> CostOracle for F {
     }
 }
 
+/// Memoizing oracle over a **per-choice** cost function: each
+/// `(layer, choice)` pays model inference exactly once, after which every
+/// trial is an additive table lookup — the same
+/// each-unique-query-evaluated-once contract the MIP collapse gets from
+/// [`crate::eval::CostCache`]. Wrap the cached
+/// `CostModels::predict_layer` path in one of these to run the baselines
+/// at N-TORC's query cost instead of the paper's per-trial cost.
+pub struct TabulatedOracle<F> {
+    per_choice: F,
+    table: Vec<Vec<Option<(f64, f64)>>>,
+}
+
+impl<F: FnMut(usize, usize) -> (f64, f64)> TabulatedOracle<F> {
+    /// `per_choice(layer, choice)` must return that choice's
+    /// (resource cost, latency) contribution.
+    pub fn new(choices_per_layer: &[usize], per_choice: F) -> TabulatedOracle<F> {
+        TabulatedOracle {
+            per_choice,
+            table: choices_per_layer.iter().map(|&n| vec![None; n]).collect(),
+        }
+    }
+
+    /// How many unique (layer, choice) cells have been evaluated so far —
+    /// bounded by the grid size, however many trials ran.
+    pub fn unique_evaluations(&self) -> usize {
+        self.table
+            .iter()
+            .map(|l| l.iter().filter(|e| e.is_some()).count())
+            .sum()
+    }
+}
+
+impl<F: FnMut(usize, usize) -> (f64, f64)> CostOracle for TabulatedOracle<F> {
+    fn evaluate(&mut self, pick: &[usize]) -> (f64, f64) {
+        let mut cost = 0.0;
+        let mut latency = 0.0;
+        for (i, &j) in pick.iter().enumerate() {
+            let (c, l) = match self.table[i][j] {
+                Some(v) => v,
+                None => {
+                    let v = (self.per_choice)(i, j);
+                    self.table[i][j] = Some(v);
+                    v
+                }
+            };
+            cost += c;
+            latency += l;
+        }
+        (cost, latency)
+    }
+}
+
 /// Search outcome with timing (for Table IV).
 #[derive(Clone, Debug)]
 pub struct SearchResult {
@@ -316,6 +368,73 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn tabulated_oracle_matches_per_trial_oracle() {
+        let prob = toy();
+        let choices: Vec<usize> = prob.layers.iter().map(|l| l.len()).collect();
+        let mut per_trial_calls = 0usize;
+        let mut direct = |pick: &[usize]| {
+            per_trial_calls += 1;
+            let s = prob.evaluate(pick);
+            (s.cost, s.latency)
+        };
+        let res_direct =
+            stochastic_search_oracle(&choices, 35.0, &mut direct, 300, 5);
+        let mut tab = TabulatedOracle::new(&choices, |i, j| {
+            (prob.layers[i][j].cost, prob.layers[i][j].latency)
+        });
+        let res_tab = stochastic_search_oracle(&choices, 35.0, &mut tab, 300, 5);
+        // Identical RNG stream + identical costs => identical outcome.
+        let a = res_direct.best.expect("feasible");
+        let b = res_tab.best.expect("feasible");
+        assert_eq!(a.pick, b.pick);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.latency, b.latency);
+        // The cached oracle never exceeds the grid size, while the
+        // per-trial oracle paid once per trial.
+        assert_eq!(per_trial_calls, 300);
+        assert!(tab.unique_evaluations() <= choices.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn tabulated_oracle_sums_match_problem_evaluate() {
+        let prob = toy();
+        let choices: Vec<usize> = prob.layers.iter().map(|l| l.len()).collect();
+        let mut tab = TabulatedOracle::new(&choices, |i, j| {
+            (prob.layers[i][j].cost, prob.layers[i][j].latency)
+        });
+        let mut rng = crate::rng::Rng::new(9);
+        for _ in 0..50 {
+            let pick: Vec<usize> =
+                (0..choices.len()).map(|i| rng.below(choices[i])).collect();
+            let (c, l) = tab.evaluate(&pick);
+            let sol = prob.evaluate(&pick);
+            assert_eq!(c, sol.cost);
+            assert_eq!(l, sol.latency);
+        }
+    }
+
+    #[test]
+    fn sa_identical_through_tabulated_oracle() {
+        let prob = toy();
+        let choices: Vec<usize> = prob.layers.iter().map(|l| l.len()).collect();
+        let mut direct = |pick: &[usize]| {
+            let s = prob.evaluate(pick);
+            (s.cost, s.latency)
+        };
+        let a =
+            simulated_annealing_oracle(&choices, 35.0, &mut direct, 500, SaConfig::default(), 7);
+        let mut tab = TabulatedOracle::new(&choices, |i, j| {
+            (prob.layers[i][j].cost, prob.layers[i][j].latency)
+        });
+        let b = simulated_annealing_oracle(&choices, 35.0, &mut tab, 500, SaConfig::default(), 7);
+        assert_eq!(
+            a.best.map(|s| (s.pick, s.cost)),
+            b.best.map(|s| (s.pick, s.cost)),
+            "memoization must not change the search trajectory"
+        );
     }
 
     #[test]

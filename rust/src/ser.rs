@@ -444,6 +444,114 @@ fn parse_toml_value(v: &str, lineno: usize) -> Result<Json> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit::{prop_check, GenCtx};
+
+    /// Characters that exercise every branch of the string escaper:
+    /// quotes, backslashes, the named escapes, raw control characters
+    /// (\u{xxxx} path) and multi-byte UTF-8.
+    fn arbitrary_string(g: &mut GenCtx) -> String {
+        const POOL: [&str; 16] = [
+            "\"", "\\", "\n", "\t", "\r", "\u{8}", "\u{c}", "\u{1}", "\u{1f}", "µ", "–", "漢",
+            "a", "Z0", " ", "/",
+        ];
+        let len = g.int(0, 12);
+        (0..len).map(|_| *g.choice(&POOL)).collect()
+    }
+
+    /// Random JSON value; numbers use f64s whose Display form
+    /// round-trips exactly (Rust prints shortest round-trip decimals).
+    fn arbitrary_json(g: &mut GenCtx, depth: usize) -> Json {
+        let top = if depth == 0 { 3 } else { 5 };
+        match g.int(0, top) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool(0.5)),
+            2 => Json::Num(g.f64(-1e9, 1e9)),
+            3 => Json::Str(arbitrary_string(g)),
+            4 => {
+                let n = g.int(0, 4);
+                Json::Arr((0..n).map(|_| arbitrary_json(g, depth - 1)).collect())
+            }
+            _ => {
+                let n = g.int(0, 4);
+                Json::Obj(
+                    (0..n)
+                        .map(|_| (arbitrary_string(g), arbitrary_json(g, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    #[test]
+    fn property_json_round_trips() {
+        prop_check("json-round-trip", 60, |g| {
+            let j = arbitrary_json(g, 3);
+            let compact = parse_json(&j.to_string())
+                .map_err(|e| format!("compact parse failed: {e:#} on {j:?}"))?;
+            if compact != j {
+                return Err(format!("compact round-trip changed value: {j:?}"));
+            }
+            let pretty = parse_json(&j.to_pretty())
+                .map_err(|e| format!("pretty parse failed: {e:#} on {j:?}"))?;
+            if pretty != j {
+                return Err(format!("pretty round-trip changed value: {j:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_escaped_strings_round_trip() {
+        prop_check("json-escaped-strings", 80, |g| {
+            let s = arbitrary_string(g);
+            let j = Json::Str(s.clone());
+            let text = j.to_string();
+            // Everything below 0x20 must have been escaped on the wire.
+            if text.chars().any(|c| (c as u32) < 0x20) {
+                return Err(format!("unescaped control char in {text:?}"));
+            }
+            let back = parse_json(&text).map_err(|e| format!("parse {text:?}: {e:#}"))?;
+            if back.as_str() != Some(s.as_str()) {
+                return Err(format!("string changed: {s:?} -> {back:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_nested_arrays_round_trip() {
+        prop_check("json-nested-arrays", 40, |g| {
+            // Arrays of arrays of numbers, ragged on purpose.
+            let outer = g.int(0, 5);
+            let j = Json::Arr(
+                (0..outer)
+                    .map(|_| {
+                        let inner = g.int(0, 5);
+                        Json::Arr((0..inner).map(|_| Json::Num(g.f64(-1e6, 1e6))).collect())
+                    })
+                    .collect(),
+            );
+            let back = parse_json(&j.to_string()).map_err(|e| format!("{e:#}"))?;
+            if back != j {
+                return Err(format!("nested arrays changed: {j:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn missing_key_error_path() {
+        let j = Json::obj(vec![("present", Json::num(1.0))]);
+        assert_eq!(j.get("present").unwrap().as_f64(), Some(1.0));
+        let err = j.get("absent").unwrap_err();
+        assert!(
+            err.to_string().contains("missing JSON key 'absent'"),
+            "unexpected error: {err:#}"
+        );
+        // Non-object values also take the missing-key path.
+        assert!(Json::Num(3.0).get("x").is_err());
+        assert!(Json::Arr(vec![]).get("x").is_err());
+    }
 
     #[test]
     fn round_trip_simple() {
