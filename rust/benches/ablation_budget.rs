@@ -3,6 +3,12 @@
 //! (200 µs from DROPBEAR's 5 kHz rate). How does the minimum resource
 //! cost move as the budget tightens — where is the feasibility cliff?
 //!
+//! Since the frontier engine landed, the whole budget curve comes from
+//! ONE dominance-pruned sweep per network (`ParetoFrontier::build` +
+//! `FrontierIndex::sweep`) instead of a fresh collapse + B&B per budget;
+//! a `solve_bb` cross-check at the paper's 50k-cycle point keeps the
+//! fast path honest.
+//!
 //! Claims checked: cost is monotone non-increasing in the budget (more
 //! time can never cost more); below the sum of minimum layer latencies
 //! the problem is infeasible; the curve flattens once every layer can run
@@ -10,6 +16,7 @@
 
 use ntorc::bench::Bencher;
 use ntorc::coordinator::PipelineConfig;
+use ntorc::frontier::ParetoFrontier;
 use ntorc::report;
 
 fn main() {
@@ -17,20 +24,29 @@ fn main() {
     let (pipe, models) = report::standard_models(PipelineConfig::default());
 
     let headers = vec!["network", "budget_cycles", "budget_us", "cost", "latency", "feasible"];
+    let budgets = [2_000.0f64, 5_000.0, 10_000.0, 20_000.0, 50_000.0, 100_000.0, 250_000.0];
     let mut rows = Vec::new();
     for (name, net) in report::table4_models() {
         let plan = net.plan();
+        // One collapse + one frontier build serves every budget below.
+        let prob = models.build_problem(&plan, 50_000.0, pipe.cfg.max_choices_per_layer);
+        let t0 = std::time::Instant::now();
+        let index = ParetoFrontier::new(pipe.cfg.workers.max(1)).build(&prob);
+        b.record(&format!("frontier_build/{name}"), t0.elapsed().as_nanos() as f64);
+        let t0 = std::time::Instant::now();
+        let solutions = index.sweep(&budgets);
+        b.record(&format!("budget_sweep/{name}"), t0.elapsed().as_nanos() as f64);
         let mut prev_cost = f64::INFINITY;
         let mut first_feasible: Option<f64> = None;
-        for budget in [2_000.0f64, 5_000.0, 10_000.0, 20_000.0, 50_000.0, 100_000.0, 250_000.0] {
-            let prob = models.build_problem(&plan, budget, pipe.cfg.max_choices_per_layer);
-            match ntorc::mip::solve_bb(&prob) {
-                Some((sol, _)) => {
+        for (&budget, sol) in budgets.iter().zip(&solutions) {
+            match sol {
+                Some(sol) => {
                     assert!(
                         sol.cost <= prev_cost + 1e-6,
                         "{name}: cost must be monotone in budget ({} @ {budget} vs {prev_cost})",
                         sol.cost
                     );
+                    assert!(sol.latency <= budget + 1e-9, "{name}: budget {budget} violated");
                     prev_cost = sol.cost;
                     first_feasible.get_or_insert(budget);
                     println!(
@@ -64,6 +80,20 @@ fn main() {
                     ]);
                 }
             }
+        }
+        // B&B fallback cross-check at the paper's operating point (same
+        // relative tolerance as FrontierIndex::cross_check_bb).
+        let frontier_50k = index.query(50_000.0);
+        let bb_50k = ntorc::mip::solve_bb(&prob).map(|(s, _)| s);
+        match (&frontier_50k, &bb_50k) {
+            (Some(f), Some(bb)) => assert!(
+                (f.cost - bb.cost).abs() <= 1e-9 * (1.0 + bb.cost.abs()),
+                "{name}: frontier {} disagrees with solve_bb {} at 50k cycles",
+                f.cost,
+                bb.cost
+            ),
+            (None, None) => {}
+            other => panic!("{name}: feasibility disagreement at 50k cycles: {other:?}"),
         }
         // The paper's 50k-cycle point must be comfortably feasible.
         assert!(first_feasible.unwrap_or(f64::INFINITY) <= 50_000.0, "{name} infeasible at 200 µs");

@@ -1,6 +1,9 @@
 //! Bench E2 — Fig 5: the multi-objective hyperparameter search producing
 //! the (RMSE, workload) Pareto front, with the prior-work reference
-//! points retrained on the same data. NTORC_BENCH_FAST=1 shrinks trials.
+//! points retrained on the same data; the accuracy front is then pushed
+//! through a frontier-served deployment sweep (one solver frontier per
+//! trial answers every latency budget). NTORC_BENCH_FAST=1 shrinks
+//! trials.
 
 use ntorc::bench::Bencher;
 use ntorc::coordinator::{Pipeline, PipelineConfig};
@@ -43,5 +46,36 @@ fn main() {
     let (h, rows) = report::fig5_rows(&out);
     println!("{}", report::fmt_table("Fig 5 — Pareto front", &h, &rows));
     report::write_csv("fig5_pareto", &h, &rows).expect("csv");
+
+    // Deployment leg: the most accurate front member, deployed at a grid
+    // of real-time budgets from one shared solver frontier instead of a
+    // fresh MIP per constraint.
+    let db = pipe.synth_database();
+    let models = pipe.fit_models(&db);
+    let best = front
+        .iter()
+        .min_by(|a, b| a.rmse.partial_cmp(&b.rmse).unwrap())
+        .expect("non-empty front");
+    let budgets = [10_000.0, 25_000.0, 50_000.0, 100_000.0, 250_000.0];
+    let t0 = std::time::Instant::now();
+    let deployed = pipe.deploy_sweep(&models, best, &budgets);
+    b.record("deploy_sweep/5_budgets", t0.elapsed().as_nanos() as f64);
+    let mut prev_cost = f64::INFINITY;
+    let mut n_feasible = 0usize;
+    for (budget, d) in budgets.iter().zip(&deployed) {
+        if let Some(d) = d {
+            n_feasible += 1;
+            assert!(d.solution.latency <= budget + 1e-6, "budget {budget} violated");
+            assert!(d.solution.cost <= prev_cost + 1e-9, "cost must be monotone in the budget");
+            prev_cost = d.solution.cost;
+            println!(
+                "deploy @ {budget:>8.0} cycles: cost {:>9.0}, latency {:>8.0}, reuse {:?}",
+                d.solution.cost, d.solution.latency, d.reuse
+            );
+        } else {
+            println!("deploy @ {budget:>8.0} cycles: infeasible");
+        }
+    }
+    assert!(n_feasible >= 1, "the 200 µs point must be deployable");
     b.finish();
 }

@@ -3,17 +3,28 @@
 //!   * random-forest inference (MIP candidate enumeration),
 //!   * batched vs unbatched cost-model grid evaluation (crate::eval),
 //!   * MIP B&B solve + DP oracle,
+//!   * Pareto-frontier build / query / sweep (crate::frontier),
 //!   * beam-simulator sample generation,
 //!   * PJRT train/predict step (if artifacts are built).
+//!
+//! The frontier section also writes `results/BENCH_frontier.json`
+//! (frontier build time, per-query time, sweep time, B&B solve time and
+//! node count). When `NTORC_BENCH_BASELINE` points at a baseline JSON
+//! (CI uses the committed `benches/BENCH_frontier.baseline.json`), any
+//! metric more than 2x worse than its baseline value fails the run. To
+//! ratchet the baseline, copy a fresh `results/BENCH_frontier.json` over
+//! the committed file (keep generous headroom: CI runners are slow).
 
 use ntorc::bench::Bencher;
 use ntorc::coordinator::{candidate_reuse_factors, Pipeline, PipelineConfig};
 use ntorc::eval::BatchEvaluator;
+use ntorc::frontier::ParetoFrontier;
 use ntorc::hls::LayerCost;
 use ntorc::layers::{LayerKind, LayerSpec, NetConfig};
 use ntorc::mip::{Choice, DeployProblem};
 use ntorc::nn::{train_step, Adam, AdamConfig, NativeModel};
 use ntorc::rng::Rng;
+use ntorc::ser::{parse_json, Json};
 use ntorc::tensor::{matmul, Tensor};
 
 fn main() {
@@ -150,11 +161,96 @@ fn main() {
     b.bench("mip_build_problem/model1", || {
         models.build_problem(&net.plan(), 50_000.0, 48).layers.len()
     });
-    b.bench("mip_solve_bb/model1", || ntorc::mip::solve_bb(&prob).is_some());
+    let bb_meas = b
+        .bench("mip_solve_bb/model1", || ntorc::mip::solve_bb(&prob).is_some())
+        .clone();
     b.bench("mip_solve_dp/model1", || ntorc::mip::solve_dp(&prob).is_some());
     b.bench("stochastic_1k/model1", || {
         ntorc::search::stochastic_search(&prob, 1_000, 7).best.is_some()
     });
+
+    // --- Pareto-frontier engine --------------------------------------------
+    // One dominance-pruned sweep answers every latency budget; per-budget
+    // queries are O(log n) index lookups instead of fresh B&B solves.
+    let t0 = std::time::Instant::now();
+    let findex = ParetoFrontier::new(1).build(&prob);
+    let frontier_build_ns = t0.elapsed().as_nanos() as f64;
+    b.record("frontier_build/model1", frontier_build_ns);
+    println!(
+        "    -> {} frontier points from {} candidates ({} pruned)",
+        findex.stats.points, findex.stats.candidates, findex.stats.pruned
+    );
+    findex.check_invariants().expect("frontier invariants");
+    let query_meas = b
+        .bench("frontier_query/model1", || findex.query(50_000.0).is_some())
+        .clone();
+    let budgets: Vec<f64> = (1..=64).map(|i| 4_000.0 * i as f64).collect();
+    let t0 = std::time::Instant::now();
+    let swept = findex.sweep(&budgets);
+    let frontier_sweep_ns = t0.elapsed().as_nanos() as f64;
+    b.record("frontier_sweep/64_budgets", frontier_sweep_ns);
+    assert!(swept.iter().filter(|s| s.is_some()).count() >= 1);
+    // B&B fallback cross-check at the real-time budget. Same relative
+    // tolerance as FrontierIndex::cross_check_bb: solve_bb is exact only
+    // up to its own prune slack, and a tied alternate optimum can sum
+    // different addends in the last ulp.
+    let (bb_sol, bb_stats) = ntorc::mip::solve_bb(&prob).expect("feasible at 200 µs");
+    let frontier_sol = findex.query(50_000.0).expect("feasible at 200 µs");
+    assert!(
+        (frontier_sol.cost - bb_sol.cost).abs() <= 1e-9 * (1.0 + bb_sol.cost.abs()),
+        "frontier query {} must match solve_bb {}",
+        frontier_sol.cost,
+        bb_sol.cost
+    );
+    println!(
+        "    -> frontier query == solve_bb at 50k cycles (B&B expanded {} nodes)",
+        bb_stats.nodes
+    );
+
+    // Regression report + gate (see module docs).
+    let report = Json::obj(vec![
+        ("frontier_build_ns", Json::num(frontier_build_ns)),
+        ("frontier_query_ns", Json::num(query_meas.median_ns())),
+        ("frontier_sweep_ns", Json::num(frontier_sweep_ns)),
+        ("frontier_points", Json::num(findex.stats.points as f64)),
+        ("bb_solve_ns", Json::num(bb_meas.median_ns())),
+        ("bb_nodes", Json::num(bb_stats.nodes as f64)),
+    ]);
+    std::fs::create_dir_all("results").expect("results dir");
+    std::fs::write("results/BENCH_frontier.json", report.to_pretty()).expect("bench json");
+    println!("[perf_hotpaths] wrote results/BENCH_frontier.json");
+    if let Ok(path) = std::env::var("NTORC_BENCH_BASELINE") {
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("cannot read baseline {path}: {e}"));
+        let baseline = parse_json(&text).expect("baseline JSON");
+        let mut failures = Vec::new();
+        for key in [
+            "frontier_build_ns",
+            "frontier_query_ns",
+            "frontier_sweep_ns",
+            "bb_solve_ns",
+            "bb_nodes",
+        ] {
+            let measured = report.get(key).unwrap().as_f64().unwrap();
+            // Keys absent from the baseline are not gated (lets the
+            // baseline trail new metrics without breaking CI).
+            if let Some(base) = baseline.get(key).ok().and_then(|j| j.as_f64()) {
+                if measured > 2.0 * base {
+                    failures.push(format!("{key}: {measured:.0} > 2x baseline {base:.0}"));
+                } else {
+                    println!("    {key}: {measured:.0} vs baseline {base:.0} (<= 2x) ok");
+                }
+            }
+        }
+        if !failures.is_empty() {
+            eprintln!("[perf_hotpaths] bench regression vs {path}:");
+            for f in &failures {
+                eprintln!("  {f}");
+            }
+            std::process::exit(1);
+        }
+        println!("[perf_hotpaths] frontier metrics within 2x of baseline {path}");
+    }
 
     // --- candidate enumeration -------------------------------------------
     b.bench("candidate_rfs/dense_512x64", || {

@@ -1,8 +1,12 @@
-//! Bench E8 — Table IV: N-TORC's MIP vs stochastic search vs simulated
-//! annealing on the two 11-layer target networks. The paper's headline:
-//! the baselines need ~1M trials (1000× the MIP's time) to match it.
+//! Bench E8 — Table IV: N-TORC's exact solvers vs stochastic search vs
+//! simulated annealing on the two 11-layer target networks. The paper's
+//! headline: the baselines need ~1M trials (1000× the MIP's time) to
+//! match it. This bench additionally measures the frontier engine: one
+//! dominance-pruned sweep answers *every* latency budget, and its total
+//! time (build + all queries) must beat the per-constraint `solve_bb`
+//! re-solves it replaces.
 //!
-//! NTORC_BENCH_FAST=1 drops the 1M-trial points.
+//! NTORC_BENCH_FAST=1 drops the 100K-trial points.
 
 use ntorc::bench::Bencher;
 use ntorc::coordinator::PipelineConfig;
@@ -25,6 +29,7 @@ fn main() {
     b.record("standard_models/build", t0.elapsed().as_nanos() as f64);
 
     let mut all = Vec::new();
+    let mut sweeps = Vec::new();
     for (name, net) in report::table4_models() {
         let prob = models.build_problem(
             &net.plan(),
@@ -35,22 +40,31 @@ fn main() {
         let rows = report::table4_run(&pipe, &models, name, &net, &trial_counts, 0x7AB4E4);
 
         let mip = rows.iter().find(|r| r.solver == "ntorc_mip").expect("mip");
+        let frontier = rows
+            .iter()
+            .find(|r| r.solver == "ntorc_frontier")
+            .expect("frontier");
         b.record(&format!("mip_solve/{name}"), mip.seconds * 1e9);
-        // Quality: the MIP must be at least as cheap as every baseline at
-        // every trial count (it is exact).
-        for r in rows.iter().filter(|r| r.solver != "ntorc_mip") {
-            // The MIP's candidate set is log-thinned (48/layer), so allow
-            // a sliver of slack vs baselines sampling ALL divisors.
-            assert!(
-                mip.luts + mip.dsps <= (r.luts + r.dsps) * 1.02,
-                "{}: MIP ({:.0}) worse than {} @ {} ({:.0})",
-                name,
-                mip.luts + mip.dsps,
-                r.solver,
-                r.trials,
-                r.luts + r.dsps
-            );
-            assert!(mip.latency_us <= 200.0 + 1e-6);
+        b.record(&format!("frontier_solve/{name}"), frontier.seconds * 1e9);
+        // Quality: both exact paths must be at least as cheap as every
+        // baseline at every trial count.
+        for r in rows.iter().filter(|r| !r.solver.starts_with("ntorc")) {
+            for exact in [mip, frontier] {
+                // The exact candidate set is log-thinned (48/layer), so
+                // allow a sliver of slack vs baselines sampling ALL
+                // divisors.
+                assert!(
+                    exact.luts + exact.dsps <= (r.luts + r.dsps) * 1.02,
+                    "{}: {} ({:.0}) worse than {} @ {} ({:.0})",
+                    name,
+                    exact.solver,
+                    exact.luts + exact.dsps,
+                    r.solver,
+                    r.trials,
+                    r.luts + r.dsps
+                );
+                assert!(exact.latency_us <= 200.0 + 1e-6);
+            }
         }
         // Timing: the largest baseline run is orders of magnitude slower.
         if let Some(big) = rows
@@ -65,9 +79,44 @@ fn main() {
             );
         }
         all.extend(rows);
+
+        // Frontier sweep: one build answers the whole budget grid, with
+        // the per-budget B&B path timed and cross-checked against it.
+        let sw = report::frontier_sweep_run(&pipe, &models, name, &net, &report::SWEEP_BUDGETS);
+        let frontier_total = sw.build_seconds + sw.query_seconds;
+        println!(
+            "{name}: frontier sweep over {} budgets: build {:.4}s + queries {:.6}s = {:.4}s \
+             vs per-constraint B&B {:.4}s ({} nodes) => {:.1}x",
+            sw.budgets.len(),
+            sw.build_seconds,
+            sw.query_seconds,
+            frontier_total,
+            sw.bb_seconds_total,
+            sw.bb_nodes_total,
+            sw.bb_seconds_total / frontier_total.max(1e-9)
+        );
+        b.record(&format!("frontier_build/{name}"), sw.build_seconds * 1e9);
+        b.record(&format!("frontier_sweep_queries/{name}"), sw.query_seconds * 1e9);
+        b.record(&format!("bb_per_budget_total/{name}"), sw.bb_seconds_total * 1e9);
+        // The PR's acceptance bar: the frontier-sweep total time must
+        // beat the sum of the per-constraint solve_bb times it replaces.
+        assert!(
+            frontier_total < sw.bb_seconds_total,
+            "{name}: frontier sweep {frontier_total}s not faster than {} per-budget B&B solves \
+             ({}s)",
+            sw.budgets.len(),
+            sw.bb_seconds_total
+        );
+        sweeps.push(sw);
     }
     let (h, rows) = report::table4_rows(&all);
     println!("{}", report::fmt_table("Table IV — solver comparison", &h, &rows));
     report::write_csv("table4_solver", &h, &rows).expect("csv");
+    let (sh, srows) = report::frontier_sweep_rows(&sweeps);
+    println!(
+        "{}",
+        report::fmt_table("Frontier — one sweep, every latency budget", &sh, &srows)
+    );
+    report::write_csv("table4_frontier_sweep", &sh, &srows).expect("csv");
     b.finish();
 }

@@ -104,6 +104,8 @@ Pipeline commands
   synth-db        Phase 1 only: synthesize the layer database
   hpo             Phase 3 only: hyperparameter search (writes fig5 CSV)
   deploy          Deploy a fixed model with the MIP optimizer
+  frontier        Pareto-frontier sweep: solve once, answer every latency
+                  budget (--budgets 10000,50000 --network model1 --points)
   train           Train a fixed AOT model through the PJRT runtime
 
 Experiment regeneration (tables/figures of the paper)

@@ -1,0 +1,717 @@
+//! Parallel Pareto-frontier solver engine: one sweep answers every
+//! latency constraint.
+//!
+//! `mip::solve_bb` answers exactly one latency budget per invocation, so
+//! HPO deployment loops, budget ablations and the Table IV benches used
+//! to re-solve near-identical multiple-choice knapsacks hundreds of
+//! times. The paper's actual product is "a set of optimal trade-offs
+//! between cost and accuracy" — a *frontier*, not a point — and the
+//! standard move in learned-cost-model design-space exploration is to
+//! compute that frontier once and serve every constraint from it.
+//!
+//! [`ParetoFrontier`] does exactly that: a layer-wise dominance-pruned
+//! dynamic program over the per-layer `(latency, cost)` choice
+//! staircases. Each merge step crosses the running partial frontier with
+//! one layer's choices; because the partial frontier is sorted by
+//! latency with strictly decreasing cost, every per-choice shifted copy
+//! is already sorted, so a merge is a k-way sorted merge with inline
+//! dominance pruning — no sorting, no hashing. The per-choice shards are
+//! fanned out over [`crate::coordinator::parallel_map`], and the result
+//! is deterministic and bit-identical for any worker count.
+//!
+//! The output is a [`FrontierIndex`]: the complete latency→cost frontier
+//! with one stored assignment per point, answering
+//! [`query`](FrontierIndex::query) in O(log n) and
+//! [`sweep`](FrontierIndex::sweep) in O(k log n). Every returned
+//! [`Solution`] is canonicalized through `DeployProblem::evaluate`, the
+//! same summation `solve_bb` uses, so a frontier query reproduces a
+//! fresh B&B solve of the same budget exactly (up to `solve_bb`'s own
+//! prune slack on ties; `cross_check_bb` and the property tests below
+//! enforce this).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::parallel_map;
+use crate::mip::{self, BbStats, Choice, DeployProblem, Solution};
+
+/// Feasibility slack on latency-budget comparisons (matches `solve_bb`).
+pub const BUDGET_EPS: f64 = 1e-9;
+
+/// One partial-frontier point during the DP: the choice taken at this
+/// layer plus a parent pointer into the previous level's frontier.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    prev: u32,
+    choice: u32,
+    cost: f64,
+    latency: f64,
+}
+
+/// Deterministic total order: latency, then cost, then parent, then
+/// choice. The tie-break keys make pruning independent of how the merge
+/// work was sharded across workers.
+fn entry_lt(a: &Entry, b: &Entry) -> bool {
+    if a.latency != b.latency {
+        return a.latency < b.latency;
+    }
+    if a.cost != b.cost {
+        return a.cost < b.cost;
+    }
+    (a.prev, a.choice) < (b.prev, b.choice)
+}
+
+/// Counters from one frontier construction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrontierStats {
+    /// Points on the final frontier.
+    pub points: usize,
+    /// Candidate partial assignments generated across all merge levels.
+    pub candidates: u64,
+    /// Candidates discarded by dominance pruning.
+    pub pruned: u64,
+    /// Largest intermediate frontier (memory high-water mark).
+    pub peak_level: usize,
+    pub build_seconds: f64,
+    pub workers: usize,
+}
+
+/// The frontier engine. Construction is the only knob: how many worker
+/// threads the level merges fan out over.
+pub struct ParetoFrontier {
+    workers: usize,
+}
+
+impl ParetoFrontier {
+    pub fn new(workers: usize) -> ParetoFrontier {
+        ParetoFrontier { workers: workers.max(1) }
+    }
+
+    /// Compute the complete latency→cost frontier of `prob` (its
+    /// `latency_budget` field is irrelevant here: the index answers every
+    /// budget).
+    pub fn build(&self, prob: &DeployProblem) -> FrontierIndex {
+        let t0 = Instant::now();
+        let (pruned, maps) = prob.prune_dominated();
+        let n_layers = pruned.layers.len();
+        let mut stats = FrontierStats { workers: self.workers, ..Default::default() };
+
+        if n_layers == 0 {
+            // Degenerate: the empty assignment at (latency 0, cost 0).
+            stats.points = 1;
+            stats.build_seconds = t0.elapsed().as_secs_f64();
+            return FrontierIndex {
+                costs: vec![0.0],
+                latencies: vec![0.0],
+                picks: Vec::new(),
+                n_layers: 0,
+                stats,
+            };
+        }
+
+        // Level 0: the first layer's staircase. `prune_dominated` already
+        // sorted it by latency with strictly decreasing cost.
+        let mut levels: Vec<Vec<Entry>> = Vec::with_capacity(n_layers);
+        let first: Vec<Entry> = pruned.layers[0]
+            .iter()
+            .enumerate()
+            .map(|(j, c)| Entry { prev: 0, choice: j as u32, cost: c.cost, latency: c.latency })
+            .collect();
+        stats.candidates += first.len() as u64;
+        stats.peak_level = stats.peak_level.max(first.len());
+        levels.push(first);
+        for k in 1..n_layers {
+            let merged = self.merge_level(levels.last().unwrap(), &pruned.layers[k], &mut stats);
+            stats.peak_level = stats.peak_level.max(merged.len());
+            levels.push(merged);
+        }
+
+        // Reconstruct each final point's assignment by walking the parent
+        // pointers, map back to original choice indices, and canonicalize
+        // cost/latency through the same `evaluate` summation `solve_bb`
+        // returns its solutions through.
+        let last = levels.last().unwrap();
+        let n_points = last.len();
+        let mut costs = Vec::with_capacity(n_points);
+        let mut latencies = Vec::with_capacity(n_points);
+        let mut picks = vec![0u32; n_points * n_layers];
+        let mut pick = vec![0usize; n_layers];
+        for (i, entry) in last.iter().enumerate() {
+            let mut e = *entry;
+            for k in (0..n_layers).rev() {
+                pick[k] = maps[k][e.choice as usize];
+                if k > 0 {
+                    e = levels[k - 1][e.prev as usize];
+                }
+            }
+            let sol = prob.evaluate(&pick);
+            costs.push(sol.cost);
+            latencies.push(sol.latency);
+            for (k, &p) in pick.iter().enumerate() {
+                picks[i * n_layers + k] = p as u32;
+            }
+        }
+        stats.points = n_points;
+        stats.build_seconds = t0.elapsed().as_secs_f64();
+        FrontierIndex { costs, latencies, picks, n_layers, stats }
+    }
+
+    /// Cross the running frontier with one layer's choices. Each choice
+    /// shifts the (sorted, pruned) frontier by a constant `(latency,
+    /// cost)`, so the per-choice candidate lists are already staircases;
+    /// workers fold contiguous groups of them with a two-pointer merge +
+    /// inline dominance prune, and the group results fold the same way.
+    /// Deterministic for any worker count: shards are fixed by choice
+    /// index and pruning never drops a globally non-dominated entry.
+    fn merge_level(
+        &self,
+        frontier: &[Entry],
+        choices: &[Choice],
+        stats: &mut FrontierStats,
+    ) -> Vec<Entry> {
+        let m = choices.len();
+        let generated = (frontier.len() * m) as u64;
+        stats.candidates += generated;
+        let workers = self.workers.min(m);
+        let merged = if workers <= 1 {
+            fold_choices(frontier, choices, 0, m)
+        } else {
+            let per = m.div_ceil(workers);
+            let shared = Arc::new(frontier.to_vec());
+            let all_choices = Arc::new(choices.to_vec());
+            let jobs: Vec<Box<dyn FnOnce() -> Vec<Entry> + Send>> = (0..workers)
+                .map(|w| {
+                    let frontier = Arc::clone(&shared);
+                    let choices = Arc::clone(&all_choices);
+                    let lo = w * per;
+                    let hi = (lo + per).min(m);
+                    Box::new(move || fold_choices(&frontier, &choices, lo, hi))
+                        as Box<dyn FnOnce() -> Vec<Entry> + Send>
+                })
+                .collect();
+            let mut groups = parallel_map(workers, jobs).into_iter();
+            let mut acc = groups.next().unwrap_or_default();
+            for g in groups {
+                acc = merge_staircases(acc, g);
+            }
+            acc
+        };
+        stats.pruned += generated - merged.len() as u64;
+        merged
+    }
+}
+
+/// Merge the shifted copies of `frontier` for choices `lo..hi` into one
+/// pruned staircase.
+fn fold_choices(frontier: &[Entry], choices: &[Choice], lo: usize, hi: usize) -> Vec<Entry> {
+    let shift = |j: usize| -> Vec<Entry> {
+        let c = choices[j];
+        frontier
+            .iter()
+            .enumerate()
+            .map(|(i, e)| Entry {
+                prev: i as u32,
+                choice: j as u32,
+                cost: e.cost + c.cost,
+                latency: e.latency + c.latency,
+            })
+            .collect()
+    };
+    if lo >= hi {
+        return Vec::new();
+    }
+    let mut acc = prune_staircase(shift(lo));
+    for j in lo + 1..hi {
+        acc = merge_staircases(acc, shift(j));
+    }
+    acc
+}
+
+/// Dominance-prune a list already sorted by [`entry_lt`]: keep points
+/// whose cost strictly improves on everything at smaller-or-equal
+/// latency.
+fn prune_staircase(entries: Vec<Entry>) -> Vec<Entry> {
+    let mut out = Vec::with_capacity(entries.len());
+    let mut best = f64::INFINITY;
+    for e in entries {
+        if e.cost < best {
+            best = e.cost;
+            out.push(e);
+        }
+    }
+    out
+}
+
+/// Merge two staircases into one: a two-pointer sorted merge by
+/// [`entry_lt`] with the dominance prune applied inline.
+fn merge_staircases(a: Vec<Entry>, b: Vec<Entry>) -> Vec<Entry> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut best = f64::INFINITY;
+    while i < a.len() || j < b.len() {
+        let take_a = match (a.get(i), b.get(j)) {
+            (Some(x), Some(y)) => entry_lt(x, y),
+            (Some(_), None) => true,
+            _ => false,
+        };
+        let e = if take_a {
+            i += 1;
+            a[i - 1]
+        } else {
+            j += 1;
+            b[j - 1]
+        };
+        if e.cost < best {
+            best = e.cost;
+            out.push(e);
+        }
+    }
+    out
+}
+
+/// The complete latency→resource-cost frontier of one [`DeployProblem`],
+/// with O(log n) budget queries. Latencies are strictly increasing and
+/// costs strictly decreasing across points; picks index the *original*
+/// (unpruned) per-layer choice lists, exactly like `solve_bb`'s output.
+pub struct FrontierIndex {
+    costs: Vec<f64>,
+    latencies: Vec<f64>,
+    /// Flat row-major picks: point `i` occupies
+    /// `picks[i * n_layers .. (i + 1) * n_layers]`.
+    picks: Vec<u32>,
+    n_layers: usize,
+    pub stats: FrontierStats,
+}
+
+impl FrontierIndex {
+    /// Number of frontier points.
+    pub fn len(&self) -> usize {
+        self.costs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.costs.is_empty()
+    }
+
+    /// Latency of the fastest (most expensive) point.
+    pub fn min_latency(&self) -> Option<f64> {
+        self.latencies.first().copied()
+    }
+
+    /// Latency of the slowest (cheapest) point.
+    pub fn max_latency(&self) -> Option<f64> {
+        self.latencies.last().copied()
+    }
+
+    /// `(cost, latency)` of point `i`.
+    pub fn point(&self, i: usize) -> (f64, f64) {
+        (self.costs[i], self.latencies[i])
+    }
+
+    /// The assignment stored at point `i` (original choice indices).
+    pub fn pick(&self, i: usize) -> Vec<usize> {
+        let row = &self.picks[i * self.n_layers..(i + 1) * self.n_layers];
+        row.iter().map(|&p| p as usize).collect()
+    }
+
+    /// Index of the optimal point for a latency budget: the slowest
+    /// (cheapest) point with latency within the budget. O(log n).
+    pub fn query_index(&self, latency_budget: f64) -> Option<usize> {
+        let n = self.latencies.partition_point(|&l| l <= latency_budget + BUDGET_EPS);
+        if n == 0 {
+            None
+        } else {
+            Some(n - 1)
+        }
+    }
+
+    /// The minimum-cost assignment meeting `latency_budget`, or None when
+    /// even the fastest assignment misses it. Equivalent to (and
+    /// cross-checked against) `mip::solve_bb` at the same budget, but an
+    /// O(log n) index lookup instead of a fresh branch-and-bound.
+    pub fn query(&self, latency_budget: f64) -> Option<Solution> {
+        self.query_index(latency_budget).map(|i| self.solution_at(i))
+    }
+
+    /// Materialize point `i` as a [`Solution`].
+    pub fn solution_at(&self, i: usize) -> Solution {
+        Solution { pick: self.pick(i), cost: self.costs[i], latency: self.latencies[i] }
+    }
+
+    /// Batch-answer many budgets from the one index.
+    pub fn sweep(&self, budgets: &[f64]) -> Vec<Option<Solution>> {
+        budgets.iter().map(|&b| self.query(b)).collect()
+    }
+
+    /// Structural invariants: sorted by latency, strictly decreasing
+    /// cost (dominance-free), finite values.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.costs.len() != self.latencies.len() {
+            return Err("cost/latency length mismatch".into());
+        }
+        if self.n_layers > 0 && self.picks.len() != self.costs.len() * self.n_layers {
+            return Err("picks length mismatch".into());
+        }
+        for i in 0..self.len() {
+            if !self.costs[i].is_finite() || !self.latencies[i].is_finite() {
+                return Err(format!("non-finite point {i}"));
+            }
+            if i > 0 {
+                if self.latencies[i] <= self.latencies[i - 1] {
+                    return Err(format!(
+                        "latencies not strictly increasing at {i}: {} <= {}",
+                        self.latencies[i],
+                        self.latencies[i - 1]
+                    ));
+                }
+                if self.costs[i] >= self.costs[i - 1] {
+                    return Err(format!(
+                        "costs not strictly decreasing at {i}: {} >= {}",
+                        self.costs[i],
+                        self.costs[i - 1]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// B&B fallback cross-check: re-solve each budget with `solve_bb` and
+    /// verify feasibility and optimal cost agree. Returns the summed B&B
+    /// statistics (the work the index saved its callers).
+    pub fn cross_check_bb(&self, prob: &DeployProblem, budgets: &[f64]) -> Result<BbStats, String> {
+        let mut total = BbStats::default();
+        for &budget in budgets {
+            let mut p = prob.clone();
+            p.latency_budget = budget;
+            let bb = mip::solve_bb(&p);
+            let fr = self.query(budget);
+            match (&bb, &fr) {
+                (None, None) => {}
+                (Some((b, stats)), Some(f)) => {
+                    total.nodes += stats.nodes;
+                    total.lp_solves += stats.lp_solves;
+                    let tol = 1e-9 * (1.0 + b.cost.abs());
+                    if (b.cost - f.cost).abs() > tol {
+                        return Err(format!(
+                            "budget {budget}: frontier cost {} != bb cost {}",
+                            f.cost, b.cost
+                        ));
+                    }
+                    if f.latency > budget + BUDGET_EPS {
+                        return Err(format!(
+                            "budget {budget}: frontier latency {} over budget",
+                            f.latency
+                        ));
+                    }
+                }
+                _ => {
+                    return Err(format!(
+                        "budget {budget}: feasibility disagreement (bb {:?}, frontier {:?})",
+                        bb.as_ref().map(|(s, _)| s.cost),
+                        fr.as_ref().map(|s| s.cost)
+                    ));
+                }
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testkit::prop_check;
+
+    fn ch(reuse: usize, cost: f64, latency: f64) -> Choice {
+        Choice { reuse, cost, latency }
+    }
+
+    fn toy() -> DeployProblem {
+        DeployProblem {
+            layers: vec![
+                vec![ch(1, 100.0, 5.0), ch(2, 60.0, 10.0), ch(4, 30.0, 20.0)],
+                vec![ch(1, 80.0, 5.0), ch(2, 50.0, 10.0), ch(4, 25.0, 25.0)],
+            ],
+            latency_budget: 30.0,
+        }
+    }
+
+    /// Same correlated generator shape as the `mip` unit tests: higher
+    /// reuse trades cost for latency, with noise; integer latencies.
+    fn random_problem(rng: &mut Rng, n_layers: usize, n_choices: usize) -> DeployProblem {
+        let layers: Vec<Vec<Choice>> = (0..n_layers)
+            .map(|_| {
+                (0..n_choices)
+                    .map(|j| {
+                        let cost = 1000.0 / (j + 1) as f64 + rng.range_f64(0.0, 50.0);
+                        let lat = (10 * (j + 1)) as f64 + rng.range_f64(0.0, 5.0).floor();
+                        ch(1 << j, cost, lat)
+                    })
+                    .collect()
+            })
+            .collect();
+        DeployProblem { layers, latency_budget: 0.0 }
+    }
+
+    #[test]
+    fn toy_frontier_is_exhaustive() {
+        let prob = toy();
+        let index = ParetoFrontier::new(1).build(&prob);
+        index.check_invariants().unwrap();
+        // Enumerate all 9 assignments; the frontier must contain exactly
+        // the non-dominated (latency, cost) pairs.
+        let mut all = Vec::new();
+        for a in 0..3 {
+            for b in 0..3 {
+                let s = prob.evaluate(&[a, b]);
+                all.push((s.latency, s.cost));
+            }
+        }
+        for i in 0..index.len() {
+            let (cost, lat) = index.point(i);
+            assert!(
+                !all.iter().any(|&(l, c)| l <= lat && c <= cost && (l < lat || c < cost)),
+                "frontier point ({lat}, {cost}) is dominated"
+            );
+        }
+        // Spot checks: fastest point = both min-latency choices; cheapest
+        // = both max-reuse choices.
+        assert_eq!(index.min_latency(), Some(10.0));
+        assert_eq!(index.max_latency(), Some(45.0));
+        assert_eq!(index.point(0).0, 180.0);
+        assert_eq!(index.point(index.len() - 1).0, 55.0);
+    }
+
+    #[test]
+    fn toy_queries_match_bb() {
+        let prob = toy();
+        let index = ParetoFrontier::new(1).build(&prob);
+        for budget in [0.0, 9.0, 10.0, 15.0, 20.0, 25.0, 30.0, 35.0, 45.0, 100.0] {
+            let mut p = prob.clone();
+            p.latency_budget = budget;
+            let bb = mip::solve_bb(&p).map(|(s, _)| s);
+            let fr = index.query(budget);
+            match (&bb, &fr) {
+                (None, None) => {}
+                (Some(b), Some(f)) => {
+                    assert_eq!(b.cost, f.cost, "budget {budget}");
+                    assert!(f.latency <= budget + BUDGET_EPS);
+                }
+                other => panic!("budget {budget}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn query_below_min_latency_is_none() {
+        let index = ParetoFrontier::new(1).build(&toy());
+        assert!(index.query(9.999).is_none());
+        assert!(index.query(-5.0).is_none());
+        assert!(index.query(10.0).is_some());
+    }
+
+    #[test]
+    fn sweep_matches_individual_queries() {
+        let index = ParetoFrontier::new(1).build(&toy());
+        let budgets: Vec<f64> = (0..60).map(|i| i as f64).collect();
+        let swept = index.sweep(&budgets);
+        for (b, s) in budgets.iter().zip(&swept) {
+            assert_eq!(*s, index.query(*b));
+        }
+    }
+
+    #[test]
+    fn empty_problem_has_zero_point() {
+        let prob = DeployProblem { layers: vec![], latency_budget: 0.0 };
+        let index = ParetoFrontier::new(1).build(&prob);
+        assert_eq!(index.len(), 1);
+        let s = index.query(0.0).expect("zero-latency point");
+        assert_eq!(s.cost, 0.0);
+        assert!(s.pick.is_empty());
+        assert!(index.query(-1.0).is_none());
+    }
+
+    #[test]
+    fn single_layer_frontier_is_the_choice_staircase() {
+        let prob = DeployProblem {
+            layers: vec![vec![
+                ch(1, 100.0, 10.0),
+                ch(2, 120.0, 12.0), // dominated
+                ch(4, 50.0, 20.0),
+            ]],
+            latency_budget: 0.0,
+        };
+        let index = ParetoFrontier::new(1).build(&prob);
+        assert_eq!(index.len(), 2);
+        assert_eq!(index.solution_at(0).pick, vec![0]);
+        assert_eq!(index.solution_at(1).pick, vec![2]);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_frontier() {
+        let mut rng = Rng::new(0xF407);
+        for _ in 0..5 {
+            let prob = random_problem(&mut rng, 5, 6);
+            let one = ParetoFrontier::new(1).build(&prob);
+            let four = ParetoFrontier::new(4).build(&prob);
+            assert_eq!(one.len(), four.len());
+            for i in 0..one.len() {
+                assert_eq!(one.point(i), four.point(i), "point {i}");
+                assert_eq!(one.pick(i), four.pick(i), "pick {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_query_matches_solve_bb_on_random_budgets() {
+        // The PR's core contract: for >= 50 random budgets per seeded
+        // problem, FrontierIndex::query(b) returns the same optimum
+        // solve_bb finds when re-solving at budget b. Both paths
+        // canonicalize through evaluate()'s left-to-right summation;
+        // the tolerance only covers solve_bb's own B&B prune slack
+        // (LP-roundoff-scaled), same as cross_check_bb.
+        prop_check("frontier-query-equals-bb", 8, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let n_layers = g.int(1, 6);
+            let n_choices = g.int(2, 6);
+            let prob = random_problem(&mut rng, n_layers, n_choices);
+            let index = ParetoFrontier::new(1).build(&prob);
+            index.check_invariants()?;
+            let min_lat = prob.min_latency();
+            let max_lat: f64 = prob
+                .layers
+                .iter()
+                .map(|l| l.iter().map(|c| c.latency).fold(0.0, f64::max))
+                .sum();
+            for _ in 0..55 {
+                let budget = rng.range_f64(0.5 * min_lat, 1.1 * max_lat).floor();
+                let mut p = prob.clone();
+                p.latency_budget = budget;
+                let bb = mip::solve_bb(&p).map(|(s, _)| s);
+                let fr = index.query(budget);
+                match (&bb, &fr) {
+                    (None, None) => {}
+                    (Some(b), Some(f)) => {
+                        if (b.cost - f.cost).abs() > 1e-9 * (1.0 + b.cost.abs()) {
+                            return Err(format!(
+                                "budget {budget}: frontier {} != bb {}",
+                                f.cost, b.cost
+                            ));
+                        }
+                        if f.latency > budget + BUDGET_EPS {
+                            return Err(format!("budget {budget}: over budget"));
+                        }
+                    }
+                    _ => {
+                        return Err(format!(
+                            "budget {budget}: feasibility disagreement (bb {:?}, frontier {:?})",
+                            bb.as_ref().map(|s| s.cost),
+                            fr.as_ref().map(|s| s.cost)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_frontier_sorted_dominance_free_complete() {
+        prop_check("frontier-invariants", 20, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let prob = random_problem(&mut rng, g.int(1, 6), g.int(2, 6));
+            let index = ParetoFrontier::new(1).build(&prob);
+            index.check_invariants()?;
+            // Completeness: every feasible budget maps to a solution, and
+            // the fastest point is exactly the per-layer minimum-latency
+            // assignment.
+            let min_lat = prob.min_latency();
+            if index.min_latency() != Some(min_lat) {
+                return Err(format!(
+                    "fastest point {:?} != min latency {min_lat}",
+                    index.min_latency()
+                ));
+            }
+            for i in 0..10 {
+                let budget = min_lat + i as f64 * 7.0;
+                if index.query(budget).is_none() {
+                    return Err(format!("feasible budget {budget} unanswered"));
+                }
+            }
+            // Each point's stored values round-trip through evaluate.
+            for i in 0..index.len() {
+                let s = index.solution_at(i);
+                let e = prob.evaluate(&s.pick);
+                if e.cost != s.cost || e.latency != s.latency {
+                    return Err(format!("point {i} not canonical: {s:?} vs {e:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_frontier_matches_dp_oracle() {
+        // Independent oracle: integer-latency DP at integer budgets.
+        prop_check("frontier-equals-dp", 12, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let prob = random_problem(&mut rng, g.int(1, 5), g.int(2, 5));
+            let index = ParetoFrontier::new(1).build(&prob);
+            let min_lat = prob.min_latency();
+            for i in 0..8 {
+                let budget = (min_lat + i as f64 * 11.0).floor();
+                let mut p = prob.clone();
+                p.latency_budget = budget;
+                let dp = mip::solve_dp(&p);
+                let fr = index.query(budget);
+                match (&dp, &fr) {
+                    (None, None) => {}
+                    (Some(d), Some(f)) => {
+                        if (d.cost - f.cost).abs() > 1e-6 {
+                            return Err(format!(
+                                "budget {budget}: frontier {} != dp {}",
+                                f.cost, d.cost
+                            ));
+                        }
+                    }
+                    _ => {
+                        return Err(format!(
+                            "budget {budget}: feasibility disagreement (dp {:?}, frontier {:?})",
+                            dp.as_ref().map(|s| s.cost),
+                            fr.as_ref().map(|s| s.cost)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cross_check_bb_passes_and_counts_nodes() {
+        let mut rng = Rng::new(0xC0FF);
+        let prob = random_problem(&mut rng, 4, 5);
+        let index = ParetoFrontier::new(1).build(&prob);
+        let min_lat = prob.min_latency();
+        let budgets: Vec<f64> = (0..12).map(|i| min_lat * 0.8 + i as f64 * 9.0).collect();
+        let stats = index.cross_check_bb(&prob, &budgets).expect("cross-check");
+        assert!(stats.nodes >= 1, "feasible budgets must have run B&B nodes");
+    }
+
+    #[test]
+    fn stats_reflect_the_build() {
+        let prob = toy();
+        let index = ParetoFrontier::new(1).build(&prob);
+        assert_eq!(index.stats.points, index.len());
+        // Two 3-choice layers, nothing per-layer dominated: 3 level-0
+        // entries + 9 level-1 candidates, of which 5 survive.
+        assert_eq!(index.stats.candidates, 12);
+        assert_eq!(index.len(), 5);
+        assert_eq!(index.stats.pruned, 4);
+        assert!(index.stats.peak_level >= index.len());
+        assert!(index.stats.build_seconds >= 0.0);
+        assert_eq!(index.stats.workers, 1);
+    }
+}

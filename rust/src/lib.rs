@@ -15,7 +15,8 @@
 //!   owns every runtime subsystem: the HLS4ML synthesis simulator ([`hls`]),
 //!   random-forest cost/latency models ([`forest`]), the batched/cached
 //!   cost-model evaluation engine ([`eval`]), the MIP reuse-factor
-//!   optimizer ([`mip`]), stochastic/SA baselines ([`search`]),
+//!   optimizer ([`mip`]), the parallel Pareto-frontier solver engine
+//!   ([`frontier`]), stochastic/SA baselines ([`search`]),
 //!   multi-objective Bayesian hyperparameter search ([`hpo`]), the DROPBEAR
 //!   beam simulator ([`dropbear`]), the native training substrate ([`nn`],
 //!   [`tensor`]), and the pipeline coordinator ([`coordinator`]).
@@ -35,6 +36,16 @@
 //! over the coordinator worker pool — each unique `(layer, reuse)` is
 //! evaluated once per solve. `benches/perf_hotpaths.rs` measures the
 //! batched-vs-unbatched gap and asserts the results stay bit-identical.
+//!
+//! ## The frontier serving path ([`frontier`])
+//!
+//! [`frontier::ParetoFrontier`] computes the complete latency→cost
+//! frontier of a deployment problem in one parallel dominance-pruned
+//! sweep; [`frontier::FrontierIndex`] then answers any latency budget in
+//! O(log n) (`query`) or batches of budgets (`sweep`), replacing
+//! per-constraint B&B re-solves in the deploy loop, the budget ablation
+//! and the Table IV benches. Queries are cross-checked against
+//! `mip::solve_bb` at the same budget.
 //!
 //! ## Verification
 //!
@@ -81,6 +92,7 @@ pub mod data;
 pub mod dropbear;
 pub mod eval;
 pub mod forest;
+pub mod frontier;
 pub mod hls;
 pub mod hpo;
 pub mod layers;

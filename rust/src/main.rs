@@ -171,6 +171,61 @@ fn run(raw: &[String]) -> Result<()> {
             let (h, out_rows) = report::table4_rows(&rows);
             emit(&args, "table4_solver", "Table IV — N-TORC vs stochastic vs SA", &h, &out_rows);
         }
+        "frontier" => {
+            args.check_known(&[COMMON_FLAGS, &["budgets", "network", "points"]].concat())?;
+            let cfg = pipeline_config(&args, Preset::Full)?;
+            let (pipe, models) = report::standard_models(cfg);
+            let budgets: Vec<f64> = match args.get("budgets") {
+                Some(t) => {
+                    let parsed: Vec<f64> =
+                        t.split(',').filter_map(|x| x.trim().parse().ok()).collect();
+                    if parsed.is_empty() {
+                        bail!("--budgets expects a comma-separated list of cycle counts");
+                    }
+                    parsed
+                }
+                None => report::SWEEP_BUDGETS.to_vec(),
+            };
+            let mut sweeps = Vec::new();
+            for (name, net) in report::table4_models() {
+                if let Some(want) = args.get("network") {
+                    if want != name {
+                        continue;
+                    }
+                }
+                let sw = report::frontier_sweep_run(&pipe, &models, name, &net, &budgets);
+                println!(
+                    "{name}: {} frontier points | collapse {:.3}s + build {:.3}s + {} queries \
+                     {:.6}s vs per-budget B&B {:.3}s ({} nodes) => {:.0}x",
+                    sw.points,
+                    sw.collapse_seconds,
+                    sw.build_seconds,
+                    sw.budgets.len(),
+                    sw.query_seconds,
+                    sw.bb_seconds_total,
+                    sw.bb_nodes_total,
+                    sw.bb_seconds_total / (sw.build_seconds + sw.query_seconds).max(1e-9)
+                );
+                if args.has("points") {
+                    let (ph, prows) = report::frontier_points_rows(name, &sw.prob, &sw.index);
+                    let pname = format!("frontier_points_{name}");
+                    report::write_csv(&pname, &ph, &prows)?;
+                    println!("[csv] results/{pname}.csv ({} rows)", prows.len());
+                }
+                sweeps.push(sw);
+            }
+            if sweeps.is_empty() {
+                bail!("--network matched nothing (expected model1 or model2)");
+            }
+            let (h, rows) = report::frontier_sweep_rows(&sweeps);
+            emit(
+                &args,
+                "frontier_sweep",
+                "Frontier — one sweep, every latency budget",
+                &h,
+                &rows,
+            );
+        }
         "fig7" => {
             args.check_known(COMMON_FLAGS)?;
             let cfg = pipeline_config(&args, Preset::Smoke)?;

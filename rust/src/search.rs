@@ -273,6 +273,7 @@ pub fn simulated_annealing(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frontier::ParetoFrontier;
     use crate::mip::{solve_bb, Choice};
     use crate::testkit::prop_check;
 
@@ -296,8 +297,9 @@ mod tests {
         let res = stochastic_search(&toy(), 500, 1);
         let best = res.best.expect("feasible solution exists");
         assert!(best.latency <= 35.0);
-        // 3*3*2 = 18 assignments; 500 trials should find the optimum.
-        let (opt, _) = solve_bb(&toy()).unwrap();
+        // 3*3*2 = 18 assignments; 500 trials should find the optimum,
+        // served here from the problem's frontier index.
+        let opt = ParetoFrontier::new(1).build(&toy()).query(35.0).unwrap();
         assert_eq!(best.cost, opt.cost);
     }
 
@@ -306,8 +308,62 @@ mod tests {
         let res = simulated_annealing(&toy(), 2000, SaConfig::default(), 3);
         let best = res.best.expect("feasible solution exists");
         assert!(best.latency <= 35.0);
-        let (opt, _) = solve_bb(&toy()).unwrap();
+        let opt = ParetoFrontier::new(1).build(&toy()).query(35.0).unwrap();
         assert!(best.cost <= opt.cost * 1.25, "sa {} vs opt {}", best.cost, opt.cost);
+    }
+
+    #[test]
+    fn property_baselines_never_beat_frontier_at_any_budget() {
+        // One frontier build serves the exact reference for every
+        // budget; the old form of this check re-ran solve_bb per budget.
+        prop_check("baselines-vs-frontier", 12, |g| {
+            let mut rng = crate::rng::Rng::new(g.rng.next_u64());
+            let n_layers = g.int(1, 5);
+            let n_choices = g.int(2, 5);
+            let layers: Vec<Vec<Choice>> = (0..n_layers)
+                .map(|_| {
+                    (0..n_choices)
+                        .map(|j| {
+                            ch(
+                                1 << j,
+                                rng.range_f64(10.0, 1000.0),
+                                rng.range_f64(1.0, 50.0).floor(),
+                            )
+                        })
+                        .collect()
+                })
+                .collect();
+            let prob = DeployProblem { layers, latency_budget: 0.0 };
+            let index = ParetoFrontier::new(1).build(&prob);
+            for _ in 0..6 {
+                let budget = rng.range_f64(10.0, 200.0).floor();
+                let mut p = prob.clone();
+                p.latency_budget = budget;
+                let opt = index.query(budget);
+                let st = stochastic_search(&p, 200, rng.next_u64());
+                let sa = simulated_annealing(&p, 200, SaConfig::default(), rng.next_u64());
+                for (name, res) in [("stochastic", &st), ("sa", &sa)] {
+                    match (&opt, &res.best) {
+                        (None, Some(_)) => {
+                            return Err(format!(
+                                "{name} found a solution at budget {budget} where the \
+                                 frontier says infeasible"
+                            ));
+                        }
+                        (Some(o), Some(b)) => {
+                            if b.cost < o.cost - 1e-6 {
+                                return Err(format!(
+                                    "{name} beat the frontier optimum at {budget}: {} < {}",
+                                    b.cost, o.cost
+                                ));
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,8 +1,10 @@
-//! Integration: solver cross-checks at deployment scale — the exact MIP
-//! against the DP oracle and both baselines on realistic cost models
-//! (not the synthetic instances of the unit tests).
+//! Integration: solver cross-checks at deployment scale — the exact MIP,
+//! the Pareto-frontier engine, the DP oracle and both baselines on
+//! realistic cost models (not the synthetic instances of the unit
+//! tests).
 
 use ntorc::coordinator::{Pipeline, PipelineConfig};
+use ntorc::frontier::ParetoFrontier;
 use ntorc::report;
 use ntorc::search::{simulated_annealing, stochastic_search, SaConfig};
 
@@ -32,6 +34,38 @@ fn bb_matches_dp_on_realistic_models() {
         }
         (None, None) => {}
         other => panic!("feasibility disagreement: {:?}", other.0.map(|x| x.0.cost)),
+    }
+}
+
+#[test]
+fn frontier_matches_bb_across_budgets_on_realistic_models() {
+    // The frontier engine on a real collapsed knapsack (conv+lstm+dense
+    // mix, 24 choices/layer): every budget on a wide grid must agree
+    // with a fresh B&B solve, and the index must be a clean staircase.
+    let (_pipe, prob) = realistic_problem();
+    let index = ParetoFrontier::new(2).build(&prob);
+    index.check_invariants().expect("frontier invariants");
+    assert!(index.len() >= 2, "realistic problems trade cost for latency");
+    // A handful of B&B re-solves: each is a full branch-and-bound in
+    // debug mode, so keep the grid small here (the release-mode benches
+    // sweep far more budgets).
+    let budgets = vec![15_000.0, 30_000.0, 50_000.0, 80_000.0, 120_000.0, 200_000.0];
+    let stats = index
+        .cross_check_bb(&prob, &budgets)
+        .expect("frontier must agree with solve_bb at every budget");
+    println!(
+        "frontier: {} points; replaced B&B work: {} nodes / {} LP solves over {} budgets",
+        index.len(),
+        stats.nodes,
+        stats.lp_solves,
+        budgets.len()
+    );
+    // Worker count must not change the frontier.
+    let serial = ParetoFrontier::new(1).build(&prob);
+    assert_eq!(serial.len(), index.len());
+    for i in 0..serial.len() {
+        assert_eq!(serial.point(i), index.point(i));
+        assert_eq!(serial.pick(i), index.pick(i));
     }
 }
 
