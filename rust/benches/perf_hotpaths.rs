@@ -4,16 +4,20 @@
 //!   * batched vs unbatched cost-model grid evaluation (crate::eval),
 //!   * MIP B&B solve + DP oracle,
 //!   * Pareto-frontier build / query / sweep (crate::frontier),
+//!   * frontier serving: cold build, warm LRU hit, batched endpoint and
+//!     the store round-trip (crate::serve),
 //!   * beam-simulator sample generation,
 //!   * PJRT train/predict step (if artifacts are built).
 //!
-//! The frontier section also writes `results/BENCH_frontier.json`
+//! The frontier sections also write `results/BENCH_frontier.json`
 //! (frontier build time, per-query time, sweep time, B&B solve time and
-//! node count). When `NTORC_BENCH_BASELINE` points at a baseline JSON
-//! (CI uses the committed `benches/BENCH_frontier.baseline.json`), any
-//! metric more than 2x worse than its baseline value fails the run. To
-//! ratchet the baseline, copy a fresh `results/BENCH_frontier.json` over
-//! the committed file (keep generous headroom: CI runners are slow).
+//! node count, plus the serve-path metrics). When `NTORC_BENCH_BASELINE`
+//! points at a baseline JSON (CI uses the committed
+//! `benches/BENCH_frontier.baseline.json`), any metric more than 2x
+//! worse than its baseline value fails the run. The ratchet procedure is
+//! documented in `benches/README.md`: copy a fresh
+//! `results/BENCH_frontier.json` over the committed file (keep headroom:
+//! CI runners are slow and shared).
 
 use ntorc::bench::Bencher;
 use ntorc::coordinator::{candidate_reuse_factors, Pipeline, PipelineConfig};
@@ -25,6 +29,7 @@ use ntorc::mip::{Choice, DeployProblem};
 use ntorc::nn::{train_step, Adam, AdamConfig, NativeModel};
 use ntorc::rng::Rng;
 use ntorc::ser::{parse_json, Json};
+use ntorc::serve::{BatchRequest, FrontierService, FrontierStore, ServeConfig};
 use ntorc::tensor::{matmul, Tensor};
 
 fn main() {
@@ -207,6 +212,69 @@ fn main() {
         bb_stats.nodes
     );
 
+    // --- frontier serving (store + LRU + batch endpoint) --------------------
+    // Cold resolve = problem collapse + frontier DP + store persist; warm
+    // resolve = LRU lookup; a second service session must answer from the
+    // persisted document without building.
+    let serve_dir =
+        std::env::temp_dir().join(format!("ntorc_serve_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&serve_dir);
+    let serve_cfg = ServeConfig {
+        capacity: 8,
+        workers: 1,
+        max_choices_per_layer: 48,
+        latency_budget: 50_000.0,
+        max_points: None,
+    };
+    let svc = FrontierService::new(serve_cfg.clone(), Some(FrontierStore::new(&serve_dir)));
+    let t0 = std::time::Instant::now();
+    let cold = svc.resolve(&models, &net);
+    let serve_cold_ns = t0.elapsed().as_nanos() as f64;
+    b.record("serve_cold_build/model1", serve_cold_ns);
+    assert_eq!(svc.stats.snapshot().builds, 1);
+    let warm_meas = b
+        .bench("serve_warm_hit/model1", || svc.resolve(&models, &net).index.len())
+        .clone();
+    assert_eq!(svc.stats.snapshot().builds, 1, "warm resolves must not rebuild");
+
+    let net2 = ntorc::report::table4_models()[1].1.clone();
+    let requests: Vec<BatchRequest> = (1..=32)
+        .flat_map(|i| {
+            let budget = 8_000.0 * i as f64;
+            [
+                BatchRequest { net: net.clone(), budget },
+                BatchRequest { net: net2.clone(), budget },
+            ]
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let responses = svc.query_batch(&models, &requests);
+    let serve_batch_ns = t0.elapsed().as_nanos() as f64;
+    assert_eq!(responses.len(), 64);
+    let serve_batch_ns_per_query = serve_batch_ns / responses.len() as f64;
+    b.record("serve_batch/64_requests", serve_batch_ns);
+    println!(
+        "    -> {} batched requests, {:.2} µs/query amortized (incl. one cold build)",
+        responses.len(),
+        serve_batch_ns_per_query / 1e3
+    );
+
+    // Second session over the same store: zero builds, identical points.
+    let svc2 = FrontierService::new(serve_cfg, Some(FrontierStore::new(&serve_dir)));
+    let reloaded = svc2.resolve(&models, &net);
+    let snap2 = svc2.stats.snapshot();
+    assert_eq!(snap2.builds, 0, "second session must serve from the store");
+    assert_eq!(snap2.store_hits, 1);
+    assert_eq!(reloaded.index.len(), cold.index.len());
+    for i in 0..cold.index.len() {
+        assert_eq!(reloaded.index.point(i), cold.index.point(i), "stored point {i}");
+    }
+    println!(
+        "    -> store round-trip identical ({} points); second session builds=0",
+        cold.index.len()
+    );
+    let _ = std::fs::remove_dir_all(&serve_dir);
+
     // Regression report + gate (see module docs).
     let report = Json::obj(vec![
         ("frontier_build_ns", Json::num(frontier_build_ns)),
@@ -215,6 +283,9 @@ fn main() {
         ("frontier_points", Json::num(findex.stats.points as f64)),
         ("bb_solve_ns", Json::num(bb_meas.median_ns())),
         ("bb_nodes", Json::num(bb_stats.nodes as f64)),
+        ("serve_cold_ns", Json::num(serve_cold_ns)),
+        ("serve_warm_ns", Json::num(warm_meas.median_ns())),
+        ("serve_batch_ns_per_query", Json::num(serve_batch_ns_per_query)),
     ]);
     std::fs::create_dir_all("results").expect("results dir");
     std::fs::write("results/BENCH_frontier.json", report.to_pretty()).expect("bench json");
@@ -230,6 +301,9 @@ fn main() {
             "frontier_sweep_ns",
             "bb_solve_ns",
             "bb_nodes",
+            "serve_cold_ns",
+            "serve_warm_ns",
+            "serve_batch_ns_per_query",
         ] {
             let measured = report.get(key).unwrap().as_f64().unwrap();
             // Keys absent from the baseline are not gated (lets the

@@ -106,6 +106,11 @@ Pipeline commands
   deploy          Deploy a fixed model with the MIP optimizer
   frontier        Pareto-frontier sweep: solve once, answer every latency
                   budget (--budgets 10000,50000 --network model1 --points)
+  serve           Frontier serving: answer a scripted batch-request
+                  workload from the persistent store + LRU; prints
+                  throughput, hit rate and the serve-stats table
+                  (--requests file|stdin --store dir ("" = memory-only)
+                  --capacity n --repeat n --expect-warm --stats-out name)
   train           Train a fixed AOT model through the PJRT runtime
 
 Experiment regeneration (tables/figures of the paper)

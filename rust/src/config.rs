@@ -106,6 +106,16 @@ fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
         "train.lr" => cfg.budget.lr = as_f64(v)? as f32,
         "train.max_train_windows" => cfg.budget.max_train_windows = as_usize(v)?,
         "train.max_val_windows" => cfg.budget.max_val_windows = as_usize(v)?,
+        // [serve]
+        "serve.capacity" => cfg.serve_capacity = as_usize(v)?,
+        "serve.store" => {
+            let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
+            cfg.frontier_store = if s.is_empty() { None } else { Some(s.to_string()) };
+        }
+        "serve.max_points" => {
+            let n = as_usize(v)?;
+            cfg.frontier_max_points = if n == 0 { None } else { Some(n) };
+        }
         // [forest]
         "forest.trees" => cfg.forest.n_trees = as_usize(v)?,
         "forest.max_depth" => cfg.forest.max_depth = as_usize(v)?,
@@ -172,6 +182,11 @@ max_val_windows = 1000
 trees = 60
 max_depth = 24
 min_leaf = 1
+
+[serve]
+capacity = 32         # LRU bound on hot in-memory frontiers
+store = ""            # e.g. "results/frontiers" to persist built frontiers
+max_points = 0        # frontier guardrail cap (0 = exact, unlimited)
 "#;
 
 #[cfg(test)]
@@ -195,6 +210,22 @@ mod tests {
         assert_eq!(cfg.budget.batch, 32);
         assert_eq!(cfg.forest.n_trees, 60);
         assert_eq!(cfg.latency_budget, 50_000.0);
+        assert_eq!(cfg.serve_capacity, 32);
+        assert_eq!(cfg.frontier_store, None);
+        assert_eq!(cfg.frontier_max_points, None);
+    }
+
+    #[test]
+    fn serve_overrides_parse() {
+        let mut cfg = Preset::Smoke.pipeline();
+        apply_override(&mut cfg, "serve.capacity=8").unwrap();
+        assert_eq!(cfg.serve_capacity, 8);
+        apply_override(&mut cfg, "serve.store=results/frontiers").unwrap();
+        assert_eq!(cfg.frontier_store.as_deref(), Some("results/frontiers"));
+        apply_override(&mut cfg, "serve.max_points=1000").unwrap();
+        assert_eq!(cfg.frontier_max_points, Some(1000));
+        apply_override(&mut cfg, "serve.max_points=0").unwrap();
+        assert_eq!(cfg.frontier_max_points, None);
     }
 
     #[test]

@@ -37,6 +37,7 @@ use crate::layers::{LayerKind, LayerSpec, NetConfig};
 use crate::mip::{DeployProblem, Solution};
 use crate::nn::{Adam, AdamConfig, NativeModel};
 use crate::rng::Rng;
+use crate::serve::{FrontierService, FrontierStore, ServeConfig, ServedFrontier};
 
 /// 200 µs at 250 MHz (paper §IV-B).
 pub const LATENCY_BUDGET_CYCLES: f64 = 50_000.0;
@@ -67,6 +68,10 @@ pub struct CostModels {
     /// Unique-layer counts per kind (reported like the paper's 5962/496/4195).
     pub db_counts: HashMap<LayerKind, usize>,
     cache: CostCache,
+    /// Stable identity of this fit (database + forest config + split),
+    /// mixed into frontier-store keys so persisted frontiers are never
+    /// served to a differently-configured model set.
+    fingerprint: u64,
 }
 
 impl CostModels {
@@ -105,7 +110,32 @@ impl CostModels {
                 forests.insert((kind, metric), Arc::new(forest));
             }
         }
-        CostModels { forests, validation, db_counts, cache: CostCache::new() }
+        // Deterministic fit identity: configuration fields plus the f64
+        // bits of every validation metric (a content probe of the
+        // database the forests were trained on).
+        let mut fields: Vec<u64> = vec![
+            db.len() as u64,
+            forest_cfg.n_trees as u64,
+            forest_cfg.max_depth as u64,
+            forest_cfg.min_leaf as u64,
+            forest_cfg.seed,
+            split_seed,
+        ];
+        for kind in [LayerKind::Conv1d, LayerKind::Lstm, LayerKind::Dense] {
+            fields.push(*db_counts.get(&kind).unwrap_or(&0) as u64);
+        }
+        for v in &validation {
+            fields.push(v.metrics.r2.to_bits());
+            fields.push(v.metrics.mape_pct.to_bits());
+        }
+        let fingerprint = crate::rng::hash_fields(&fields);
+        CostModels { forests, validation, db_counts, cache: CostCache::new(), fingerprint }
+    }
+
+    /// Stable identity of this fit (same database + config ⇒ same value
+    /// in every process; any difference ⇒ a different value).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
     }
 
     /// Predicted cost/latency of one layer at one reuse factor, memoized
@@ -192,14 +222,13 @@ pub fn candidate_reuse_factors(spec: &LayerSpec, cap: usize) -> Vec<usize> {
     if all.len() <= cap || cap == 0 {
         return all;
     }
-    let mut picked = Vec::with_capacity(cap);
-    for i in 0..cap {
-        let idx = (i as f64 / (cap - 1) as f64 * (all.len() - 1) as f64).round() as usize;
-        if picked.last() != Some(&all[idx]) {
-            picked.push(all[idx]);
-        }
-    }
-    picked
+    // Same stride as the frontier's max_points guardrail (one shared
+    // definition; `all` is strictly increasing, so index-dedup there is
+    // exactly the old value-dedup here).
+    crate::frontier::strided_indices(all.len(), cap)
+        .into_iter()
+        .map(|i| all[i])
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -398,6 +427,15 @@ pub struct PipelineConfig {
     pub latency_budget: f64,
     pub max_choices_per_layer: usize,
     pub workers: usize,
+    /// LRU bound on hot in-memory frontiers in the pipeline's
+    /// [`FrontierService`].
+    pub serve_capacity: usize,
+    /// Directory for the persistent frontier store (`ntorc serve` uses
+    /// `results/frontiers`); `None` keeps the service memory-only.
+    pub frontier_store: Option<String>,
+    /// Optional frontier-size guardrail
+    /// ([`crate::frontier::ParetoFrontier::with_max_points`]).
+    pub frontier_max_points: Option<usize>,
 }
 
 impl Default for PipelineConfig {
@@ -412,6 +450,9 @@ impl Default for PipelineConfig {
             latency_budget: LATENCY_BUDGET_CYCLES,
             max_choices_per_layer: 48,
             workers: 1,
+            serve_capacity: 32,
+            frontier_store: None,
+            frontier_max_points: None,
         }
     }
 }
@@ -453,12 +494,33 @@ pub struct DeployedModel {
 pub struct Pipeline {
     pub cfg: PipelineConfig,
     pub hls: HlsSim,
+    /// Shared frontier query service: every deployment in this pipeline
+    /// (single deploys, sweeps, HPO fleets) resolves through one LRU +
+    /// optional persistent store, so an architecture pays the frontier
+    /// DP once per store lifetime.
+    serve: FrontierService,
 }
 
 impl Pipeline {
     pub fn new(cfg: PipelineConfig) -> Pipeline {
         let hls = HlsSim::new(hls::HlsConfig { seed: cfg.hls_seed, ..Default::default() });
-        Pipeline { cfg, hls }
+        let store = cfg.frontier_store.as_ref().map(|d| FrontierStore::new(d.as_str()));
+        let serve = FrontierService::new(
+            ServeConfig {
+                capacity: cfg.serve_capacity,
+                workers: cfg.workers,
+                max_choices_per_layer: cfg.max_choices_per_layer,
+                latency_budget: cfg.latency_budget,
+                max_points: cfg.frontier_max_points,
+            },
+            store,
+        );
+        Pipeline { cfg, hls, serve }
+    }
+
+    /// The pipeline's shared frontier service (serve-stats live here).
+    pub fn serve(&self) -> &FrontierService {
+        &self.serve
     }
 
     /// Phase 1: synthesize the layer database.
@@ -487,6 +549,27 @@ impl Pipeline {
         (trials, datasets)
     }
 
+    /// Phase 3 with deployments resolved inline through the shared
+    /// [`FrontierService`]: [`run_hpo`](Self::run_hpo) for the search
+    /// (one code path — no drift between the fig5 and e2e pipelines),
+    /// then every trial's real-time deployment is answered by the
+    /// serving layer, so HPO fleets re-visiting an architecture —
+    /// distinct genomes routinely decode/repair to the same network —
+    /// pay the frontier DP once and hit the LRU (or the persistent
+    /// store) afterwards.
+    #[allow(clippy::type_complexity)]
+    pub fn run_hpo_deployed(
+        &self,
+        sim: &Simulator,
+        models: &CostModels,
+    ) -> (Vec<Trial>, Vec<Option<Solution>>, HashMap<usize, PreparedData>) {
+        let (trials, datasets) = self.run_hpo(sim);
+        let deployments = hpo::resolve_deployments(&trials, |net| {
+            self.serve.query(models, net, self.cfg.latency_budget)
+        });
+        (trials, deployments, datasets)
+    }
+
     /// RF→MIP collapse + frontier construction: batch-materialize the
     /// candidate grid through the worker pool, then compute the complete
     /// latency→cost frontier of the resulting knapsack in one parallel
@@ -503,63 +586,71 @@ impl Pipeline {
             self.cfg.max_choices_per_layer,
             self.cfg.workers,
         );
-        let index = ParetoFrontier::new(self.cfg.workers).build(&prob);
+        let index = ParetoFrontier::new(self.cfg.workers)
+            .with_max_points(self.cfg.frontier_max_points)
+            .build(&prob);
         (prob, index)
     }
 
     /// Phase 4: deploy one network — reuse-factor assignment at the
-    /// configured real-time budget, served from the trial's frontier.
-    /// Building the frontier instead of one B&B solve is not a tax: the
-    /// dominance-pruned merge runs no LP at all, while a single
-    /// `solve_bb` pays a dense simplex per node (`perf_hotpaths` records
-    /// `frontier_build/` vs `mip_solve/` to keep this claim measured).
+    /// configured real-time budget, answered by the shared
+    /// [`FrontierService`] (LRU hit, store load, or an on-demand build
+    /// of the trial's frontier). Building a frontier instead of one B&B
+    /// solve is not a tax: the dominance-pruned merge runs no LP at all,
+    /// while a single `solve_bb` pays a dense simplex per node
+    /// (`perf_hotpaths` records `frontier_build/` vs `mip_solve/` to
+    /// keep this claim measured) — and the service amortizes even that
+    /// one build across every later deploy of the same architecture.
     pub fn deploy(&self, models: &CostModels, trial: &Trial) -> Option<DeployedModel> {
-        let plan = trial.cfg.plan();
-        let (prob, index) = self.build_frontier(models, &plan);
-        let sol = index.query(self.cfg.latency_budget)?;
-        Some(self.deployed_from_solution(models, trial, &plan, &prob, sol))
+        let served = self.serve.resolve(models, &trial.cfg);
+        let sol = served.index.query(self.cfg.latency_budget)?;
+        Some(self.deployed_from_served(models, trial, &served, sol))
     }
 
-    /// Deploy one network at many latency budgets from a single frontier
-    /// ("solve once, serve many"): one grid collapse + one frontier
-    /// build, then each budget is an index lookup.
+    /// Deploy one network at many latency budgets from a single served
+    /// frontier ("solve once, serve many"): at most one grid collapse +
+    /// frontier build per store lifetime, then each budget is an index
+    /// lookup.
     pub fn deploy_sweep(
         &self,
         models: &CostModels,
         trial: &Trial,
         budgets: &[f64],
     ) -> Vec<Option<DeployedModel>> {
-        let plan = trial.cfg.plan();
-        let (prob, index) = self.build_frontier(models, &plan);
-        index
+        let served = self.serve.resolve(models, &trial.cfg);
+        served
+            .index
             .sweep(budgets)
             .into_iter()
-            .map(|sol| sol.map(|s| self.deployed_from_solution(models, trial, &plan, &prob, s)))
+            .map(|sol| sol.map(|s| self.deployed_from_served(models, trial, &served, s)))
             .collect()
     }
 
-    /// Materialize a solver [`Solution`] as a deployed model row
+    /// Materialize a served [`Solution`] as a deployed model row
     /// (predicted totals, HLS ground truth, µs latency).
-    fn deployed_from_solution(
+    fn deployed_from_served(
         &self,
         models: &CostModels,
         trial: &Trial,
-        plan: &[LayerSpec],
-        prob: &DeployProblem,
+        served: &ServedFrontier,
         sol: Solution,
     ) -> DeployedModel {
-        let reuse: Vec<usize> = sol
-            .pick
-            .iter()
-            .enumerate()
-            .map(|(i, &j)| prob.layers[i][j].reuse)
-            .collect();
+        let plan = trial.cfg.plan();
+        // Integrity guard: a served frontier that does not span the
+        // trial's plan (hash collision, hand-edited store) must fail
+        // loudly, not deploy a silently-wrong assignment.
+        assert_eq!(
+            served.reuse.len(),
+            plan.len(),
+            "served frontier layer count must match the trial's plan"
+        );
+        let reuse = served.reuse_of(&sol.pick);
         let predicted = plan
             .iter()
             .zip(&reuse)
             .map(|(spec, &r)| models.predict_layer(spec, r))
             .fold(LayerCost::ZERO, |acc, c| acc.add(&c));
-        let (_, actual) = self.hls.synth_network(plan, &reuse);
+        let (_, actual) = self.hls.synth_network(&plan, &reuse);
         let latency_us = predicted.latency / (hls::ZU7EV.clock_mhz);
         DeployedModel {
             trial: trial.clone(),
@@ -752,6 +843,48 @@ mod tests {
             deployed.solution.cost,
             bb.cost
         );
+    }
+
+    #[test]
+    fn fingerprint_is_stable_per_fit_and_tracks_configuration() {
+        let pipe = Pipeline::new(PipelineConfig::smoke());
+        let db = pipe.synth_database();
+        let a = pipe.fit_models(&db);
+        let b = pipe.fit_models(&db);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same fit => same identity");
+        // A different forest configuration is a different model set —
+        // its persisted frontiers must live under different keys.
+        let other = CostModels::fit(
+            &db,
+            ForestConfig { n_trees: 8, ..pipe.cfg.forest },
+            0x5B117,
+        );
+        assert_ne!(a.fingerprint(), other.fingerprint());
+        let reseeded = CostModels::fit(&db, pipe.cfg.forest, 0xDEAD);
+        assert_ne!(a.fingerprint(), reseeded.fingerprint());
+    }
+
+    #[test]
+    fn repeated_deploys_share_one_served_frontier() {
+        let pipe = Pipeline::new(PipelineConfig::smoke());
+        let db = pipe.synth_database();
+        let models = pipe.fit_models(&db);
+        let trial = Trial {
+            genome: vec![0; hpo::SearchSpace::GENES],
+            cfg: NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]),
+            rmse: 0.1,
+            workload: 1000.0,
+        };
+        let a = pipe.deploy(&models, &trial).expect("deployable");
+        let b = pipe.deploy(&models, &trial).expect("deployable");
+        let sweep = pipe.deploy_sweep(&models, &trial, &[20_000.0, LATENCY_BUDGET_CYCLES]);
+        let s = pipe.serve().stats.snapshot();
+        assert_eq!(s.builds, 1, "one frontier build must serve every deploy");
+        assert_eq!(s.mem_hits, 2, "second deploy + sweep hit the LRU");
+        assert_eq!(a.solution, b.solution);
+        assert_eq!(a.reuse, b.reuse);
+        let at_budget = sweep[1].as_ref().expect("feasible at 200 µs");
+        assert_eq!(at_budget.solution, a.solution);
     }
 
     #[test]

@@ -32,8 +32,11 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use anyhow::{anyhow, bail};
+
 use crate::coordinator::parallel_map;
 use crate::mip::{self, BbStats, Choice, DeployProblem, Solution};
+use crate::ser::Json;
 
 /// Feasibility slack on latency-budget comparisons (matches `solve_bb`).
 pub const BUDGET_EPS: f64 = 1e-9;
@@ -74,17 +77,52 @@ pub struct FrontierStats {
     pub peak_level: usize,
     pub build_seconds: f64,
     pub workers: usize,
+    /// True when an intermediate level exceeded the configured
+    /// [`max_points`](ParetoFrontier::with_max_points) cap and was thinned
+    /// (guardrail telemetry; `peak_level` keeps the pre-truncation
+    /// high-water mark).
+    pub truncated: bool,
 }
 
-/// The frontier engine. Construction is the only knob: how many worker
-/// threads the level merges fan out over.
+/// The frontier engine. Construction knobs: how many worker threads the
+/// level merges fan out over, and an optional guardrail cap on the
+/// intermediate frontier size (see ROADMAP "frontier scalability
+/// guardrails" — adversarial continuous-cost instances can blow the
+/// exact frontier up combinatorially).
 pub struct ParetoFrontier {
     workers: usize,
+    max_points: Option<usize>,
 }
 
 impl ParetoFrontier {
     pub fn new(workers: usize) -> ParetoFrontier {
-        ParetoFrontier { workers: workers.max(1) }
+        ParetoFrontier { workers: workers.max(1), max_points: None }
+    }
+
+    /// Opt-in guardrail: when any DP level exceeds `cap` points it is
+    /// thinned to an evenly-strided staircase subset (first and last
+    /// points — the per-layer fastest and cheapest partials — always
+    /// survive, so `min_latency`/`max_latency` are exact). The build
+    /// records `truncated: true` in [`FrontierStats`] and logs one
+    /// warning line. `None` (the default) changes nothing: the frontier
+    /// stays exact.
+    pub fn with_max_points(mut self, cap: Option<usize>) -> ParetoFrontier {
+        self.max_points = cap.map(|c| c.max(2));
+        self
+    }
+
+    /// Apply the `max_points` guardrail to one DP level (no-op when the
+    /// cap is unset or the level fits). Thinned entries count as pruned.
+    fn cap_level(&self, level: Vec<Entry>, stats: &mut FrontierStats) -> Vec<Entry> {
+        let Some(cap) = self.max_points else { return level };
+        let n = level.len();
+        if n <= cap {
+            return level;
+        }
+        let kept: Vec<Entry> = strided_indices(n, cap).into_iter().map(|i| level[i]).collect();
+        stats.pruned += (n - kept.len()) as u64;
+        stats.truncated = true;
+        kept
     }
 
     /// Compute the complete latency→cost frontier of `prob` (its
@@ -119,11 +157,21 @@ impl ParetoFrontier {
             .collect();
         stats.candidates += first.len() as u64;
         stats.peak_level = stats.peak_level.max(first.len());
+        let first = self.cap_level(first, &mut stats);
         levels.push(first);
         for k in 1..n_layers {
             let merged = self.merge_level(levels.last().unwrap(), &pruned.layers[k], &mut stats);
             stats.peak_level = stats.peak_level.max(merged.len());
+            let merged = self.cap_level(merged, &mut stats);
             levels.push(merged);
+        }
+        if stats.truncated {
+            eprintln!(
+                "[frontier] warning: DP level exceeded max_points={} (peak {}); frontier \
+                 truncated — answers stay feasible and canonical but may be suboptimal",
+                self.max_points.unwrap_or(0),
+                stats.peak_level
+            );
         }
 
         // Reconstruct each final point's assignment by walking the parent
@@ -199,6 +247,30 @@ impl ParetoFrontier {
         stats.pruned += generated - merged.len() as u64;
         merged
     }
+}
+
+/// Evenly-strided subset of `0..n`: `cap` positions with the first and
+/// last index always included and adjacent duplicates collapsed. The
+/// single definition of the thinning stride shared by the frontier
+/// `max_points` guardrail and the candidate-reuse-factor cap in
+/// [`crate::coordinator::candidate_reuse_factors`].
+pub fn strided_indices(n: usize, cap: usize) -> Vec<usize> {
+    if n == 0 || cap == 0 {
+        return Vec::new();
+    }
+    if cap == 1 {
+        return vec![0];
+    }
+    let mut out = Vec::with_capacity(cap.min(n));
+    let mut last = usize::MAX;
+    for i in 0..cap {
+        let idx = (i as f64 / (cap - 1) as f64 * (n - 1) as f64).round() as usize;
+        if idx != last {
+            out.push(idx);
+            last = idx;
+        }
+    }
+    out
 }
 
 /// Merge the shifted copies of `frontier` for choices `lo..hi` into one
@@ -284,9 +356,35 @@ pub struct FrontierIndex {
 }
 
 impl FrontierIndex {
+    /// Assemble an index from raw parts (the deserialization path),
+    /// validating the structural invariants before anything can query it.
+    pub fn from_parts(
+        costs: Vec<f64>,
+        latencies: Vec<f64>,
+        picks: Vec<u32>,
+        n_layers: usize,
+        stats: FrontierStats,
+    ) -> Result<FrontierIndex, String> {
+        let index = FrontierIndex { costs, latencies, picks, n_layers, stats };
+        index.check_invariants()?;
+        if index.stats.points != index.len() {
+            return Err(format!(
+                "stats.points {} != {} stored points",
+                index.stats.points,
+                index.len()
+            ));
+        }
+        Ok(index)
+    }
+
     /// Number of frontier points.
     pub fn len(&self) -> usize {
         self.costs.len()
+    }
+
+    /// Number of layers each stored assignment covers.
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
     }
 
     pub fn is_empty(&self) -> bool {
@@ -352,6 +450,17 @@ impl FrontierIndex {
         if self.n_layers > 0 && self.picks.len() != self.costs.len() * self.n_layers {
             return Err("picks length mismatch".into());
         }
+        // A zero-layer index is exactly the one degenerate point the
+        // builder emits; anything else smuggled through deserialization
+        // would zip against non-empty plans downstream.
+        if self.n_layers == 0 {
+            if !self.picks.is_empty() {
+                return Err("zero-layer index with non-empty picks".into());
+            }
+            if self.len() > 1 {
+                return Err("zero-layer index with more than one point".into());
+            }
+        }
         for i in 0..self.len() {
             if !self.costs[i].is_finite() || !self.latencies[i].is_finite() {
                 return Err(format!("non-finite point {i}"));
@@ -416,6 +525,99 @@ impl FrontierIndex {
         }
         Ok(total)
     }
+
+    /// Serialize to [`ser::Json`](crate::ser::Json). Numbers round-trip
+    /// bit-identically: the writer prints shortest-round-trip decimals
+    /// and every stored value is finite (enforced by `check_invariants`
+    /// before anything is persisted).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("costs", Json::arr_f64(&self.costs)),
+            ("latencies", Json::arr_f64(&self.latencies)),
+            (
+                "picks",
+                Json::Arr(self.picks.iter().map(|&p| Json::Num(p as f64)).collect()),
+            ),
+            (
+                "stats",
+                Json::obj(vec![
+                    ("points", Json::num(self.stats.points as f64)),
+                    ("candidates", Json::num(self.stats.candidates as f64)),
+                    ("pruned", Json::num(self.stats.pruned as f64)),
+                    ("peak_level", Json::num(self.stats.peak_level as f64)),
+                    ("build_seconds", Json::num(self.stats.build_seconds)),
+                    ("workers", Json::num(self.stats.workers as f64)),
+                    ("truncated", Json::Bool(self.stats.truncated)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Deserialize from [`ser::Json`](crate::ser::Json), re-verifying the
+    /// structural invariants. A corrupted or truncated document is a
+    /// clean `Err`, never a panic.
+    pub fn from_json(j: &Json) -> anyhow::Result<FrontierIndex> {
+        let n_layers = j
+            .get("n_layers")?
+            .as_f64()
+            .filter(|f| *f >= 0.0 && f.fract() == 0.0)
+            .map(|f| f as usize)
+            .ok_or_else(|| anyhow!("'n_layers' must be a non-negative integer"))?;
+        let costs = f64_list(j.get("costs")?, "costs")?;
+        let latencies = f64_list(j.get("latencies")?, "latencies")?;
+        let raw_picks = j
+            .get("picks")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'picks' must be an array"))?;
+        let mut picks = Vec::with_capacity(raw_picks.len());
+        for (i, v) in raw_picks.iter().enumerate() {
+            let f = v.as_f64().ok_or_else(|| anyhow!("picks[{i}] must be a number"))?;
+            if !(0.0..=u32::MAX as f64).contains(&f) || f.fract() != 0.0 {
+                bail!("picks[{i}] = {f} is not a choice index");
+            }
+            picks.push(f as u32);
+        }
+        let s = j.get("stats")?;
+        let stat_u64 = |key: &str| -> anyhow::Result<u64> {
+            s.get(key)?
+                .as_f64()
+                .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow!("stats.{key} must be a non-negative integer"))
+        };
+        let stats = FrontierStats {
+            points: stat_u64("points")? as usize,
+            candidates: stat_u64("candidates")?,
+            pruned: stat_u64("pruned")?,
+            peak_level: stat_u64("peak_level")? as usize,
+            build_seconds: s
+                .get("build_seconds")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("stats.build_seconds must be a number"))?,
+            workers: stat_u64("workers")? as usize,
+            truncated: s
+                .get("truncated")?
+                .as_bool()
+                .ok_or_else(|| anyhow!("stats.truncated must be a bool"))?,
+        };
+        FrontierIndex::from_parts(costs, latencies, picks, n_layers, stats)
+            .map_err(|e| anyhow!("invalid frontier document: {e}"))
+    }
+}
+
+/// Parse a JSON array of finite numbers (deserialization helper).
+fn f64_list(j: &Json, what: &str) -> anyhow::Result<Vec<f64>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("'{what}' must be an array"))?
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_f64()
+                .filter(|f| f.is_finite())
+                .ok_or_else(|| anyhow!("{what}[{i}] must be a finite number"))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -713,5 +915,131 @@ mod tests {
         assert!(index.stats.peak_level >= index.len());
         assert!(index.stats.build_seconds >= 0.0);
         assert_eq!(index.stats.workers, 1);
+        assert!(!index.stats.truncated);
+    }
+
+    #[test]
+    fn strided_indices_cover_extremes_without_duplicates() {
+        assert_eq!(strided_indices(10, 4), vec![0, 3, 6, 9]);
+        assert_eq!(strided_indices(3, 5), vec![0, 1, 2]); // cap > n collapses
+        assert_eq!(strided_indices(5, 1), vec![0]);
+        assert!(strided_indices(0, 4).is_empty());
+        assert!(strided_indices(4, 0).is_empty());
+        let idx = strided_indices(100, 7);
+        assert_eq!(idx.first(), Some(&0));
+        assert_eq!(idx.last(), Some(&99));
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "strictly increasing");
+    }
+
+    #[test]
+    fn max_points_guardrail_truncates_and_flags() {
+        let mut rng = Rng::new(0xCAFE);
+        let prob = random_problem(&mut rng, 6, 6);
+        let full = ParetoFrontier::new(1).build(&prob);
+        assert!(!full.stats.truncated);
+        let cap = 4;
+        assert!(full.len() > cap, "generator must overflow the cap ({})", full.len());
+        let capped = ParetoFrontier::new(1).with_max_points(Some(cap)).build(&prob);
+        assert!(capped.stats.truncated);
+        assert!(capped.len() <= cap);
+        capped.check_invariants().unwrap();
+        // The guardrail keeps the per-level extremes, so the fastest and
+        // cheapest assignments survive exactly.
+        assert_eq!(capped.min_latency(), full.min_latency());
+        assert_eq!(capped.max_latency(), full.max_latency());
+        // Answers stay canonical feasible solutions.
+        let s = capped.query(1e12).expect("cheapest point");
+        let e = prob.evaluate(&s.pick);
+        assert_eq!((e.cost, e.latency), (s.cost, s.latency));
+        // Truncated levels generate fewer downstream candidates — the
+        // guardrail's whole point.
+        assert!(capped.stats.candidates < full.stats.candidates);
+        // Unset cap is byte-for-byte the default build.
+        let unset = ParetoFrontier::new(1).with_max_points(None).build(&prob);
+        assert_eq!(unset.len(), full.len());
+        assert!(!unset.stats.truncated);
+        for i in 0..full.len() {
+            assert_eq!(unset.point(i), full.point(i));
+            assert_eq!(unset.pick(i), full.pick(i));
+        }
+    }
+
+    #[test]
+    fn property_index_json_round_trips_bit_identically() {
+        // Satellite contract: same points, same picks, identical query
+        // answers before/after a JSON round-trip — exact equality, no
+        // tolerances.
+        prop_check("frontier-json-round-trip", 15, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let prob = random_problem(&mut rng, g.int(1, 5), g.int(2, 5));
+            let index = ParetoFrontier::new(1).build(&prob);
+            let text = index.to_json().to_string();
+            let parsed = crate::ser::parse_json(&text).map_err(|e| format!("parse: {e:#}"))?;
+            let back = FrontierIndex::from_json(&parsed).map_err(|e| format!("load: {e:#}"))?;
+            if back.len() != index.len() || back.n_layers() != index.n_layers() {
+                return Err(format!("shape changed: {} -> {}", index.len(), back.len()));
+            }
+            for i in 0..index.len() {
+                if back.point(i) != index.point(i) {
+                    return Err(format!("point {i} changed"));
+                }
+                if back.pick(i) != index.pick(i) {
+                    return Err(format!("pick {i} changed"));
+                }
+            }
+            for _ in 0..25 {
+                let budget = rng.range_f64(0.0, 400.0);
+                if back.query(budget) != index.query(budget) {
+                    return Err(format!("query({budget}) changed across round-trip"));
+                }
+            }
+            if back.stats.points != index.stats.points
+                || back.stats.candidates != index.stats.candidates
+                || back.stats.truncated != index.stats.truncated
+            {
+                return Err("stats changed".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corrupt_json_documents_error_cleanly() {
+        let index = ParetoFrontier::new(1).build(&toy());
+        let good = index.to_json().to_string();
+        // Truncated document: the parser itself must reject it.
+        assert!(crate::ser::parse_json(&good[..good.len() / 2]).is_err());
+        // Structurally valid JSON with a missing key.
+        let missing = crate::ser::parse_json(r#"{"n_layers": 2}"#).unwrap();
+        assert!(FrontierIndex::from_json(&missing).is_err());
+        // Picks array shorter than points * n_layers.
+        let mut doc = crate::ser::parse_json(&good).unwrap();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("picks".into(), Json::Arr(vec![Json::Num(0.0)]));
+        }
+        let err = FrontierIndex::from_json(&doc).unwrap_err();
+        assert!(err.to_string().contains("picks"), "unexpected error: {err:#}");
+        // Latencies out of order violate the invariants.
+        let mut doc = crate::ser::parse_json(&good).unwrap();
+        if let Json::Obj(o) = &mut doc {
+            let lats = o.get("latencies").unwrap().as_arr().unwrap().to_vec();
+            let mut rev: Vec<Json> = lats;
+            rev.reverse();
+            o.insert("latencies".into(), Json::Arr(rev));
+        }
+        assert!(FrontierIndex::from_json(&doc).is_err());
+        // A non-numeric pick value.
+        let mut doc = crate::ser::parse_json(&good).unwrap();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("picks".into(), Json::Arr(vec![Json::str("zero")]));
+        }
+        assert!(FrontierIndex::from_json(&doc).is_err());
+        // Zero-layer documents cannot smuggle picks/points past
+        // validation (they would zip against non-empty plans later).
+        let mut doc = crate::ser::parse_json(&good).unwrap();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("n_layers".into(), Json::Num(0.0));
+        }
+        assert!(FrontierIndex::from_json(&doc).is_err());
     }
 }

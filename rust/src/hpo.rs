@@ -488,6 +488,31 @@ pub fn run_hpo(
     trials
 }
 
+/// Resolve one deployment per trial, index-aligned (`None` = the
+/// architecture cannot meet the budget even at maximum speed). `deploy`
+/// is typically a shared [`crate::serve::FrontierService`], so the many
+/// genomes that decode (or repair) to the same architecture hit the
+/// service's LRU/store instead of re-running the frontier DP. Shared by
+/// [`run_hpo_served`] and `Pipeline::run_hpo_deployed`.
+pub fn resolve_deployments(
+    trials: &[Trial],
+    mut deploy: impl FnMut(&NetConfig) -> Option<crate::mip::Solution>,
+) -> Vec<Option<crate::mip::Solution>> {
+    trials.iter().map(|t| deploy(&t.cfg)).collect()
+}
+
+/// [`run_hpo`] with deployments resolved inline through
+/// [`resolve_deployments`]. Returns the trials and their deployments.
+pub fn run_hpo_served(
+    cfg: &HpoConfig,
+    evaluate: impl FnMut(&NetConfig, u64) -> f64,
+    deploy: impl FnMut(&NetConfig) -> Option<crate::mip::Solution>,
+) -> (Vec<Trial>, Vec<Option<crate::mip::Solution>>) {
+    let trials = run_hpo(cfg, evaluate);
+    let deployments = resolve_deployments(&trials, deploy);
+    (trials, deployments)
+}
+
 // ---------------------------------------------------------------------------
 // NSGA-II
 // ---------------------------------------------------------------------------
@@ -827,6 +852,39 @@ mod tests {
         };
         // Bayesian should do at least ~as well on this smooth landscape.
         assert!(hv(&bayes) >= 0.85 * hv(&random), "hv {} vs {}", hv(&bayes), hv(&random));
+    }
+
+    #[test]
+    fn run_hpo_served_aligns_deployments_with_trials() {
+        let cfg = HpoConfig {
+            space: SearchSpace::small(),
+            sampler: Sampler::Random,
+            n_trials: 12,
+            n_init: 4,
+            n_candidates: 16,
+            seed: 17,
+        };
+        // Deploy stub: feasible iff the workload is small; counts calls.
+        let mut calls = 0usize;
+        let (trials, deployments) = run_hpo_served(&cfg, synthetic_eval, |net| {
+            calls += 1;
+            (net.workload_multiplies() < 20_000).then(|| crate::mip::Solution {
+                pick: vec![0; net.plan().len()],
+                cost: net.workload_multiplies() as f64,
+                latency: 1.0,
+            })
+        });
+        assert_eq!(trials.len(), deployments.len());
+        assert_eq!(calls, trials.len(), "one deploy resolution per trial");
+        for (t, d) in trials.iter().zip(&deployments) {
+            match d {
+                Some(sol) => {
+                    assert!(t.workload < 20_000.0);
+                    assert_eq!(sol.pick.len(), t.cfg.plan().len());
+                }
+                None => assert!(t.workload >= 20_000.0),
+            }
+        }
     }
 
     #[test]

@@ -47,6 +47,22 @@
 //! and the Table IV benches. Queries are cross-checked against
 //! `mip::solve_bb` at the same budget.
 //!
+//! ## The frontier serving subsystem ([`serve`])
+//!
+//! Frontiers outlive the process that built them:
+//! [`serve::FrontierStore`] persists each built index (plus its
+//! reuse-factor table) as JSON keyed by a stable
+//! [`serve::FrontierKey`] (FNV over the network's layer plan), and
+//! [`serve::FrontierService`] fronts the store with a bounded LRU of
+//! hot indices, building misses on demand and answering single
+//! (`query`) and batched (`query_batch`) budget requests with
+//! hit/miss/build telemetry ([`serve::ServeStats`]).
+//! `Pipeline::deploy`/`deploy_sweep`, the deployment-aware HPO loop and
+//! the `ntorc serve` CLI command all resolve through one shared
+//! service, so repeated trials on the same architecture pay the
+//! frontier DP exactly once per store lifetime — solve once, serve
+//! many, across processes.
+//!
 //! ## Verification
 //!
 //! Tier-1 gate (also enforced by `.github/workflows/ci.yml`):
@@ -54,8 +70,10 @@
 //! `cargo build --release && cargo test -q`
 //!
 //! The CI workflow adds `cargo fmt --check`, `cargo clippy -- -D
-//! warnings`, a bench-smoke job (`cargo bench --no-run`) and the Python
-//! suite (`pytest python/tests -q`, skipped when JAX is absent).
+//! warnings`, a bench-smoke job (`cargo bench --no-run`), the
+//! bench-regression gate (`perf_hotpaths` vs the committed baseline), a
+//! serve-smoke job (`ntorc serve` cold then `--expect-warm`) and the
+//! Python suite (`pytest python/tests -q`, skipped when JAX is absent).
 
 // The numeric code deliberately favours explicit index loops and
 // paper-shaped names; keep `clippy -- -D warnings` green without
@@ -104,6 +122,7 @@ pub mod rng;
 pub mod runtime;
 pub mod search;
 pub mod ser;
+pub mod serve;
 pub mod tensor;
 pub mod testkit;
 pub mod xla;

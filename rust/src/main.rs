@@ -226,6 +226,105 @@ fn run(raw: &[String]) -> Result<()> {
                 &rows,
             );
         }
+        "serve" => {
+            args.check_known(
+                &[
+                    COMMON_FLAGS,
+                    &["requests", "store", "capacity", "repeat", "expect-warm", "stats-out"],
+                ]
+                .concat(),
+            )?;
+            let mut cfg = pipeline_config(&args, Preset::Smoke)?;
+            // Store precedence: --store (empty = memory-only) > a
+            // configured serve.store (--config / --set) > the default
+            // directory.
+            match args.get("store") {
+                Some("") => cfg.frontier_store = None,
+                Some(dir) => cfg.frontier_store = Some(dir.to_string()),
+                None if cfg.frontier_store.is_none() => {
+                    cfg.frontier_store = Some("results/frontiers".to_string());
+                }
+                None => {}
+            }
+            let store_dir = cfg
+                .frontier_store
+                .clone()
+                .unwrap_or_else(|| "(memory-only)".to_string());
+            cfg.serve_capacity = args.usize_or("capacity", cfg.serve_capacity)?;
+            // Parse the request document before paying for model fitting.
+            let text = match args.get("requests") {
+                Some(path) => std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("read requests file {path}: {e}"))?,
+                None => {
+                    let mut s = String::new();
+                    std::io::Read::read_to_string(&mut std::io::stdin(), &mut s)?;
+                    s
+                }
+            };
+            let doc = ntorc::ser::parse_json(&text)?;
+            let named = |name: &str| {
+                report::table4_models()
+                    .into_iter()
+                    .find(|(n, _)| *n == name)
+                    .map(|(_, c)| c)
+            };
+            let requests = ntorc::serve::parse_requests(&doc, &named)?;
+            let repeat = args.usize_or("repeat", 1)?.max(1);
+            println!(
+                "[serve] {} requests x{repeat}, store {store_dir}",
+                requests.len()
+            );
+            let (pipe, models) = report::standard_models(cfg);
+            let t0 = std::time::Instant::now();
+            let mut answered = 0usize;
+            let mut feasible = 0usize;
+            for _ in 0..repeat {
+                let responses = pipe.serve().query_batch(&models, &requests);
+                answered += responses.len();
+                feasible += responses.iter().filter(|r| r.solution.is_some()).count();
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let snap = pipe.serve().stats.snapshot();
+            println!(
+                "[serve] answered {answered} requests in {secs:.3}s ({:.0} req/s); \
+                 {feasible} feasible; cache hit rate {:.1}%",
+                answered as f64 / secs.max(1e-9),
+                100.0 * snap.hit_rate()
+            );
+            let (sh, srows) = report::serve_stats_rows(&snap);
+            print!("{}", report::fmt_table("Frontier serve stats", &sh, &srows));
+            let stats_name = args.get("stats-out").unwrap_or("serve_stats");
+            let out = ntorc::ser::Json::obj(vec![
+                ("requests", ntorc::ser::Json::num(answered as f64)),
+                ("feasible", ntorc::ser::Json::num(feasible as f64)),
+                ("seconds", ntorc::ser::Json::num(secs)),
+                (
+                    "req_per_s",
+                    ntorc::ser::Json::num(answered as f64 / secs.max(1e-9)),
+                ),
+                ("stats", snap.to_json()),
+            ]);
+            std::fs::create_dir_all("results")?;
+            let stats_path = format!("results/{stats_name}.json");
+            std::fs::write(&stats_path, out.to_pretty())?;
+            println!("[json] {stats_path}");
+            if args.has("expect-warm") {
+                if snap.builds > 0 {
+                    bail!(
+                        "--expect-warm: {} frontier build(s) ran; the store should have \
+                         answered every request",
+                        snap.builds
+                    );
+                }
+                if snap.mem_hits + snap.store_hits == 0 {
+                    bail!("--expect-warm: no cache hits recorded");
+                }
+                println!(
+                    "[serve] warm check passed: builds=0, hit rate {:.1}%",
+                    100.0 * snap.hit_rate()
+                );
+            }
+        }
         "fig7" => {
             args.check_known(COMMON_FLAGS)?;
             let cfg = pipeline_config(&args, Preset::Smoke)?;
@@ -401,14 +500,27 @@ fn run_e2e(cfg: PipelineConfig, args: &Args) -> Result<()> {
 
     println!("[3/4] hyperparameter search on simulated DROPBEAR ...");
     let sim = report::standard_simulator();
-    let out = report::fig5_run(&pipe, &sim);
-    let front = pareto_trials(&out.trials);
-    println!("      {} trials, Pareto front {}", out.trials.len(), front.len());
+    // Deployment-aware HPO: every trial's 200 µs deployment resolves
+    // through the pipeline's shared frontier service, so the genomes
+    // that decode to the same architecture pay the frontier DP once.
+    let (trials, deployments, _datasets) = pipe.run_hpo_deployed(&sim, &models);
+    let deployable = deployments.iter().filter(|d| d.is_some()).count();
+    let front = pareto_trials(&trials);
+    println!(
+        "      {} trials ({deployable} deployable at 200 µs), Pareto front {}",
+        trials.len(),
+        front.len()
+    );
 
     println!("[4/4] MIP deployment of the Pareto set (200 µs budget) ...");
-    let deployed = report::deploy_pareto(&pipe, &models, &out.trials);
+    let deployed = report::deploy_pareto(&pipe, &models, &trials);
     let (h, rows) = report::table3_rows(&deployed);
     emit(args, "e2e_table3", "E2E — deployed Pareto networks", &h, &rows);
+    // Every deployment above resolved through the pipeline's shared
+    // frontier service; repeated architectures were LRU hits.
+    let snap = pipe.serve().stats.snapshot();
+    let (sh, srows) = report::serve_stats_rows(&snap);
+    print!("{}", report::fmt_table("Frontier serve stats", &sh, &srows));
     println!("e2e complete in {:?}", t0.elapsed());
     Ok(())
 }

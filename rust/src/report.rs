@@ -757,6 +757,35 @@ pub fn frontier_points_rows(
     (headers, rows)
 }
 
+// ---------------------------------------------------------------------------
+// Frontier serve stats (the serving subsystem's telemetry table)
+// ---------------------------------------------------------------------------
+
+/// One-row table for a [`crate::serve::ServeSnapshot`]: how much
+/// frontier work the serving layer answered from cache vs built fresh.
+/// Printed by `ntorc serve` and after the e2e deployment phase.
+pub fn serve_stats_rows(
+    s: &crate::serve::ServeSnapshot,
+) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "resolves", "mem_hits", "store_hits", "builds", "hit_rate_pct", "evictions",
+        "store_errors", "queries", "batches", "build_s",
+    ];
+    let rows = vec![vec![
+        s.resolves().to_string(),
+        s.mem_hits.to_string(),
+        s.store_hits.to_string(),
+        s.builds.to_string(),
+        f(100.0 * s.hit_rate(), 1),
+        s.evictions.to_string(),
+        s.store_errors.to_string(),
+        s.queries.to_string(),
+        s.batches.to_string(),
+        format!("{:.3}", s.build_seconds),
+    ]];
+    (headers, rows)
+}
+
 pub fn table4_rows(rows: &[Table4Row]) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let headers = vec!["network", "solver", "trials", "luts", "dsps", "latency_us", "search_s"];
     let out = rows
@@ -897,6 +926,23 @@ mod tests {
             "mip {mip_total} vs frontier {fr_total}"
         );
         assert!(fr_row.latency_us <= 200.0 + 1e-6);
+    }
+
+    #[test]
+    fn serve_stats_table_shape_and_hit_rate() {
+        let snap = crate::serve::ServeSnapshot {
+            mem_hits: 6,
+            store_hits: 2,
+            builds: 2,
+            queries: 10,
+            batches: 1,
+            ..Default::default()
+        };
+        let (h, rows) = serve_stats_rows(&snap);
+        assert_eq!(h.len(), rows[0].len());
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0][0], "10"); // resolves
+        assert_eq!(rows[0][4], "80.0"); // hit rate %
     }
 
     #[test]

@@ -85,6 +85,19 @@ impl Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// A u64 carried as a fixed-width hex string. JSON numbers are f64
+    /// here, which lose precision past 2^53 — 64-bit keys/hashes (see
+    /// `serve::FrontierKey`) routinely exceed that, so they ride as
+    /// strings on the wire.
+    pub fn u64_hex(v: u64) -> Json {
+        Json::Str(format!("{v:016x}"))
+    }
+
+    /// Inverse of [`u64_hex`](Json::u64_hex).
+    pub fn as_u64_hex(&self) -> Option<u64> {
+        self.as_str().and_then(|s| u64::from_str_radix(s, 16).ok())
+    }
+
     /// Serialize compactly.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
@@ -551,6 +564,18 @@ mod tests {
         // Non-object values also take the missing-key path.
         assert!(Json::Num(3.0).get("x").is_err());
         assert!(Json::Arr(vec![]).get("x").is_err());
+    }
+
+    #[test]
+    fn u64_hex_round_trips_past_f64_precision() {
+        for v in [0u64, 1, 1 << 53, 0x8c56e7875565265d, u64::MAX] {
+            let j = Json::u64_hex(v);
+            assert_eq!(j.as_u64_hex(), Some(v));
+            let back = parse_json(&j.to_string()).unwrap();
+            assert_eq!(back.as_u64_hex(), Some(v), "wire round-trip of {v:#x}");
+        }
+        assert_eq!(Json::num(3.0).as_u64_hex(), None);
+        assert_eq!(Json::str("not-hex!").as_u64_hex(), None);
     }
 
     #[test]

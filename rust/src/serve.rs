@@ -1,0 +1,1187 @@
+//! Frontier serving subsystem: persistent store, LRU-cached query
+//! service, and a batch endpoint — keyed by network signature.
+//!
+//! N-TORC's value proposition is answering latency constraints instantly
+//! instead of re-running a stochastic search; `frontier::ParetoFrontier`
+//! already collapses "any budget" to one dominance-pruned DP and
+//! `FrontierIndex::query` to an O(log n) lookup. But before this module
+//! every *process* rebuilt every frontier from scratch: HPO fleets,
+//! repeated CLI runs and the benches all paid the full DP for
+//! architectures they had solved minutes earlier. This subsystem makes
+//! the frontier a long-lived, shared artifact — "one index per
+//! architecture, shared by all clients":
+//!
+//! * [`FrontierKey`] — a stable identity for a deployment problem:
+//!   FNV-1a ([`crate::rng::hash_fields`]) over the network's layer plan
+//!   (kind, n_in, n_out, seq per layer) plus the candidate-grid cap,
+//!   prefixed with a human-readable slug from
+//!   [`NetConfig::signature`]. The service re-scopes it
+//!   ([`FrontierKey::mix`]) with its guardrail config and the
+//!   cost-model fingerprint, so: same architecture + same solver grid +
+//!   same fitted models ⇒ same key in every process, forever; any
+//!   difference — including a different preset or forest config over a
+//!   shared store — ⇒ a different key, never a stale hit.
+//!
+//! * [`FrontierStore`] — persistence: one JSON document per key under a
+//!   directory (`results/frontiers/<slug>-<hash>.json` by default),
+//!   written atomically (tmp + rename) and re-verified on load
+//!   ([`FrontierIndex::check_invariants`] plus pick-range checks), so a
+//!   corrupted or truncated file is a clean error, never a panic and
+//!   never a silently wrong answer. Alongside the index the document
+//!   carries the per-layer reuse-factor table, so a loaded frontier can
+//!   materialize full deployments without re-collapsing the cost models.
+//!
+//! * [`FrontierService`] — the serving layer: a bounded LRU of hot
+//!   in-memory indices in front of the store, building missing frontiers
+//!   on demand (`ParetoFrontier`, honoring the `max_points` guardrail)
+//!   and persisting what it builds. Every resolution is counted in
+//!   [`ServeStats`] (memory hits / store hits / builds / evictions), the
+//!   numbers behind the CLI's hit-rate report and the CI warm-serve
+//!   assertion. [`query`](FrontierService::query) answers one budget;
+//!   [`query_batch`](FrontierService::query_batch) answers a whole
+//!   request list, resolving duplicates through the LRU once and
+//!   sharding the pure index lookups over
+//!   [`coordinator::parallel_map`](crate::coordinator::parallel_map).
+//!
+//! The service fronts `Pipeline::deploy`/`deploy_sweep` and the
+//! deployment-aware HPO loop (`hpo::run_hpo_served`), and the `ntorc
+//! serve` CLI command runs scripted batch workloads against it. The
+//! solve-once-serve-many contract is enforced end to end by
+//! `tests/serve_roundtrip.rs`: a second service session over the same
+//! store answers a full budget sweep with its build counter still at
+//! zero, bit-identical to fresh `solve_bb` re-solves.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{parallel_map, CostModels, LATENCY_BUDGET_CYCLES};
+use crate::frontier::{FrontierIndex, ParetoFrontier};
+use crate::layers::{LayerKind, NetConfig};
+use crate::mip::{DeployProblem, Solution};
+use crate::rng::hash_fields;
+use crate::ser::{parse_json, Json};
+
+// ---------------------------------------------------------------------------
+// Keys
+// ---------------------------------------------------------------------------
+
+/// Stable identity of one deployment problem: the network's layer plan
+/// plus the candidate-grid cap, hashed field-by-field. Stable across
+/// process runs (pure FNV-1a over the structural fields, no addresses,
+/// no iteration-order dependence) and distinct for distinct problems.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct FrontierKey {
+    /// FNV-1a over `[n_layers, (kind, n_in, n_out, seq)*, max_choices]`.
+    pub hash: u64,
+    /// Human-readable slug from [`NetConfig::signature`] (file-name
+    /// prefix only; the hash is the identity).
+    pub name: String,
+}
+
+impl FrontierKey {
+    pub fn for_net(cfg: &NetConfig, max_choices_per_layer: usize) -> FrontierKey {
+        let plan = cfg.plan();
+        let mut fields = Vec::with_capacity(plan.len() * 4 + 2);
+        fields.push(plan.len() as u64);
+        for s in &plan {
+            fields.push(match s.kind {
+                LayerKind::Conv1d => 1,
+                LayerKind::Lstm => 2,
+                LayerKind::Dense => 3,
+            });
+            fields.push(s.n_in as u64);
+            fields.push(s.n_out as u64);
+            fields.push(s.seq as u64);
+        }
+        fields.push(max_choices_per_layer as u64);
+        FrontierKey { hash: hash_fields(&fields), name: sanitize(&cfg.signature()) }
+    }
+
+    /// Re-scope a key by folding extra identity fields into the hash —
+    /// the service mixes in the guardrail config and the cost-model
+    /// [`fingerprint`](CostModels::fingerprint), so one store never
+    /// serves a frontier built under a different configuration. The
+    /// human-readable slug is kept.
+    pub fn mix(&self, fields: &[u64]) -> FrontierKey {
+        let mut all = Vec::with_capacity(fields.len() + 1);
+        all.push(self.hash);
+        all.extend_from_slice(fields);
+        FrontierKey { hash: hash_fields(&all), name: self.name.clone() }
+    }
+
+    /// File stem under the store directory, unique per key.
+    pub fn file_stem(&self) -> String {
+        format!("{}-{:016x}", self.name, self.hash)
+    }
+}
+
+/// Collapse a signature like `w32 c[3x4] l[5] d[6,1]` into a filesystem
+/// slug (`w32-c-3x4-l-5-d-6-1`): alphanumerics pass through, everything
+/// else becomes one dash, runs collapse, edges trim.
+fn sanitize(sig: &str) -> String {
+    let mut out = String::with_capacity(sig.len());
+    let mut dash = false;
+    for ch in sig.chars() {
+        if ch.is_ascii_alphanumeric() {
+            out.push(ch);
+            dash = false;
+        } else if !dash && !out.is_empty() {
+            out.push('-');
+            dash = true;
+        }
+    }
+    while out.ends_with('-') {
+        out.pop();
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The served artifact
+// ---------------------------------------------------------------------------
+
+/// A frontier plus everything a client needs to act on its answers: the
+/// per-layer reuse-factor table mapping stored picks (indices into the
+/// *original* choice lists, like `solve_bb`) back to hardware reuse
+/// factors. This is the unit the store persists and the LRU caches.
+pub struct ServedFrontier {
+    pub key: FrontierKey,
+    pub index: FrontierIndex,
+    /// `reuse[k][j]` = reuse factor of layer k's original choice j;
+    /// `index.pick(i)[k]` indexes `reuse[k]`.
+    pub reuse: Vec<Vec<usize>>,
+}
+
+impl ServedFrontier {
+    pub fn from_problem(
+        key: FrontierKey,
+        prob: &DeployProblem,
+        index: FrontierIndex,
+    ) -> ServedFrontier {
+        let reuse = prob
+            .layers
+            .iter()
+            .map(|l| l.iter().map(|c| c.reuse).collect())
+            .collect();
+        ServedFrontier { key, index, reuse }
+    }
+
+    /// Map one stored assignment to per-layer reuse factors.
+    pub fn reuse_of(&self, pick: &[usize]) -> Vec<usize> {
+        pick.iter().enumerate().map(|(k, &j)| self.reuse[k][j]).collect()
+    }
+
+    /// Cross-structure invariants: the index checks out and every stored
+    /// pick indexes the reuse table.
+    pub fn check(&self) -> Result<()> {
+        self.index
+            .check_invariants()
+            .map_err(|e| anyhow!("frontier invariants: {e}"))?;
+        if self.index.n_layers() != self.reuse.len() {
+            bail!(
+                "index spans {} layers but reuse table has {}",
+                self.index.n_layers(),
+                self.reuse.len()
+            );
+        }
+        for i in 0..self.index.len() {
+            for (k, &j) in self.index.pick(i).iter().enumerate() {
+                if j >= self.reuse[k].len() {
+                    bail!(
+                        "point {i}: pick {j} out of range for layer {k} ({} choices)",
+                        self.reuse[k].len()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("key_hash", Json::u64_hex(self.key.hash)),
+            ("key_name", Json::str(self.key.name.clone())),
+            (
+                "reuse",
+                Json::Arr(self.reuse.iter().map(|l| Json::arr_usize(l)).collect()),
+            ),
+            ("index", self.index.to_json()),
+        ])
+    }
+
+    /// Deserialize and re-verify. Corrupt documents are clean errors.
+    pub fn from_json(j: &Json) -> Result<ServedFrontier> {
+        let version = j
+            .get("version")?
+            .as_f64()
+            .filter(|f| f.fract() == 0.0)
+            .map(|f| f as i64)
+            .ok_or_else(|| anyhow!("'version' must be an integer"))?;
+        if version != 1 {
+            bail!("unsupported frontier document version {version}");
+        }
+        let hash = j
+            .get("key_hash")?
+            .as_u64_hex()
+            .ok_or_else(|| anyhow!("'key_hash' must be a hex string"))?;
+        let name = j
+            .get("key_name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("'key_name' must be a string"))?
+            .to_string();
+        let mut reuse = Vec::new();
+        for (k, layer) in j
+            .get("reuse")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'reuse' must be an array"))?
+            .iter()
+            .enumerate()
+        {
+            let list = layer
+                .as_arr()
+                .ok_or_else(|| anyhow!("reuse[{k}] must be an array"))?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .filter(|f| *f >= 1.0 && f.fract() == 0.0)
+                        .map(|f| f as usize)
+                        .ok_or_else(|| anyhow!("reuse[{k}] holds a non-reuse value"))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            reuse.push(list);
+        }
+        let index = FrontierIndex::from_json(j.get("index")?)?;
+        let out = ServedFrontier { key: FrontierKey { hash, name }, index, reuse };
+        out.check()?;
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistence
+// ---------------------------------------------------------------------------
+
+/// On-disk frontier store: one JSON document per [`FrontierKey`] under
+/// `dir`. Writes are atomic (tmp file + rename); loads re-verify every
+/// invariant before a document can serve queries.
+pub struct FrontierStore {
+    dir: PathBuf,
+}
+
+impl FrontierStore {
+    pub fn new(dir: impl Into<PathBuf>) -> FrontierStore {
+        FrontierStore { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path_for(&self, key: &FrontierKey) -> PathBuf {
+        self.dir.join(format!("{}.json", key.file_stem()))
+    }
+
+    pub fn contains(&self, key: &FrontierKey) -> bool {
+        self.path_for(key).exists()
+    }
+
+    /// Persist one frontier. The tmp-then-rename dance means a crashed
+    /// writer leaves either the old document or none — never half a file
+    /// under the served name.
+    pub fn save(&self, sf: &ServedFrontier) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("create store dir {}", self.dir.display()))?;
+        let path = self.path_for(&sf.key);
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, sf.to_json().to_pretty())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("rename into {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load the frontier for `key`: `Ok(None)` when absent, a clean
+    /// error when present but unreadable, corrupt, or keyed differently.
+    pub fn load(&self, key: &FrontierKey) -> Result<Option<ServedFrontier>> {
+        let path = self.path_for(key);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let doc = parse_json(&text).with_context(|| format!("parse {}", path.display()))?;
+        let sf = ServedFrontier::from_json(&doc)
+            .with_context(|| format!("verify {}", path.display()))?;
+        if sf.key.hash != key.hash {
+            bail!(
+                "{}: stored key {:016x} does not match requested {:016x}",
+                path.display(),
+                sf.key.hash,
+                key.hash
+            );
+        }
+        Ok(Some(sf))
+    }
+
+    /// Paths of every persisted frontier (empty when the directory does
+    /// not exist yet).
+    pub fn list(&self) -> Vec<PathBuf> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut out: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving statistics
+// ---------------------------------------------------------------------------
+
+/// Lock-free counters behind the service (shared by every caller).
+#[derive(Default)]
+pub struct ServeStats {
+    mem_hits: AtomicU64,
+    store_hits: AtomicU64,
+    builds: AtomicU64,
+    evictions: AtomicU64,
+    store_errors: AtomicU64,
+    queries: AtomicU64,
+    batches: AtomicU64,
+    build_ns: AtomicU64,
+}
+
+impl ServeStats {
+    fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time copy for reporting.
+    pub fn snapshot(&self) -> ServeSnapshot {
+        ServeSnapshot {
+            mem_hits: self.mem_hits.load(Ordering::Relaxed),
+            store_hits: self.store_hits.load(Ordering::Relaxed),
+            builds: self.builds.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            store_errors: self.store_errors.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            build_seconds: self.build_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+/// One snapshot of [`ServeStats`] (the report/CSV/JSON unit).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ServeSnapshot {
+    /// Resolutions answered by the in-memory LRU.
+    pub mem_hits: u64,
+    /// Resolutions answered by loading a persisted frontier.
+    pub store_hits: u64,
+    /// Resolutions that ran the full problem collapse + frontier DP.
+    pub builds: u64,
+    pub evictions: u64,
+    /// Unreadable/corrupt store documents discarded (self-healed by a
+    /// rebuild) plus failed persist attempts.
+    pub store_errors: u64,
+    /// Individual budget queries answered (single + batched).
+    pub queries: u64,
+    /// `query_batch` invocations.
+    pub batches: u64,
+    /// Wall-clock spent inside frontier builds.
+    pub build_seconds: f64,
+}
+
+impl ServeSnapshot {
+    /// Total frontier resolutions (hits + builds).
+    pub fn resolves(&self) -> u64 {
+        self.mem_hits + self.store_hits + self.builds
+    }
+
+    /// Fraction of resolutions that skipped the frontier DP entirely.
+    pub fn hit_rate(&self) -> f64 {
+        let r = self.resolves();
+        if r == 0 {
+            0.0
+        } else {
+            (self.mem_hits + self.store_hits) as f64 / r as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("resolves", Json::num(self.resolves() as f64)),
+            ("mem_hits", Json::num(self.mem_hits as f64)),
+            ("store_hits", Json::num(self.store_hits as f64)),
+            ("builds", Json::num(self.builds as f64)),
+            ("evictions", Json::num(self.evictions as f64)),
+            ("store_errors", Json::num(self.store_errors as f64)),
+            ("queries", Json::num(self.queries as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("hit_rate", Json::num(self.hit_rate())),
+            ("build_seconds", Json::num(self.build_seconds)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The service
+// ---------------------------------------------------------------------------
+
+/// Service knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bound on hot in-memory frontiers (least-recently-used evicted).
+    pub capacity: usize,
+    /// Worker threads for frontier builds and batch-query sharding.
+    pub workers: usize,
+    /// Candidate-grid cap fed to `build_problem` (part of the key).
+    pub max_choices_per_layer: usize,
+    /// Budget stamped on built problems (irrelevant to the index, which
+    /// answers every budget, but kept for `DeployProblem` consumers).
+    pub latency_budget: f64,
+    /// Guardrail forwarded to [`ParetoFrontier::with_max_points`].
+    pub max_points: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            capacity: 32,
+            workers: 1,
+            max_choices_per_layer: 48,
+            latency_budget: LATENCY_BUDGET_CYCLES,
+            max_points: None,
+        }
+    }
+}
+
+/// One batched budget request.
+#[derive(Clone, Debug)]
+pub struct BatchRequest {
+    pub net: NetConfig,
+    pub budget: f64,
+}
+
+/// One batched answer: the key the request resolved to and the optimal
+/// deployment within its budget (None = infeasible even at max speed).
+#[derive(Clone, Debug)]
+pub struct BatchResponse {
+    pub key: FrontierKey,
+    pub budget: f64,
+    pub solution: Option<Solution>,
+}
+
+/// Below this many batched requests the per-lookup work (an O(log n)
+/// binary search) cannot amortize worker-pool thread spawns; answer
+/// inline instead.
+const BATCH_SHARD_MIN: usize = 32;
+
+struct LruState {
+    /// key hash -> (frontier, last-used tick).
+    entries: HashMap<u64, (Arc<ServedFrontier>, u64)>,
+    tick: u64,
+}
+
+/// The frontier query service: bounded LRU over hot indices, backed by
+/// an optional persistent [`FrontierStore`], building (and persisting)
+/// missing frontiers on demand. All methods take `&self`; the service is
+/// memory-safe to share behind an `Arc` across worker threads.
+///
+/// Concurrency caveat: there is deliberately no per-key in-flight build
+/// guard — the LRU lock is released during builds, so two threads
+/// resolving the same *cold* key may each run the (deterministic)
+/// collapse + DP and the last insert wins. Answers are identical either
+/// way; only the duplicated build time and the `builds` counter are
+/// affected. Pre-warm or serialize first-touch per key when exact build
+/// counts matter (every in-repo caller resolves sequentially).
+pub struct FrontierService {
+    cfg: ServeConfig,
+    store: Option<FrontierStore>,
+    state: Mutex<LruState>,
+    pub stats: ServeStats,
+}
+
+impl FrontierService {
+    pub fn new(cfg: ServeConfig, store: Option<FrontierStore>) -> FrontierService {
+        let capacity = cfg.capacity.max(1);
+        // Normalize the guardrail to what ParetoFrontier actually uses
+        // (caps below 2 are clamped there) BEFORE it enters key mixing:
+        // Some(0) must never share a store key with None while building
+        // a different (truncated) frontier.
+        let max_points = cfg.max_points.map(|c| c.max(2));
+        FrontierService {
+            cfg: ServeConfig { capacity, max_points, ..cfg },
+            store,
+            state: Mutex::new(LruState { entries: HashMap::new(), tick: 0 }),
+            stats: ServeStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn store(&self) -> Option<&FrontierStore> {
+        self.store.as_ref()
+    }
+
+    /// The key this service files `net` under: the pure architecture
+    /// key re-scoped by the guardrail config (a truncated frontier must
+    /// never be mistaken for an exact one). Model-backed entry points
+    /// ([`resolve`](Self::resolve)/[`query`](Self::query)/
+    /// [`query_batch`](Self::query_batch)) additionally fold in the
+    /// cost-model fingerprint via [`model_key`](Self::model_key).
+    pub fn key_for(&self, net: &NetConfig) -> FrontierKey {
+        FrontierKey::for_net(net, self.cfg.max_choices_per_layer)
+            .mix(&[self.cfg.max_points.map(|c| c as u64).unwrap_or(0)])
+    }
+
+    /// [`key_for`](Self::key_for) scoped to one fitted model set, so a
+    /// persistent store shared across differently-configured runs
+    /// (presets, forest configs, HLS seeds) never serves stale answers.
+    pub fn model_key(&self, models: &CostModels, net: &NetConfig) -> FrontierKey {
+        self.key_for(net).mix(&[models.fingerprint()])
+    }
+
+    /// Resolve the frontier for one network, collapsing the cost models
+    /// into the deployment problem only on a full miss.
+    pub fn resolve(&self, models: &CostModels, net: &NetConfig) -> Arc<ServedFrontier> {
+        self.resolve_with(self.model_key(models, net), || {
+            models.build_problem_parallel(
+                &net.plan(),
+                self.cfg.latency_budget,
+                self.cfg.max_choices_per_layer,
+                self.cfg.workers,
+            )
+        })
+    }
+
+    /// Generic resolve: LRU → store → build. `build_problem` runs only
+    /// when neither cache layer has the frontier; whatever gets built is
+    /// persisted (when a store is attached) and inserted into the LRU.
+    /// Store problems self-heal: an unreadable document is discarded and
+    /// rebuilt, a failed persist still serves from memory — both are
+    /// counted in `store_errors` and logged.
+    pub fn resolve_with(
+        &self,
+        key: FrontierKey,
+        build_problem: impl FnOnce() -> DeployProblem,
+    ) -> Arc<ServedFrontier> {
+        if let Some(hit) = self.lookup(key.hash) {
+            ServeStats::bump(&self.stats.mem_hits);
+            return hit;
+        }
+        if let Some(store) = &self.store {
+            match store.load(&key) {
+                Ok(Some(sf)) => {
+                    ServeStats::bump(&self.stats.store_hits);
+                    let sf = Arc::new(sf);
+                    self.insert(key.hash, Arc::clone(&sf));
+                    return sf;
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    ServeStats::bump(&self.stats.store_errors);
+                    eprintln!(
+                        "[serve] warning: discarding unreadable frontier {}: {e:#}",
+                        key.file_stem()
+                    );
+                }
+            }
+        }
+        let t0 = Instant::now();
+        let prob = build_problem();
+        let index = ParetoFrontier::new(self.cfg.workers)
+            .with_max_points(self.cfg.max_points)
+            .build(&prob);
+        ServeStats::bump(&self.stats.builds);
+        self.stats
+            .build_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let sf = Arc::new(ServedFrontier::from_problem(key.clone(), &prob, index));
+        if let Some(store) = &self.store {
+            if let Err(e) = store.save(&sf) {
+                ServeStats::bump(&self.stats.store_errors);
+                eprintln!(
+                    "[serve] warning: could not persist frontier {}: {e:#}",
+                    key.file_stem()
+                );
+            }
+        }
+        self.insert(key.hash, Arc::clone(&sf));
+        sf
+    }
+
+    /// Minimum-cost deployment of `net` within `latency_budget`, served
+    /// from the cached frontier (None = infeasible even at max speed).
+    pub fn query(
+        &self,
+        models: &CostModels,
+        net: &NetConfig,
+        latency_budget: f64,
+    ) -> Option<Solution> {
+        ServeStats::bump(&self.stats.queries);
+        self.resolve(models, net).index.query(latency_budget)
+    }
+
+    /// Batch endpoint: answer every request, resolving duplicate
+    /// architectures through the LRU once and sharding the pure index
+    /// lookups over the worker pool. Responses keep request order.
+    pub fn query_batch(
+        &self,
+        models: &CostModels,
+        requests: &[BatchRequest],
+    ) -> Vec<BatchResponse> {
+        self.batch_impl(
+            requests,
+            &|net| self.model_key(models, net),
+            &|net| {
+                models.build_problem_parallel(
+                    &net.plan(),
+                    self.cfg.latency_budget,
+                    self.cfg.max_choices_per_layer,
+                    self.cfg.workers,
+                )
+            },
+        )
+    }
+
+    /// [`query_batch`](Self::query_batch) with an injected problem
+    /// builder (tests and non-CostModels clients); entries are filed
+    /// under the plain architecture key.
+    pub fn query_batch_with(
+        &self,
+        requests: &[BatchRequest],
+        build: &dyn Fn(&NetConfig) -> DeployProblem,
+    ) -> Vec<BatchResponse> {
+        self.batch_impl(requests, &|net| self.key_for(net), build)
+    }
+
+    fn batch_impl(
+        &self,
+        requests: &[BatchRequest],
+        key_of: &dyn Fn(&NetConfig) -> FrontierKey,
+        build: &dyn Fn(&NetConfig) -> DeployProblem,
+    ) -> Vec<BatchResponse> {
+        if requests.is_empty() {
+            return Vec::new();
+        }
+        ServeStats::bump(&self.stats.batches);
+        self.stats
+            .queries
+            .fetch_add(requests.len() as u64, Ordering::Relaxed);
+        // Phase 1: resolve sequentially (duplicates hit the LRU; each
+        // build already fans its DP merges out over the worker pool).
+        let pairs: Vec<(Arc<ServedFrontier>, f64)> = requests
+            .iter()
+            .map(|r| (self.resolve_with(key_of(&r.net), || build(&r.net)), r.budget))
+            .collect();
+        // Phase 2: the lookups are O(log n) binary searches — sharding
+        // them only pays once the batch is big enough to amortize the
+        // worker-pool thread spawns.
+        let answer = |sf: &ServedFrontier, budget: f64| BatchResponse {
+            key: sf.key.clone(),
+            budget,
+            solution: sf.index.query(budget),
+        };
+        let workers = self.cfg.workers.min(pairs.len()).max(1);
+        if workers <= 1 || pairs.len() < BATCH_SHARD_MIN {
+            return pairs.iter().map(|(sf, b)| answer(sf, *b)).collect();
+        }
+        let per = pairs.len().div_ceil(workers);
+        let jobs: Vec<Box<dyn FnOnce() -> Vec<BatchResponse> + Send>> = pairs
+            .chunks(per)
+            .map(|chunk| {
+                let chunk: Vec<(Arc<ServedFrontier>, f64)> = chunk.to_vec();
+                Box::new(move || {
+                    chunk
+                        .iter()
+                        .map(|(sf, b)| BatchResponse {
+                            key: sf.key.clone(),
+                            budget: *b,
+                            solution: sf.index.query(*b),
+                        })
+                        .collect()
+                }) as Box<dyn FnOnce() -> Vec<BatchResponse> + Send>
+            })
+            .collect();
+        parallel_map(workers, jobs).into_iter().flatten().collect()
+    }
+
+    /// Keys currently hot in memory (diagnostics).
+    pub fn cached_keys(&self) -> Vec<u64> {
+        let st = self.state.lock().unwrap();
+        let mut keys: Vec<u64> = st.entries.keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    fn lookup(&self, hash: u64) -> Option<Arc<ServedFrontier>> {
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        st.entries.get_mut(&hash).map(|(sf, used)| {
+            *used = tick;
+            Arc::clone(sf)
+        })
+    }
+
+    fn insert(&self, hash: u64, sf: Arc<ServedFrontier>) {
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        st.entries.insert(hash, (sf, tick));
+        while st.entries.len() > self.cfg.capacity {
+            let Some((&oldest, _)) = st.entries.iter().min_by_key(|(_, (_, used))| *used) else {
+                break;
+            };
+            st.entries.remove(&oldest);
+            ServeStats::bump(&self.stats.evictions);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch-request documents (the `ntorc serve` wire format)
+// ---------------------------------------------------------------------------
+
+/// Parse a batch-request document. Accepted shapes:
+///
+/// ```json
+/// {"requests": [
+///   {"network": "model1", "budget": 50000},
+///   {"net": {"window": 64, "conv": [[3, 8]], "lstm": [8], "dense": [16, 1]},
+///    "budgets": [20000, 50000]}
+/// ]}
+/// ```
+///
+/// or a bare array of the same request objects. Named networks resolve
+/// through `named` (the CLI wires `report::table4_models`); inline nets
+/// are validated with [`NetConfig::is_valid`]. Each entry carries one
+/// `budget` or a `budgets` list (expanded to one request per budget).
+pub fn parse_requests(
+    doc: &Json,
+    named: &dyn Fn(&str) -> Option<NetConfig>,
+) -> Result<Vec<BatchRequest>> {
+    let items = if let Some(arr) = doc.as_arr() {
+        arr
+    } else {
+        doc.get("requests")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'requests' must be an array"))?
+    };
+    let mut out = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let net = if let Ok(name) = item.get("network") {
+            let name = name
+                .as_str()
+                .ok_or_else(|| anyhow!("request {i}: 'network' must be a string"))?;
+            named(name).ok_or_else(|| anyhow!("request {i}: unknown network '{name}'"))?
+        } else {
+            parse_net(item.get("net").with_context(|| {
+                format!("request {i}: needs 'network' (named) or 'net' (inline)")
+            })?)
+            .with_context(|| format!("request {i}"))?
+        };
+        let mut budgets = Vec::new();
+        if let Ok(b) = item.get("budget") {
+            budgets.push(
+                b.as_f64()
+                    .ok_or_else(|| anyhow!("request {i}: 'budget' must be a number"))?,
+            );
+        }
+        if let Ok(list) = item.get("budgets") {
+            for b in list
+                .as_arr()
+                .ok_or_else(|| anyhow!("request {i}: 'budgets' must be an array"))?
+            {
+                budgets.push(
+                    b.as_f64()
+                        .ok_or_else(|| anyhow!("request {i}: budgets hold non-numbers"))?,
+                );
+            }
+        }
+        if budgets.is_empty() {
+            bail!("request {i}: needs 'budget' or 'budgets'");
+        }
+        for budget in budgets {
+            out.push(BatchRequest { net: net.clone(), budget });
+        }
+    }
+    if out.is_empty() {
+        bail!("no requests in document");
+    }
+    Ok(out)
+}
+
+/// Parse an inline network: `{"window": w, "conv": [[k, f], ...],
+/// "lstm": [u, ...], "dense": [n, ..., 1]}`.
+fn parse_net(j: &Json) -> Result<NetConfig> {
+    let window = j
+        .get("window")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("'window' must be a number"))?;
+    let mut conv = Vec::new();
+    for (i, pair) in j
+        .get("conv")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'conv' must be an array of [kernel, filters]"))?
+        .iter()
+        .enumerate()
+    {
+        let p = pair
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| anyhow!("conv[{i}] must be a [kernel, filters] pair"))?;
+        let k = p[0].as_usize().ok_or_else(|| anyhow!("conv[{i}] kernel"))?;
+        let f = p[1].as_usize().ok_or_else(|| anyhow!("conv[{i}] filters"))?;
+        conv.push((k, f));
+    }
+    let usizes = |key: &str| -> Result<Vec<usize>> {
+        j.get(key)?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'{key}' must be an array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v.as_usize().ok_or_else(|| anyhow!("{key}[{i}] must be a number")))
+            .collect()
+    };
+    let cfg = NetConfig { window, conv, lstm: usizes("lstm")?, dense: usizes("dense")? };
+    if !cfg.is_valid() {
+        bail!("invalid network configuration: {cfg:?}");
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mip::Choice;
+    use crate::rng::Rng;
+    use crate::testkit::prop_check;
+
+    fn demo_net() -> NetConfig {
+        NetConfig::new(32, vec![(3, 4)], vec![5], vec![6, 1])
+    }
+
+    /// Deterministic toy deployment problem derived from a tag (no cost
+    /// models needed): correlated staircases like the frontier tests.
+    fn toy_problem(tag: u64, n_layers: usize) -> DeployProblem {
+        let mut rng = Rng::new(0x5EED ^ tag);
+        let layers = (0..n_layers)
+            .map(|_| {
+                (0..4)
+                    .map(|j| Choice {
+                        reuse: 1 << j,
+                        cost: 500.0 / (j + 1) as f64 + rng.range_f64(0.0, 20.0),
+                        latency: (8 * (j + 1)) as f64 + rng.range_f64(0.0, 3.0).floor(),
+                    })
+                    .collect()
+            })
+            .collect();
+        DeployProblem { layers, latency_budget: 0.0 }
+    }
+
+    fn toy_key(tag: u64) -> FrontierKey {
+        FrontierKey { hash: tag, name: format!("toy{tag}") }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ntorc_serve_test_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn key_is_stable_across_runs_and_distinct_for_distinct_problems() {
+        // Golden value: any change to the hashing layout shows up here
+        // (the hash is persisted in store file names, so silent changes
+        // would orphan every stored frontier).
+        let key = FrontierKey::for_net(&demo_net(), 48);
+        assert_eq!(key.hash, 0x8c56e7875565265d, "key layout changed");
+        assert_eq!(key, FrontierKey::for_net(&demo_net(), 48));
+        // Distinct grid cap => distinct problem => distinct key.
+        assert_eq!(FrontierKey::for_net(&demo_net(), 16).hash, 0xacfe0665f77be23d);
+        // Distinct architectures => distinct keys.
+        let other = NetConfig::new(32, vec![(3, 4)], vec![5], vec![7, 1]);
+        assert_ne!(FrontierKey::for_net(&other, 48).hash, key.hash);
+        let deeper = NetConfig::new(32, vec![(3, 4), (3, 4)], vec![5], vec![6, 1]);
+        assert_ne!(FrontierKey::for_net(&deeper, 48).hash, key.hash);
+    }
+
+    #[test]
+    fn key_mix_rescopes_deterministically() {
+        let base = FrontierKey::for_net(&demo_net(), 48);
+        let mixed = base.mix(&[7]);
+        assert_ne!(mixed.hash, base.hash);
+        assert_eq!(mixed.hash, base.mix(&[7]).hash, "mix must be deterministic");
+        assert_ne!(base.mix(&[7]).hash, base.mix(&[8]).hash);
+        assert_eq!(mixed.name, base.name, "the slug survives re-scoping");
+        // Service keys fold the guardrail config in: a truncated
+        // frontier never masquerades as an exact one in the store.
+        let exact = FrontierService::new(ServeConfig::default(), None);
+        let capped = FrontierService::new(
+            ServeConfig { max_points: Some(100), ..ServeConfig::default() },
+            None,
+        );
+        assert_ne!(exact.key_for(&demo_net()).hash, capped.key_for(&demo_net()).hash);
+        // Some(0) normalizes to the builder's clamp before key mixing —
+        // it can never collide with the exact (None) key while building
+        // a truncated frontier.
+        let zero = FrontierService::new(
+            ServeConfig { max_points: Some(0), ..ServeConfig::default() },
+            None,
+        );
+        assert_eq!(zero.config().max_points, Some(2));
+        assert_ne!(zero.key_for(&demo_net()).hash, exact.key_for(&demo_net()).hash);
+    }
+
+    #[test]
+    fn key_slug_is_filesystem_safe() {
+        let key = FrontierKey::for_net(&demo_net(), 48);
+        assert_eq!(key.name, "w32-c-3x4-l-5-d-6-1");
+        assert!(key.file_stem().chars().all(|c| c.is_ascii_alphanumeric() || c == '-'));
+        assert!(key.file_stem().ends_with(&format!("{:016x}", key.hash)));
+    }
+
+    #[test]
+    fn served_frontier_json_round_trips() {
+        let prob = toy_problem(7, 3);
+        let index = ParetoFrontier::new(1).build(&prob);
+        let sf = ServedFrontier::from_problem(toy_key(7), &prob, index);
+        sf.check().unwrap();
+        let text = sf.to_json().to_pretty();
+        let back = ServedFrontier::from_json(&parse_json(&text).unwrap()).unwrap();
+        assert_eq!(back.key, sf.key);
+        assert_eq!(back.reuse, sf.reuse);
+        assert_eq!(back.index.len(), sf.index.len());
+        for i in 0..sf.index.len() {
+            assert_eq!(back.index.point(i), sf.index.point(i));
+            assert_eq!(back.index.pick(i), sf.index.pick(i));
+            assert_eq!(back.reuse_of(&back.index.pick(i)), sf.reuse_of(&sf.index.pick(i)));
+        }
+    }
+
+    #[test]
+    fn store_round_trips_and_rejects_corruption() {
+        let dir = temp_dir("store");
+        let store = FrontierStore::new(&dir);
+        let prob = toy_problem(3, 2);
+        let index = ParetoFrontier::new(1).build(&prob);
+        let sf = ServedFrontier::from_problem(toy_key(3), &prob, index);
+        assert!(store.load(&sf.key).unwrap().is_none(), "store starts empty");
+        let path = store.save(&sf).unwrap();
+        assert!(store.contains(&sf.key));
+        assert_eq!(store.list(), vec![path.clone()]);
+        let back = store.load(&sf.key).unwrap().expect("persisted");
+        assert_eq!(back.index.len(), sf.index.len());
+        // Truncated file: clean error, no panic.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert!(store.load(&sf.key).is_err());
+        // Valid JSON, violated invariants: clean error.
+        let evil = text.replace("\"truncated\": false", "\"truncated\": 3");
+        std::fs::write(&path, evil).unwrap();
+        assert!(store.load(&sf.key).is_err());
+        // Key mismatch (document filed under the wrong name).
+        std::fs::write(&path, &text).unwrap();
+        let other = toy_key(4);
+        std::fs::write(store.path_for(&other), &text).unwrap();
+        assert!(store.load(&other).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn service_memory_path_builds_once_then_hits() {
+        let svc = FrontierService::new(ServeConfig::default(), None);
+        let key = toy_key(11);
+        let a = svc.resolve_with(key.clone(), || toy_problem(11, 3));
+        let b = svc.resolve_with(key.clone(), || panic!("must not rebuild"));
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = svc.stats.snapshot();
+        assert_eq!((s.builds, s.mem_hits, s.store_hits), (1, 1, 0));
+        assert!(s.hit_rate() > 0.0);
+        assert!(s.build_seconds >= 0.0);
+    }
+
+    #[test]
+    fn service_store_path_survives_sessions() {
+        let dir = temp_dir("sessions");
+        let mk = || FrontierService::new(ServeConfig::default(), Some(FrontierStore::new(&dir)));
+        let key = toy_key(21);
+        let first = mk();
+        let built = first.resolve_with(key.clone(), || toy_problem(21, 3));
+        assert_eq!(first.stats.snapshot().builds, 1);
+        // A brand-new service over the same store never builds.
+        let second = mk();
+        let loaded = second.resolve_with(key.clone(), || panic!("store must answer"));
+        let s = second.stats.snapshot();
+        assert_eq!((s.builds, s.store_hits), (0, 1));
+        assert_eq!(loaded.index.len(), built.index.len());
+        for i in 0..built.index.len() {
+            assert_eq!(loaded.index.point(i), built.index.point(i));
+            assert_eq!(loaded.index.pick(i), built.index.pick(i));
+        }
+        // Corrupt the document: the service self-heals by rebuilding.
+        let path = FrontierStore::new(&dir).path_for(&key);
+        std::fs::write(&path, "{not json").unwrap();
+        let third = mk();
+        let healed = third.resolve_with(key.clone(), || toy_problem(21, 3));
+        let s = third.stats.snapshot();
+        assert_eq!((s.builds, s.store_errors), (1, 1));
+        assert_eq!(healed.index.len(), built.index.len());
+        // ... and the rebuilt document is valid again.
+        assert!(FrontierStore::new(&dir).load(&key).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let cfg = ServeConfig { capacity: 2, ..ServeConfig::default() };
+        let svc = FrontierService::new(cfg, None);
+        svc.resolve_with(toy_key(1), || toy_problem(1, 2));
+        svc.resolve_with(toy_key(2), || toy_problem(2, 2));
+        // Touch 1 so 2 becomes the eviction victim.
+        svc.resolve_with(toy_key(1), || panic!("hot"));
+        svc.resolve_with(toy_key(3), || toy_problem(3, 2));
+        let s = svc.stats.snapshot();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(svc.cached_keys(), vec![1, 3]);
+        // Key 2 is cold again (no store): resolving rebuilds.
+        svc.resolve_with(toy_key(2), || toy_problem(2, 2));
+        assert_eq!(svc.stats.snapshot().builds, 4);
+    }
+
+    #[test]
+    fn batch_endpoint_matches_individual_queries_any_worker_count() {
+        let nets = [
+            NetConfig::new(16, vec![], vec![], vec![4, 1]),
+            NetConfig::new(16, vec![], vec![], vec![8, 1]),
+        ];
+        let build = |net: &NetConfig| toy_problem(net.dense[0] as u64, net.plan().len());
+        // Enough requests to cross BATCH_SHARD_MIN so workers=4 really
+        // exercises the parallel_map path.
+        let n = BATCH_SHARD_MIN + 8;
+        let mut requests = Vec::new();
+        for i in 0..n {
+            requests.push(BatchRequest {
+                net: nets[i % 2].clone(),
+                budget: 10.0 + 7.0 * i as f64,
+            });
+        }
+        let mut reference: Option<Vec<Option<Solution>>> = None;
+        for workers in [1usize, 4] {
+            let cfg = ServeConfig { workers, ..ServeConfig::default() };
+            let svc = FrontierService::new(cfg, None);
+            let responses = svc.query_batch_with(&requests, &build);
+            assert_eq!(responses.len(), requests.len());
+            // Order preserved; duplicates deduped into 2 builds.
+            let s = svc.stats.snapshot();
+            assert_eq!(s.builds, 2);
+            assert_eq!(s.mem_hits, n as u64 - 2);
+            assert_eq!(s.queries, n as u64);
+            assert_eq!(s.batches, 1);
+            for (req, resp) in requests.iter().zip(&responses) {
+                assert_eq!(resp.budget, req.budget);
+                assert_eq!(resp.key, svc.key_for(&req.net));
+                let direct = svc
+                    .resolve_with(svc.key_for(&req.net), || unreachable!())
+                    .index
+                    .query(req.budget);
+                assert_eq!(resp.solution, direct);
+            }
+            let answers: Vec<Option<Solution>> =
+                responses.into_iter().map(|r| r.solution).collect();
+            match &reference {
+                None => reference = Some(answers),
+                Some(r) => assert_eq!(r, &answers, "workers={workers} changed answers"),
+            }
+        }
+    }
+
+    #[test]
+    fn property_store_round_trip_preserves_queries() {
+        let dir = temp_dir("prop");
+        prop_check("serve-store-round-trip", 10, |g| {
+            let tag = g.rng.next_u64();
+            let mut rng = Rng::new(tag);
+            let prob = toy_problem(tag, g.int(1, 4));
+            let index = ParetoFrontier::new(1).build(&prob);
+            let sf = ServedFrontier::from_problem(
+                FrontierKey { hash: tag, name: "prop".into() },
+                &prob,
+                index,
+            );
+            let store = FrontierStore::new(&dir);
+            store.save(&sf).map_err(|e| format!("save: {e:#}"))?;
+            let back = store
+                .load(&sf.key)
+                .map_err(|e| format!("load: {e:#}"))?
+                .ok_or("missing after save")?;
+            for _ in 0..20 {
+                let budget = rng.range_f64(0.0, 150.0);
+                if back.index.query(budget) != sf.index.query(budget) {
+                    return Err(format!("query({budget}) changed across persistence"));
+                }
+            }
+            Ok(())
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parse_requests_accepts_named_inline_and_budget_lists() {
+        let doc = parse_json(
+            r#"{"requests": [
+                {"network": "tiny", "budget": 50000},
+                {"net": {"window": 16, "conv": [], "lstm": [], "dense": [4, 1]},
+                 "budgets": [100, 200]}
+            ]}"#,
+        )
+        .unwrap();
+        let named = |name: &str| {
+            (name == "tiny").then(|| NetConfig::new(16, vec![], vec![], vec![8, 1]))
+        };
+        let reqs = parse_requests(&doc, &named).unwrap();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[0].budget, 50_000.0);
+        assert_eq!(reqs[0].net.dense, vec![8, 1]);
+        assert_eq!(reqs[1].net.dense, vec![4, 1]);
+        assert_eq!((reqs[1].budget, reqs[2].budget), (100.0, 200.0));
+        // Bare-array form parses too.
+        let bare = parse_json(r#"[{"network": "tiny", "budget": 1}]"#).unwrap();
+        assert_eq!(parse_requests(&bare, &named).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn parse_requests_rejects_malformed_documents() {
+        let named = |_: &str| -> Option<NetConfig> { None };
+        for bad in [
+            r#"{}"#,
+            r#"{"requests": []}"#,
+            r#"{"requests": [{"network": "nope", "budget": 1}]}"#,
+            r#"{"requests": [{"network": 3, "budget": 1}]}"#,
+            r#"{"requests": [{"net": {"window": 8, "conv": [], "lstm": [], "dense": [4]},
+                "budget": 1}]}"#,
+            r#"{"requests": [{"net": {"window": 8, "conv": [], "lstm": [], "dense": [4, 1]}}]}"#,
+        ] {
+            let doc = parse_json(bad).unwrap();
+            assert!(parse_requests(&doc, &named).is_err(), "accepted: {bad}");
+        }
+    }
+}

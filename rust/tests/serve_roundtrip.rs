@@ -1,0 +1,113 @@
+//! Solve-once-serve-many, end to end (the PR's acceptance bar): two
+//! `FrontierService` sessions over the same persistent store. The first
+//! session builds and persists the frontier; the second answers a full
+//! budget sweep WITHOUT ever invoking `ParetoFrontier::build` (its build
+//! counter stays 0), and every answer is bit-identical to a fresh
+//! `solve_bb` on the same problem.
+
+use ntorc::coordinator::{Pipeline, PipelineConfig};
+use ntorc::layers::NetConfig;
+use ntorc::serve::{BatchRequest, FrontierService, FrontierStore, ServeConfig};
+
+fn temp_store(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ntorc_serve_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        capacity: 4,
+        workers: 1,
+        max_choices_per_layer: 16,
+        latency_budget: 50_000.0,
+        max_points: None,
+    }
+}
+
+#[test]
+fn second_session_serves_sweep_from_store_without_building() {
+    let pipe = Pipeline::new(PipelineConfig::smoke());
+    let db = pipe.synth_database();
+    let models = pipe.fit_models(&db);
+    let net = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]);
+    let budgets: Vec<f64> = (1..=30).map(|i| 2_000.0 * i as f64).collect();
+    let dir = temp_store("roundtrip");
+
+    // Session 1: cold — builds the frontier once, persists it.
+    let svc1 = FrontierService::new(serve_cfg(), Some(FrontierStore::new(&dir)));
+    let first: Vec<_> = budgets.iter().map(|&b| svc1.query(&models, &net, b)).collect();
+    let s1 = svc1.stats.snapshot();
+    assert_eq!(s1.builds, 1, "one build for the whole sweep");
+    assert_eq!(s1.store_hits, 0);
+    assert!(first.iter().any(|s| s.is_some()), "sweep must have feasible budgets");
+
+    // Session 2: a fresh service over the same store answers the whole
+    // sweep with its build counter still at zero.
+    let svc2 = FrontierService::new(serve_cfg(), Some(FrontierStore::new(&dir)));
+    let second: Vec<_> = budgets.iter().map(|&b| svc2.query(&models, &net, b)).collect();
+    let s2 = svc2.stats.snapshot();
+    assert_eq!(s2.builds, 0, "second session must never invoke ParetoFrontier::build");
+    assert_eq!(s2.store_hits, 1, "exactly one store load");
+    assert_eq!(s2.mem_hits, budgets.len() as u64 - 1, "rest served from the LRU");
+    assert_eq!(first, second, "answers must be identical across sessions");
+
+    // ... and every answer is bit-identical to a fresh solve_bb on the
+    // same problem (cross_check_bb re-solves each budget with B&B and
+    // compares optimal cost + feasibility).
+    let prob = models.build_problem(&net.plan(), 50_000.0, 16);
+    let served = svc2.resolve(&models, &net);
+    served
+        .index
+        .cross_check_bb(&prob, &budgets)
+        .expect("frontier answers must reproduce fresh B&B solves");
+    // Reuse factors served across sessions match the problem's choices.
+    for sol in second.into_iter().flatten() {
+        let reuse = served.reuse_of(&sol.pick);
+        for (layer, (&j, &r)) in sol.pick.iter().zip(&reuse).enumerate() {
+            assert_eq!(prob.layers[layer][j].reuse, r);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batch_endpoint_serves_mixed_workload_across_sessions() {
+    let pipe = Pipeline::new(PipelineConfig::smoke());
+    let db = pipe.synth_database();
+    let models = pipe.fit_models(&db);
+    let nets = [
+        NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]),
+        NetConfig::new(32, vec![], vec![4], vec![8, 1]),
+    ];
+    let mut requests = Vec::new();
+    for i in 0..10 {
+        requests.push(BatchRequest {
+            net: nets[i % 2].clone(),
+            budget: 10_000.0 + 20_000.0 * i as f64,
+        });
+    }
+    let dir = temp_store("batch");
+
+    let svc1 = FrontierService::new(serve_cfg(), Some(FrontierStore::new(&dir)));
+    let cold = svc1.query_batch(&models, &requests);
+    let s1 = svc1.stats.snapshot();
+    assert_eq!(cold.len(), requests.len());
+    assert_eq!(s1.builds, 2, "two unique architectures, two builds");
+    assert_eq!(s1.mem_hits, 8);
+    assert_eq!(s1.queries, 10);
+
+    // A warm session answers the identical workload purely from disk +
+    // LRU, and byte-for-byte identically.
+    let svc2 = FrontierService::new(serve_cfg(), Some(FrontierStore::new(&dir)));
+    let warm = svc2.query_batch(&models, &requests);
+    let s2 = svc2.stats.snapshot();
+    assert_eq!(s2.builds, 0);
+    assert_eq!(s2.store_hits, 2);
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!(c.key, w.key);
+        assert_eq!(c.budget, w.budget);
+        assert_eq!(c.solution, w.solution);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
