@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Phase 0: PJRT training of the fixed artifact --------------------
     println!("== Phase 0: AOT/PJRT training of `model2` ==");
-    let sim = report::standard_simulator();
+    let sim = report::standard_workload(&cfg.workload);
     let rt = Runtime::new("artifacts")?;
     let model = rt.load("model2")?;
     let data = prepare_data(&sim, &cfg.data, model.meta.window);

@@ -11,7 +11,7 @@ use ntorc::report;
 fn main() {
     let mut b = Bencher::new("ablation_sampler");
     let fast = std::env::var("NTORC_BENCH_FAST").is_ok();
-    let sim = report::standard_simulator();
+    let sim = report::standard_workload("dropbear");
 
     let headers = vec!["sampler", "trials", "front_size", "hypervolume", "best_rmse", "seconds"];
     let mut rows = Vec::new();

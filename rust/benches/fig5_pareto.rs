@@ -19,7 +19,7 @@ fn main() {
     cfg.budget.steps = if fast { 60 } else { 160 };
     cfg.hpo.space = ntorc::hpo::SearchSpace::default();
     let pipe = Pipeline::new(cfg);
-    let sim = report::standard_simulator();
+    let sim = pipe.workload();
 
     let t0 = std::time::Instant::now();
     let out = report::fig5_run(&pipe, &sim);

@@ -10,7 +10,7 @@ use ntorc::report;
 fn main() {
     let mut b = Bencher::new("fig7_trace");
     let fast = std::env::var("NTORC_BENCH_FAST").is_ok();
-    let sim = report::standard_simulator();
+    let sim = report::standard_workload("dropbear");
     let dc = DataConfig {
         seconds_per_run: if fast { 1.0 } else { 3.0 },
         ..DataConfig::smoke()

@@ -225,6 +225,7 @@ fn main() {
         max_choices_per_layer: 48,
         latency_budget: 50_000.0,
         max_points: None,
+        workload: None,
     };
     let svc = FrontierService::new(serve_cfg.clone(), Some(FrontierStore::new(&serve_dir)));
     let t0 = std::time::Instant::now();
@@ -290,6 +291,44 @@ fn main() {
     std::fs::create_dir_all("results").expect("results dir");
     std::fs::write("results/BENCH_frontier.json", report.to_pretty()).expect("bench json");
     println!("[perf_hotpaths] wrote results/BENCH_frontier.json");
+    // Ready-to-commit ratchet candidate: measured values with the
+    // recommended headroom applied (3x for wall-clock metrics — shared
+    // runners are noisy, and the gate adds its own 2x — exact for the
+    // machine-independent bb_nodes counter). The CI artifact carries
+    // this next to the raw report so a baseline ratchet is a review +
+    // copy over benches/BENCH_frontier.baseline.json (see README.md).
+    let ratchet = |key: &str| {
+        let v = report.get(key).unwrap().as_f64().unwrap();
+        if key == "bb_nodes" {
+            v.ceil()
+        } else {
+            (3.0 * v).ceil()
+        }
+    };
+    let ratchet_doc = Json::obj(vec![
+        (
+            "_comment",
+            Json::str(
+                "Suggested next baseline: measured medians x3 headroom (bb_nodes exact). \
+                 Review against benches/README.md before committing."
+                    .to_string(),
+            ),
+        ),
+        ("bb_nodes", Json::num(ratchet("bb_nodes"))),
+        ("bb_solve_ns", Json::num(ratchet("bb_solve_ns"))),
+        ("frontier_build_ns", Json::num(ratchet("frontier_build_ns"))),
+        ("frontier_query_ns", Json::num(ratchet("frontier_query_ns"))),
+        ("frontier_sweep_ns", Json::num(ratchet("frontier_sweep_ns"))),
+        ("serve_cold_ns", Json::num(ratchet("serve_cold_ns"))),
+        ("serve_warm_ns", Json::num(ratchet("serve_warm_ns"))),
+        (
+            "serve_batch_ns_per_query",
+            Json::num(ratchet("serve_batch_ns_per_query")),
+        ),
+    ]);
+    std::fs::write("results/BENCH_frontier.ratchet.json", ratchet_doc.to_pretty())
+        .expect("ratchet json");
+    println!("[perf_hotpaths] wrote results/BENCH_frontier.ratchet.json (ratchet candidate)");
     if let Ok(path) = std::env::var("NTORC_BENCH_BASELINE") {
         let text = std::fs::read_to_string(&path)
             .unwrap_or_else(|e| panic!("cannot read baseline {path}: {e}"));
@@ -331,20 +370,36 @@ fn main() {
         candidate_reuse_factors(&spec, 48).len()
     });
 
-    // --- beam simulator ----------------------------------------------------
+    // --- workload simulators -----------------------------------------------
     let sim = ntorc::dropbear::Simulator::new(ntorc::dropbear::SimConfig {
         table_points: 32,
         ..Default::default()
     });
     let meas = b.bench("dropbear_generate/1s_run", || {
         sim.generate(ntorc::dropbear::Profile::RandomDwell, 1.0, 3)
-            .accel
+            .input
             .len()
     });
     println!(
         "    -> {:.1}x realtime at 5 kHz",
         1e9 / meas.median_ns()
     );
+    let rotor = ntorc::rotor::RotorSim::new(ntorc::rotor::RotorConfig::default());
+    let meas = b.bench("rotor_generate/1s_run", || {
+        rotor
+            .generate(ntorc::rotor::RotorProfile::RandomLoad, 1.0, 3)
+            .input
+            .len()
+    });
+    println!("    -> {:.1}x realtime at 50 kHz", 1e9 / meas.median_ns());
+    let battery = ntorc::battery::BatterySim::new(ntorc::battery::BatteryConfig::default());
+    let meas = b.bench("battery_generate/1s_run", || {
+        battery
+            .generate(ntorc::battery::BatteryProfile::RandomWalk, 1.0, 3)
+            .input
+            .len()
+    });
+    println!("    -> {:.1}x realtime at 500 Hz", 1e9 / meas.median_ns());
 
     // --- PJRT steps (needs artifacts) --------------------------------------
     if std::path::Path::new("artifacts/quickstart.meta.json").exists() {

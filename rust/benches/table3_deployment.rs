@@ -23,7 +23,7 @@ fn main() {
     let models = pipe.fit_models(&db);
     b.record("models/build", t0.elapsed().as_nanos() as f64);
 
-    let sim = report::standard_simulator();
+    let sim = pipe.workload();
     let out = report::fig5_run(&pipe, &sim);
     let t0 = std::time::Instant::now();
     let deployed = report::deploy_pareto(&pipe, &models, &out.trials);

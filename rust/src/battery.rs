@@ -1,0 +1,339 @@
+//! Battery state-of-charge workload: SoC estimation from the terminal
+//! voltage of a discharging cell.
+//!
+//! The third in-tree cyber-physical scenario family: a Li-ion-shaped
+//! cell is discharged by a load-current profile while a voltage sensor
+//! samples the terminal voltage at 500 Hz. The cell is the standard
+//! first-order equivalent-circuit model used in BMS work:
+//!
+//! * **Open-circuit voltage** [`ocv`] — a smooth, strictly increasing
+//!   function of SoC (3.0 V empty, 4.2 V full);
+//! * **Ohmic drop** — series resistance `R0` (instantaneous `i·R0`);
+//! * **One RC pair** — `R1 ∥ C1` polarization voltage with time
+//!   constant `τ = R1·C1`, so the terminal voltage sags under load and
+//!   relaxes back toward OCV during rests;
+//! * **Coulomb counting** — SoC integrates the discharge current over a
+//!   (deliberately small, accelerated-scale) capacity so state visibly
+//!   evolves within seconds-long runs;
+//! * **Sensor noise** on the measured voltage.
+//!
+//! The inverse problem is to track `SoC(t) ∈ [0, 1]` from the voltage
+//! trace. At 500 Hz the per-sample deadline is 500,000 cycles (2 ms at
+//! 250 MHz) — an order of magnitude *looser* than DROPBEAR's 200 µs:
+//! this workload exercises the relaxed end of the frontier, where much
+//! larger networks are deployable.
+
+use crate::rng::Rng;
+use crate::workload::{Run, Workload};
+
+/// Voltage sample rate (typical BMS telemetry).
+pub const SAMPLE_RATE_HZ: f64 = 500.0;
+
+/// Open-circuit voltage as a function of state of charge: strictly
+/// increasing, 3.0 V at empty, 4.2 V at full.
+pub fn ocv(soc: f64) -> f64 {
+    3.0 + 0.9 * soc + 0.3 * soc * soc
+}
+
+/// The load profiles (mirrors `dropbear::Profile`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BatteryProfile {
+    /// Fixed discharge current for the whole run.
+    ConstantDischarge,
+    /// Square pulses (load / rest) of growing amplitude: exercises the
+    /// RC relaxation in both directions.
+    PulsedLoad,
+    /// Random load steps at fixed intervals, slew-limited.
+    RandomWalk,
+}
+
+impl BatteryProfile {
+    pub fn name(self) -> &'static str {
+        match self {
+            BatteryProfile::ConstantDischarge => "constant_discharge",
+            BatteryProfile::PulsedLoad => "pulsed_load",
+            BatteryProfile::RandomWalk => "random_walk",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            BatteryProfile::ConstantDischarge => 0,
+            BatteryProfile::PulsedLoad => 1,
+            BatteryProfile::RandomWalk => 2,
+        }
+    }
+
+    pub const ALL: [BatteryProfile; 3] = [
+        BatteryProfile::ConstantDischarge,
+        BatteryProfile::PulsedLoad,
+        BatteryProfile::RandomWalk,
+    ];
+}
+
+/// Cell + sensor configuration.
+#[derive(Clone, Debug)]
+pub struct BatteryConfig {
+    /// Capacity in ampere-seconds (accelerated scale: a nominal load
+    /// moves SoC visibly within seconds-long runs).
+    pub capacity_as: f64,
+    /// Series (ohmic) resistance.
+    pub r0_ohm: f64,
+    /// RC-pair resistance.
+    pub r1_ohm: f64,
+    /// RC-pair capacitance (τ = R1·C1 = 1.2 s by default).
+    pub c1_f: f64,
+    /// Maximum load current.
+    pub i_max_a: f64,
+    /// Voltage-sensor noise RMS.
+    pub noise_v: f64,
+}
+
+impl Default for BatteryConfig {
+    fn default() -> Self {
+        BatteryConfig {
+            capacity_as: 60.0,
+            r0_ohm: 0.05,
+            r1_ohm: 0.03,
+            c1_f: 40.0,
+            i_max_a: 8.0,
+            noise_v: 0.004,
+        }
+    }
+}
+
+/// The equivalent-circuit cell simulator.
+pub struct BatterySim {
+    pub cfg: BatteryConfig,
+}
+
+impl BatterySim {
+    pub fn new(cfg: BatteryConfig) -> Self {
+        assert!(cfg.capacity_as > 0.0 && cfg.c1_f > 0.0 && cfg.r1_ohm > 0.0);
+        BatterySim { cfg }
+    }
+
+    /// Core simulation: terminal voltage and SoC traces from a
+    /// per-sample discharge-current profile (amps, >= 0) and an initial
+    /// SoC. Public so the physics tests can drive hand-crafted loads.
+    pub fn simulate(
+        &self,
+        current_a: &[f64],
+        soc0: f64,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let dt = 1.0 / SAMPLE_RATE_HZ;
+        let mut soc = soc0.clamp(0.0, 1.0);
+        let mut v_rc = 0.0f64;
+        let mut volts = Vec::with_capacity(current_a.len());
+        let mut socs = Vec::with_capacity(current_a.len());
+        for &i in current_a {
+            assert!(i >= 0.0, "discharge-only model: current must be >= 0");
+            let v = ocv(soc) - i * self.cfg.r0_ohm - v_rc + self.cfg.noise_v * rng.normal();
+            volts.push(v as f32);
+            socs.push(soc as f32);
+            // State update (forward Euler; dt << tau).
+            v_rc += dt * (i / self.cfg.c1_f - v_rc / (self.cfg.r1_ohm * self.cfg.c1_f));
+            soc = (soc - i * dt / self.cfg.capacity_as).max(0.0);
+        }
+        (volts, socs)
+    }
+
+    /// Build the load-current trajectory for one profile.
+    fn load(&self, profile: BatteryProfile, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let i_max = self.cfg.i_max_a;
+        let mut out = Vec::with_capacity(n);
+        match profile {
+            BatteryProfile::ConstantDischarge => {
+                let i = rng.range_f64(0.2, 0.8) * i_max;
+                out.resize(n, i);
+            }
+            BatteryProfile::PulsedLoad => {
+                // 1 s period, 50% duty; amplitude ramps 0.3 -> 1.0 of
+                // i_max across the run.
+                let period = SAMPLE_RATE_HZ as usize; // 1 s of samples
+                let half = (period / 2).max(1);
+                for i in 0..n {
+                    let amp = 0.3 + 0.7 * i as f64 / (n - 1).max(1) as f64;
+                    let on = (i % period) < half;
+                    out.push(if on { amp * i_max } else { 0.0 });
+                }
+            }
+            BatteryProfile::RandomWalk => {
+                // New target every 0.3 s, slewed at i_max per 50 ms.
+                let dwell = (0.3 * SAMPLE_RATE_HZ) as usize;
+                let max_step = i_max / (0.05 * SAMPLE_RATE_HZ);
+                let mut target = rng.range_f64(0.0, i_max);
+                let mut i_now = target;
+                for i in 0..n {
+                    if i > 0 && i % dwell == 0 {
+                        target = rng.range_f64(0.0, i_max);
+                    }
+                    i_now += (target - i_now).clamp(-max_step, max_step);
+                    out.push(i_now);
+                }
+            }
+        }
+        out
+    }
+
+    /// Generate one run for a concrete profile (the typed counterpart of
+    /// the trait's index-based [`Workload::generate_run`]).
+    pub fn generate(&self, profile: BatteryProfile, seconds: f64, seed: u64) -> Run {
+        let n = (seconds * SAMPLE_RATE_HZ) as usize;
+        let mut rng = Rng::new(seed);
+        let soc0 = rng.range_f64(0.75, 1.0);
+        let current = self.load(profile, n, &mut rng);
+        let (input, target) = self.simulate(&current, soc0, &mut rng);
+        Run { profile: profile.index(), seed, input, target }
+    }
+}
+
+impl Workload for BatterySim {
+    fn name(&self) -> &'static str {
+        "battery"
+    }
+
+    fn sample_rate_hz(&self) -> f64 {
+        SAMPLE_RATE_HZ
+    }
+
+    fn profiles(&self) -> &'static [&'static str] {
+        &["constant_discharge", "pulsed_load", "random_walk"]
+    }
+
+    fn profile_mix(&self) -> &'static [usize] {
+        &[30, 50, 40]
+    }
+
+    fn target_range(&self) -> (f32, f32) {
+        (0.0, 1.0)
+    }
+
+    fn generate_run(&self, profile: usize, seconds: f64, seed: u64) -> Run {
+        self.generate(BatteryProfile::ALL[profile], seconds, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> BatterySim {
+        BatterySim::new(BatteryConfig::default())
+    }
+
+    #[test]
+    fn ocv_is_monotone_and_spans_cell_range() {
+        assert_eq!(ocv(0.0), 3.0);
+        assert!((ocv(1.0) - 4.2).abs() < 1e-12);
+        let mut prev = ocv(0.0);
+        for k in 1..=100 {
+            let v = ocv(k as f64 / 100.0);
+            assert!(v > prev, "OCV not increasing at soc {}", k as f64 / 100.0);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn run_shapes_and_ranges() {
+        let sim = sim();
+        for profile in BatteryProfile::ALL {
+            let run = sim.generate(profile, 2.0, 1);
+            assert_eq!(run.input.len(), 1_000);
+            assert_eq!(run.target.len(), 1_000);
+            assert_eq!(run.profile, profile.index());
+            for &s in &run.target {
+                assert!((0.0..=1.0).contains(&s), "soc {s} out of range");
+            }
+            for &v in &run.input {
+                assert!(v.is_finite() && (2.0..=4.4).contains(&v), "voltage {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn soc_never_increases_under_discharge() {
+        let sim = sim();
+        for profile in BatteryProfile::ALL {
+            let run = sim.generate(profile, 2.0, 5);
+            for w in run.target.windows(2) {
+                assert!(w[1] <= w[0] + 1e-7, "soc rose {} -> {}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_discharge_coulomb_counts_exactly() {
+        // After t seconds at constant current i (no clamp), the SoC drop
+        // is exactly i·t / capacity.
+        let sim = sim();
+        let n = 1_000; // 2 s
+        let i = 3.0;
+        let (_, socs) = sim.simulate(&vec![i; n], 0.9, &mut Rng::new(2));
+        let expect = i * (n - 1) as f64 / SAMPLE_RATE_HZ / sim.cfg.capacity_as;
+        let drop = (socs[0] - socs[n - 1]) as f64;
+        assert!((drop - expect).abs() < 1e-5, "drop {drop} vs {expect}");
+    }
+
+    #[test]
+    fn rc_pair_relaxes_during_rest() {
+        // 1 s at 6 A then 2 s rest: the polarization voltage decays
+        // (tau = 1.2 s), so the terminal voltage recovers toward OCV.
+        let sim = sim();
+        let n_load = 500;
+        let n_rest = 1_000;
+        let mut current = vec![6.0; n_load];
+        current.extend(vec![0.0; n_rest]);
+        let (volts, _) = sim.simulate(&current, 0.9, &mut Rng::new(3));
+        let mean = |xs: &[f32]| xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+        let just_after_drop = mean(&volts[n_load..n_load + 50]);
+        let end_of_rest = mean(&volts[n_load + n_rest - 50..]);
+        assert!(
+            end_of_rest > just_after_drop + 0.05,
+            "no RC recovery: {just_after_drop} -> {end_of_rest}"
+        );
+    }
+
+    #[test]
+    fn loaded_voltage_sags_below_rest_voltage() {
+        // Under load the IR + polarization drops push the terminal
+        // voltage below OCV at the same SoC.
+        let sim = sim();
+        let (loaded, _) = sim.simulate(&vec![6.0; 200], 0.9, &mut Rng::new(4));
+        let (rested, _) = sim.simulate(&vec![0.0; 200], 0.9, &mut Rng::new(4));
+        let mean = |xs: &[f32]| xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+        assert!(mean(&loaded) < mean(&rested) - 0.1);
+    }
+
+    #[test]
+    fn generation_deterministic_by_seed() {
+        let sim = sim();
+        let a = sim.generate(BatteryProfile::RandomWalk, 1.0, 9);
+        let b = sim.generate(BatteryProfile::RandomWalk, 1.0, 9);
+        assert_eq!(a.input, b.input);
+        assert_eq!(a.target, b.target);
+        let c = sim.generate(BatteryProfile::RandomWalk, 1.0, 10);
+        assert_ne!(a.input, c.input);
+    }
+
+    #[test]
+    fn trait_profiles_match_the_enum() {
+        let sim = sim();
+        assert_eq!(sim.profiles().len(), BatteryProfile::ALL.len());
+        for (i, p) in BatteryProfile::ALL.into_iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert_eq!(sim.profiles()[p.index()], p.name());
+        }
+    }
+
+    #[test]
+    fn dataset_mix_follows_profile_weights() {
+        let runs = sim().generate_dataset(0.2, 0.05, 42);
+        let count =
+            |p: BatteryProfile| runs.iter().filter(|r| r.profile == p.index()).count();
+        assert_eq!(count(BatteryProfile::ConstantDischarge), 2);
+        assert_eq!(count(BatteryProfile::PulsedLoad), 3);
+        assert_eq!(count(BatteryProfile::RandomWalk), 2);
+    }
+}

@@ -118,14 +118,19 @@ Experiment regeneration (tables/figures of the paper)
 
 Utilities
   list-models     List AOT artifacts the runtime can load
-  export-dataset  Emit a simulated DROPBEAR run + beam modes as CSV
-                  (--profile standard_index|random_dwell|slow_displacement)
+  export-dataset  Emit one simulated run (sensor input + target) as CSV
+                  (--profile <name> from the workload's profile list;
+                  dropbear also writes its beam-mode table)
   init-config     Write an example ntorc.toml
   help            This message
 
 Common flags
   --preset full|smoke      scale of the run (default: smoke for demos,
                            full for experiment commands)
+  --workload <name>        scenario family: dropbear | rotor | battery
+                           (re-derives the latency budget from its
+                           sample rate; dataset, HPO, frontier sweeps
+                           and the serve store all follow)
   --config <path>          TOML-subset config file
   --set key=value          override one config key (repeatable)
   --seed <n>               reseed the experiment

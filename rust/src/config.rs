@@ -40,9 +40,19 @@ impl Preset {
 }
 
 /// Apply a flat `section.key -> value` map onto a PipelineConfig.
+///
+/// `workload.*` keys are applied first regardless of map order:
+/// selecting a workload re-derives the default latency budget from its
+/// sample rate, and an explicit `latency_budget_cycles` in the same
+/// document must win over that default (BTreeMap iteration is
+/// alphabetical, which would otherwise apply `workload.name` last).
 pub fn apply_settings(cfg: &mut PipelineConfig, map: &BTreeMap<String, Json>) -> Result<()> {
-    for (key, value) in map {
-        apply_one(cfg, key, value).with_context(|| format!("config key '{key}'"))?;
+    for pass in [true, false] {
+        for (key, value) in map {
+            if key.starts_with("workload.") == pass {
+                apply_one(cfg, key, value).with_context(|| format!("config key '{key}'"))?;
+            }
+        }
     }
     Ok(())
 }
@@ -72,6 +82,13 @@ fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
         "latency_budget_cycles" => cfg.latency_budget = as_f64(v)?,
         "max_choices_per_layer" => cfg.max_choices_per_layer = as_usize(v)?,
         "hls_seed" => cfg.hls_seed = as_usize(v)? as u64,
+        // [workload] — selecting a scenario re-derives the real-time
+        // budget from its sample rate (override with an explicit
+        // latency_budget_cycles; see apply_settings for ordering).
+        "workload.name" => {
+            let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
+            cfg.set_workload(s)?;
+        }
         // [data]
         "data.seconds_per_run" => cfg.data.seconds_per_run = as_f64(v)?,
         "data.scale" => cfg.data.scale = as_f64(v)?,
@@ -116,6 +133,10 @@ fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
             let n = as_usize(v)?;
             cfg.frontier_max_points = if n == 0 { None } else { Some(n) };
         }
+        "serve.store_max_docs" => {
+            let n = as_usize(v)?;
+            cfg.store_max_docs = if n == 0 { None } else { Some(n) };
+        }
         // [forest]
         "forest.trees" => cfg.forest.n_trees = as_usize(v)?,
         "forest.max_depth" => cfg.forest.max_depth = as_usize(v)?,
@@ -158,6 +179,11 @@ workers = 1
 latency_budget_cycles = 50000    # 200 us at 250 MHz
 max_choices_per_layer = 48
 
+[workload]
+name = "dropbear"     # dropbear | rotor | battery; picking a workload
+                      # re-derives latency_budget_cycles from its sample
+                      # rate unless you also set it explicitly
+
 [data]
 seconds_per_run = 4.0
 scale = 0.15          # 1.0 = the paper's 150 runs
@@ -187,6 +213,7 @@ min_leaf = 1
 capacity = 32         # LRU bound on hot in-memory frontiers
 store = ""            # e.g. "results/frontiers" to persist built frontiers
 max_points = 0        # frontier guardrail cap (0 = exact, unlimited)
+store_max_docs = 0    # persisted-document cap, oldest evicted (0 = unbounded)
 "#;
 
 #[cfg(test)]
@@ -210,9 +237,11 @@ mod tests {
         assert_eq!(cfg.budget.batch, 32);
         assert_eq!(cfg.forest.n_trees, 60);
         assert_eq!(cfg.latency_budget, 50_000.0);
+        assert_eq!(cfg.workload, "dropbear");
         assert_eq!(cfg.serve_capacity, 32);
         assert_eq!(cfg.frontier_store, None);
         assert_eq!(cfg.frontier_max_points, None);
+        assert_eq!(cfg.store_max_docs, None);
     }
 
     #[test]
@@ -226,6 +255,34 @@ mod tests {
         assert_eq!(cfg.frontier_max_points, Some(1000));
         apply_override(&mut cfg, "serve.max_points=0").unwrap();
         assert_eq!(cfg.frontier_max_points, None);
+        apply_override(&mut cfg, "serve.store_max_docs=64").unwrap();
+        assert_eq!(cfg.store_max_docs, Some(64));
+        apply_override(&mut cfg, "serve.store_max_docs=0").unwrap();
+        assert_eq!(cfg.store_max_docs, None);
+    }
+
+    #[test]
+    fn workload_key_selects_scenario_and_rederives_budget() {
+        let mut cfg = Preset::Smoke.pipeline();
+        apply_override(&mut cfg, "workload.name=rotor").unwrap();
+        assert_eq!(cfg.workload, "rotor");
+        assert_eq!(cfg.latency_budget, 5_000.0);
+        assert!(apply_override(&mut cfg, "workload.name=warp_drive").is_err());
+        assert_eq!(cfg.workload, "rotor", "failed override must not apply");
+    }
+
+    #[test]
+    fn explicit_latency_budget_beats_workload_default_in_one_document() {
+        // BTreeMap order would apply workload.name after the budget key;
+        // apply_settings' workload-first pass keeps the explicit budget.
+        let mut cfg = Preset::Full.pipeline();
+        let map = parse_toml_subset(
+            "latency_budget_cycles = 1234\n[workload]\nname = \"battery\"\n",
+        )
+        .unwrap();
+        apply_settings(&mut cfg, &map).unwrap();
+        assert_eq!(cfg.workload, "battery");
+        assert_eq!(cfg.latency_budget, 1_234.0);
     }
 
     #[test]

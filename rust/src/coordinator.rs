@@ -23,9 +23,6 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::data::{self, WindowedData};
-use crate::dropbear::Simulator;
-#[cfg(test)]
-use crate::dropbear::SimConfig;
 use crate::eval::{BatchEvaluator, CostCache};
 use crate::forest::{regression_metrics, Forest, ForestConfig, FeatureMatrix, RegMetrics};
 use crate::frontier::{FrontierIndex, ParetoFrontier};
@@ -37,9 +34,12 @@ use crate::layers::{LayerKind, LayerSpec, NetConfig};
 use crate::mip::{DeployProblem, Solution};
 use crate::nn::{Adam, AdamConfig, NativeModel};
 use crate::rng::Rng;
-use crate::serve::{FrontierService, FrontierStore, ServeConfig, ServedFrontier};
+use crate::serve::{FrontierService, FrontierStore, ServeConfig, ServedFrontier, WorkloadKey};
+use crate::workload::{self, Workload};
 
-/// 200 µs at 250 MHz (paper §IV-B).
+/// 200 µs at 250 MHz (paper §IV-B) — DROPBEAR's per-sample deadline.
+/// Other workloads derive their own budgets from their sample rates
+/// ([`Workload::deadline_cycles`]).
 pub const LATENCY_BUDGET_CYCLES: f64 = 50_000.0;
 
 // ---------------------------------------------------------------------------
@@ -345,12 +345,12 @@ impl DataConfig {
     }
 }
 
-/// Generate the simulated DROPBEAR dataset and window it for `window`.
-pub fn prepare_data(sim: &Simulator, dc: &DataConfig, window: usize) -> PreparedData {
-    let runs = sim.generate_dataset(dc.seconds_per_run, dc.scale, dc.seed);
+/// Generate the workload's simulated dataset and window it for `window`.
+pub fn prepare_data(w: &dyn Workload, dc: &DataConfig, window: usize) -> PreparedData {
+    let runs = w.generate_dataset(dc.seconds_per_run, dc.scale, dc.seed);
     let mut rng = Rng::new(dc.seed ^ 0x5EED);
     let split = data::split_runs(&runs, dc.per_cat_train, dc.per_cat_test, &mut rng);
-    let norm = data::Normalizer::fit(&split.train);
+    let norm = data::Normalizer::fit(&split.train, w.target_range());
     let train_parts: Vec<WindowedData> = split
         .train
         .iter()
@@ -418,6 +418,10 @@ pub fn parallel_map<T: Send + 'static>(
 /// Everything the end-to-end flow needs.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
+    /// Scenario family driving dataset generation, the real-time budget
+    /// default and frontier-store key scoping (see [`crate::workload`];
+    /// `--workload` / `workload.name`).
+    pub workload: String,
     pub sweep: SweepConfig,
     pub forest: ForestConfig,
     pub hls_seed: u64,
@@ -436,11 +440,15 @@ pub struct PipelineConfig {
     /// Optional frontier-size guardrail
     /// ([`crate::frontier::ParetoFrontier::with_max_points`]).
     pub frontier_max_points: Option<usize>,
+    /// Optional document cap on the persistent store (oldest evicted;
+    /// `serve.store_max_docs`). `None` = unbounded.
+    pub store_max_docs: Option<usize>,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
         PipelineConfig {
+            workload: "dropbear".to_string(),
             sweep: SweepConfig::default(),
             forest: ForestConfig::default(),
             hls_seed: 0xD0_0DBEA7,
@@ -453,11 +461,21 @@ impl Default for PipelineConfig {
             serve_capacity: 32,
             frontier_store: None,
             frontier_max_points: None,
+            store_max_docs: None,
         }
     }
 }
 
 impl PipelineConfig {
+    /// Switch the scenario family and re-derive the real-time budget
+    /// from its sample rate. Errors on unregistered names.
+    pub fn set_workload(&mut self, name: &str) -> crate::Result<()> {
+        let rate = workload::sample_rate_of(name)?;
+        self.workload = name.to_string();
+        self.latency_budget = workload::deadline_cycles_for(rate);
+        Ok(())
+    }
+
     /// Fast preset for tests / smoke runs.
     pub fn smoke() -> Self {
         PipelineConfig {
@@ -504,7 +522,16 @@ pub struct Pipeline {
 impl Pipeline {
     pub fn new(cfg: PipelineConfig) -> Pipeline {
         let hls = HlsSim::new(hls::HlsConfig { seed: cfg.hls_seed, ..Default::default() });
-        let store = cfg.frontier_store.as_ref().map(|d| FrontierStore::new(d.as_str()));
+        let store = cfg
+            .frontier_store
+            .as_ref()
+            .map(|d| FrontierStore::new(d.as_str()).with_max_docs(cfg.store_max_docs));
+        // Fold the workload identity (name + sample rate) into every
+        // frontier key this pipeline files, so a store shared across
+        // scenarios never mixes them. The lookup is metadata-only (no
+        // simulator construction); unknown names fail loudly here.
+        let sample_rate_hz = workload::sample_rate_of(&cfg.workload)
+            .unwrap_or_else(|e| panic!("PipelineConfig.workload: {e}"));
         let serve = FrontierService::new(
             ServeConfig {
                 capacity: cfg.serve_capacity,
@@ -512,10 +539,22 @@ impl Pipeline {
                 max_choices_per_layer: cfg.max_choices_per_layer,
                 latency_budget: cfg.latency_budget,
                 max_points: cfg.frontier_max_points,
+                workload: Some(WorkloadKey {
+                    name: cfg.workload.clone(),
+                    sample_rate_hz,
+                }),
             },
             store,
         );
         Pipeline { cfg, hls, serve }
+    }
+
+    /// Build this pipeline's workload simulator (full construction; for
+    /// DROPBEAR that includes the eigen-solve table — build once per
+    /// command, not per call).
+    pub fn workload(&self) -> std::sync::Arc<dyn Workload> {
+        workload::by_name(&self.cfg.workload)
+            .unwrap_or_else(|e| panic!("PipelineConfig.workload: {e}"))
     }
 
     /// The pipeline's shared frontier service (serve-stats live here).
@@ -535,11 +574,11 @@ impl Pipeline {
 
     /// Phase 3: hyperparameter search with native training as the
     /// accuracy objective. Returns all trials (Pareto extracted later).
-    pub fn run_hpo(&self, sim: &Simulator) -> (Vec<Trial>, HashMap<usize, PreparedData>) {
+    pub fn run_hpo(&self, wl: &dyn Workload) -> (Vec<Trial>, HashMap<usize, PreparedData>) {
         // Pre-window the dataset once per distinct window size.
         let mut datasets: HashMap<usize, PreparedData> = HashMap::new();
         for &w in &self.cfg.hpo.space.windows {
-            datasets.insert(w, prepare_data(sim, &self.cfg.data, w));
+            datasets.insert(w, prepare_data(wl, &self.cfg.data, w));
         }
         let budget = self.cfg.budget;
         let trials = hpo::run_hpo(&self.cfg.hpo, |net, seed| {
@@ -560,10 +599,10 @@ impl Pipeline {
     #[allow(clippy::type_complexity)]
     pub fn run_hpo_deployed(
         &self,
-        sim: &Simulator,
+        wl: &dyn Workload,
         models: &CostModels,
     ) -> (Vec<Trial>, Vec<Option<Solution>>, HashMap<usize, PreparedData>) {
-        let (trials, datasets) = self.run_hpo(sim);
+        let (trials, datasets) = self.run_hpo(wl);
         let deployments = hpo::resolve_deployments(&trials, |net| {
             self.serve.query(models, net, self.cfg.latency_budget)
         });
@@ -666,6 +705,7 @@ impl Pipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dropbear::{SimConfig, Simulator};
     use crate::mip;
 
     fn tiny_models() -> CostModels {
@@ -778,6 +818,21 @@ mod tests {
         // this data. Training must beat a constant predictor.
         assert!(rmse < 0.5, "rmse {rmse}");
         assert!(rmse.is_finite());
+    }
+
+    #[test]
+    fn set_workload_rederives_the_latency_budget() {
+        let mut cfg = PipelineConfig::default();
+        assert_eq!(cfg.latency_budget, LATENCY_BUDGET_CYCLES);
+        cfg.set_workload("rotor").unwrap();
+        assert_eq!(cfg.workload, "rotor");
+        // 50 kHz at 250 MHz: a 5,000-cycle (20 µs) deadline.
+        assert_eq!(cfg.latency_budget, 5_000.0);
+        cfg.set_workload("battery").unwrap();
+        assert_eq!(cfg.latency_budget, 500_000.0);
+        assert!(cfg.set_workload("nope").is_err());
+        // The failed set must not have clobbered the config.
+        assert_eq!(cfg.workload, "battery");
     }
 
     #[test]

@@ -1,72 +1,77 @@
 //! Data pipeline: windowing (Takens embedding), normalization, the paper's
 //! split protocol, and evaluation metrics.
 //!
-//! Protocol (paper §III-A): from each of the three experiment categories
-//! select 15 runs — 12 for training, 3 for testing ("Test Dataset 1"); the
-//! training windows are shuffled and split 70/30 into train/validation
+//! Protocol (paper §III-A, generalized to any [`crate::workload`]): from
+//! each excitation profile select train and test runs ("Test Dataset 1");
+//! the training windows are shuffled and split 70/30 into train/validation
 //! ("Test Dataset 2"). Inputs are standardized by training-set statistics;
-//! the roller target is scaled to [0,1] over the physical travel so RMSE
-//! values are comparable to the paper's normalized errors (~0.07–0.17).
+//! the target is scaled to [0,1] over the workload's physical range
+//! ([`crate::workload::Workload::target_range`]) so RMSE values are
+//! comparable to the paper's normalized errors (~0.07–0.17).
 
-use crate::dropbear::{Profile, Run, ROLLER_MAX_M, ROLLER_MIN_M};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
+use crate::workload::Run;
 
 /// Normalization parameters, frozen from the training split.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Normalizer {
-    pub accel_mean: f32,
-    pub accel_std: f32,
-    pub roller_min: f32,
-    pub roller_max: f32,
+    pub input_mean: f32,
+    pub input_std: f32,
+    pub target_min: f32,
+    pub target_max: f32,
 }
 
 impl Normalizer {
-    /// Fit on raw training signals.
-    pub fn fit(runs: &[&Run]) -> Self {
+    /// Fit input statistics on raw training signals; the target range is
+    /// the workload's physical range (not data-derived, so train/test
+    /// share one scale).
+    pub fn fit(runs: &[&Run], target_range: (f32, f32)) -> Self {
         let mut sum = 0.0f64;
         let mut count = 0usize;
         for r in runs {
-            sum += r.accel.iter().map(|&x| x as f64).sum::<f64>();
-            count += r.accel.len();
+            sum += r.input.iter().map(|&x| x as f64).sum::<f64>();
+            count += r.input.len();
         }
         let mean = if count == 0 { 0.0 } else { sum / count as f64 };
         let mut var = 0.0f64;
         for r in runs {
             var += r
-                .accel
+                .input
                 .iter()
                 .map(|&x| (x as f64 - mean) * (x as f64 - mean))
                 .sum::<f64>();
         }
         let std = if count == 0 { 1.0 } else { (var / count as f64).sqrt().max(1e-9) };
+        let (lo, hi) = target_range;
+        assert!(hi > lo, "degenerate target range {lo}..{hi}");
         Normalizer {
-            accel_mean: mean as f32,
-            accel_std: std as f32,
-            roller_min: ROLLER_MIN_M as f32,
-            roller_max: ROLLER_MAX_M as f32,
+            input_mean: mean as f32,
+            input_std: std as f32,
+            target_min: lo,
+            target_max: hi,
         }
     }
 
     #[inline]
-    pub fn norm_accel(&self, x: f32) -> f32 {
-        (x - self.accel_mean) / self.accel_std
+    pub fn norm_input(&self, x: f32) -> f32 {
+        (x - self.input_mean) / self.input_std
     }
 
     #[inline]
-    pub fn norm_roller(&self, x: f32) -> f32 {
-        (x - self.roller_min) / (self.roller_max - self.roller_min)
+    pub fn norm_target(&self, x: f32) -> f32 {
+        (x - self.target_min) / (self.target_max - self.target_min)
     }
 
-    /// Back to meters.
+    /// Back to physical units.
     #[inline]
-    pub fn denorm_roller(&self, y: f32) -> f32 {
-        self.roller_min + y * (self.roller_max - self.roller_min)
+    pub fn denorm_target(&self, y: f32) -> f32 {
+        self.target_min + y * (self.target_max - self.target_min)
     }
 }
 
-/// A windowed supervised dataset: x (N, window) normalized acceleration,
-/// y (N,) normalized roller position at the window's final sample.
+/// A windowed supervised dataset: x (N, window) normalized input signal,
+/// y (N,) normalized target at the window's final sample.
 #[derive(Clone, Debug)]
 pub struct WindowedData {
     pub x: Tensor,
@@ -137,10 +142,10 @@ impl WindowedData {
 }
 
 /// Slide a window of length `window` over a run with `stride`, predicting
-/// the roller position at the final sample of each window.
+/// the target at the final sample of each window.
 pub fn window_run(run: &Run, window: usize, stride: usize, norm: &Normalizer) -> WindowedData {
     assert!(stride >= 1);
-    let n = run.accel.len();
+    let n = run.input.len();
     if n < window {
         return WindowedData { x: Tensor::zeros(&[0, window]), y: vec![], window };
     }
@@ -149,16 +154,17 @@ pub fn window_run(run: &Run, window: usize, stride: usize, norm: &Normalizer) ->
     let mut y = Vec::with_capacity(count);
     for w in 0..count {
         let start = w * stride;
-        for &a in &run.accel[start..start + window] {
-            x.push(norm.norm_accel(a));
+        for &a in &run.input[start..start + window] {
+            x.push(norm.norm_input(a));
         }
-        y.push(norm.norm_roller(run.roller[start + window - 1]));
+        y.push(norm.norm_target(run.target[start + window - 1]));
     }
     WindowedData { x: Tensor::from_vec(&[count, window], x), y, window }
 }
 
-/// The paper's split: per category, `per_cat_train` train runs and
-/// `per_cat_test` test runs (paper: 12 + 3).
+/// The paper's split: per excitation profile, `per_cat_train` train runs
+/// and `per_cat_test` test runs (paper: 12 + 3). Profiles are whatever
+/// category ids appear in `runs` — workload-agnostic.
 pub struct Split<'a> {
     pub train: Vec<&'a Run>,
     pub test: Vec<&'a Run>,
@@ -170,16 +176,18 @@ pub fn split_runs<'a>(
     per_cat_test: usize,
     rng: &mut Rng,
 ) -> Split<'a> {
+    let mut cats: Vec<usize> = runs.iter().map(|r| r.profile).collect();
+    cats.sort_unstable();
+    cats.dedup();
     let mut train = Vec::new();
     let mut test = Vec::new();
-    for profile in Profile::ALL {
+    for profile in cats {
         let mut cat: Vec<&Run> = runs.iter().filter(|r| r.profile == profile).collect();
         rng.shuffle(&mut cat);
-        let want = per_cat_train + per_cat_test;
-        assert!(
-            cat.len() >= want.min(cat.len()),
-            "category {profile:?} underpopulated"
-        );
+        // Underpopulated categories are capped, not rejected: the smoke
+        // presets deliberately run with 1-2 runs per profile (test runs
+        // are filled first, so a starved category starves train, never
+        // the held-out set).
         let n_test = per_cat_test.min(cat.len());
         let n_train = per_cat_train.min(cat.len().saturating_sub(n_test));
         test.extend(cat.drain(..n_test));
@@ -233,7 +241,10 @@ pub fn rmse(pred: &[f32], target: &[f32]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dropbear::{SimConfig, Simulator};
+    use crate::dropbear::{Profile, SimConfig, Simulator, ROLLER_MAX_M, ROLLER_MIN_M};
+    use crate::workload::Workload;
+
+    const ROLLER_RANGE: (f32, f32) = (ROLLER_MIN_M as f32, ROLLER_MAX_M as f32);
 
     fn tiny_runs() -> Vec<Run> {
         let sim = Simulator::new(SimConfig { table_points: 8, ..Default::default() });
@@ -241,14 +252,14 @@ mod tests {
     }
 
     #[test]
-    fn normalizer_standardizes_train_accel() {
+    fn normalizer_standardizes_train_input() {
         let runs = tiny_runs();
         let refs: Vec<&Run> = runs.iter().collect();
-        let norm = Normalizer::fit(&refs);
+        let norm = Normalizer::fit(&refs, ROLLER_RANGE);
         // Normalized training data must be ~zero-mean unit-std.
         let mut all = Vec::new();
         for r in &runs {
-            all.extend(r.accel.iter().map(|&a| norm.norm_accel(a) as f64));
+            all.extend(r.input.iter().map(|&a| norm.norm_input(a) as f64));
         }
         let mean = all.iter().sum::<f64>() / all.len() as f64;
         let var = all.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / all.len() as f64;
@@ -257,46 +268,46 @@ mod tests {
     }
 
     #[test]
-    fn roller_normalization_round_trip() {
+    fn target_normalization_round_trip() {
         let norm = Normalizer {
-            accel_mean: 0.0,
-            accel_std: 1.0,
-            roller_min: 0.058,
-            roller_max: 0.141,
+            input_mean: 0.0,
+            input_std: 1.0,
+            target_min: 0.058,
+            target_max: 0.141,
         };
         let x = 0.1f32;
-        let y = norm.norm_roller(x);
+        let y = norm.norm_target(x);
         assert!((0.0..=1.0).contains(&y));
-        assert!((norm.denorm_roller(y) - x).abs() < 1e-6);
+        assert!((norm.denorm_target(y) - x).abs() < 1e-6);
     }
 
     #[test]
     fn window_count_and_alignment() {
         let runs = tiny_runs();
         let refs: Vec<&Run> = runs.iter().collect();
-        let norm = Normalizer::fit(&refs);
+        let norm = Normalizer::fit(&refs, ROLLER_RANGE);
         let w = window_run(&runs[0], 64, 16, &norm);
-        let expect = (runs[0].accel.len() - 64) / 16 + 1;
+        let expect = (runs[0].input.len() - 64) / 16 + 1;
         assert_eq!(w.len(), expect);
         assert_eq!(w.x.shape, vec![expect, 64]);
         // Target aligns with the last sample of each window.
-        let y0 = norm.norm_roller(runs[0].roller[63]);
+        let y0 = norm.norm_target(runs[0].target[63]);
         assert!((w.y[0] - y0).abs() < 1e-6);
     }
 
     #[test]
     fn window_run_shorter_than_window_is_empty() {
         let run = Run {
-            profile: Profile::RandomDwell,
+            profile: Profile::RandomDwell.index(),
             seed: 0,
-            accel: vec![0.0; 10],
-            roller: vec![0.1; 10],
+            input: vec![0.0; 10],
+            target: vec![0.1; 10],
         };
         let norm = Normalizer {
-            accel_mean: 0.0,
-            accel_std: 1.0,
-            roller_min: 0.058,
-            roller_max: 0.141,
+            input_mean: 0.0,
+            input_std: 1.0,
+            target_min: 0.058,
+            target_max: 0.141,
         };
         assert!(window_run(&run, 64, 1, &norm).is_empty());
     }
@@ -320,10 +331,22 @@ mod tests {
     }
 
     #[test]
+    fn split_is_workload_agnostic() {
+        // A battery dataset (different profile ids and mix) splits the
+        // same way: per-category test quota, no overlap.
+        let sim = crate::battery::BatterySim::new(crate::battery::BatteryConfig::default());
+        let runs = sim.generate_dataset(0.2, 0.05, 11); // 2 + 3 + 2 runs
+        let mut rng = Rng::new(2);
+        let split = split_runs(&runs, 1, 1, &mut rng);
+        assert_eq!(split.test.len(), 3);
+        assert_eq!(split.train.len(), 3);
+    }
+
+    #[test]
     fn train_val_split_is_partition() {
         let runs = tiny_runs();
         let refs: Vec<&Run> = runs.iter().collect();
-        let norm = Normalizer::fit(&refs);
+        let norm = Normalizer::fit(&refs, ROLLER_RANGE);
         let data = window_run(&runs[1], 32, 8, &norm);
         let mut rng = Rng::new(3);
         let (train, val) = train_val_split(&data, 0.3, &mut rng);
@@ -342,7 +365,7 @@ mod tests {
     fn batch_draws_valid_rows() {
         let runs = tiny_runs();
         let refs: Vec<&Run> = runs.iter().collect();
-        let norm = Normalizer::fit(&refs);
+        let norm = Normalizer::fit(&refs, ROLLER_RANGE);
         let data = window_run(&runs[0], 16, 4, &norm);
         let mut rng = Rng::new(5);
         let (xb, yb) = data.batch(8, &mut rng);
@@ -357,7 +380,7 @@ mod tests {
     fn take_subsamples_evenly() {
         let runs = tiny_runs();
         let refs: Vec<&Run> = runs.iter().collect();
-        let norm = Normalizer::fit(&refs);
+        let norm = Normalizer::fit(&refs, ROLLER_RANGE);
         let data = window_run(&runs[0], 16, 1, &norm);
         let small = data.take(10);
         assert_eq!(small.len(), 10);
@@ -368,7 +391,7 @@ mod tests {
     fn concat_preserves_rows() {
         let runs = tiny_runs();
         let refs: Vec<&Run> = runs.iter().collect();
-        let norm = Normalizer::fit(&refs);
+        let norm = Normalizer::fit(&refs, ROLLER_RANGE);
         let a = window_run(&runs[0], 16, 8, &norm);
         let b = window_run(&runs[1], 16, 8, &norm);
         let c = WindowedData::concat(&[a.clone(), b.clone()]);

@@ -22,8 +22,14 @@
 //! 3. **Motion profiles** — the paper's three experiment types (standard
 //!    index set / random dwell / slow positional displacement), all
 //!    slew-limited to 250 mm/s, roller range 58–141 mm.
+//!
+//! The simulator implements [`crate::workload::Workload`] (registry name
+//! `"dropbear"`): runs carry the accelerometer signal as `input` and the
+//! executed roller position as `target`, and the 5 kHz sample rate
+//! derives the paper's 50,000-cycle (200 µs) real-time deadline.
 
 use crate::rng::Rng;
+use crate::workload::{Run, Workload};
 
 /// Sample rate of the testbed (paper: 5 kHz, 200 µs per sample).
 pub const SAMPLE_RATE_HZ: f64 = 5_000.0;
@@ -259,6 +265,15 @@ impl Profile {
         Profile::RandomDwell,
         Profile::SlowDisplacement,
     ];
+
+    /// Position in [`Profile::ALL`] (the workload-generic profile id).
+    pub fn index(self) -> usize {
+        match self {
+            Profile::StandardIndex => 0,
+            Profile::RandomDwell => 1,
+            Profile::SlowDisplacement => 2,
+        }
+    }
 }
 
 /// Generate the roller *command* trajectory (m) for `n` samples; the
@@ -336,17 +351,6 @@ pub fn slew_limit(cmd: &[f64], max_speed: f64) -> Vec<f64> {
 // ---------------------------------------------------------------------------
 // Response synthesis
 // ---------------------------------------------------------------------------
-
-/// One experimental run: acceleration input and roller-position target.
-#[derive(Clone, Debug)]
-pub struct Run {
-    pub profile: Profile,
-    pub seed: u64,
-    /// Accelerometer signal (arbitrary units), 5 kHz.
-    pub accel: Vec<f32>,
-    /// Executed roller position (m), 5 kHz.
-    pub roller: Vec<f32>,
-}
 
 /// Simulator configuration.
 #[derive(Clone, Debug)]
@@ -434,30 +438,39 @@ impl Simulator {
             accel.push(sample as f32);
         }
         Run {
-            profile,
+            profile: profile.index(),
             seed,
-            accel,
-            roller: roller.into_iter().map(|x| x as f32).collect(),
+            input: accel,
+            target: roller.into_iter().map(|x| x as f32).collect(),
         }
     }
+}
 
-    /// Generate a whole dataset in the paper's 20/100/30 category mix,
-    /// scaled by `scale` (scale=1.0 gives 150 runs; scale=0.05 gives 8).
-    pub fn generate_dataset(&self, seconds: f64, scale: f64, seed: u64) -> Vec<Run> {
-        let counts = [
-            (Profile::StandardIndex, (20.0 * scale).ceil() as usize),
-            (Profile::RandomDwell, (100.0 * scale).ceil() as usize),
-            (Profile::SlowDisplacement, (30.0 * scale).ceil() as usize),
-        ];
-        let mut rng = Rng::new(seed);
-        let mut runs = Vec::new();
-        for (profile, count) in counts {
-            for _ in 0..count {
-                let s = rng.next_u64();
-                runs.push(self.generate(profile, seconds, s));
-            }
-        }
-        runs
+impl Workload for Simulator {
+    fn name(&self) -> &'static str {
+        "dropbear"
+    }
+
+    fn sample_rate_hz(&self) -> f64 {
+        SAMPLE_RATE_HZ
+    }
+
+    fn profiles(&self) -> &'static [&'static str] {
+        &["standard_index", "random_dwell", "slow_displacement"]
+    }
+
+    /// The paper's 20/100/30 category mix (scale=1.0 gives 150 runs;
+    /// scale=0.05 gives 8).
+    fn profile_mix(&self) -> &'static [usize] {
+        &[20, 100, 30]
+    }
+
+    fn target_range(&self) -> (f32, f32) {
+        (ROLLER_MIN_M as f32, ROLLER_MAX_M as f32)
+    }
+
+    fn generate_run(&self, profile: usize, seconds: f64, seed: u64) -> Run {
+        self.generate(Profile::ALL[profile], seconds, seed)
     }
 }
 
@@ -553,15 +566,16 @@ mod tests {
         let sim = Simulator::new(SimConfig { table_points: 16, ..Default::default() });
         for profile in Profile::ALL {
             let run = sim.generate(profile, 0.5, 1);
-            assert_eq!(run.accel.len(), 2500);
-            assert_eq!(run.roller.len(), 2500);
-            for &p in &run.roller {
+            assert_eq!(run.profile, profile.index());
+            assert_eq!(run.input.len(), 2500);
+            assert_eq!(run.target.len(), 2500);
+            for &p in &run.target {
                 assert!(
                     (ROLLER_MIN_M as f32 - 1e-6..=ROLLER_MAX_M as f32 + 1e-6).contains(&p),
                     "roller {p} out of range"
                 );
             }
-            assert!(run.accel.iter().all(|a| a.is_finite()));
+            assert!(run.input.iter().all(|a| a.is_finite()));
         }
     }
 
@@ -570,9 +584,9 @@ mod tests {
         let sim = Simulator::new(SimConfig { table_points: 16, ..Default::default() });
         let a = sim.generate(Profile::RandomDwell, 0.2, 9);
         let b = sim.generate(Profile::RandomDwell, 0.2, 9);
-        assert_eq!(a.accel, b.accel);
+        assert_eq!(a.input, b.input);
         let c = sim.generate(Profile::RandomDwell, 0.2, 10);
-        assert_ne!(a.accel, c.accel);
+        assert_ne!(a.input, c.input);
     }
 
     #[test]
@@ -590,14 +604,24 @@ mod tests {
         };
         let still = Simulator::new(cfg_still).generate(Profile::StandardIndex, 0.5, 3);
         let energy = |xs: &[f32]| xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
-        assert!(energy(&moving.accel) > 10.0 * energy(&still.accel));
+        assert!(energy(&moving.input) > 10.0 * energy(&still.input));
+    }
+
+    #[test]
+    fn trait_profiles_match_the_enum() {
+        let sim = Simulator::new(SimConfig { table_points: 8, ..Default::default() });
+        assert_eq!(sim.profiles().len(), Profile::ALL.len());
+        for (i, p) in Profile::ALL.into_iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert_eq!(sim.profiles()[p.index()], p.name());
+        }
     }
 
     #[test]
     fn dataset_mix_matches_paper_ratio() {
         let sim = Simulator::new(SimConfig { table_points: 16, ..Default::default() });
         let runs = sim.generate_dataset(0.1, 0.05, 42);
-        let count = |p: Profile| runs.iter().filter(|r| r.profile == p).count();
+        let count = |p: Profile| runs.iter().filter(|r| r.profile == p.index()).count();
         assert_eq!(count(Profile::StandardIndex), 1);
         assert_eq!(count(Profile::RandomDwell), 5);
         assert_eq!(count(Profile::SlowDisplacement), 2);

@@ -17,8 +17,10 @@
 //!   cost-model evaluation engine ([`eval`]), the MIP reuse-factor
 //!   optimizer ([`mip`]), the parallel Pareto-frontier solver engine
 //!   ([`frontier`]), stochastic/SA baselines ([`search`]),
-//!   multi-objective Bayesian hyperparameter search ([`hpo`]), the DROPBEAR
-//!   beam simulator ([`dropbear`]), the native training substrate ([`nn`],
+//!   multi-objective Bayesian hyperparameter search ([`hpo`]), the
+//!   cyber-physical workload layer ([`workload`]: the DROPBEAR beam
+//!   [`dropbear`], rotating-machinery vibration [`rotor`], battery SoC
+//!   traces [`battery`]), the native training substrate ([`nn`],
 //!   [`tensor`]), and the pipeline coordinator ([`coordinator`]).
 //!
 //! Python never runs on the request path: after `make artifacts`, the
@@ -63,6 +65,18 @@
 //! frontier DP exactly once per store lifetime — solve once, serve
 //! many, across processes.
 //!
+//! ## The workload abstraction ([`workload`])
+//!
+//! Every pipeline runs against a [`workload::Workload`] — a seeded,
+//! deterministic simulator of one cyber-physical scenario family
+//! (`--workload dropbear|rotor|battery`). The sample rate drives
+//! everything real-time: the per-sample deadline, the default
+//! latency-budget grid, and the workload identity folded into frontier
+//! store keys so scenarios sharing a store never mix. The module docs
+//! in [`workload`] spell out the trait contract and how to add a
+//! fourth scenario; CI's `workload-matrix` job runs an e2e smoke per
+//! registered workload.
+//!
 //! ## Verification
 //!
 //! Tier-1 gate (also enforced by `.github/workflows/ci.yml`):
@@ -102,6 +116,7 @@
     clippy::while_let_on_iterator
 )]
 
+pub mod battery;
 pub mod bench;
 pub mod cli;
 pub mod config;
@@ -119,12 +134,14 @@ pub mod nn;
 pub mod quant;
 pub mod report;
 pub mod rng;
+pub mod rotor;
 pub mod runtime;
 pub mod search;
 pub mod ser;
 pub mod serve;
 pub mod tensor;
 pub mod testkit;
+pub mod workload;
 pub mod xla;
 
 /// Crate-wide result alias (anyhow-backed).

@@ -13,6 +13,7 @@ use ntorc::hpo::pareto_trials;
 use ntorc::report;
 use ntorc::rng::Rng;
 use ntorc::runtime::Runtime;
+use ntorc::workload::Workload;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -25,7 +26,7 @@ fn main() {
     }
 }
 
-const COMMON_FLAGS: &[&str] = &["preset", "config", "set", "seed", "out", "help"];
+const COMMON_FLAGS: &[&str] = &["preset", "config", "set", "seed", "out", "workload", "help"];
 
 fn pipeline_config(args: &Args, default_preset: Preset) -> Result<PipelineConfig> {
     let preset = match args.get("preset") {
@@ -33,8 +34,33 @@ fn pipeline_config(args: &Args, default_preset: Preset) -> Result<PipelineConfig
         None => default_preset,
     };
     let mut cfg = preset.pipeline();
+    // --workload applies like a `workload.name` key that precedes the
+    // config file: it selects the scenario (and its default budget)
+    // BEFORE the file's keys, so an explicit latency_budget_cycles in
+    // the file still wins — the same precedence `apply_settings` gives
+    // the in-file pair. If the file picks a *different* workload, the
+    // flag re-asserts its choice (flag beats file on the name itself).
+    if let Some(w) = args.get("workload") {
+        cfg.set_workload(w)?;
+    }
     if let Some(path) = args.get("config") {
         config::load_file(&mut cfg, path)?;
+    }
+    if let Some(w) = args.get("workload") {
+        if cfg.workload != w {
+            // A budget differing from the file-selected workload's
+            // derived default was set explicitly — keep it; only the
+            // scenario choice is re-asserted.
+            let derived = ntorc::workload::deadline_cycles_for(
+                ntorc::workload::sample_rate_of(&cfg.workload)?,
+            );
+            let explicit = cfg.latency_budget != derived;
+            let keep = cfg.latency_budget;
+            cfg.set_workload(w)?;
+            if explicit {
+                cfg.latency_budget = keep;
+            }
+        }
     }
     for kv in args.get_all("set") {
         config::apply_override(&mut cfg, kv)?;
@@ -121,7 +147,7 @@ fn run(raw: &[String]) -> Result<()> {
             args.check_known(COMMON_FLAGS)?;
             let cfg = pipeline_config(&args, Preset::Smoke)?;
             let pipe = Pipeline::new(cfg);
-            let sim = report::standard_simulator();
+            let sim = pipe.workload();
             let t0 = std::time::Instant::now();
             let out = report::fig5_run(&pipe, &sim);
             println!(
@@ -137,7 +163,7 @@ fn run(raw: &[String]) -> Result<()> {
             args.check_known(COMMON_FLAGS)?;
             let cfg = pipeline_config(&args, Preset::Smoke)?;
             let (pipe, models) = report::standard_models(cfg);
-            let sim = report::standard_simulator();
+            let sim = pipe.workload();
             let out = report::fig5_run(&pipe, &sim);
             let deployed = report::deploy_pareto(&pipe, &models, &out.trials);
             let (h, rows) = report::table3_rows(&deployed);
@@ -184,7 +210,13 @@ fn run(raw: &[String]) -> Result<()> {
                     }
                     parsed
                 }
-                None => report::SWEEP_BUDGETS.to_vec(),
+                // Default sweep: the workload's own grid (fractions of
+                // its per-sample deadline — 5k..250k cycles for
+                // DROPBEAR, 10x tighter for rotor, 10x looser for
+                // battery). Metadata-only: no simulator build.
+                None => ntorc::workload::budget_grid_for(
+                    ntorc::workload::sample_rate_of(&pipe.cfg.workload)?,
+                ),
             };
             let mut sweeps = Vec::new();
             for (name, net) in report::table4_models() {
@@ -328,7 +360,7 @@ fn run(raw: &[String]) -> Result<()> {
         "fig7" => {
             args.check_known(COMMON_FLAGS)?;
             let cfg = pipeline_config(&args, Preset::Smoke)?;
-            let sim = report::standard_simulator();
+            let sim = report::standard_workload(&cfg.workload);
             let configs = vec![
                 (
                     "model2_like",
@@ -350,11 +382,11 @@ fn run(raw: &[String]) -> Result<()> {
             for (name, rmse) in &out.rmse {
                 println!("{name}: trace RMSE {rmse:.4}");
             }
-            let headers = vec!["t_s", "vibration", "roller_true", "pred_model2", "pred_model1"];
+            let headers = vec!["t_s", "input", "target_true", "pred_model2", "pred_model1"];
             emit(
                 &args,
                 "fig7_trace",
-                "Fig 7 — predicted vs true roller trace",
+                "Fig 7 — predicted vs true target trace",
                 &headers,
                 &out.rows,
             );
@@ -378,7 +410,7 @@ fn run(raw: &[String]) -> Result<()> {
                 model.meta.batch,
                 model.meta.param_shapes.len()
             );
-            let sim = report::standard_simulator();
+            let sim = report::standard_workload(&cfg.workload);
             let prepared = ntorc::coordinator::prepare_data(&sim, &cfg.data, model.meta.window);
             let mut state = model.init_state(cfg.hpo.seed)?;
             let mut rng = Rng::new(cfg.hpo.seed ^ 1);
@@ -415,55 +447,82 @@ fn run(raw: &[String]) -> Result<()> {
             }
         }
         "export-dataset" => {
-            // Figs 2-3 of the paper: an acceleration trace and the roller
-            // position that caused it, as CSV (plus the beam's modal
-            // frequencies vs roller position — the physics the simulator
-            // substitutes for the rig).
+            // Figs 2-3 of the paper, generalized: one simulated run of
+            // the selected workload (sensor input + physical target) as
+            // CSV; for DROPBEAR also the beam's modal frequencies vs
+            // roller position — the physics the simulator substitutes
+            // for the rig.
             args.check_known(&[COMMON_FLAGS, &["profile", "seconds"]].concat())?;
-            let profile = match args.get("profile").unwrap_or("standard_index") {
-                "standard_index" => ntorc::dropbear::Profile::StandardIndex,
-                "random_dwell" => ntorc::dropbear::Profile::RandomDwell,
-                "slow_displacement" => ntorc::dropbear::Profile::SlowDisplacement,
-                other => bail!("unknown profile '{other}'"),
+            let cfg = pipeline_config(&args, Preset::Smoke)?;
+            // Keep a concrete handle when the workload is DROPBEAR so
+            // the modes table below reuses the (eigen-solved) simulator
+            // instead of building a second one.
+            let dropbear_sim = (cfg.workload == "dropbear").then(|| {
+                std::sync::Arc::new(ntorc::dropbear::Simulator::new(
+                    ntorc::dropbear::SimConfig::default(),
+                ))
+            });
+            let w: std::sync::Arc<dyn Workload> = match &dropbear_sim {
+                Some(sim) => sim.clone(),
+                None => report::standard_workload(&cfg.workload),
             };
+            let profile_name = args.get("profile").unwrap_or(w.profiles()[0]);
+            let profile = w
+                .profiles()
+                .iter()
+                .position(|p| *p == profile_name)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown profile '{profile_name}' for workload '{}' (one of: {})",
+                        w.name(),
+                        w.profiles().join(", ")
+                    )
+                })?;
             let seconds: f64 = args.get("seconds").unwrap_or("4").parse()?;
             let seed = args.u64_or("seed", 8)?;
-            let sim = report::standard_simulator();
-            let run = sim.generate(profile, seconds, seed);
-            let rows: Vec<Vec<String>> = (0..run.accel.len())
+            let run = w.generate_run(profile, seconds, seed);
+            let rows: Vec<Vec<String>> = (0..run.input.len())
                 .step_by(4)
                 .map(|i| {
                     vec![
-                        format!("{:.6}", i as f64 / ntorc::dropbear::SAMPLE_RATE_HZ),
-                        format!("{:.6}", run.accel[i]),
-                        format!("{:.6}", run.roller[i] * 1000.0), // mm like Fig 3
+                        format!("{:.6}", i as f64 / w.sample_rate_hz()),
+                        format!("{:.6}", run.input[i]),
+                        format!("{:.6}", run.target[i]),
                     ]
                 })
                 .collect();
-            emit(&args, "dropbear_run", "Figs 2-3 — DROPBEAR run (decimated 4x)",
-                 &["t_s", "accel", "roller_mm"], &rows[..rows.len().min(12)]);
-            report::write_csv(args.get("out").unwrap_or("dropbear_run"),
-                              &["t_s", "accel", "roller_mm"], &rows)?;
-            // Modal frequencies vs roller position (the simulator's core).
-            let freq_rows: Vec<Vec<String>> = sim
-                .table
-                .positions
-                .iter()
-                .enumerate()
-                .map(|(i, &a)| {
-                    let mut row = vec![format!("{:.4}", a * 1000.0)];
-                    for k in 0..sim.table.freqs.len() {
-                        row.push(format!("{:.2}", sim.table.freqs[k][i]));
-                    }
-                    row
-                })
-                .collect();
-            report::write_csv(
-                "dropbear_modes",
-                &["roller_mm", "f1_hz", "f2_hz", "f3_hz"],
-                &freq_rows,
-            )?;
-            println!("[csv] results/dropbear_modes.csv ({} rows)", freq_rows.len());
+            let default_name = format!("{}_run", w.name());
+            let title = format!(
+                "Figs 2-3 — {} run, profile {profile_name} (decimated 4x)",
+                w.name()
+            );
+            emit(&args, &default_name, &title, &["t_s", "input", "target"],
+                 &rows[..rows.len().min(12)]);
+            report::write_csv(args.get("out").unwrap_or(&default_name),
+                              &["t_s", "input", "target"], &rows)?;
+            if let Some(sim) = &dropbear_sim {
+                // Modal frequencies vs roller position (the beam
+                // simulator's core, not part of the generic trait).
+                let freq_rows: Vec<Vec<String>> = sim
+                    .table
+                    .positions
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &a)| {
+                        let mut row = vec![format!("{:.4}", a * 1000.0)];
+                        for k in 0..sim.table.freqs.len() {
+                            row.push(format!("{:.2}", sim.table.freqs[k][i]));
+                        }
+                        row
+                    })
+                    .collect();
+                report::write_csv(
+                    "dropbear_modes",
+                    &["roller_mm", "f1_hz", "f2_hz", "f3_hz"],
+                    &freq_rows,
+                )?;
+                println!("[csv] results/dropbear_modes.csv ({} rows)", freq_rows.len());
+            }
         }
         "init-config" => {
             args.check_known(&[COMMON_FLAGS, &["path"]].concat())?;
@@ -498,21 +557,27 @@ fn run_e2e(cfg: PipelineConfig, args: &Args) -> Result<()> {
         worst.metric.name()
     );
 
-    println!("[3/4] hyperparameter search on simulated DROPBEAR ...");
-    let sim = report::standard_simulator();
-    // Deployment-aware HPO: every trial's 200 µs deployment resolves
+    let sim = pipe.workload();
+    let budget_us = pipe.cfg.latency_budget / ntorc::hls::ZU7EV.clock_mhz;
+    println!(
+        "[3/4] hyperparameter search on simulated {} ({:.0} Hz -> {:.0} µs budget) ...",
+        sim.name(),
+        sim.sample_rate_hz(),
+        budget_us
+    );
+    // Deployment-aware HPO: every trial's real-time deployment resolves
     // through the pipeline's shared frontier service, so the genomes
     // that decode to the same architecture pay the frontier DP once.
     let (trials, deployments, _datasets) = pipe.run_hpo_deployed(&sim, &models);
     let deployable = deployments.iter().filter(|d| d.is_some()).count();
     let front = pareto_trials(&trials);
     println!(
-        "      {} trials ({deployable} deployable at 200 µs), Pareto front {}",
+        "      {} trials ({deployable} deployable at {budget_us:.0} µs), Pareto front {}",
         trials.len(),
         front.len()
     );
 
-    println!("[4/4] MIP deployment of the Pareto set (200 µs budget) ...");
+    println!("[4/4] MIP deployment of the Pareto set ({budget_us:.0} µs budget) ...");
     let deployed = report::deploy_pareto(&pipe, &models, &trials);
     let (h, rows) = report::table3_rows(&deployed);
     emit(args, "e2e_table3", "E2E — deployed Pareto networks", &h, &rows);

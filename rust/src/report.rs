@@ -13,7 +13,6 @@ use crate::coordinator::{
     PreparedData, TrainBudget,
 };
 use crate::data;
-use crate::dropbear::{Profile, SimConfig, Simulator};
 use crate::frontier::{FrontierIndex, ParetoFrontier};
 use crate::hls::{Metric, ZU7EV};
 use crate::hpo::{pareto_trials, Trial};
@@ -22,6 +21,7 @@ use crate::mip;
 use crate::nn::{Adam, AdamConfig, NativeModel};
 use crate::rng::Rng;
 use crate::search::{simulated_annealing_oracle, stochastic_search_oracle, SaConfig};
+use crate::workload::Workload;
 
 // ---------------------------------------------------------------------------
 // Formatting helpers
@@ -274,15 +274,15 @@ pub struct Fig5Output {
     pub prior: Vec<(String, f64, f64)>, // (name, rmse, workload)
 }
 
-pub fn fig5_run(pipe: &Pipeline, sim: &Simulator) -> Fig5Output {
-    let (trials, datasets) = pipe.run_hpo(sim);
+pub fn fig5_run(pipe: &Pipeline, w: &dyn Workload) -> Fig5Output {
+    let (trials, datasets) = pipe.run_hpo(w);
     let mut prior = Vec::new();
     for (name, cfg) in prior_work_configs() {
         let d = datasets
             .get(&cfg.window)
             .map(|d| (d.train.clone(), d.val.clone()))
             .unwrap_or_else(|| {
-                let d = crate::coordinator::prepare_data(sim, &pipe.cfg.data, cfg.window);
+                let d = crate::coordinator::prepare_data(w, &pipe.cfg.data, cfg.window);
                 (d.train, d.val)
             });
         let rmse = crate::coordinator::train_trial(&cfg, &d.0, &d.1, &pipe.cfg.budget, 0xBEEF);
@@ -365,28 +365,30 @@ pub fn deploy_pareto(pipe: &Pipeline, models: &CostModels, trials: &[Trial]) -> 
 // E6 — Fig 7: predicted vs true roller trace
 // ---------------------------------------------------------------------------
 
-/// Train two configs and trace them over a standard-index test run.
+/// Train two configs and trace them over a held-out run of the
+/// workload's trace profile (standard-index for DROPBEAR, fault-growth
+/// for rotor — a profile whose target actually moves).
 pub struct Fig7Output {
     pub rows: Vec<Vec<String>>,
     pub rmse: Vec<(String, f64)>,
 }
 
 pub fn fig7_run(
-    sim: &Simulator,
+    w: &dyn Workload,
     dc: &DataConfig,
     configs: &[(&str, NetConfig)],
     budget: &TrainBudget,
     seed: u64,
 ) -> Fig7Output {
-    // One held-out standard-index run for the trace.
-    let trace_run = sim.generate(Profile::StandardIndex, dc.seconds_per_run.max(2.0), 0xF16_7);
+    // One held-out trace-profile run (time-varying target).
+    let trace_run = w.generate_run(w.trace_profile(), dc.seconds_per_run.max(2.0), 0xF16_7);
     let mut rows: Vec<Vec<String>> = Vec::new();
     let mut rmses = Vec::new();
 
     // Trace timeline (decimated for the CSV).
     let mut preds: Vec<(String, Vec<f32>, data::Normalizer, usize)> = Vec::new();
     for (name, cfg) in configs {
-        let prepared = crate::coordinator::prepare_data(sim, dc, cfg.window);
+        let prepared = crate::coordinator::prepare_data(w, dc, cfg.window);
         let mut rng = Rng::new(seed);
         let mut model = NativeModel::init(cfg.clone(), &mut rng);
         let mut opt = Adam::new(
@@ -407,9 +409,9 @@ pub fn fig7_run(
     if let Some((_, p0, norm, w0)) = preds.first() {
         let n = p0.len();
         for i in 0..n {
-            let t = (w0 + i * 8 - 1) as f64 / crate::dropbear::SAMPLE_RATE_HZ;
-            let truth = norm.norm_roller(trace_run.roller[w0 + i * 8 - 1]);
-            let vib = trace_run.accel[w0 + i * 8 - 1];
+            let t = (w0 + i * 8 - 1) as f64 / w.sample_rate_hz();
+            let truth = norm.norm_target(trace_run.target[w0 + i * 8 - 1]);
+            let vib = trace_run.input[w0 + i * 8 - 1];
             let mut row = vec![f(t, 4), f(vib as f64, 4), f(truth as f64, 4)];
             for (_, p, _, w) in &preds {
                 // Models with different windows have offset traces; clamp.
@@ -625,8 +627,11 @@ pub fn table4_run(
 // Frontier sweep: one frontier build answers every latency constraint
 // ---------------------------------------------------------------------------
 
-/// Default budget grid for frontier sweeps (cycles at 250 MHz; the
-/// paper's 50,000-cycle real-time point sits in the middle).
+/// DROPBEAR's default budget grid (cycles at 250 MHz; the paper's
+/// 50,000-cycle real-time point sits in the middle). Exactly
+/// `workload::by_name("dropbear").budget_grid()` — other workloads
+/// derive their own grids from their sample rates, which is what the
+/// `ntorc frontier` command sweeps by default.
 pub const SWEEP_BUDGETS: [f64; 12] = [
     5_000.0, 10_000.0, 15_000.0, 20_000.0, 30_000.0, 40_000.0, 50_000.0, 65_000.0, 80_000.0,
     100_000.0, 150_000.0, 250_000.0,
@@ -818,9 +823,10 @@ pub fn standard_models(cfg: PipelineConfig) -> (Pipeline, CostModels) {
     (pipe, models)
 }
 
-/// Simulator with default physics.
-pub fn standard_simulator() -> Simulator {
-    Simulator::new(SimConfig::default())
+/// Workload simulator with default physics, by registry name (panics on
+/// unregistered names — CLI/config validation happens upstream).
+pub fn standard_workload(name: &str) -> std::sync::Arc<dyn Workload> {
+    crate::workload::by_name(name).expect("registered workload")
 }
 
 #[cfg(test)]
@@ -842,6 +848,18 @@ mod tests {
     fn wu_constants_match_paper() {
         assert_eq!(WU_MAPE[0], ("DSP", 8.95, 10.98, 15.03));
         assert_eq!(WU_MAPE[3].3, 8.72);
+    }
+
+    #[test]
+    fn sweep_budgets_are_dropbears_derived_grid() {
+        // The historical constant and the workload-derived grid must
+        // never drift apart: fractions x 50,000-cycle deadline.
+        let d = crate::workload::deadline_cycles_for(crate::dropbear::SAMPLE_RATE_HZ);
+        let derived: Vec<f64> = crate::workload::BUDGET_FRACTIONS
+            .iter()
+            .map(|f| (f * d).round())
+            .collect();
+        assert_eq!(SWEEP_BUDGETS.to_vec(), derived);
     }
 
     #[test]

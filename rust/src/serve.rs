@@ -16,11 +16,14 @@
 //!   (kind, n_in, n_out, seq per layer) plus the candidate-grid cap,
 //!   prefixed with a human-readable slug from
 //!   [`NetConfig::signature`]. The service re-scopes it
-//!   ([`FrontierKey::mix`]) with its guardrail config and the
+//!   ([`FrontierKey::mix`]) with its guardrail config, its workload
+//!   identity ([`WorkloadKey`]: scenario name + sample rate, so a store
+//!   shared across scenario families never mixes them) and the
 //!   cost-model fingerprint, so: same architecture + same solver grid +
-//!   same fitted models ⇒ same key in every process, forever; any
-//!   difference — including a different preset or forest config over a
-//!   shared store — ⇒ a different key, never a stale hit.
+//!   same workload + same fitted models ⇒ same key in every process,
+//!   forever; any difference — including a different preset, forest
+//!   config or scenario over a shared store — ⇒ a different key, never
+//!   a stale hit.
 //!
 //! * [`FrontierStore`] — persistence: one JSON document per key under a
 //!   directory (`results/frontiers/<slug>-<hash>.json` by default),
@@ -30,6 +33,10 @@
 //!   never a silently wrong answer. Alongside the index the document
 //!   carries the per-layer reuse-factor table, so a loaded frontier can
 //!   materialize full deployments without re-collapsing the cost models.
+//!   An opt-in document cap (`serve.store_max_docs`,
+//!   [`FrontierStore::with_max_docs`]) garbage-collects oldest-first
+//!   after each save, bounding a store shared by the multi-workload key
+//!   space; an evicted frontier is rebuilt on next demand.
 //!
 //! * [`FrontierService`] — the serving layer: a bounded LRU of hot
 //!   in-memory indices in front of the store, building missing frontiers
@@ -269,14 +276,32 @@ impl ServedFrontier {
 
 /// On-disk frontier store: one JSON document per [`FrontierKey`] under
 /// `dir`. Writes are atomic (tmp file + rename); loads re-verify every
-/// invariant before a document can serve queries.
+/// invariant before a document can serve queries. An optional document
+/// cap ([`with_max_docs`](Self::with_max_docs)) garbage-collects the
+/// oldest documents after each save, so a long-lived store shared
+/// across many architectures and workloads cannot grow unboundedly.
 pub struct FrontierStore {
     dir: PathBuf,
+    max_docs: Option<usize>,
 }
 
 impl FrontierStore {
     pub fn new(dir: impl Into<PathBuf>) -> FrontierStore {
-        FrontierStore { dir: dir.into() }
+        FrontierStore { dir: dir.into(), max_docs: None }
+    }
+
+    /// Cap the number of persisted documents (`None` = unbounded; caps
+    /// below 1 clamp to 1). When a save pushes the store over the cap,
+    /// the documents with the oldest modification times are removed —
+    /// an evicted frontier is simply rebuilt on next demand, never a
+    /// wrong answer.
+    pub fn with_max_docs(mut self, cap: Option<usize>) -> FrontierStore {
+        self.max_docs = cap.map(|c| c.max(1));
+        self
+    }
+
+    pub fn max_docs(&self) -> Option<usize> {
+        self.max_docs
     }
 
     pub fn dir(&self) -> &Path {
@@ -293,7 +318,8 @@ impl FrontierStore {
 
     /// Persist one frontier. The tmp-then-rename dance means a crashed
     /// writer leaves either the old document or none — never half a file
-    /// under the served name.
+    /// under the served name. With a document cap set, the save then
+    /// garbage-collects oldest-first down to the cap.
     pub fn save(&self, sf: &ServedFrontier) -> Result<PathBuf> {
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("create store dir {}", self.dir.display()))?;
@@ -303,7 +329,52 @@ impl FrontierStore {
             .with_context(|| format!("write {}", tmp.display()))?;
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("rename into {}", path.display()))?;
+        self.gc_keeping(Some(&path));
         Ok(path)
+    }
+
+    /// Enforce the document cap: remove oldest-mtime documents until at
+    /// most `max_docs` remain (ties broken by path for determinism).
+    /// Returns the number of documents removed. Unreadable metadata or
+    /// failed removals are skipped — GC is best-effort by design; the
+    /// correctness of the store never depends on it.
+    pub fn gc(&self) -> usize {
+        self.gc_keeping(None)
+    }
+
+    /// [`gc`](Self::gc), never evicting `keep` — `save` passes the path
+    /// it just renamed into place, so an mtime tie on a coarse-mtime
+    /// filesystem cannot evict the document the caller was promised.
+    fn gc_keeping(&self, keep: Option<&Path>) -> usize {
+        let Some(cap) = self.max_docs else {
+            return 0;
+        };
+        let mut entries: Vec<(std::time::SystemTime, PathBuf)> = self
+            .list()
+            .into_iter()
+            .filter_map(|p| {
+                let mtime = std::fs::metadata(&p).and_then(|m| m.modified()).ok()?;
+                Some((mtime, p))
+            })
+            .collect();
+        if entries.len() <= cap {
+            return 0;
+        }
+        entries.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        let excess = entries.len() - cap;
+        let mut removed = 0usize;
+        for (_, p) in entries.into_iter() {
+            if removed == excess {
+                break;
+            }
+            if keep.is_some_and(|k| k == p.as_path()) {
+                continue;
+            }
+            if std::fs::remove_file(&p).is_ok() {
+                removed += 1;
+            }
+        }
+        removed
     }
 
     /// Load the frontier for `key`: `Ok(None)` when absent, a clean
@@ -439,6 +510,24 @@ impl ServeSnapshot {
 // The service
 // ---------------------------------------------------------------------------
 
+/// The workload identity a service folds into every key: scenario name
+/// plus sensor sample rate. Two scenarios sharing one store can never
+/// exchange frontiers — even for identical layer plans — because their
+/// keys differ (and a renamed workload with the same rate, or a re-rated
+/// workload with the same name, still re-keys).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadKey {
+    pub name: String,
+    pub sample_rate_hz: f64,
+}
+
+impl WorkloadKey {
+    /// The fields mixed into [`FrontierKey::mix`].
+    fn mix_fields(&self) -> [u64; 2] {
+        [crate::rng::fnv1a(self.name.as_bytes()), self.sample_rate_hz.to_bits()]
+    }
+}
+
 /// Service knobs.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -453,6 +542,10 @@ pub struct ServeConfig {
     pub latency_budget: f64,
     /// Guardrail forwarded to [`ParetoFrontier::with_max_points`].
     pub max_points: Option<usize>,
+    /// Workload identity scoped into every key ([`WorkloadKey`]).
+    /// `None` leaves keys workload-agnostic (bare toy services; the
+    /// pipeline always sets this).
+    pub workload: Option<WorkloadKey>,
 }
 
 impl Default for ServeConfig {
@@ -463,6 +556,7 @@ impl Default for ServeConfig {
             max_choices_per_layer: 48,
             latency_budget: LATENCY_BUDGET_CYCLES,
             max_points: None,
+            workload: None,
         }
     }
 }
@@ -539,13 +633,23 @@ impl FrontierService {
 
     /// The key this service files `net` under: the pure architecture
     /// key re-scoped by the guardrail config (a truncated frontier must
-    /// never be mistaken for an exact one). Model-backed entry points
-    /// ([`resolve`](Self::resolve)/[`query`](Self::query)/
+    /// never be mistaken for an exact one) and, when configured, the
+    /// workload identity (name hash + sample-rate bits — frontiers for
+    /// different scenarios never collide in a shared store, and the
+    /// store slug gets a `<workload>-` prefix). Model-backed entry
+    /// points ([`resolve`](Self::resolve)/[`query`](Self::query)/
     /// [`query_batch`](Self::query_batch)) additionally fold in the
     /// cost-model fingerprint via [`model_key`](Self::model_key).
     pub fn key_for(&self, net: &NetConfig) -> FrontierKey {
-        FrontierKey::for_net(net, self.cfg.max_choices_per_layer)
-            .mix(&[self.cfg.max_points.map(|c| c as u64).unwrap_or(0)])
+        let mut fields = vec![self.cfg.max_points.map(|c| c as u64).unwrap_or(0)];
+        if let Some(w) = &self.cfg.workload {
+            fields.extend_from_slice(&w.mix_fields());
+        }
+        let mut key = FrontierKey::for_net(net, self.cfg.max_choices_per_layer).mix(&fields);
+        if let Some(w) = &self.cfg.workload {
+            key.name = format!("{}-{}", sanitize(&w.name), key.name);
+        }
+        key
     }
 
     /// [`key_for`](Self::key_for) scoped to one fitted model set, so a
@@ -949,6 +1053,80 @@ mod tests {
         );
         assert_eq!(zero.config().max_points, Some(2));
         assert_ne!(zero.key_for(&demo_net()).hash, exact.key_for(&demo_net()).hash);
+    }
+
+    #[test]
+    fn workload_identity_rescopes_keys_and_slugs() {
+        let mk = |workload: Option<WorkloadKey>| {
+            FrontierService::new(ServeConfig { workload, ..ServeConfig::default() }, None)
+        };
+        let agnostic = mk(None);
+        let dropbear = mk(Some(WorkloadKey { name: "dropbear".into(), sample_rate_hz: 5e3 }));
+        let rotor = mk(Some(WorkloadKey { name: "rotor".into(), sample_rate_hz: 5e4 }));
+        let net = demo_net();
+        let k0 = agnostic.key_for(&net);
+        let k1 = dropbear.key_for(&net);
+        let k2 = rotor.key_for(&net);
+        // Identical layer plans, three distinct keys.
+        assert_ne!(k0.hash, k1.hash);
+        assert_ne!(k0.hash, k2.hash);
+        assert_ne!(k1.hash, k2.hash);
+        // Same name at a different sample rate is a different scenario.
+        let rerated = mk(Some(WorkloadKey { name: "rotor".into(), sample_rate_hz: 5e3 }));
+        assert_ne!(rerated.key_for(&net).hash, k2.hash);
+        // Slugs carry the workload prefix (readable store listings).
+        assert!(k1.name.starts_with("dropbear-w32-"));
+        assert!(k2.name.starts_with("rotor-w32-"));
+        assert_eq!(k0.name, "w32-c-3x4-l-5-d-6-1");
+        // Deterministic across service instances.
+        assert_eq!(k2, mk(Some(WorkloadKey { name: "rotor".into(), sample_rate_hz: 5e4 }))
+            .key_for(&net));
+    }
+
+    #[test]
+    fn store_gc_evicts_oldest_documents_at_the_cap() {
+        let dir = temp_dir("gc");
+        let store = FrontierStore::new(&dir).with_max_docs(Some(2));
+        assert_eq!(store.max_docs(), Some(2));
+        let mut keys = Vec::new();
+        for tag in [31u64, 32, 33] {
+            let prob = toy_problem(tag, 2);
+            let index = ParetoFrontier::new(1).build(&prob);
+            let sf = ServedFrontier::from_problem(toy_key(tag), &prob, index);
+            store.save(&sf).unwrap();
+            keys.push(sf.key);
+            // Distinct mtimes so eviction order is unambiguous.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        assert_eq!(store.list().len(), 2, "cap must hold after saves");
+        // The oldest document is gone; the two newest survive intact.
+        assert!(store.load(&keys[0]).unwrap().is_none(), "oldest evicted");
+        assert!(store.load(&keys[1]).unwrap().is_some());
+        assert!(store.load(&keys[2]).unwrap().is_some());
+        // A service over the GC'd store self-heals by rebuilding.
+        let svc = FrontierService::new(
+            ServeConfig::default(),
+            Some(FrontierStore::new(&dir).with_max_docs(Some(2))),
+        );
+        let healed = svc.resolve_with(keys[0].clone(), || toy_problem(31, 2));
+        assert_eq!(svc.stats.snapshot().builds, 1);
+        healed.check().unwrap();
+        // Uncapped stores never GC.
+        assert_eq!(FrontierStore::new(&dir).gc(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+        // Cap 1, back-to-back saves with NO sleep (mtimes may tie): the
+        // document a save just wrote must always survive its own GC.
+        let dir = temp_dir("gc1");
+        let store = FrontierStore::new(&dir).with_max_docs(Some(1));
+        for tag in [41u64, 42] {
+            let prob = toy_problem(tag, 2);
+            let index = ParetoFrontier::new(1).build(&prob);
+            let sf = ServedFrontier::from_problem(toy_key(tag), &prob, index);
+            store.save(&sf).unwrap();
+        }
+        assert!(store.load(&toy_key(42)).unwrap().is_some(), "just-saved evicted");
+        assert!(store.load(&toy_key(41)).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Workload abstraction layer: cyber-physical scenario families behind
+//! one trait.
+//!
+//! The paper demonstrates N-TORC on a single workload (the DROPBEAR
+//! beam), but the whole pitch — data-driven cost models plus a solver
+//! that satisfies *any* latency constraint — only earns its keep across
+//! heterogeneous real-time regimes. This module makes the scenario a
+//! first-class, swappable component:
+//!
+//! * [`Workload`] — the trait every scenario family implements. A
+//!   workload is a deterministic, seeded simulator of one cyber-physical
+//!   rig: it names itself, declares its sensor sample rate, enumerates
+//!   its excitation profiles, and generates supervised [`Run`]s (sensor
+//!   channel in, physical regression target out). Everything real-time
+//!   derives from the sample rate: [`Workload::deadline_cycles`] is the
+//!   per-sample inference deadline at the target device clock, and
+//!   [`Workload::budget_grid`] is the default latency-budget sweep
+//!   (fixed fractions of that deadline), so a 50 kHz workload
+//!   automatically gets microsecond-scale budgets and a 500 Hz workload
+//!   gets millisecond-scale ones.
+//!
+//! * The registry ([`by_name`], [`ALL`]) — the three in-tree scenario
+//!   families, each with physics unit tests in its own module:
+//!   - `dropbear` ([`crate::dropbear`]): cantilever-beam vibration,
+//!     5 kHz, roller position target (the paper's rig);
+//!   - `rotor` ([`crate::rotor`]): rotating-machinery vibration with
+//!     bearing-fault harmonics and speed ramps, 50 kHz, fault-severity
+//!     target (tight ~20 µs deadlines);
+//!   - `battery` ([`crate::battery`]): battery state-of-charge traces
+//!     with RC-pair discharge dynamics and load steps, 500 Hz, SoC
+//!     target (relaxed ~2 ms deadlines).
+//!
+//! ## The trait contract
+//!
+//! Implementations must be pure functions of `(profile, seconds, seed)`:
+//! the same arguments produce bit-identical runs in every process and at
+//! every worker count (all randomness flows through [`crate::rng::Rng`]
+//! seeded from the arguments — no global state, no wall clock). The
+//! default [`Workload::generate_dataset`] draws one sub-seed per run
+//! *before* generating, so [`generate_dataset_parallel`] can fan the
+//! runs out over the coordinator pool and still match the sequential
+//! path exactly; a property test in `tests/workload_matrix.rs` enforces
+//! this for every registered workload.
+//!
+//! ## Adding a fourth scenario
+//!
+//! 1. Write `src/<name>.rs` with a config struct, a simulator type, and
+//!    physics unit tests mirroring the existing modules (determinism by
+//!    seed, target range, at least one falsifiable physical claim).
+//! 2. Implement [`Workload`] for the simulator: pick a sample rate that
+//!    reflects the real sensor, list 2–3 excitation profiles and their
+//!    dataset mix, and map the regression target into a physical
+//!    `(lo, hi)` range for normalization.
+//! 3. Register it: add the module to `lib.rs`, the name to [`ALL`], and
+//!    arms to [`by_name`] / [`sample_rate_of`].
+//! 4. Add the name to the CI `workload-matrix` job in
+//!    `.github/workflows/ci.yml` so every PR runs its e2e smoke.
+//!
+//! Frontier-store isolation (distinct [`crate::serve::FrontierKey`]s per
+//! workload) and the budget-grid invariants are enforced generically by
+//! `tests/workload_matrix.rs` — a new scenario inherits them for free.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::rng::Rng;
+
+/// One experimental run: a sensor channel and the physical quantity the
+/// network must infer from it, both sampled at the workload's rate.
+#[derive(Clone, Debug)]
+pub struct Run {
+    /// Index into the generating workload's [`Workload::profiles`] list.
+    pub profile: usize,
+    pub seed: u64,
+    /// Sensor channel (accelerometer, vibration probe, terminal
+    /// voltage, ... — arbitrary units, standardized downstream).
+    pub input: Vec<f32>,
+    /// Physical regression target at each sample (roller position in m,
+    /// fault severity, state of charge, ...).
+    pub target: Vec<f32>,
+}
+
+/// Default budget-grid shape: fractions of the workload's per-sample
+/// deadline. For DROPBEAR (50,000-cycle deadline) this reproduces the
+/// paper-era sweep exactly: 5k..250k cycles with the 200 µs real-time
+/// point (fraction 1.0) in the middle.
+pub const BUDGET_FRACTIONS: [f64; 12] =
+    [0.1, 0.2, 0.3, 0.4, 0.6, 0.8, 1.0, 1.3, 1.6, 2.0, 3.0, 5.0];
+
+/// Per-sample inference deadline in device cycles: one sample period at
+/// the target clock ([`crate::hls::ZU7EV`]). DROPBEAR at 5 kHz: 50,000
+/// cycles = 200 µs — the paper's real-time constraint.
+pub fn deadline_cycles_for(sample_rate_hz: f64) -> f64 {
+    assert!(sample_rate_hz > 0.0, "sample rate must be positive");
+    crate::hls::ZU7EV.clock_mhz * 1e6 / sample_rate_hz
+}
+
+/// The default budget grid for a sample rate: [`BUDGET_FRACTIONS`] of
+/// the per-sample deadline, rounded to whole cycles. Metadata-only —
+/// callers with just a workload *name* can pair this with
+/// [`sample_rate_of`] and skip building the simulator.
+pub fn budget_grid_for(sample_rate_hz: f64) -> Vec<f64> {
+    let d = deadline_cycles_for(sample_rate_hz);
+    BUDGET_FRACTIONS.iter().map(|f| (f * d).round()).collect()
+}
+
+/// A cyber-physical scenario family (see the module docs for the full
+/// contract). Object-safe: the pipeline holds `Arc<dyn Workload>`.
+pub trait Workload: Send + Sync {
+    /// Registry name (also the CLI `--workload` value and the identity
+    /// folded into frontier-store keys).
+    fn name(&self) -> &'static str;
+
+    /// Sensor sample rate. Drives the real-time deadline and therefore
+    /// the default latency-budget grid.
+    fn sample_rate_hz(&self) -> f64;
+
+    /// Excitation-profile names, in generation-index order.
+    fn profiles(&self) -> &'static [&'static str];
+
+    /// Run counts per profile at `scale = 1.0`, aligned with
+    /// [`profiles`](Self::profiles) (the dataset mix).
+    fn profile_mix(&self) -> &'static [usize];
+
+    /// Physical `(lo, hi)` range of the regression target, used to
+    /// normalize targets to `[0, 1]` for training.
+    fn target_range(&self) -> (f32, f32);
+
+    /// Generate one run. Must be a pure function of the arguments.
+    fn generate_run(&self, profile: usize, seconds: f64, seed: u64) -> Run;
+
+    /// Profile index used for trace figures (fig 7): must have a
+    /// time-varying target, else the "predicted vs true" plot compares
+    /// models on predicting a constant. Defaults to profile 0.
+    fn trace_profile(&self) -> usize {
+        0
+    }
+
+    /// Per-sample inference deadline in device cycles.
+    fn deadline_cycles(&self) -> f64 {
+        deadline_cycles_for(self.sample_rate_hz())
+    }
+
+    /// Default latency-budget sweep: [`BUDGET_FRACTIONS`] of the
+    /// deadline, rounded to whole cycles — strictly increasing,
+    /// all positive, with the real-time point at fraction 1.0.
+    fn budget_grid(&self) -> Vec<f64> {
+        budget_grid_for(self.sample_rate_hz())
+    }
+
+    /// Generate a whole dataset in the workload's profile mix, scaled by
+    /// `scale` (per-profile counts are `ceil(mix * scale)`). Per-run
+    /// seeds are drawn from one stream *before* any run is generated, so
+    /// [`generate_dataset_parallel`] is bit-identical to this.
+    fn generate_dataset(&self, seconds: f64, scale: f64, seed: u64) -> Vec<Run> {
+        let specs = dataset_specs(self.profile_mix(), scale, seed);
+        specs
+            .into_iter()
+            .map(|(profile, s)| self.generate_run(profile, seconds, s))
+            .collect()
+    }
+}
+
+/// The per-run `(profile, seed)` plan of a dataset — the sequential and
+/// parallel generators share it, which is what makes them bit-identical.
+fn dataset_specs(mix: &[usize], scale: f64, seed: u64) -> Vec<(usize, u64)> {
+    let mut rng = Rng::new(seed);
+    let mut specs = Vec::new();
+    for (profile, &count) in mix.iter().enumerate() {
+        let n = (count as f64 * scale).ceil() as usize;
+        for _ in 0..n {
+            let s = rng.next_u64();
+            specs.push((profile, s));
+        }
+    }
+    specs
+}
+
+/// [`Workload::generate_dataset`] sharded over the coordinator worker
+/// pool. Bit-identical to the sequential path for any `workers` (the
+/// per-run seed plan is fixed up front; each run is a pure function of
+/// its seed; `parallel_map` preserves order).
+pub fn generate_dataset_parallel(
+    w: &Arc<dyn Workload>,
+    seconds: f64,
+    scale: f64,
+    seed: u64,
+    workers: usize,
+) -> Vec<Run> {
+    let specs = dataset_specs(w.profile_mix(), scale, seed);
+    let jobs: Vec<Box<dyn FnOnce() -> Run + Send>> = specs
+        .into_iter()
+        .map(|(profile, s)| {
+            let w = Arc::clone(w);
+            Box::new(move || w.generate_run(profile, seconds, s))
+                as Box<dyn FnOnce() -> Run + Send>
+        })
+        .collect();
+    crate::coordinator::parallel_map(workers, jobs)
+}
+
+/// Registered scenario names, in registry order.
+pub const ALL: [&str; 3] = ["dropbear", "rotor", "battery"];
+
+/// Build a workload by registry name (full simulator construction — for
+/// DROPBEAR this includes the eigen-solve frequency table).
+pub fn by_name(name: &str) -> Result<Arc<dyn Workload>> {
+    match name {
+        "dropbear" => Ok(Arc::new(crate::dropbear::Simulator::new(
+            crate::dropbear::SimConfig::default(),
+        ))),
+        "rotor" => Ok(Arc::new(crate::rotor::RotorSim::new(
+            crate::rotor::RotorConfig::default(),
+        ))),
+        "battery" => Ok(Arc::new(crate::battery::BatterySim::new(
+            crate::battery::BatteryConfig::default(),
+        ))),
+        other => bail!(
+            "unknown workload '{other}' (expected one of: {})",
+            ALL.join(", ")
+        ),
+    }
+}
+
+/// Sample rate by registry name, without building the simulator (the
+/// pipeline folds this into frontier-store keys on every construction,
+/// and DROPBEAR's full build pays an eigen-solve).
+pub fn sample_rate_of(name: &str) -> Result<f64> {
+    match name {
+        "dropbear" => Ok(crate::dropbear::SAMPLE_RATE_HZ),
+        "rotor" => Ok(crate::rotor::SAMPLE_RATE_HZ),
+        "battery" => Ok(crate::battery::SAMPLE_RATE_HZ),
+        other => bail!(
+            "unknown workload '{other}' (expected one of: {})",
+            ALL.join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_every_workload_with_consistent_metadata() {
+        for name in ALL {
+            let w = by_name(name).expect("registered workload builds");
+            assert_eq!(w.name(), name);
+            assert_eq!(w.sample_rate_hz(), sample_rate_of(name).unwrap());
+            assert_eq!(w.profiles().len(), w.profile_mix().len());
+            assert!(w.profiles().len() >= 2, "{name}: at least two profiles");
+            assert!(w.trace_profile() < w.profiles().len(), "{name}: trace profile");
+            let (lo, hi) = w.target_range();
+            assert!(lo < hi, "{name}: degenerate target range");
+        }
+        assert!(by_name("nonsense").is_err());
+        assert!(sample_rate_of("nonsense").is_err());
+    }
+
+    #[test]
+    fn deadline_matches_paper_for_dropbear() {
+        // 5 kHz at 250 MHz: 50,000 cycles = 200 µs (paper §IV-B).
+        let d = deadline_cycles_for(crate::dropbear::SAMPLE_RATE_HZ);
+        assert_eq!(d, crate::coordinator::LATENCY_BUDGET_CYCLES);
+    }
+
+    #[test]
+    fn sample_rates_span_heterogeneous_regimes() {
+        // The whole point of the abstraction: rotor deadlines are 10x
+        // tighter than DROPBEAR's, battery deadlines 10x looser.
+        let dropbear = sample_rate_of("dropbear").unwrap();
+        let rotor = sample_rate_of("rotor").unwrap();
+        let battery = sample_rate_of("battery").unwrap();
+        assert!(rotor >= 10.0 * dropbear);
+        assert!(battery <= dropbear / 10.0);
+    }
+
+    #[test]
+    fn dataset_specs_are_scale_proportional_and_seed_stable() {
+        let mix = [20usize, 100, 30];
+        let a = dataset_specs(&mix, 0.05, 42);
+        assert_eq!(a.len(), 1 + 5 + 2);
+        assert_eq!(a, dataset_specs(&mix, 0.05, 42));
+        assert_ne!(a, dataset_specs(&mix, 0.05, 43));
+        // Profiles appear in mix order with ceil'd counts.
+        let count = |p: usize| a.iter().filter(|(q, _)| *q == p).count();
+        assert_eq!((count(0), count(1), count(2)), (1, 5, 2));
+    }
+
+    #[test]
+    fn budget_fractions_put_the_deadline_mid_grid() {
+        assert!(BUDGET_FRACTIONS.contains(&1.0));
+        for w in BUDGET_FRACTIONS.windows(2) {
+            assert!(w[0] < w[1], "fractions must be strictly increasing");
+        }
+        assert!(BUDGET_FRACTIONS[0] > 0.0);
+    }
+}

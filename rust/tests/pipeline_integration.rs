@@ -50,7 +50,7 @@ fn hpo_front_shrinks_with_budget() {
     let mut cfg = PipelineConfig::smoke();
     cfg.hpo.n_trials = 10;
     let pipe = Pipeline::new(cfg);
-    let sim = report::standard_simulator();
+    let sim = report::standard_workload("dropbear");
     let (trials, _) = pipe.run_hpo(&sim);
     assert!(trials.len() >= 8);
     let front = pareto_trials(&trials);
@@ -70,7 +70,7 @@ fn samplers_explore_the_same_space() {
         cfg.hpo.n_trials = 6;
         cfg.budget = TrainBudget { steps: 10, ..TrainBudget::smoke() };
         let pipe = Pipeline::new(cfg);
-        let sim = report::standard_simulator();
+        let sim = report::standard_workload("dropbear");
         let (trials, _) = pipe.run_hpo(&sim);
         assert!(trials.len() >= 5, "{sampler:?} produced {}", trials.len());
         for t in &trials {
@@ -83,7 +83,7 @@ fn samplers_explore_the_same_space() {
 
 #[test]
 fn prepared_data_respects_protocol() {
-    let sim = report::standard_simulator();
+    let sim = report::standard_workload("dropbear");
     let dc = ntorc::coordinator::DataConfig::smoke();
     let prepared = prepare_data(&sim, &dc, 32);
     assert!(!prepared.train.is_empty());

@@ -22,6 +22,7 @@ fn serve_cfg() -> ServeConfig {
         max_choices_per_layer: 16,
         latency_budget: 50_000.0,
         max_points: None,
+        workload: None,
     }
 }
 

@@ -1,0 +1,180 @@
+//! Cross-workload invariants (the PR's acceptance bar): the three
+//! scenario families behind the `Workload` trait must (1) produce
+//! distinct frontier-store keys for identical layer plans — zero
+//! cross-workload cache hits over a shared store, (2) generate
+//! bit-identical datasets for a fixed seed at any worker count, and
+//! (3) derive sorted, positive latency-budget grids from their sample
+//! rates. A fourth scenario added to the registry inherits every test
+//! here for free.
+
+use std::sync::Arc;
+
+use ntorc::coordinator::{Pipeline, PipelineConfig};
+use ntorc::layers::NetConfig;
+use ntorc::mip::{Choice, DeployProblem};
+use ntorc::rng::Rng;
+use ntorc::serve::{FrontierService, FrontierStore, ServeConfig, WorkloadKey};
+use ntorc::workload::{self, Workload, BUDGET_FRACTIONS};
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ntorc_wlmx_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Cheap workload instances (small DROPBEAR frequency table — the
+/// default 96-point eigen-solve is build-once-per-command, not
+/// per-test).
+fn cheap_workloads() -> Vec<Arc<dyn Workload>> {
+    vec![
+        Arc::new(ntorc::dropbear::Simulator::new(ntorc::dropbear::SimConfig {
+            table_points: 12,
+            ..Default::default()
+        })),
+        Arc::new(ntorc::rotor::RotorSim::new(ntorc::rotor::RotorConfig::default())),
+        Arc::new(ntorc::battery::BatterySim::new(
+            ntorc::battery::BatteryConfig::default(),
+        )),
+    ]
+}
+
+/// Deterministic toy deployment problem (no cost models needed).
+fn toy_problem(tag: u64) -> DeployProblem {
+    let mut rng = Rng::new(0x3012AD ^ tag);
+    let layers = (0..3)
+        .map(|_| {
+            (0..4)
+                .map(|j| Choice {
+                    reuse: 1 << j,
+                    cost: 500.0 / (j + 1) as f64 + rng.range_f64(0.0, 20.0),
+                    latency: (8 * (j + 1)) as f64 + rng.range_f64(0.0, 3.0).floor(),
+                })
+                .collect()
+        })
+        .collect();
+    DeployProblem { layers, latency_budget: 0.0 }
+}
+
+#[test]
+fn budget_grids_are_sorted_positive_and_derived_from_sample_rate() {
+    for w in cheap_workloads() {
+        let grid = w.budget_grid();
+        assert_eq!(grid.len(), BUDGET_FRACTIONS.len());
+        let deadline = workload::deadline_cycles_for(w.sample_rate_hz());
+        assert_eq!(w.deadline_cycles(), deadline);
+        for (b, frac) in grid.iter().zip(BUDGET_FRACTIONS) {
+            assert!(*b > 0.0, "{}: non-positive budget {b}", w.name());
+            assert_eq!(*b, (frac * deadline).round(), "{}: grid not derived", w.name());
+        }
+        for pair in grid.windows(2) {
+            assert!(pair[0] < pair[1], "{}: grid not sorted", w.name());
+        }
+        // The real-time point (fraction 1.0) is on the grid.
+        assert!(grid.contains(&deadline.round()), "{}: deadline missing", w.name());
+    }
+}
+
+#[test]
+fn dataset_generation_is_bit_identical_across_worker_counts() {
+    for w in cheap_workloads() {
+        let sequential = w.generate_dataset(0.15, 0.02, 77);
+        for workers in [1usize, 2, 4] {
+            let parallel =
+                workload::generate_dataset_parallel(&w, 0.15, 0.02, 77, workers);
+            assert_eq!(sequential.len(), parallel.len(), "{}", w.name());
+            for (a, b) in sequential.iter().zip(&parallel) {
+                assert_eq!(a.profile, b.profile, "{}", w.name());
+                assert_eq!(a.seed, b.seed, "{}", w.name());
+                assert_eq!(a.input, b.input, "{}: input drifted", w.name());
+                assert_eq!(a.target, b.target, "{}: target drifted", w.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn workloads_never_collide_in_a_shared_store() {
+    // Three services over ONE store directory, identical layer plan,
+    // only the workload identity differs: three distinct keys, three
+    // builds, three documents — and re-resolution hits only the own
+    // workload's cache (zero cross-workload hits).
+    let dir = temp_dir("shared_store");
+    let net = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]);
+    let mk = |name: &str, rate: f64| {
+        FrontierService::new(
+            ServeConfig {
+                workload: Some(WorkloadKey { name: name.into(), sample_rate_hz: rate }),
+                ..ServeConfig::default()
+            },
+            Some(FrontierStore::new(&dir)),
+        )
+    };
+    let services: Vec<(FrontierService, u64)> = workload::ALL
+        .into_iter()
+        .enumerate()
+        .map(|(i, name)| {
+            (mk(name, workload::sample_rate_of(name).unwrap()), i as u64)
+        })
+        .collect();
+    let keys: Vec<_> = services.iter().map(|(s, _)| s.key_for(&net)).collect();
+    for i in 0..keys.len() {
+        for j in i + 1..keys.len() {
+            assert_ne!(keys[i].hash, keys[j].hash, "workload keys collided");
+        }
+        assert!(
+            keys[i].name.starts_with(workload::ALL[i]),
+            "slug {} should carry its workload prefix",
+            keys[i].name
+        );
+    }
+    // Cold pass: every workload must build its own frontier despite the
+    // shared directory already holding the others' documents.
+    for (svc, tag) in &services {
+        svc.resolve_with(svc.key_for(&net), || toy_problem(*tag));
+        let s = svc.stats.snapshot();
+        assert_eq!((s.builds, s.store_hits), (1, 0), "cross-workload store hit");
+    }
+    assert_eq!(FrontierStore::new(&dir).list().len(), workload::ALL.len());
+    // Warm pass: each service hits only its own entry.
+    for (svc, _) in &services {
+        svc.resolve_with(svc.key_for(&net), || unreachable!("must be cached"));
+        let s = svc.stats.snapshot();
+        assert_eq!((s.builds, s.mem_hits), (1, 1));
+    }
+    // Fresh services per workload over the same store: store hits only,
+    // and each loads a frontier built from its own (distinct) problem.
+    for (i, name) in workload::ALL.into_iter().enumerate() {
+        let fresh = mk(name, workload::sample_rate_of(name).unwrap());
+        let served = fresh.resolve_with(fresh.key_for(&net), || {
+            unreachable!("store must answer")
+        });
+        let s = fresh.stats.snapshot();
+        assert_eq!((s.builds, s.store_hits), (0, 1), "{name}");
+        // The loaded document matches this workload's own problem.
+        let expect = ntorc::frontier::ParetoFrontier::new(1).build(&toy_problem(i as u64));
+        assert_eq!(served.index.len(), expect.len(), "{name}: wrong document served");
+        for k in 0..expect.len() {
+            assert_eq!(served.index.point(k), expect.point(k), "{name}: point {k}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipelines_scope_frontier_keys_by_workload() {
+    // The end-to-end wiring: two pipelines differing only in workload
+    // file the same architecture under different keys.
+    let mut a = PipelineConfig::smoke();
+    a.set_workload("rotor").unwrap();
+    let mut b = PipelineConfig::smoke();
+    b.set_workload("battery").unwrap();
+    // Equalize the budget so the ONLY difference is the workload id
+    // (the budget is not part of the key anyway, but be explicit).
+    b.latency_budget = a.latency_budget;
+    let net = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]);
+    let ka = Pipeline::new(a).serve().key_for(&net);
+    let kb = Pipeline::new(b).serve().key_for(&net);
+    assert_ne!(ka.hash, kb.hash);
+    assert!(ka.name.starts_with("rotor-"));
+    assert!(kb.name.starts_with("battery-"));
+}
