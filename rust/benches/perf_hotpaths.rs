@@ -4,6 +4,9 @@
 //!   * batched vs unbatched cost-model grid evaluation (crate::eval),
 //!   * MIP B&B solve + DP oracle,
 //!   * Pareto-frontier build / query / sweep (crate::frontier),
+//!   * ε-dominance coarsened frontier vs exact on the adversarial
+//!     wide-grid instance (>= 5x faster, >= 10x smaller, every answer
+//!     within 1% — the acceptance bar, asserted here),
 //!   * frontier serving: cold build, warm LRU hit, batched endpoint and
 //!     the store round-trip (crate::serve),
 //!   * beam-simulator sample generation,
@@ -225,6 +228,7 @@ fn main() {
         max_choices_per_layer: 48,
         latency_budget: 50_000.0,
         max_points: None,
+        epsilon: None,
         workload: None,
     };
     let svc = FrontierService::new(serve_cfg.clone(), Some(FrontierStore::new(&serve_dir)));
@@ -276,6 +280,74 @@ fn main() {
     );
     let _ = std::fs::remove_dir_all(&serve_dir);
 
+    // --- ε-dominance coarsened frontier on an adversarial wide grid --------
+    // The instance every `max_points`-style heuristic fears: 10 layers x
+    // 4 choices where EVERY one of the 4^10 = 1,048,576 assignments is
+    // Pareto-optimal (distinct base-4 latencies, cost linear in them).
+    // The exact DP must materialize all of them; ε=0.01 caps each level
+    // near ln(cost range)/δ points with the proven (1+ε) answer bound.
+    let wide = ntorc::frontier::adversarial_wide_grid(10, 4);
+    let t0 = std::time::Instant::now();
+    let exact_wide = ParetoFrontier::new(1).build(&wide);
+    let exact_wide_ns = t0.elapsed().as_nanos() as f64;
+    b.record("frontier_wide_exact_build/4pow10", exact_wide_ns);
+    assert_eq!(exact_wide.len(), 1 << 20, "every assignment is Pareto by construction");
+    let t0 = std::time::Instant::now();
+    let eps_wide = ParetoFrontier::new(1).with_epsilon(Some(0.01)).build(&wide);
+    let eps_build_ns = t0.elapsed().as_nanos() as f64;
+    b.record("frontier_wide_eps_build/4pow10", eps_build_ns);
+    eps_wide.check_invariants().expect("eps frontier invariants");
+    let eps_points_ratio = eps_wide.len() as f64 / exact_wide.len() as f64;
+    println!(
+        "    -> eps=0.01: {} points vs exact {} ({:.1}x smaller), build {:.1} ms vs {:.1} ms \
+         ({:.1}x faster), {} entries coarsened away",
+        eps_wide.len(),
+        exact_wide.len(),
+        1.0 / eps_points_ratio,
+        eps_build_ns / 1e6,
+        exact_wide_ns / 1e6,
+        exact_wide_ns / eps_build_ns.max(1.0),
+        eps_wide.stats.eps_pruned
+    );
+    // The PR's acceptance bar: >= 5x faster, >= 10x smaller, and every
+    // sweep answer within 1% of the exact optimum (the exact index IS
+    // the per-budget optimum here — it holds every assignment).
+    assert!(
+        eps_build_ns * 5.0 <= exact_wide_ns,
+        "eps build {eps_build_ns}ns not 5x faster than exact {exact_wide_ns}ns"
+    );
+    assert!(
+        eps_wide.len() * 10 <= exact_wide.len(),
+        "eps frontier {} not 10x smaller than exact {}",
+        eps_wide.len(),
+        exact_wide.len()
+    );
+    let max_wide_latency: f64 = wide
+        .layers
+        .iter()
+        .map(|l| l.iter().map(|c| c.latency).fold(0.0, f64::max))
+        .sum();
+    let mut verified = 0usize;
+    for i in 0..=64u64 {
+        let budget = max_wide_latency * i as f64 / 64.0;
+        match (exact_wide.query(budget), eps_wide.query(budget)) {
+            (None, None) => {}
+            (Some(e), Some(a)) => {
+                assert!(a.latency <= budget + 1e-9, "budget {budget}");
+                assert!(a.cost >= e.cost - 1e-9, "budget {budget}: eps beats exact");
+                assert!(
+                    a.cost <= 1.01 * e.cost * (1.0 + 1e-12),
+                    "budget {budget}: eps {} outside 1% of exact {}",
+                    a.cost,
+                    e.cost
+                );
+                verified += 1;
+            }
+            other => panic!("budget {budget}: feasibility disagreement {other:?}"),
+        }
+    }
+    println!("    -> {verified} sweep answers verified within 1% of the exact optimum");
+
     // Regression report + gate (see module docs).
     let report = Json::obj(vec![
         ("frontier_build_ns", Json::num(frontier_build_ns)),
@@ -287,6 +359,8 @@ fn main() {
         ("serve_cold_ns", Json::num(serve_cold_ns)),
         ("serve_warm_ns", Json::num(warm_meas.median_ns())),
         ("serve_batch_ns_per_query", Json::num(serve_batch_ns_per_query)),
+        ("eps_build_ns", Json::num(eps_build_ns)),
+        ("eps_points_ratio", Json::num(eps_points_ratio)),
     ]);
     std::fs::create_dir_all("results").expect("results dir");
     std::fs::write("results/BENCH_frontier.json", report.to_pretty()).expect("bench json");
@@ -301,6 +375,10 @@ fn main() {
         let v = report.get(key).unwrap().as_f64().unwrap();
         if key == "bb_nodes" {
             v.ceil()
+        } else if key == "eps_points_ratio" {
+            // A machine-independent size ratio (< 1), not wall-clock:
+            // 2x headroom without the integer ceil.
+            2.0 * v
         } else {
             (3.0 * v).ceil()
         }
@@ -325,6 +403,8 @@ fn main() {
             "serve_batch_ns_per_query",
             Json::num(ratchet("serve_batch_ns_per_query")),
         ),
+        ("eps_build_ns", Json::num(ratchet("eps_build_ns"))),
+        ("eps_points_ratio", Json::num(ratchet("eps_points_ratio"))),
     ]);
     std::fs::write("results/BENCH_frontier.ratchet.json", ratchet_doc.to_pretty())
         .expect("ratchet json");
@@ -343,6 +423,8 @@ fn main() {
             "serve_cold_ns",
             "serve_warm_ns",
             "serve_batch_ns_per_query",
+            "eps_build_ns",
+            "eps_points_ratio",
         ] {
             let measured = report.get(key).unwrap().as_f64().unwrap();
             // Keys absent from the baseline are not gated (lets the

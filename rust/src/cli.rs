@@ -104,8 +104,13 @@ Pipeline commands
   synth-db        Phase 1 only: synthesize the layer database
   hpo             Phase 3 only: hyperparameter search (writes fig5 CSV)
   deploy          Deploy a fixed model with the MIP optimizer
+  solve           Direct one-budget solve through the registry solver
+                  (--set solver.kind=bb|dp|frontier --network model1
+                  --budget 50000; frontier honors --epsilon)
   frontier        Pareto-frontier sweep: solve once, answer every latency
-                  budget (--budgets 10000,50000 --network model1 --points)
+                  budget (--budgets 10000,50000 --network model1 --points;
+                  --epsilon 0.05 builds the coarsened frontier and
+                  verifies every answer within (1+eps)x of exact B&B)
   serve           Frontier serving: answer a scripted batch-request
                   workload from the persistent store + LRU; prints
                   throughput, hit rate and the serve-stats table
@@ -132,7 +137,13 @@ Common flags
                            sample rate; dataset, HPO, frontier sweeps
                            and the serve store all follow)
   --config <path>          TOML-subset config file
-  --set key=value          override one config key (repeatable)
+  --set key=value          override one config key (repeatable; e.g.
+                           solver.kind=bb|dp|frontier picks the registry
+                           solver for direct solves)
+  --epsilon <e>            eps-dominance coarsened frontiers: every served
+                           deployment costs at most (1+e)x the exact
+                           optimum, under eps-scoped store keys (0 = exact;
+                           sugar for --set frontier.epsilon=<e>)
   --seed <n>               reseed the experiment
   --out <name>             CSV basename under results/
 "#;

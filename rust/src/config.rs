@@ -12,6 +12,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::PipelineConfig;
 use crate::hpo::{Sampler, SearchSpace};
 use crate::ser::{parse_toml_subset, Json};
+use crate::solver::SolverKind;
 
 /// Named presets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -137,6 +138,19 @@ fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
             let n = as_usize(v)?;
             cfg.store_max_docs = if n == 0 { None } else { Some(n) };
         }
+        // [solver]
+        "solver.kind" => {
+            let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
+            cfg.solver = SolverKind::parse(s)?;
+        }
+        // [frontier]
+        "frontier.epsilon" => {
+            let e = as_f64(v)?;
+            if !e.is_finite() || e < 0.0 {
+                bail!("epsilon must be a finite non-negative number, got {e}");
+            }
+            cfg.frontier_epsilon = if e == 0.0 { None } else { Some(e) };
+        }
         // [forest]
         "forest.trees" => cfg.forest.n_trees = as_usize(v)?,
         "forest.max_depth" => cfg.forest.max_depth = as_usize(v)?,
@@ -214,6 +228,16 @@ capacity = 32         # LRU bound on hot in-memory frontiers
 store = ""            # e.g. "results/frontiers" to persist built frontiers
 max_points = 0        # frontier guardrail cap (0 = exact, unlimited)
 store_max_docs = 0    # persisted-document cap, oldest evicted (0 = unbounded)
+
+[solver]
+kind = "frontier"     # bb | dp | frontier: registry solver for direct
+                      # per-budget solves (crate::solver::SolverKind)
+
+[frontier]
+epsilon = 0.0         # epsilon-dominance coarsening (--epsilon): every
+                      # served deployment costs at most (1+epsilon)x the
+                      # exact optimum, under epsilon-scoped store keys
+                      # (0 = exact frontiers)
 "#;
 
 #[cfg(test)]
@@ -242,6 +266,25 @@ mod tests {
         assert_eq!(cfg.frontier_store, None);
         assert_eq!(cfg.frontier_max_points, None);
         assert_eq!(cfg.store_max_docs, None);
+        assert_eq!(cfg.solver, SolverKind::Frontier);
+        assert_eq!(cfg.frontier_epsilon, None);
+    }
+
+    #[test]
+    fn solver_and_epsilon_overrides_parse() {
+        let mut cfg = Preset::Smoke.pipeline();
+        apply_override(&mut cfg, "solver.kind=bb").unwrap();
+        assert_eq!(cfg.solver, SolverKind::BranchAndBound);
+        apply_override(&mut cfg, "solver.kind=dp").unwrap();
+        assert_eq!(cfg.solver, SolverKind::ExactDp);
+        assert!(apply_override(&mut cfg, "solver.kind=gurobi").is_err());
+        assert_eq!(cfg.solver, SolverKind::ExactDp, "failed override must not apply");
+        apply_override(&mut cfg, "frontier.epsilon=0.05").unwrap();
+        assert_eq!(cfg.frontier_epsilon, Some(0.05));
+        apply_override(&mut cfg, "frontier.epsilon=0").unwrap();
+        assert_eq!(cfg.frontier_epsilon, None);
+        assert!(apply_override(&mut cfg, "frontier.epsilon=-0.1").is_err());
+        assert!(apply_override(&mut cfg, "frontier.epsilon=exact").is_err());
     }
 
     #[test]

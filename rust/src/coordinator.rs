@@ -25,7 +25,7 @@ use std::sync::{Arc, Mutex};
 use crate::data::{self, WindowedData};
 use crate::eval::{BatchEvaluator, CostCache};
 use crate::forest::{regression_metrics, Forest, ForestConfig, FeatureMatrix, RegMetrics};
-use crate::frontier::{FrontierIndex, ParetoFrontier};
+use crate::frontier::FrontierIndex;
 use crate::hls::{
     self, features_of, DbSample, HlsSim, LayerCost, Metric, SweepConfig,
 };
@@ -35,6 +35,7 @@ use crate::mip::{DeployProblem, Solution};
 use crate::nn::{Adam, AdamConfig, NativeModel};
 use crate::rng::Rng;
 use crate::serve::{FrontierService, FrontierStore, ServeConfig, ServedFrontier, WorkloadKey};
+use crate::solver::{self, Solver, SolverKind, SolverOpts};
 use crate::workload::{self, Workload};
 
 /// 200 µs at 250 MHz (paper §IV-B) — DROPBEAR's per-sample deadline.
@@ -440,6 +441,15 @@ pub struct PipelineConfig {
     /// Optional frontier-size guardrail
     /// ([`crate::frontier::ParetoFrontier::with_max_points`]).
     pub frontier_max_points: Option<usize>,
+    /// Optional ε-dominance coarsening
+    /// ([`crate::frontier::ParetoFrontier::with_epsilon`], `[frontier]
+    /// epsilon` / `--epsilon`): every frontier this pipeline builds or
+    /// serves answers within (1+ε)× the exact optimum, under ε-scoped
+    /// store keys. `None` = exact.
+    pub frontier_epsilon: Option<f64>,
+    /// Registry solver for direct (non-frontier-service) solves
+    /// ([`crate::solver::SolverKind`], `solver.kind`).
+    pub solver: SolverKind,
     /// Optional document cap on the persistent store (oldest evicted;
     /// `serve.store_max_docs`). `None` = unbounded.
     pub store_max_docs: Option<usize>,
@@ -461,6 +471,8 @@ impl Default for PipelineConfig {
             serve_capacity: 32,
             frontier_store: None,
             frontier_max_points: None,
+            frontier_epsilon: None,
+            solver: SolverKind::Frontier,
             store_max_docs: None,
         }
     }
@@ -539,6 +551,7 @@ impl Pipeline {
                 max_choices_per_layer: cfg.max_choices_per_layer,
                 latency_budget: cfg.latency_budget,
                 max_points: cfg.frontier_max_points,
+                epsilon: cfg.frontier_epsilon,
                 workload: Some(WorkloadKey {
                     name: cfg.workload.clone(),
                     sample_rate_hz,
@@ -609,10 +622,27 @@ impl Pipeline {
         (trials, deployments, datasets)
     }
 
+    /// Frontier-mode knobs for the [`crate::solver`] registry, exactly
+    /// as this pipeline's serving layer applies them.
+    pub fn solver_opts(&self) -> SolverOpts {
+        SolverOpts {
+            workers: self.cfg.workers.max(1),
+            max_points: self.cfg.frontier_max_points,
+            epsilon: self.cfg.frontier_epsilon,
+        }
+    }
+
+    /// The configured registry solver (`solver.kind`): one typed entry
+    /// point for direct per-budget solves outside the serving stack.
+    pub fn solver(&self) -> Box<dyn Solver> {
+        solver::make_solver(self.cfg.solver, &self.solver_opts())
+    }
+
     /// RF→MIP collapse + frontier construction: batch-materialize the
     /// candidate grid through the worker pool, then compute the complete
     /// latency→cost frontier of the resulting knapsack in one parallel
-    /// dominance-pruned sweep. Every latency budget is then an O(log n)
+    /// dominance-pruned sweep (ε-coarsened when the pipeline is in ε
+    /// mode). Every latency budget is then an O(log n)
     /// [`FrontierIndex::query`] instead of a fresh B&B solve.
     pub fn build_frontier(
         &self,
@@ -625,9 +655,7 @@ impl Pipeline {
             self.cfg.max_choices_per_layer,
             self.cfg.workers,
         );
-        let index = ParetoFrontier::new(self.cfg.workers)
-            .with_max_points(self.cfg.frontier_max_points)
-            .build(&prob);
+        let index = solver::configured_frontier(&self.solver_opts()).build(&prob);
         (prob, index)
     }
 
@@ -940,6 +968,71 @@ mod tests {
         assert_eq!(a.reuse, b.reuse);
         let at_budget = sweep[1].as_ref().expect("feasible at 200 µs");
         assert_eq!(at_budget.solution, a.solution);
+    }
+
+    #[test]
+    fn pipeline_solver_follows_the_configured_kind() {
+        let mut cfg = PipelineConfig::smoke();
+        assert_eq!(cfg.solver, SolverKind::Frontier);
+        cfg.solver = SolverKind::BranchAndBound;
+        let pipe = Pipeline::new(cfg);
+        assert_eq!(pipe.solver().name(), "bb");
+        // The registry solver lands on the same optimum the serving
+        // stack answers.
+        let db = pipe.synth_database();
+        let models = pipe.fit_models(&db);
+        let net = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]);
+        let prob = models.build_problem(
+            &net.plan(),
+            pipe.cfg.latency_budget,
+            pipe.cfg.max_choices_per_layer,
+        );
+        let direct = pipe.solver().solve(&prob, pipe.cfg.latency_budget).expect("feasible");
+        let served = pipe
+            .serve()
+            .query(&models, &net, pipe.cfg.latency_budget)
+            .expect("feasible");
+        assert!(
+            (direct.cost - served.cost).abs() <= 1e-9 * (1.0 + direct.cost.abs()),
+            "registry {} vs served {}",
+            direct.cost,
+            served.cost
+        );
+    }
+
+    #[test]
+    fn eps_pipeline_deploys_within_the_bound_under_a_distinct_key() {
+        let mut cfg = PipelineConfig::smoke();
+        cfg.frontier_epsilon = Some(0.05);
+        let pipe = Pipeline::new(cfg);
+        let db = pipe.synth_database();
+        let models = pipe.fit_models(&db);
+        let trial = Trial {
+            genome: vec![0; hpo::SearchSpace::GENES],
+            cfg: NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]),
+            rmse: 0.1,
+            workload: 1000.0,
+        };
+        let exact_pipe = Pipeline::new(PipelineConfig::smoke());
+        // ε-mode re-keys the serving layer: an ε-frontier can never be
+        // served to (or from) the exact pipeline.
+        assert_ne!(
+            pipe.serve().key_for(&trial.cfg).hash,
+            exact_pipe.serve().key_for(&trial.cfg).hash
+        );
+        let eps_dep = pipe.deploy(&models, &trial).expect("deployable");
+        let exact_dep = exact_pipe.deploy(&models, &trial).expect("deployable");
+        assert!(eps_dep.solution.latency <= pipe.cfg.latency_budget + 1e-6);
+        assert!(
+            eps_dep.solution.cost >= exact_dep.solution.cost - 1e-9,
+            "eps deploy beats exact"
+        );
+        assert!(
+            eps_dep.solution.cost <= 1.05 * exact_dep.solution.cost * (1.0 + 1e-12),
+            "eps deploy {} vs exact {}",
+            eps_dep.solution.cost,
+            exact_dep.solution.cost
+        );
     }
 
     #[test]

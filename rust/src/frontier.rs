@@ -28,6 +28,24 @@
 //! fresh B&B solve of the same budget exactly (up to `solve_bb`'s own
 //! prune slack on ties; `cross_check_bb` and the property tests below
 //! enforce this).
+//!
+//! # ε-dominance coarsening ([`ParetoFrontier::with_epsilon`])
+//!
+//! The exact DP can blow up combinatorially on adversarial
+//! continuous-cost instances (every partial assignment non-dominated).
+//! The ε mode buckets each DP level into multiplicative cost cells of
+//! width (1+δ), δ = (1+ε)^(1/n_layers) − 1, keeping one entry per cell,
+//! which bounds every level to O(log(cost range)/δ) points while
+//! guaranteeing — not just hoping — that **every budget query returns a
+//! feasible deployment whose cost is at most (1+ε)× the exact optimum**
+//! (the classic per-level (1+δ)^n composition; derivation on
+//! [`with_epsilon`](ParetoFrontier::with_epsilon), enforced by
+//! [`cross_check_bb_within`](FrontierIndex::cross_check_bb_within) and
+//! the property tests). Latencies are never approximated, so
+//! feasibility answers stay exact. This is the approximation-grade
+//! guardrail the telemetry-grade
+//! [`with_max_points`](ParetoFrontier::with_max_points) thinning is
+//! not.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -80,8 +98,18 @@ pub struct FrontierStats {
     /// True when an intermediate level exceeded the configured
     /// [`max_points`](ParetoFrontier::with_max_points) cap and was thinned
     /// (guardrail telemetry; `peak_level` keeps the pre-truncation
-    /// high-water mark).
+    /// high-water mark). The library never prints this itself — the
+    /// service/CLI layer surfaces it once per run (see
+    /// `serve::ServeSnapshot::truncated_builds`).
     pub truncated: bool,
+    /// ε of the ε-dominance coarsening this frontier was built with
+    /// (0.0 = exact): every query answer is within (1+ε)× the exact
+    /// optimum at the same budget.
+    pub epsilon: f64,
+    /// Entries dropped by ε-coarsening across all DP levels — the
+    /// points-saved telemetry, disjoint from the dominance `pruned`
+    /// counter.
+    pub eps_pruned: u64,
 }
 
 /// The frontier engine. Construction knobs: how many worker threads the
@@ -92,11 +120,12 @@ pub struct FrontierStats {
 pub struct ParetoFrontier {
     workers: usize,
     max_points: Option<usize>,
+    epsilon: Option<f64>,
 }
 
 impl ParetoFrontier {
     pub fn new(workers: usize) -> ParetoFrontier {
-        ParetoFrontier { workers: workers.max(1), max_points: None }
+        ParetoFrontier { workers: workers.max(1), max_points: None, epsilon: None }
     }
 
     /// Opt-in guardrail: when any DP level exceeds `cap` points it is
@@ -109,6 +138,40 @@ impl ParetoFrontier {
     pub fn with_max_points(mut self, cap: Option<usize>) -> ParetoFrontier {
         self.max_points = cap.map(|c| c.max(2));
         self
+    }
+
+    /// Opt-in ε-dominance coarsening with a *proven* cost bound.
+    ///
+    /// Each DP level is bucketed into multiplicative cost cells of width
+    /// (1+δ) with δ = (1+ε)^(1/n_layers) − 1, keeping per cell only the
+    /// minimum-latency entry (plus the level's cheapest extreme). A
+    /// dropped partial assignment p therefore always leaves a survivor q
+    /// in its cell with q.latency ≤ p.latency and q.cost ≤ (1+δ)·p.cost.
+    /// By induction over the n_layers coarsened levels, every point of
+    /// the *exact* frontier is covered by a stored point that is no
+    /// slower and at most (1+δ)^n_layers = (1+ε)× as expensive — so
+    /// every budget query returns a feasible deployment whose cost is
+    /// ≤ (1+ε)× the exact optimum at that budget
+    /// ([`FrontierIndex::cross_check_bb_within`] re-proves this against
+    /// fresh B&B solves; the property tests sweep it over random
+    /// problems, budgets and worker counts).
+    ///
+    /// Latencies are never approximated: stored answers stay canonical
+    /// `evaluate` results, feasibility answers are exact (the fastest
+    /// partial survives every coarsening step, so
+    /// [`min_latency`](FrontierIndex::min_latency) matches the exact
+    /// frontier), and results are bit-identical at any worker count
+    /// (coarsening runs on the deterministically merged level).
+    /// `None` or a non-positive ε changes nothing: the frontier stays
+    /// exact.
+    pub fn with_epsilon(mut self, eps: Option<f64>) -> ParetoFrontier {
+        self.epsilon = eps.filter(|e| *e > 0.0);
+        self
+    }
+
+    /// The configured coarsening ε (`None` = exact).
+    pub fn epsilon(&self) -> Option<f64> {
+        self.epsilon
     }
 
     /// Apply the `max_points` guardrail to one DP level (no-op when the
@@ -125,6 +188,58 @@ impl ParetoFrontier {
         kept
     }
 
+    /// Apply ε-dominance coarsening to one DP level (no-op when ε is
+    /// unset). `level` is a strict staircase — latency increasing, cost
+    /// decreasing — so walking it in order, the first entry inside each
+    /// multiplicative cost cell of width (1+δ) is that cell's
+    /// minimum-latency (and maximum-cost) point; keeping exactly that
+    /// entry covers every dropped p with a survivor q such that
+    /// q.latency ≤ p.latency and q.cost ≤ (1+δ)·p.cost. The last
+    /// (cheapest) entry always survives, so the global cheapest
+    /// assignment and `max_latency` stay exact. Dropped entries are
+    /// counted in `eps_pruned`.
+    fn coarsen_level(
+        &self,
+        level: Vec<Entry>,
+        delta: Option<f64>,
+        stats: &mut FrontierStats,
+    ) -> Vec<Entry> {
+        let Some(delta) = delta else { return level };
+        let n = level.len();
+        if n <= 2 {
+            return level;
+        }
+        let inv_ln = 1.0 / delta.ln_1p();
+        // A δ this small buckets finer than f64 can distinguish (and the
+        // i64 cell index below would saturate, collapsing every cost
+        // into ONE cell — the opposite of a bound). Nothing would merge
+        // anyway: keep the level exact.
+        if !inv_ln.is_finite() || inv_ln > 1e15 {
+            return level;
+        }
+        // Cell index of a cost. Non-positive costs share one sentinel
+        // cell below every positive one (costs only decrease along the
+        // staircase, so that cell — if it appears — is a suffix).
+        let cell_of = |c: f64| -> i64 {
+            if c <= 0.0 {
+                i64::MIN
+            } else {
+                (c.ln() * inv_ln).floor() as i64
+            }
+        };
+        let mut out = Vec::with_capacity(64);
+        let mut last_cell = i64::MAX;
+        for (i, e) in level.into_iter().enumerate() {
+            let cell = cell_of(e.cost);
+            if cell != last_cell || i == n - 1 {
+                last_cell = cell;
+                out.push(e);
+            }
+        }
+        stats.eps_pruned += (n - out.len()) as u64;
+        out
+    }
+
     /// Compute the complete latency→cost frontier of `prob` (its
     /// `latency_budget` field is irrelevant here: the index answers every
     /// budget).
@@ -132,7 +247,11 @@ impl ParetoFrontier {
         let t0 = Instant::now();
         let (pruned, maps) = prob.prune_dominated();
         let n_layers = pruned.layers.len();
-        let mut stats = FrontierStats { workers: self.workers, ..Default::default() };
+        let mut stats = FrontierStats {
+            workers: self.workers,
+            epsilon: self.epsilon.unwrap_or(0.0),
+            ..Default::default()
+        };
 
         if n_layers == 0 {
             // Degenerate: the empty assignment at (latency 0, cost 0).
@@ -147,6 +266,12 @@ impl ParetoFrontier {
             };
         }
 
+        // Per-level coarsening factor: n_layers applications of (1+δ)
+        // compose to exactly (1+ε).
+        let delta = self
+            .epsilon
+            .map(|e| (1.0 + e).powf(1.0 / n_layers as f64) - 1.0);
+
         // Level 0: the first layer's staircase. `prune_dominated` already
         // sorted it by latency with strictly decreasing cost.
         let mut levels: Vec<Vec<Entry>> = Vec::with_capacity(n_layers);
@@ -157,21 +282,15 @@ impl ParetoFrontier {
             .collect();
         stats.candidates += first.len() as u64;
         stats.peak_level = stats.peak_level.max(first.len());
+        let first = self.coarsen_level(first, delta, &mut stats);
         let first = self.cap_level(first, &mut stats);
         levels.push(first);
         for k in 1..n_layers {
             let merged = self.merge_level(levels.last().unwrap(), &pruned.layers[k], &mut stats);
             stats.peak_level = stats.peak_level.max(merged.len());
+            let merged = self.coarsen_level(merged, delta, &mut stats);
             let merged = self.cap_level(merged, &mut stats);
             levels.push(merged);
-        }
-        if stats.truncated {
-            eprintln!(
-                "[frontier] warning: DP level exceeded max_points={} (peak {}); frontier \
-                 truncated — answers stay feasible and canonical but may be suboptimal",
-                self.max_points.unwrap_or(0),
-                stats.peak_level
-            );
         }
 
         // Reconstruct each final point's assignment by walking the parent
@@ -489,11 +608,24 @@ impl FrontierIndex {
     /// verify feasibility and optimal cost agree. Returns the summed B&B
     /// statistics (the work the index saved its callers).
     pub fn cross_check_bb(&self, prob: &DeployProblem, budgets: &[f64]) -> Result<BbStats, String> {
+        self.cross_check_bb_within(prob, budgets, 0.0)
+    }
+
+    /// [`cross_check_bb`](Self::cross_check_bb) generalized to an
+    /// ε-coarsened index: re-solve each budget with `solve_bb` and verify
+    /// the stored answer is feasible, never cheaper than the exact
+    /// optimum, and at most (1+eps)× it (eps = 0.0 is the exact check).
+    /// Feasibility must agree exactly in both directions — coarsening
+    /// never drops the fastest assignment.
+    pub fn cross_check_bb_within(
+        &self,
+        prob: &DeployProblem,
+        budgets: &[f64],
+        eps: f64,
+    ) -> Result<BbStats, String> {
         let mut total = BbStats::default();
         for &budget in budgets {
-            let mut p = prob.clone();
-            p.latency_budget = budget;
-            let bb = mip::solve_bb(&p);
+            let bb = mip::solve_bb(&prob.with_budget(budget));
             let fr = self.query(budget);
             match (&bb, &fr) {
                 (None, None) => {}
@@ -501,9 +633,15 @@ impl FrontierIndex {
                     total.nodes += stats.nodes;
                     total.lp_solves += stats.lp_solves;
                     let tol = 1e-9 * (1.0 + b.cost.abs());
-                    if (b.cost - f.cost).abs() > tol {
+                    if f.cost < b.cost - tol {
                         return Err(format!(
-                            "budget {budget}: frontier cost {} != bb cost {}",
+                            "budget {budget}: frontier cost {} beats exact bb cost {}",
+                            f.cost, b.cost
+                        ));
+                    }
+                    if f.cost > (1.0 + eps) * b.cost + tol {
+                        return Err(format!(
+                            "budget {budget}: frontier cost {} exceeds (1+{eps}) x bb cost {}",
                             f.cost, b.cost
                         ));
                     }
@@ -549,6 +687,8 @@ impl FrontierIndex {
                     ("build_seconds", Json::num(self.stats.build_seconds)),
                     ("workers", Json::num(self.stats.workers as f64)),
                     ("truncated", Json::Bool(self.stats.truncated)),
+                    ("epsilon", Json::num(self.stats.epsilon)),
+                    ("eps_pruned", Json::num(self.stats.eps_pruned as f64)),
                 ]),
             ),
         ])
@@ -600,10 +740,49 @@ impl FrontierIndex {
                 .get("truncated")?
                 .as_bool()
                 .ok_or_else(|| anyhow!("stats.truncated must be a bool"))?,
+            // Additive fields: documents persisted before the ε mode
+            // existed lack them and are exact by construction — default
+            // to 0 instead of orphaning every pre-existing store.
+            epsilon: match s.get("epsilon") {
+                Ok(v) => v
+                    .as_f64()
+                    .filter(|e| e.is_finite() && *e >= 0.0)
+                    .ok_or_else(|| anyhow!("stats.epsilon must be a non-negative number"))?,
+                Err(_) => 0.0,
+            },
+            eps_pruned: match s.get("eps_pruned") {
+                Ok(_) => stat_u64("eps_pruned")?,
+                Err(_) => 0,
+            },
         };
         FrontierIndex::from_parts(costs, latencies, picks, n_layers, stats)
             .map_err(|e| anyhow!("invalid frontier document: {e}"))
     }
+}
+
+/// Deterministic adversarial wide-grid instance: layer `k`'s choice `j`
+/// has latency `j·base^k` and cost `base^k·(base − j)`. Every total
+/// latency is a distinct base-`base` numeral and every total cost is an
+/// exact linear function of it, so **every one of the `base^n_layers`
+/// assignments is Pareto-optimal** — the combinatorial blow-up the
+/// ROADMAP's frontier-scalability guardrail is about, in closed form.
+/// The ε-coarsened build caps each level near ln(cost range)/δ points
+/// instead; `perf_hotpaths` and the unit tests measure the gap.
+pub fn adversarial_wide_grid(n_layers: usize, base: usize) -> DeployProblem {
+    assert!(base >= 2, "need at least two choices per layer");
+    let layers = (0..n_layers)
+        .map(|k| {
+            let scale = (base as u64).pow(k as u32) as f64;
+            (0..base)
+                .map(|j| Choice {
+                    reuse: 1 << j,
+                    cost: scale * (base - j) as f64,
+                    latency: scale * j as f64,
+                })
+                .collect()
+        })
+        .collect();
+    DeployProblem { layers, latency_budget: 0.0 }
 }
 
 /// Parse a JSON array of finite numbers (deserialization helper).
@@ -916,6 +1095,164 @@ mod tests {
         assert!(index.stats.build_seconds >= 0.0);
         assert_eq!(index.stats.workers, 1);
         assert!(!index.stats.truncated);
+        assert_eq!(index.stats.epsilon, 0.0);
+        assert_eq!(index.stats.eps_pruned, 0);
+    }
+
+    /// Continuous-valued generator (no integer flooring on the jitter):
+    /// the regime where the exact frontier is largest.
+    fn random_continuous_problem(
+        rng: &mut Rng,
+        n_layers: usize,
+        n_choices: usize,
+    ) -> DeployProblem {
+        let layers: Vec<Vec<Choice>> = (0..n_layers)
+            .map(|_| {
+                (0..n_choices)
+                    .map(|j| {
+                        let cost = 1000.0 / (j + 1) as f64 + rng.range_f64(0.0, 50.0);
+                        let lat = (10 * (j + 1)) as f64 + rng.range_f64(0.0, 5.0);
+                        ch(1 << j, cost, lat)
+                    })
+                    .collect()
+            })
+            .collect();
+        DeployProblem { layers, latency_budget: 0.0 }
+    }
+
+    #[test]
+    fn with_epsilon_unset_or_nonpositive_is_exact() {
+        let mut rng = Rng::new(0xE9_5);
+        let prob = random_problem(&mut rng, 5, 5);
+        let exact = ParetoFrontier::new(1).build(&prob);
+        for eps in [None, Some(0.0), Some(-0.5)] {
+            let built = ParetoFrontier::new(1).with_epsilon(eps).build(&prob);
+            assert_eq!(built.len(), exact.len(), "eps {eps:?}");
+            for i in 0..exact.len() {
+                assert_eq!(built.point(i), exact.point(i));
+                assert_eq!(built.pick(i), exact.pick(i));
+            }
+            assert_eq!(built.stats.epsilon, 0.0);
+            assert_eq!(built.stats.eps_pruned, 0);
+        }
+    }
+
+    #[test]
+    fn adversarial_wide_grid_exact_frontier_is_the_full_grid() {
+        // Every one of the base^n assignments is Pareto-optimal by
+        // construction: distinct base-4 latencies, cost linear in them.
+        let prob = adversarial_wide_grid(6, 4);
+        let exact = ParetoFrontier::new(1).build(&prob);
+        assert_eq!(exact.len(), 4096);
+        exact.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eps_frontier_shrinks_the_wide_grid_within_the_bound() {
+        let prob = adversarial_wide_grid(6, 4);
+        let exact = ParetoFrontier::new(1).build(&prob);
+        let eps = 0.05;
+        let coarse = ParetoFrontier::new(1).with_epsilon(Some(eps)).build(&prob);
+        coarse.check_invariants().unwrap();
+        // ~ln(cost range)/δ points instead of 4096 — at least 10x fewer.
+        assert!(
+            coarse.len() * 10 <= exact.len(),
+            "{} points vs exact {}",
+            coarse.len(),
+            exact.len()
+        );
+        assert!(coarse.stats.eps_pruned > 0);
+        assert_eq!(coarse.stats.epsilon, eps);
+        // The per-level extremes survive coarsening exactly.
+        assert_eq!(coarse.min_latency(), exact.min_latency());
+        assert_eq!(coarse.max_latency(), exact.max_latency());
+        // Every sweep answer: feasible, never cheaper than exact, within
+        // (1+eps)x (the exact index is the oracle; it equals solve_bb).
+        for i in 0..80 {
+            let b = -10.0 + i as f64 * 60.0;
+            match (exact.query(b), coarse.query(b)) {
+                (None, None) => {}
+                (Some(e), Some(c)) => {
+                    assert!(c.latency <= b + BUDGET_EPS, "budget {b}");
+                    assert!(c.cost >= e.cost - 1e-9, "budget {b}: coarse beats exact");
+                    assert!(
+                        c.cost <= (1.0 + eps) * e.cost * (1.0 + 1e-12),
+                        "budget {b}: {} vs exact {}",
+                        c.cost,
+                        e.cost
+                    );
+                }
+                other => panic!("budget {b}: feasibility disagreement {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn epsilon_composes_with_the_max_points_guardrail() {
+        let prob = adversarial_wide_grid(6, 4);
+        let both = ParetoFrontier::new(1)
+            .with_epsilon(Some(0.05))
+            .with_max_points(Some(50))
+            .build(&prob);
+        both.check_invariants().unwrap();
+        assert!(both.len() <= 50);
+        assert!(both.stats.eps_pruned > 0, "coarsening ran before the cap");
+    }
+
+    #[test]
+    fn property_eps_frontier_feasible_and_within_bound_of_bb() {
+        // The PR's core contract: for every random problem, random
+        // budget and worker count tried, the ε-frontier answer is
+        // feasible, never cheaper than the exact optimum, and costs at
+        // most (1+ε)× it (cross_check_bb_within re-solves each budget
+        // with B&B as the oracle).
+        prop_check("eps-frontier-within-bound", 8, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let n_layers = g.int(2, 6);
+            let n_choices = g.int(2, 6);
+            let eps = *g.choice(&[0.01, 0.05, 0.25]);
+            let prob = random_continuous_problem(&mut rng, n_layers, n_choices);
+            let index = ParetoFrontier::new(1).with_epsilon(Some(eps)).build(&prob);
+            index.check_invariants()?;
+            if index.stats.epsilon != eps {
+                return Err("stats.epsilon not recorded".into());
+            }
+            // Bit-identical at any worker count.
+            let four = ParetoFrontier::new(4).with_epsilon(Some(eps)).build(&prob);
+            if four.len() != index.len() {
+                return Err(format!(
+                    "workers changed point count: {} vs {}",
+                    index.len(),
+                    four.len()
+                ));
+            }
+            for i in 0..index.len() {
+                if four.point(i) != index.point(i) || four.pick(i) != index.pick(i) {
+                    return Err(format!("workers changed point {i}"));
+                }
+            }
+            // Stored answers stay canonical evaluate results.
+            for i in 0..index.len() {
+                let s = index.solution_at(i);
+                let e = prob.evaluate(&s.pick);
+                if e.cost != s.cost || e.latency != s.latency {
+                    return Err(format!("point {i} not canonical"));
+                }
+            }
+            let min_lat = prob.min_latency();
+            let max_lat: f64 = prob
+                .layers
+                .iter()
+                .map(|l| l.iter().map(|c| c.latency).fold(0.0, f64::max))
+                .sum();
+            let budgets: Vec<f64> = (0..25)
+                .map(|_| rng.range_f64(0.5 * min_lat, 1.1 * max_lat))
+                .collect();
+            index
+                .cross_check_bb_within(&prob, &budgets, eps)
+                .map_err(|e| format!("eps {eps}: {e}"))?;
+            Ok(())
+        });
     }
 
     #[test]
@@ -971,8 +1308,9 @@ mod tests {
         // tolerances.
         prop_check("frontier-json-round-trip", 15, |g| {
             let mut rng = Rng::new(g.rng.next_u64());
+            let eps = g.bool(0.5).then_some(0.05);
             let prob = random_problem(&mut rng, g.int(1, 5), g.int(2, 5));
-            let index = ParetoFrontier::new(1).build(&prob);
+            let index = ParetoFrontier::new(1).with_epsilon(eps).build(&prob);
             let text = index.to_json().to_string();
             let parsed = crate::ser::parse_json(&text).map_err(|e| format!("parse: {e:#}"))?;
             let back = FrontierIndex::from_json(&parsed).map_err(|e| format!("load: {e:#}"))?;
@@ -996,6 +1334,8 @@ mod tests {
             if back.stats.points != index.stats.points
                 || back.stats.candidates != index.stats.candidates
                 || back.stats.truncated != index.stats.truncated
+                || back.stats.epsilon != index.stats.epsilon
+                || back.stats.eps_pruned != index.stats.eps_pruned
             {
                 return Err("stats changed".into());
             }

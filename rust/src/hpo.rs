@@ -492,8 +492,13 @@ pub fn run_hpo(
 /// architecture cannot meet the budget even at maximum speed). `deploy`
 /// is typically a shared [`crate::serve::FrontierService`], so the many
 /// genomes that decode (or repair) to the same architecture hit the
-/// service's LRU/store instead of re-running the frontier DP. Shared by
-/// [`run_hpo_served`] and `Pipeline::run_hpo_deployed`.
+/// service's LRU/store instead of re-running the frontier DP. When that
+/// service runs in ε mode (`frontier.epsilon` / `--epsilon`),
+/// feasibility verdicts stay exact and each resolved deployment costs
+/// at most (1+ε)× the trial's true optimum — the HPO fleet trades a
+/// bounded sliver of deployment quality for ε-coarsened (much smaller,
+/// much faster) frontiers. Shared by [`run_hpo_served`] and
+/// `Pipeline::run_hpo_deployed`.
 pub fn resolve_deployments(
     trials: &[Trial],
     mut deploy: impl FnMut(&NetConfig) -> Option<crate::mip::Solution>,

@@ -39,6 +39,15 @@
 //! evaluated once per solve. `benches/perf_hotpaths.rs` measures the
 //! batched-vs-unbatched gap and asserts the results stay bit-identical.
 //!
+//! ## The solver core ([`solver`])
+//!
+//! Every deployment solver sits behind one typed surface:
+//! [`solver::Solver`] (`solve(&DeployProblem, budget)`) and
+//! [`solver::FrontierBuilder`] (`build(&DeployProblem)`), with
+//! [`solver::SolverKind`] + [`solver::make_solver`] as the registry
+//! (`solver.kind = "bb" | "dp" | "frontier"` in config). The module
+//! docs spell out the solver contract and how to add a fourth mode.
+//!
 //! ## The frontier serving path ([`frontier`])
 //!
 //! [`frontier::ParetoFrontier`] computes the complete latency→cost
@@ -47,7 +56,14 @@
 //! O(log n) (`query`) or batches of budgets (`sweep`), replacing
 //! per-constraint B&B re-solves in the deploy loop, the budget ablation
 //! and the Table IV benches. Queries are cross-checked against
-//! `mip::solve_bb` at the same budget.
+//! `mip::solve_bb` at the same budget. On adversarial continuous-cost
+//! instances where the exact frontier blows up combinatorially,
+//! [`ParetoFrontier::with_epsilon`](frontier::ParetoFrontier::with_epsilon)
+//! coarsens each DP level into multiplicative cost cells with a
+//! *proven* end-to-end bound: every budget query stays feasible and
+//! costs at most (1+ε)× the exact optimum (`[frontier] epsilon` /
+//! `--epsilon`; ε-frontiers live under ε-scoped store keys so they are
+//! never served as exact).
 //!
 //! ## The frontier serving subsystem ([`serve`])
 //!
@@ -139,6 +155,7 @@ pub mod runtime;
 pub mod search;
 pub mod ser;
 pub mod serve;
+pub mod solver;
 pub mod tensor;
 pub mod testkit;
 pub mod workload;

@@ -13,6 +13,7 @@ use ntorc::hpo::pareto_trials;
 use ntorc::report;
 use ntorc::rng::Rng;
 use ntorc::runtime::Runtime;
+use ntorc::solver::Solver as _;
 use ntorc::workload::Workload;
 
 fn main() {
@@ -26,7 +27,8 @@ fn main() {
     }
 }
 
-const COMMON_FLAGS: &[&str] = &["preset", "config", "set", "seed", "out", "workload", "help"];
+const COMMON_FLAGS: &[&str] =
+    &["preset", "config", "set", "seed", "out", "workload", "epsilon", "help"];
 
 fn pipeline_config(args: &Args, default_preset: Preset) -> Result<PipelineConfig> {
     let preset = match args.get("preset") {
@@ -65,6 +67,12 @@ fn pipeline_config(args: &Args, default_preset: Preset) -> Result<PipelineConfig
     for kv in args.get_all("set") {
         config::apply_override(&mut cfg, kv)?;
     }
+    // --epsilon is sugar for `--set frontier.epsilon=<v>` applied last
+    // (the flag beats the file): ε-dominance coarsened frontiers with a
+    // proven (1+ε) cost bound, 0 = exact.
+    if let Some(e) = args.get("epsilon") {
+        config::apply_override(&mut cfg, &format!("frontier.epsilon={e}"))?;
+    }
     if let Some(seed) = args.get("seed") {
         let s: u64 = seed.parse()?;
         cfg.hpo.seed = s;
@@ -72,6 +80,18 @@ fn pipeline_config(args: &Args, default_preset: Preset) -> Result<PipelineConfig
         cfg.hls_seed = s ^ 0xD00D;
     }
     Ok(cfg)
+}
+
+/// Surface the `max_points` guardrail telemetry once per run (the
+/// library itself never prints it; see `ServeSnapshot::truncated_builds`).
+fn warn_truncated(snap: &ntorc::serve::ServeSnapshot) {
+    if snap.truncated_builds > 0 {
+        eprintln!(
+            "[serve] warning: {} build(s) hit the max_points guardrail; their answers \
+             stay feasible and canonical but may be suboptimal",
+            snap.truncated_builds
+        );
+    }
 }
 
 fn emit(args: &Args, default_name: &str, title: &str, headers: &[&str], rows: &[Vec<String>]) {
@@ -238,6 +258,13 @@ fn run(raw: &[String]) -> Result<()> {
                     sw.bb_nodes_total,
                     sw.bb_seconds_total / (sw.build_seconds + sw.query_seconds).max(1e-9)
                 );
+                if sw.epsilon > 0.0 {
+                    println!(
+                        "{name}: eps={} coarsening — {} DP entries dropped under the proven \
+                         (1+eps) bound; every sweep answer verified against exact B&B",
+                        sw.epsilon, sw.index.stats.eps_pruned
+                    );
+                }
                 if args.has("points") {
                     let (ph, prows) = report::frontier_points_rows(name, &sw.prob, &sw.index);
                     let pname = format!("frontier_points_{name}");
@@ -257,6 +284,89 @@ fn run(raw: &[String]) -> Result<()> {
                 &h,
                 &rows,
             );
+        }
+        "solve" => {
+            // Direct per-budget solve through the registry solver
+            // (`solver.kind` = bb | dp | frontier): the typed
+            // non-serving path, one answer per network.
+            args.check_known(&[COMMON_FLAGS, &["network", "budget"]].concat())?;
+            let cfg = pipeline_config(&args, Preset::Smoke)?;
+            let (pipe, models) = report::standard_models(cfg);
+            let budget: f64 = match args.get("budget") {
+                Some(b) => b
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--budget expects a cycle count, got '{b}'"))?,
+                None => pipe.cfg.latency_budget,
+            };
+            let solver = pipe.solver();
+            let mut rows = Vec::new();
+            for (name, net) in report::table4_models() {
+                if let Some(want) = args.get("network") {
+                    if want != name {
+                        continue;
+                    }
+                }
+                let t0 = std::time::Instant::now();
+                let prob = models.build_problem_parallel(
+                    &net.plan(),
+                    budget,
+                    pipe.cfg.max_choices_per_layer,
+                    pipe.cfg.workers,
+                );
+                let sol = solver.solve(&prob, budget);
+                let secs = t0.elapsed().as_secs_f64();
+                let row = match &sol {
+                    Some(s) => {
+                        println!(
+                            "{name}: {} found cost {:.0} at {:.0} cycles in {secs:.4}s",
+                            solver.name(),
+                            s.cost,
+                            s.latency
+                        );
+                        let rf = s
+                            .pick
+                            .iter()
+                            .enumerate()
+                            .map(|(k, &j)| prob.layers[k][j].reuse.to_string())
+                            .collect::<Vec<_>>()
+                            .join(" ");
+                        vec![
+                            name.to_string(),
+                            solver.name().to_string(),
+                            format!("{budget:.0}"),
+                            "true".to_string(),
+                            format!("{:.0}", s.cost),
+                            format!("{:.0}", s.latency),
+                            rf,
+                            format!("{secs:.6}"),
+                        ]
+                    }
+                    None => {
+                        println!(
+                            "{name}: infeasible at {budget:.0} cycles even at maximum speed"
+                        );
+                        vec![
+                            name.to_string(),
+                            solver.name().to_string(),
+                            format!("{budget:.0}"),
+                            "false".to_string(),
+                            String::new(),
+                            String::new(),
+                            String::new(),
+                            format!("{secs:.6}"),
+                        ]
+                    }
+                };
+                rows.push(row);
+            }
+            if rows.is_empty() {
+                bail!("--network matched nothing (expected model1 or model2)");
+            }
+            let headers = vec![
+                "network", "solver", "budget_cycles", "feasible", "cost", "latency_cycles",
+                "reuse_factors", "solve_s",
+            ];
+            emit(&args, "solve", "Direct solve — registry solver", &headers, &rows);
         }
         "serve" => {
             args.check_known(
@@ -325,6 +435,7 @@ fn run(raw: &[String]) -> Result<()> {
             );
             let (sh, srows) = report::serve_stats_rows(&snap);
             print!("{}", report::fmt_table("Frontier serve stats", &sh, &srows));
+            warn_truncated(&snap);
             let stats_name = args.get("stats-out").unwrap_or("serve_stats");
             let out = ntorc::ser::Json::obj(vec![
                 ("requests", ntorc::ser::Json::num(answered as f64)),
@@ -586,6 +697,7 @@ fn run_e2e(cfg: PipelineConfig, args: &Args) -> Result<()> {
     let snap = pipe.serve().stats.snapshot();
     let (sh, srows) = report::serve_stats_rows(&snap);
     print!("{}", report::fmt_table("Frontier serve stats", &sh, &srows));
+    warn_truncated(&snap);
     println!("e2e complete in {:?}", t0.elapsed());
     Ok(())
 }

@@ -67,6 +67,13 @@ impl DeployProblem {
         self.evaluate(pick).latency <= self.latency_budget + 1e-9
     }
 
+    /// The same instance re-budgeted — the shape every per-budget
+    /// re-solve (cross-checks, the [`crate::solver`] registry) takes,
+    /// instead of a clone-then-mutate at each call site.
+    pub fn with_budget(&self, latency_budget: f64) -> DeployProblem {
+        DeployProblem { layers: self.layers.clone(), latency_budget }
+    }
+
     /// Remove dominated choices per layer (another choice has <= latency
     /// and <= cost, one strict). Returns the pruned problem and, per
     /// layer, the original index of each surviving choice.
@@ -770,6 +777,22 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn with_budget_rebudgets_without_touching_choices() {
+        let mut rng = Rng::new(0xB4D6);
+        let prob = random_problem(&mut rng, 3, 4);
+        let re = prob.with_budget(123.0);
+        assert_eq!(re.latency_budget, 123.0);
+        assert_eq!(re.layers, prob.layers);
+        // Solving the re-budgeted copy is exactly a solve at that budget.
+        let mut direct = prob.clone();
+        direct.latency_budget = 123.0;
+        assert_eq!(
+            solve_bb(&re).map(|(s, _)| s),
+            solve_bb(&direct).map(|(s, _)| s)
+        );
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::mip;
 use crate::nn::{Adam, AdamConfig, NativeModel};
 use crate::rng::Rng;
 use crate::search::{simulated_annealing_oracle, stochastic_search_oracle, SaConfig};
+use crate::solver::{self, Solver as _, SolverKind, SolverOpts};
 use crate::workload::Workload;
 
 // ---------------------------------------------------------------------------
@@ -620,8 +621,53 @@ pub fn table4_run(
             seconds: collapse_s + frontier_s,
         });
     }
+    // The ε-dominance coarsened frontier, driven through the solver
+    // registry and cross-checked against the exact B&B answer within
+    // its proven (1+ε) bound.
+    let eps = pipe.cfg.frontier_epsilon.unwrap_or(TABLE4_EPS);
+    let eps_solver = solver::make_solver(
+        SolverKind::Frontier,
+        &SolverOpts {
+            workers: pipe.cfg.workers.max(1),
+            max_points: None,
+            epsilon: Some(eps),
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let eps_sol = eps_solver.solve(&prob, pipe.cfg.latency_budget);
+    let eps_s = t0.elapsed().as_secs_f64();
+    match (&bb, &eps_sol) {
+        (None, None) => {}
+        (Some((b, _)), Some(f)) => {
+            let tol = 1e-9 * (1.0 + b.cost.abs());
+            assert!(
+                f.cost >= b.cost - tol && f.cost <= (1.0 + eps) * b.cost + tol,
+                "{name}: eps-frontier {} outside (1+{eps})x of B&B {}",
+                f.cost,
+                b.cost
+            );
+            assert!(f.latency <= pipe.cfg.latency_budget + 1e-6);
+        }
+        other => panic!("{name}: eps-frontier/B&B feasibility disagreement {other:?}"),
+    }
+    if let Some(sol) = &eps_sol {
+        let (lut, dsp, lat) = detail_prob(sol);
+        rows.push(Table4Row {
+            network: name.into(),
+            solver: "ntorc_frontier_eps".into(),
+            trials: 1,
+            luts: lut,
+            dsps: dsp,
+            latency_us: lat,
+            seconds: collapse_s + eps_s,
+        });
+    }
     rows
 }
+
+/// ε for Table IV's `ntorc_frontier_eps` row when the pipeline is not
+/// already in ε mode (`frontier.epsilon` / `--epsilon` override it).
+pub const TABLE4_EPS: f64 = 0.01;
 
 // ---------------------------------------------------------------------------
 // Frontier sweep: one frontier build answers every latency constraint
@@ -654,6 +700,9 @@ pub struct FrontierSweep {
     /// B&B nodes the per-constraint path expanded across the sweep.
     pub bb_nodes_total: u64,
     pub points: usize,
+    /// ε the frontier was built with (0.0 = exact; answers then verify
+    /// within (1+ε)× the per-budget B&B optimum instead of exactly).
+    pub epsilon: f64,
     pub solutions: Vec<Option<mip::Solution>>,
     /// The collapsed knapsack and its index, for further queries
     /// (e.g. the full-curve CSV of [`frontier_points_rows`]).
@@ -661,9 +710,12 @@ pub struct FrontierSweep {
     pub index: FrontierIndex,
 }
 
-/// Build one frontier for `net`, sweep it over `budgets`, and time the
-/// per-constraint `solve_bb` re-solves it replaces. Panics if any budget
-/// disagrees between the two paths (the B&B fallback cross-check).
+/// Build one frontier for `net` (through the pipeline's configured
+/// solver opts — ε-coarsened when the pipeline is in ε mode), sweep it
+/// over `budgets`, and time the per-constraint `solve_bb` re-solves it
+/// replaces. Panics if any budget disagrees between the two paths: the
+/// B&B fallback cross-check, exact for exact frontiers and within the
+/// proven (1+ε) bound for coarsened ones.
 pub fn frontier_sweep_run(
     pipe: &Pipeline,
     models: &CostModels,
@@ -672,11 +724,20 @@ pub fn frontier_sweep_run(
     budgets: &[f64],
 ) -> FrontierSweep {
     let plan = net.plan();
+    let epsilon = pipe.cfg.frontier_epsilon.unwrap_or(0.0);
     let t0 = std::time::Instant::now();
     let prob = models.build_problem(&plan, pipe.cfg.latency_budget, pipe.cfg.max_choices_per_layer);
     let collapse_seconds = t0.elapsed().as_secs_f64();
     let t0 = std::time::Instant::now();
-    let index = ParetoFrontier::new(pipe.cfg.workers.max(1)).build(&prob);
+    // The sweep's whole contract is the cross-check below — exact, or
+    // within the proven (1+ε) bound. The telemetry-grade `max_points`
+    // thinning can break either, so this reporting path never applies
+    // it (matching the pre-guardrail behavior of `ntorc frontier`).
+    let index = solver::configured_frontier(&SolverOpts {
+        max_points: None,
+        ..pipe.solver_opts()
+    })
+    .build(&prob);
     let build_seconds = t0.elapsed().as_secs_f64();
     let t0 = std::time::Instant::now();
     let solutions = index.sweep(budgets);
@@ -684,7 +745,7 @@ pub fn frontier_sweep_run(
     // The replaced path, timed and cross-checked per budget.
     let t0 = std::time::Instant::now();
     let stats = index
-        .cross_check_bb(&prob, budgets)
+        .cross_check_bb_within(&prob, budgets, epsilon)
         .unwrap_or_else(|e| panic!("{name}: frontier/B&B cross-check failed: {e}"));
     let bb_seconds_total = t0.elapsed().as_secs_f64();
     FrontierSweep {
@@ -696,6 +757,7 @@ pub fn frontier_sweep_run(
         bb_seconds_total,
         bb_nodes_total: stats.nodes,
         points: index.len(),
+        epsilon,
         solutions,
         prob,
         index,
@@ -706,7 +768,7 @@ pub fn frontier_sweep_run(
 pub fn frontier_sweep_rows(sweeps: &[FrontierSweep]) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let headers = vec![
         "network", "budget_cycles", "budget_us", "feasible", "cost", "latency_cycles",
-        "frontier_points", "build_s", "sweep_queries_s", "bb_resolve_s",
+        "frontier_points", "build_s", "sweep_queries_s", "bb_resolve_s", "epsilon",
     ];
     let mut rows = Vec::new();
     for sw in sweeps {
@@ -726,6 +788,7 @@ pub fn frontier_sweep_rows(sweeps: &[FrontierSweep]) -> (Vec<&'static str>, Vec<
                 format!("{:.6}", sw.build_seconds),
                 format!("{:.6}", sw.query_seconds),
                 format!("{:.6}", sw.bb_seconds_total),
+                f(sw.epsilon, 3),
             ]);
         }
     }
@@ -774,7 +837,7 @@ pub fn serve_stats_rows(
 ) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let headers = vec![
         "resolves", "mem_hits", "store_hits", "builds", "hit_rate_pct", "evictions",
-        "store_errors", "queries", "batches", "build_s",
+        "store_errors", "queries", "batches", "build_s", "truncated", "eps_pruned",
     ];
     let rows = vec![vec![
         s.resolves().to_string(),
@@ -787,6 +850,8 @@ pub fn serve_stats_rows(
         s.queries.to_string(),
         s.batches.to_string(),
         format!("{:.3}", s.build_seconds),
+        s.truncated_builds.to_string(),
+        s.eps_pruned.to_string(),
     ]];
     (headers, rows)
 }
@@ -944,6 +1009,38 @@ mod tests {
             "mip {mip_total} vs frontier {fr_total}"
         );
         assert!(fr_row.latency_us <= 200.0 + 1e-6);
+        // The ε row rides along. table4_run asserts the real (1+ε)
+        // bound on the summed cost internally; luts+dsps is only a
+        // subtotal of that cost, so a tie- or ε-shifted pick can move
+        // it by more than ε — allow generous slack here.
+        let eps_row = rows
+            .iter()
+            .find(|r| r.solver == "ntorc_frontier_eps")
+            .expect("eps row");
+        assert!(eps_row.latency_us <= 200.0 + 1e-6);
+        let eps_total = eps_row.luts + eps_row.dsps;
+        assert!(
+            eps_total <= mip_total * (1.0 + TABLE4_EPS + 0.10),
+            "eps {eps_total} vs mip {mip_total}"
+        );
+    }
+
+    #[test]
+    fn eps_pipeline_sweep_reports_its_bound() {
+        let mut cfg = PipelineConfig::smoke();
+        cfg.frontier_epsilon = Some(0.05);
+        let pipe = Pipeline::new(cfg);
+        let db = pipe.synth_database();
+        let models = pipe.fit_models(&db);
+        let net = NetConfig::new(64, vec![(3, 8)], vec![], vec![16, 1]);
+        let budgets = [10_000.0, 50_000.0, 200_000.0];
+        // Panics unless every answer verifies within (1+ε)× of B&B.
+        let sw = frontier_sweep_run(&pipe, &models, "tiny", &net, &budgets);
+        assert_eq!(sw.epsilon, 0.05);
+        assert_eq!(sw.index.stats.epsilon, 0.05);
+        let (h, rows) = frontier_sweep_rows(std::slice::from_ref(&sw));
+        assert_eq!(h.last(), Some(&"epsilon"));
+        assert!(rows.iter().all(|r| r.last() == Some(&"0.050".to_string())));
     }
 
     #[test]

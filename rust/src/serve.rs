@@ -36,7 +36,19 @@
 //!   An opt-in document cap (`serve.store_max_docs`,
 //!   [`FrontierStore::with_max_docs`]) garbage-collects oldest-first
 //!   after each save, bounding a store shared by the multi-workload key
-//!   space; an evicted frontier is rebuilt on next demand.
+//!   space; an evicted frontier is rebuilt on next demand. Writers
+//!   serialize through a cross-process advisory lock ([`StoreLock`]:
+//!   one `.lock` file per store directory, held across the save *and*
+//!   its GC, with stale locks from crashed writers broken after
+//!   [`LOCK_STALE`]), so concurrent savers can no longer interleave
+//!   their GC passes; readers never lock (renames are atomic).
+//!
+//! * ε-coarsened frontiers are **distinct documents**: when the service
+//!   is configured with `ServeConfig::epsilon`, the ε bits are folded
+//!   into every key (and an `eps-` slug prefix), so an ε-frontier can
+//!   never be served to an exact client or vice versa — exact stores
+//!   stay warm, ε stores are their own namespace. The bound itself
+//!   travels in the document (`FrontierStats::epsilon`).
 //!
 //! * [`FrontierService`] — the serving layer: a bounded LRU of hot
 //!   in-memory indices in front of the store, building missing frontiers
@@ -59,19 +71,21 @@
 //! zero, bit-identical to fresh `solve_bb` re-solves.
 
 use std::collections::HashMap;
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{parallel_map, CostModels, LATENCY_BUDGET_CYCLES};
-use crate::frontier::{FrontierIndex, ParetoFrontier};
+use crate::frontier::FrontierIndex;
 use crate::layers::{LayerKind, NetConfig};
 use crate::mip::{DeployProblem, Solution};
 use crate::rng::hash_fields;
 use crate::ser::{parse_json, Json};
+use crate::solver::{configured_frontier, SolverOpts};
 
 // ---------------------------------------------------------------------------
 // Keys
@@ -274,10 +288,160 @@ impl ServedFrontier {
 // Persistence
 // ---------------------------------------------------------------------------
 
+/// Name of the advisory writer-lock file inside a store directory
+/// (filtered out of [`FrontierStore::list`] by its extension).
+pub const LOCK_FILE: &str = ".ntorc.lock";
+
+/// A held lock older than this is presumed abandoned by a crashed
+/// writer and broken. Saves hold the lock for milliseconds (one JSON
+/// write + rename + GC scan), so 30 s is orders of magnitude past any
+/// live hold.
+pub const LOCK_STALE: Duration = Duration::from_secs(30);
+
+/// How long a blocked writer waits before giving up (a clean error the
+/// service degrades on — it still serves from memory). Healthy holds
+/// last milliseconds, so a couple of seconds of patience distinguishes
+/// a busy peer from a wedged one without stalling the serving path.
+const LOCK_WAIT: Duration = Duration::from_secs(2);
+
+const LOCK_RETRY: Duration = Duration::from_millis(10);
+
+/// Cross-process advisory writer lock on one store directory.
+///
+/// Acquisition is the atomic exclusive creation of
+/// [`LOCK_FILE`](self::LOCK_FILE) inside the directory; the file holds
+/// `<pid> <millis-since-epoch>` so contenders can tell a live writer
+/// from a crashed one. Before this lock, concurrent savers were
+/// individually safe (tmp + rename is atomic) but their GC passes could
+/// interleave and each evict the other's just-written document; now
+/// save + GC is one critical section. Stale locks (stamp older than the
+/// caller's `stale_after`) are broken by renaming them aside first, so
+/// two contenders cannot both "break" and then double-acquire. Readers
+/// never take the lock — loads only ever see a complete old or complete
+/// new document. Dropping the guard releases the lock; a crashed holder
+/// is recovered via the staleness path.
+pub struct StoreLock {
+    path: PathBuf,
+    /// The exact `<pid> <millis>` stamp this guard wrote — release only
+    /// removes the file while it still holds this stamp, so a holder
+    /// whose lock was stale-broken (it stalled past `stale_after`)
+    /// cannot unlink the *next* owner's live lock on its way out.
+    stamp: String,
+}
+
+impl StoreLock {
+    /// Block until the lock for `dir` is held (creating `dir` first),
+    /// breaking stale locks along the way. Errors only if a *live*
+    /// writer holds the lock past [`LOCK_WAIT`].
+    pub fn acquire(dir: &Path, stale_after: Duration) -> Result<StoreLock> {
+        let deadline = Instant::now() + LOCK_WAIT;
+        loop {
+            if let Some(lock) = StoreLock::try_acquire(dir, stale_after)? {
+                return Ok(lock);
+            }
+            if Instant::now() >= deadline {
+                bail!(
+                    "store lock {} still held after {:?} (live writer, or a crashed one \
+                     younger than the {:?} staleness window)",
+                    dir.join(LOCK_FILE).display(),
+                    LOCK_WAIT,
+                    LOCK_STALE
+                );
+            }
+            std::thread::sleep(LOCK_RETRY);
+        }
+    }
+
+    /// One non-blocking acquisition attempt: `Ok(None)` when a live
+    /// writer holds the lock. A stale lock is broken (renamed aside,
+    /// then removed) and the acquisition retried once.
+    pub fn try_acquire(dir: &Path, stale_after: Duration) -> Result<Option<StoreLock>> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create store dir {}", dir.display()))?;
+        let path = dir.join(LOCK_FILE);
+        for attempt in 0..2 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let stamp = format!("{} {}", std::process::id(), millis_since_epoch());
+                    let _ = f.write_all(stamp.as_bytes());
+                    return Ok(Some(StoreLock { path, stamp }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if attempt > 0 || !lock_is_stale(&path, stale_after) {
+                        return Ok(None);
+                    }
+                    // Break the stale lock: rename it aside first so two
+                    // contenders cannot both remove-and-recreate (only
+                    // the one whose rename succeeds proceeds).
+                    let aside = path.with_extension(format!("stale.{}", std::process::id()));
+                    if std::fs::rename(&path, &aside).is_err() {
+                        return Ok(None);
+                    }
+                    let _ = std::fs::remove_file(&aside);
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("create lock {}", path.display()));
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        // Only release a lock we still own: if this holder stalled past
+        // the staleness window and a contender broke + re-took the lock,
+        // the file now carries the new owner's stamp — removing it would
+        // re-open the very double-writer race the lock closes. (The
+        // check-then-remove pair is not atomic; the residual window is
+        // microseconds after a ≥30 s stall, accepted for an advisory
+        // lock whose underlying writes are atomic-rename anyway.)
+        if std::fs::read_to_string(&self.path).is_ok_and(|text| text == self.stamp) {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+fn millis_since_epoch() -> u128 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0)
+}
+
+/// Whether the lock at `path` has outlived `stale_after`, judged by the
+/// stamp written inside the file OR the file's mtime — either aging out
+/// is enough, so a wall-clock step backwards (which freezes the stamp
+/// age at 0) or a peer stamping with a fast clock cannot wedge writers
+/// forever. A vanished lock (owner just released) reads as stale so the
+/// caller immediately retries the creation; a garbled one (writer
+/// crashed mid-create) is judged by mtime alone.
+fn lock_is_stale(path: &Path, stale_after: Duration) -> bool {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return true;
+    };
+    let stamp_stale = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u128>().ok())
+        .map(|t| millis_since_epoch().saturating_sub(t) > stale_after.as_millis())
+        .unwrap_or(false);
+    let mtime_stale = std::fs::metadata(path)
+        .and_then(|m| m.modified())
+        .ok()
+        .and_then(|mtime| SystemTime::now().duration_since(mtime).ok())
+        .map(|age| age > stale_after)
+        .unwrap_or(false);
+    stamp_stale || mtime_stale
+}
+
 /// On-disk frontier store: one JSON document per [`FrontierKey`] under
-/// `dir`. Writes are atomic (tmp file + rename); loads re-verify every
-/// invariant before a document can serve queries. An optional document
-/// cap ([`with_max_docs`](Self::with_max_docs)) garbage-collects the
+/// `dir`. Writes are atomic (tmp file + rename) and serialized by the
+/// cross-process [`StoreLock`] (held across save + GC); loads re-verify
+/// every invariant before a document can serve queries and never need
+/// the lock. An optional document cap
+/// ([`with_max_docs`](Self::with_max_docs)) garbage-collects the
 /// oldest documents after each save, so a long-lived store shared
 /// across many architectures and workloads cannot grow unboundedly.
 pub struct FrontierStore {
@@ -318,11 +482,12 @@ impl FrontierStore {
 
     /// Persist one frontier. The tmp-then-rename dance means a crashed
     /// writer leaves either the old document or none — never half a file
-    /// under the served name. With a document cap set, the save then
-    /// garbage-collects oldest-first down to the cap.
+    /// under the served name. The whole save (write + rename + GC) runs
+    /// under the store's cross-process [`StoreLock`], so a concurrent
+    /// writer's GC pass can never race this one. With a document cap
+    /// set, the save then garbage-collects oldest-first down to the cap.
     pub fn save(&self, sf: &ServedFrontier) -> Result<PathBuf> {
-        std::fs::create_dir_all(&self.dir)
-            .with_context(|| format!("create store dir {}", self.dir.display()))?;
+        let _lock = StoreLock::acquire(&self.dir, LOCK_STALE)?;
         let path = self.path_for(&sf.key);
         let tmp = path.with_extension("json.tmp");
         std::fs::write(&tmp, sf.to_json().to_pretty())
@@ -337,9 +502,17 @@ impl FrontierStore {
     /// most `max_docs` remain (ties broken by path for determinism).
     /// Returns the number of documents removed. Unreadable metadata or
     /// failed removals are skipped — GC is best-effort by design; the
-    /// correctness of the store never depends on it.
+    /// correctness of the store never depends on it. A standalone GC
+    /// takes the writer lock like a save; if a live writer holds it,
+    /// this pass is skipped (that writer GCs on its own way out).
     pub fn gc(&self) -> usize {
-        self.gc_keeping(None)
+        if self.max_docs.is_none() {
+            return 0;
+        }
+        match StoreLock::try_acquire(&self.dir, LOCK_STALE) {
+            Ok(Some(_lock)) => self.gc_keeping(None),
+            _ => 0,
+        }
     }
 
     /// [`gc`](Self::gc), never evicting `keep` — `save` passes the path
@@ -431,6 +604,8 @@ pub struct ServeStats {
     queries: AtomicU64,
     batches: AtomicU64,
     build_ns: AtomicU64,
+    truncated_builds: AtomicU64,
+    eps_pruned: AtomicU64,
 }
 
 impl ServeStats {
@@ -449,6 +624,8 @@ impl ServeStats {
             queries: self.queries.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             build_seconds: self.build_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            truncated_builds: self.truncated_builds.load(Ordering::Relaxed),
+            eps_pruned: self.eps_pruned.load(Ordering::Relaxed),
         }
     }
 }
@@ -472,6 +649,14 @@ pub struct ServeSnapshot {
     pub batches: u64,
     /// Wall-clock spent inside frontier builds.
     pub build_seconds: f64,
+    /// Builds whose frontier hit the `max_points` guardrail (the library
+    /// no longer prints per-build warnings; surface this once at the
+    /// service/CLI layer — answers from those frontiers stay feasible
+    /// and canonical but may be suboptimal).
+    pub truncated_builds: u64,
+    /// DP entries the ε-dominance coarsening dropped across all builds
+    /// (the points-saved telemetry behind the (1+ε) bound).
+    pub eps_pruned: u64,
 }
 
 impl ServeSnapshot {
@@ -502,6 +687,8 @@ impl ServeSnapshot {
             ("batches", Json::num(self.batches as f64)),
             ("hit_rate", Json::num(self.hit_rate())),
             ("build_seconds", Json::num(self.build_seconds)),
+            ("truncated_builds", Json::num(self.truncated_builds as f64)),
+            ("eps_pruned", Json::num(self.eps_pruned as f64)),
         ])
     }
 }
@@ -540,8 +727,16 @@ pub struct ServeConfig {
     /// Budget stamped on built problems (irrelevant to the index, which
     /// answers every budget, but kept for `DeployProblem` consumers).
     pub latency_budget: f64,
-    /// Guardrail forwarded to [`ParetoFrontier::with_max_points`].
+    /// Guardrail forwarded to
+    /// [`ParetoFrontier::with_max_points`](crate::frontier::ParetoFrontier::with_max_points).
     pub max_points: Option<usize>,
+    /// ε-dominance coarsening forwarded to
+    /// [`ParetoFrontier::with_epsilon`](crate::frontier::ParetoFrontier::with_epsilon):
+    /// every served answer is within (1+ε)× the exact optimum. Folded
+    /// into every key (an ε-frontier is never served as exact, and vice
+    /// versa). `None` (or a non-positive value, normalized at
+    /// construction) = exact.
+    pub epsilon: Option<f64>,
     /// Workload identity scoped into every key ([`WorkloadKey`]).
     /// `None` leaves keys workload-agnostic (bare toy services; the
     /// pipeline always sets this).
@@ -556,6 +751,7 @@ impl Default for ServeConfig {
             max_choices_per_layer: 48,
             latency_budget: LATENCY_BUDGET_CYCLES,
             max_points: None,
+            epsilon: None,
             workload: None,
         }
     }
@@ -610,13 +806,14 @@ pub struct FrontierService {
 impl FrontierService {
     pub fn new(cfg: ServeConfig, store: Option<FrontierStore>) -> FrontierService {
         let capacity = cfg.capacity.max(1);
-        // Normalize the guardrail to what ParetoFrontier actually uses
-        // (caps below 2 are clamped there) BEFORE it enters key mixing:
-        // Some(0) must never share a store key with None while building
-        // a different (truncated) frontier.
+        // Normalize the guardrails to what ParetoFrontier actually uses
+        // BEFORE they enter key mixing (caps below 2 are clamped there;
+        // non-positive ε means exact): Some(0) must never share a store
+        // key with None while building a different frontier.
         let max_points = cfg.max_points.map(|c| c.max(2));
+        let epsilon = cfg.epsilon.filter(|e| *e > 0.0);
         FrontierService {
-            cfg: ServeConfig { capacity, max_points, ..cfg },
+            cfg: ServeConfig { capacity, max_points, epsilon, ..cfg },
             store,
             state: Mutex::new(LruState { entries: HashMap::new(), tick: 0 }),
             stats: ServeStats::default(),
@@ -632,20 +829,33 @@ impl FrontierService {
     }
 
     /// The key this service files `net` under: the pure architecture
-    /// key re-scoped by the guardrail config (a truncated frontier must
-    /// never be mistaken for an exact one) and, when configured, the
-    /// workload identity (name hash + sample-rate bits — frontiers for
-    /// different scenarios never collide in a shared store, and the
-    /// store slug gets a `<workload>-` prefix). Model-backed entry
-    /// points ([`resolve`](Self::resolve)/[`query`](Self::query)/
-    /// [`query_batch`](Self::query_batch)) additionally fold in the
-    /// cost-model fingerprint via [`model_key`](Self::model_key).
+    /// key re-scoped by the guardrail config (a truncated or ε-coarsened
+    /// frontier must never be mistaken for an exact one — the ε bits are
+    /// part of the identity, so exact stores stay warm while ε stores
+    /// are distinct documents, with an `eps-` slug prefix) and, when
+    /// configured, the workload identity (name hash + sample-rate bits —
+    /// frontiers for different scenarios never collide in a shared
+    /// store, and the store slug gets a `<workload>-` prefix).
+    /// Model-backed entry points ([`resolve`](Self::resolve)/
+    /// [`query`](Self::query)/[`query_batch`](Self::query_batch))
+    /// additionally fold in the cost-model fingerprint via
+    /// [`model_key`](Self::model_key).
     pub fn key_for(&self, net: &NetConfig) -> FrontierKey {
         let mut fields = vec![self.cfg.max_points.map(|c| c as u64).unwrap_or(0)];
+        // ε bits join the identity only when set, so exact-mode keys
+        // (and every document an exact store already holds) are
+        // unchanged; an ε key can never collide with an exact one (the
+        // field sequences differ) nor with another ε (distinct bits).
+        if let Some(e) = self.cfg.epsilon {
+            fields.push(e.to_bits());
+        }
         if let Some(w) = &self.cfg.workload {
             fields.extend_from_slice(&w.mix_fields());
         }
         let mut key = FrontierKey::for_net(net, self.cfg.max_choices_per_layer).mix(&fields);
+        if self.cfg.epsilon.is_some() {
+            key.name = format!("eps-{}", key.name);
+        }
         if let Some(w) = &self.cfg.workload {
             key.name = format!("{}-{}", sanitize(&w.name), key.name);
         }
@@ -707,13 +917,22 @@ impl FrontierService {
         }
         let t0 = Instant::now();
         let prob = build_problem();
-        let index = ParetoFrontier::new(self.cfg.workers)
-            .with_max_points(self.cfg.max_points)
-            .build(&prob);
+        let index = configured_frontier(&SolverOpts {
+            workers: self.cfg.workers,
+            max_points: self.cfg.max_points,
+            epsilon: self.cfg.epsilon,
+        })
+        .build(&prob);
         ServeStats::bump(&self.stats.builds);
         self.stats
             .build_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if index.stats.truncated {
+            ServeStats::bump(&self.stats.truncated_builds);
+        }
+        self.stats
+            .eps_pruned
+            .fetch_add(index.stats.eps_pruned, Ordering::Relaxed);
         let sf = Arc::new(ServedFrontier::from_problem(key.clone(), &prob, index));
         if let Some(store) = &self.store {
             if let Err(e) = store.save(&sf) {
@@ -972,6 +1191,7 @@ fn parse_net(j: &Json) -> Result<NetConfig> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frontier::ParetoFrontier;
     use crate::mip::Choice;
     use crate::rng::Rng;
     use crate::testkit::prop_check;
@@ -1126,6 +1346,160 @@ mod tests {
         }
         assert!(store.load(&toy_key(42)).unwrap().is_some(), "just-saved evicted");
         assert!(store.load(&toy_key(41)).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn epsilon_rescopes_keys_slugs_and_builds() {
+        let net = demo_net();
+        let exact = FrontierService::new(ServeConfig::default(), None);
+        let eps = FrontierService::new(
+            ServeConfig { epsilon: Some(0.05), ..ServeConfig::default() },
+            None,
+        );
+        // Distinct identity, readable slug, deterministic.
+        assert_ne!(eps.key_for(&net).hash, exact.key_for(&net).hash);
+        assert!(eps.key_for(&net).name.starts_with("eps-"));
+        assert!(!exact.key_for(&net).name.starts_with("eps-"));
+        let again = FrontierService::new(
+            ServeConfig { epsilon: Some(0.05), ..ServeConfig::default() },
+            None,
+        );
+        assert_eq!(eps.key_for(&net), again.key_for(&net));
+        // Different ε values are different identities too.
+        let other = FrontierService::new(
+            ServeConfig { epsilon: Some(0.01), ..ServeConfig::default() },
+            None,
+        );
+        assert_ne!(other.key_for(&net).hash, eps.key_for(&net).hash);
+        // Non-positive ε normalizes to the exact mode — same key, same
+        // (exact) frontier.
+        let zero = FrontierService::new(
+            ServeConfig { epsilon: Some(0.0), ..ServeConfig::default() },
+            None,
+        );
+        assert_eq!(zero.config().epsilon, None);
+        assert_eq!(zero.key_for(&net).hash, exact.key_for(&net).hash);
+        // Builds through the ε service carry the bound in their stats
+        // and the coarsening shows up in the serve counters.
+        let prob = crate::frontier::adversarial_wide_grid(4, 4);
+        let served = eps.resolve_with(eps.key_for(&net), || prob.clone());
+        assert_eq!(served.index.stats.epsilon, 0.05);
+        let snap = eps.stats.snapshot();
+        assert_eq!(snap.builds, 1);
+        assert_eq!(snap.eps_pruned, served.index.stats.eps_pruned);
+        let served_exact = exact.resolve_with(exact.key_for(&net), || prob.clone());
+        assert_eq!(served_exact.index.stats.epsilon, 0.0);
+        assert!(served.index.len() < served_exact.index.len());
+        assert_eq!(exact.stats.snapshot().eps_pruned, 0);
+    }
+
+    #[test]
+    fn truncated_builds_are_counted_not_printed() {
+        // The library no longer prints per-build warnings; the service
+        // counts guardrail hits so the CLI layer can surface them once.
+        let svc = FrontierService::new(
+            ServeConfig { max_points: Some(2), ..ServeConfig::default() },
+            None,
+        );
+        let served = svc.resolve_with(toy_key(51), || toy_problem(51, 4));
+        assert!(served.index.stats.truncated);
+        assert_eq!(svc.stats.snapshot().truncated_builds, 1);
+        // A warm hit does not re-count.
+        svc.resolve_with(toy_key(51), || unreachable!("cached"));
+        assert_eq!(svc.stats.snapshot().truncated_builds, 1);
+        let exact = FrontierService::new(ServeConfig::default(), None);
+        exact.resolve_with(toy_key(52), || toy_problem(52, 2));
+        assert_eq!(exact.stats.snapshot().truncated_builds, 0);
+    }
+
+    #[test]
+    fn store_lock_is_exclusive_released_and_stale_recoverable() {
+        let dir = temp_dir("lock");
+        let lock_path = dir.join(LOCK_FILE);
+        // Acquire: lock file appears, a second attempt is refused.
+        let held = StoreLock::acquire(&dir, LOCK_STALE).unwrap();
+        assert!(lock_path.exists());
+        assert!(StoreLock::try_acquire(&dir, LOCK_STALE).unwrap().is_none());
+        // Release on drop.
+        drop(held);
+        assert!(!lock_path.exists());
+        assert!(StoreLock::try_acquire(&dir, LOCK_STALE).unwrap().is_some());
+        assert!(!lock_path.exists(), "second guard released too");
+        // Stale recovery: a lock stamped in the distant past (crashed
+        // writer) is broken and re-acquired.
+        std::fs::write(&lock_path, "1 0").unwrap();
+        let recovered = StoreLock::try_acquire(&dir, LOCK_STALE).unwrap();
+        assert!(recovered.is_some(), "stale lock must be broken");
+        let text = std::fs::read_to_string(&lock_path).unwrap();
+        assert!(text.starts_with(&format!("{} ", std::process::id())));
+        drop(recovered);
+        // A garbled lock with a fresh mtime reads as live (mtime
+        // fallback), so it is NOT broken.
+        std::fs::write(&lock_path, "not a stamp").unwrap();
+        assert!(StoreLock::try_acquire(&dir, LOCK_STALE).unwrap().is_none());
+        std::fs::remove_file(&lock_path).unwrap();
+        // Ownership-checked release: a holder whose lock was broken and
+        // re-taken by someone else must NOT unlink the new owner's lock.
+        let stale_holder = StoreLock::acquire(&dir, LOCK_STALE).unwrap();
+        std::fs::write(&lock_path, "9999 123456789").unwrap(); // new owner's stamp
+        drop(stale_holder);
+        assert!(lock_path.exists(), "usurped lock must survive the old guard");
+        assert_eq!(std::fs::read_to_string(&lock_path).unwrap(), "9999 123456789");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_holds_the_lock_and_leaves_none_behind() {
+        let dir = temp_dir("lock_save");
+        let store = FrontierStore::new(&dir);
+        let prob = toy_problem(61, 2);
+        let index = ParetoFrontier::new(1).build(&prob);
+        let sf = ServedFrontier::from_problem(toy_key(61), &prob, index);
+        store.save(&sf).unwrap();
+        assert!(!dir.join(LOCK_FILE).exists(), "save must release the lock");
+        // The lock file never shows up as a store document.
+        assert_eq!(store.list().len(), 1);
+        // A stale lock left by a crashed writer does not wedge saves.
+        std::fs::write(dir.join(LOCK_FILE), "1 0").unwrap();
+        store.save(&sf).unwrap();
+        assert!(!dir.join(LOCK_FILE).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_writers_serialize_through_the_lock() {
+        // Two threads hammering one capped store: every save succeeds,
+        // the cap holds, and no tmp/lock debris survives. (Before the
+        // lock, interleaved GC passes could each evict the other's
+        // just-written document.)
+        let dir = temp_dir("lock_race");
+        let mk_store = || FrontierStore::new(&dir).with_max_docs(Some(2));
+        let handles: Vec<_> = (0..2u64)
+            .map(|t| {
+                let store = mk_store();
+                std::thread::spawn(move || {
+                    for i in 0..8u64 {
+                        let tag = 100 + t * 16 + i;
+                        let prob = toy_problem(tag, 2);
+                        let index = ParetoFrontier::new(1).build(&prob);
+                        let sf = ServedFrontier::from_problem(toy_key(tag), &prob, index);
+                        store.save(&sf).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let store = mk_store();
+        assert!(store.list().len() <= 2, "cap must hold under concurrency");
+        assert!(!dir.join(LOCK_FILE).exists(), "no writer left the lock held");
+        // Every surviving document still loads cleanly.
+        for path in store.list() {
+            let text = std::fs::read_to_string(&path).unwrap();
+            ServedFrontier::from_json(&parse_json(&text).unwrap()).unwrap();
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,366 @@
+//! Unified solver core: one typed surface over every deployment solver.
+//!
+//! Before this module the three exact entry points — [`mip::solve_bb`],
+//! [`mip::solve_dp`] and [`crate::frontier::ParetoFrontier`] — were
+//! called ad hoc (free functions here, builder structs there), so every
+//! new call site re-invented budget plumbing and adding a fourth mode
+//! meant touching all of them. The solver core fixes the shape:
+//!
+//! * [`Solver`] — "answer one latency budget": `solve(&DeployProblem,
+//!   budget) -> Option<Solution>`. Implemented by [`BranchAndBound`]
+//!   (the Gurobi-shaped LP/B&B path), [`ExactDp`] (the integer-latency
+//!   DP oracle) and [`ParetoFrontier`] (frontier build + O(log n)
+//!   query, exact or ε-coarsened).
+//! * [`FrontierBuilder`] — "answer every latency budget": `build(&
+//!   DeployProblem) -> FrontierIndex` (stats ride on the index).
+//!   Implemented by [`ParetoFrontier`]; the serving stack
+//!   ([`crate::serve`]) and the report layer construct through it.
+//! * [`SolverKind`] + [`make_solver`] — the registry. The kind is
+//!   selectable from config (`solver.kind = "bb" | "dp" | "frontier"`,
+//!   `--set solver.kind=...` on any command) and lands in
+//!   `PipelineConfig::solver`; [`SolverOpts`] carries the
+//!   frontier-specific knobs (workers, `max_points` guardrail,
+//!   ε-coarsening) from the same config surface.
+//!
+//! # Contract (what an implementation must guarantee)
+//!
+//! `solve(prob, budget)` returns `None` only when no assignment
+//! satisfies the budget, otherwise a [`Solution`] whose `pick` indexes
+//! `prob`'s *original* per-layer choice lists, whose `cost`/`latency`
+//! are the canonical [`DeployProblem::evaluate`] sums of that pick, and
+//! whose latency is within the budget (+ [`BUDGET_EPS`] slack) — a
+//! solver may never fabricate feasibility. Exact solvers additionally
+//! answer feasibility exactly and return the minimum-cost assignment;
+//! an ε-coarsened frontier may return up to (1+ε)× the optimum, never
+//! less (it still returns real assignments). [`ExactDp`] is the one
+//! documented conservative member: it integerizes (ceils latencies,
+//! floors the budget), so everything it returns is feasible and it is
+//! exactly optimal on integer-latency instances, but it may declare a
+//! fractional-latency instance infeasible near the boundary — see its
+//! docs before reaching for it outside cross-checks. Solvers must be
+//! deterministic: same problem + budget ⇒ same answer, at any worker
+//! count.
+//!
+//! # Adding a solver
+//!
+//! Implement [`Solver`] (and [`FrontierBuilder`] if it can answer every
+//! budget at once), add a [`SolverKind`] variant, extend
+//! [`SolverKind::parse`]/[`SolverKind::name`]/[`SolverKind::ALL`] and
+//! the [`make_solver`] match — the config key, the CLI `--set` path and
+//! the cross-check property tests (`solvers_agree_on_random_problems`)
+//! pick it up from the registry with no further wiring.
+
+use anyhow::bail;
+
+use crate::frontier::{FrontierIndex, ParetoFrontier};
+use crate::mip::{self, DeployProblem, Solution};
+
+/// Feasibility slack on latency-budget comparisons (re-exported from
+/// [`crate::frontier`]: every solver shares one definition).
+pub use crate::frontier::BUDGET_EPS;
+
+/// One deployment solver: minimum-cost reuse assignment within a
+/// latency budget (see the module docs for the full contract).
+pub trait Solver {
+    /// Registry name (matches [`SolverKind::name`] for built-ins).
+    fn name(&self) -> &'static str;
+    /// Solve `prob` at `latency_budget` (the problem's own
+    /// `latency_budget` field is ignored). `None` = infeasible even at
+    /// maximum speed.
+    fn solve(&self, prob: &DeployProblem, latency_budget: f64) -> Option<Solution>;
+}
+
+/// A solver that can answer *every* budget at once by materializing the
+/// full latency→cost frontier (stats ride on the returned index).
+pub trait FrontierBuilder {
+    fn name(&self) -> &'static str;
+    fn build(&self, prob: &DeployProblem) -> FrontierIndex;
+}
+
+/// The Gurobi-shaped exact path: LP-relaxation branch & bound
+/// ([`mip::solve_bb`]).
+pub struct BranchAndBound;
+
+impl Solver for BranchAndBound {
+    fn name(&self) -> &'static str {
+        SolverKind::BranchAndBound.name()
+    }
+
+    fn solve(&self, prob: &DeployProblem, latency_budget: f64) -> Option<Solution> {
+        mip::solve_bb(&prob.with_budget(latency_budget)).map(|(s, _)| s)
+    }
+}
+
+/// The integer-latency dynamic program ([`mip::solve_dp`]) — slower,
+/// but an independent oracle for the optimum on integer-latency
+/// instances (which every HLS-cycle-count problem in this crate is).
+///
+/// **Conservative on fractional latencies**: `solve_dp` ceils each
+/// choice latency to whole cycles and floors the budget, so any answer
+/// it returns is genuinely feasible, but an instance whose true
+/// (fractional) optimum sits within one cycle of the budget may be
+/// reported infeasible or suboptimal. Prefer [`BranchAndBound`] or the
+/// frontier for such instances; the registry keeps `dp` primarily as a
+/// cross-check.
+pub struct ExactDp;
+
+impl Solver for ExactDp {
+    fn name(&self) -> &'static str {
+        SolverKind::ExactDp.name()
+    }
+
+    fn solve(&self, prob: &DeployProblem, latency_budget: f64) -> Option<Solution> {
+        mip::solve_dp(&prob.with_budget(latency_budget))
+    }
+}
+
+impl FrontierBuilder for ParetoFrontier {
+    fn name(&self) -> &'static str {
+        if self.epsilon().is_some() {
+            "frontier-eps"
+        } else {
+            SolverKind::Frontier.name()
+        }
+    }
+
+    fn build(&self, prob: &DeployProblem) -> FrontierIndex {
+        ParetoFrontier::build(self, prob)
+    }
+}
+
+impl Solver for ParetoFrontier {
+    fn name(&self) -> &'static str {
+        FrontierBuilder::name(self)
+    }
+
+    /// Build-then-query. One-shot use of a frontier as a point solver is
+    /// deliberately supported (it is how the registry exposes the ε
+    /// mode); amortized callers should hold the [`FrontierIndex`] (or go
+    /// through [`crate::serve::FrontierService`]) instead.
+    fn solve(&self, prob: &DeployProblem, latency_budget: f64) -> Option<Solution> {
+        ParetoFrontier::build(self, prob).query(latency_budget)
+    }
+}
+
+/// The registry of built-in solver modes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    BranchAndBound,
+    ExactDp,
+    Frontier,
+}
+
+impl SolverKind {
+    pub const ALL: [SolverKind; 3] =
+        [SolverKind::BranchAndBound, SolverKind::ExactDp, SolverKind::Frontier];
+
+    pub fn parse(s: &str) -> anyhow::Result<SolverKind> {
+        match s {
+            "bb" => Ok(SolverKind::BranchAndBound),
+            "dp" => Ok(SolverKind::ExactDp),
+            "frontier" => Ok(SolverKind::Frontier),
+            other => bail!("unknown solver kind '{other}' (bb | dp | frontier)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverKind::BranchAndBound => "bb",
+            SolverKind::ExactDp => "dp",
+            SolverKind::Frontier => "frontier",
+        }
+    }
+}
+
+/// Frontier-mode knobs threaded from `PipelineConfig` (ignored by the
+/// point solvers, which have no tuning surface).
+#[derive(Clone, Copy, Debug)]
+pub struct SolverOpts {
+    /// Worker threads for the frontier DP level merges.
+    pub workers: usize,
+    /// Telemetry-grade size guardrail
+    /// ([`ParetoFrontier::with_max_points`]).
+    pub max_points: Option<usize>,
+    /// Approximation-grade ε-dominance coarsening
+    /// ([`ParetoFrontier::with_epsilon`]): answers within (1+ε)× the
+    /// exact optimum. `None` = exact.
+    pub epsilon: Option<f64>,
+}
+
+impl Default for SolverOpts {
+    fn default() -> Self {
+        SolverOpts { workers: 1, max_points: None, epsilon: None }
+    }
+}
+
+/// Materialize one solver from the registry.
+pub fn make_solver(kind: SolverKind, opts: &SolverOpts) -> Box<dyn Solver> {
+    match kind {
+        SolverKind::BranchAndBound => Box::new(BranchAndBound),
+        SolverKind::ExactDp => Box::new(ExactDp),
+        SolverKind::Frontier => Box::new(configured_frontier(opts)),
+    }
+}
+
+/// The one construction path for a configured [`ParetoFrontier`] —
+/// the serving stack, the report layer and the registry all build
+/// through this, so a knob added here reaches every consumer.
+pub fn configured_frontier(opts: &SolverOpts) -> ParetoFrontier {
+    ParetoFrontier::new(opts.workers.max(1))
+        .with_max_points(opts.max_points)
+        .with_epsilon(opts.epsilon)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mip::Choice;
+    use crate::rng::Rng;
+    use crate::testkit::prop_check;
+
+    fn random_problem(rng: &mut Rng, n_layers: usize, n_choices: usize) -> DeployProblem {
+        let layers: Vec<Vec<Choice>> = (0..n_layers)
+            .map(|_| {
+                (0..n_choices)
+                    .map(|j| Choice {
+                        reuse: 1 << j,
+                        cost: 1000.0 / (j + 1) as f64 + rng.range_f64(0.0, 50.0),
+                        latency: (10 * (j + 1)) as f64 + rng.range_f64(0.0, 5.0).floor(),
+                    })
+                    .collect()
+            })
+            .collect();
+        DeployProblem { layers, latency_budget: 0.0 }
+    }
+
+    #[test]
+    fn registry_parse_name_round_trips_and_rejects_unknowns() {
+        for kind in SolverKind::ALL {
+            assert_eq!(SolverKind::parse(kind.name()).unwrap(), kind);
+            let solver = make_solver(kind, &SolverOpts::default());
+            assert_eq!(solver.name(), kind.name());
+        }
+        assert!(SolverKind::parse("gurobi").is_err());
+        assert!(SolverKind::parse("").is_err());
+    }
+
+    #[test]
+    fn eps_frontier_solver_reports_its_mode() {
+        let opts = SolverOpts { epsilon: Some(0.05), ..SolverOpts::default() };
+        assert_eq!(make_solver(SolverKind::Frontier, &opts).name(), "frontier-eps");
+        // A non-positive ε normalizes back to the exact mode.
+        let zero = SolverOpts { epsilon: Some(0.0), ..SolverOpts::default() };
+        assert_eq!(make_solver(SolverKind::Frontier, &zero).name(), "frontier");
+    }
+
+    #[test]
+    fn frontier_builder_trait_matches_the_inherent_build() {
+        let mut rng = Rng::new(0x50_1);
+        let prob = random_problem(&mut rng, 4, 5);
+        let pf = configured_frontier(&SolverOpts::default());
+        let via_trait = FrontierBuilder::build(&pf, &prob);
+        let direct = ParetoFrontier::new(1).build(&prob);
+        assert_eq!(via_trait.len(), direct.len());
+        for i in 0..direct.len() {
+            assert_eq!(via_trait.point(i), direct.point(i));
+            assert_eq!(via_trait.pick(i), direct.pick(i));
+        }
+    }
+
+    #[test]
+    fn property_all_registry_solvers_agree_on_random_problems() {
+        // The unified contract: every exact registry solver returns the
+        // same optimal cost and feasibility verdict at every budget.
+        prop_check("solver-registry-agreement", 10, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let prob = random_problem(&mut rng, g.int(1, 5), g.int(2, 5));
+            let solvers: Vec<Box<dyn Solver>> = SolverKind::ALL
+                .into_iter()
+                .map(|k| make_solver(k, &SolverOpts::default()))
+                .collect();
+            let min_lat = prob.min_latency();
+            for i in 0..8 {
+                // Integer budgets: ExactDp integerizes the budget, so
+                // fractional budgets would differ by design.
+                let budget = (0.5 * min_lat + i as f64 * 17.0).floor();
+                let answers: Vec<Option<Solution>> =
+                    solvers.iter().map(|s| s.solve(&prob, budget)).collect();
+                let reference = &answers[0];
+                for (s, a) in solvers.iter().zip(&answers).skip(1) {
+                    match (reference, a) {
+                        (None, None) => {}
+                        (Some(r), Some(x)) => {
+                            if (r.cost - x.cost).abs() > 1e-6 * (1.0 + r.cost.abs()) {
+                                return Err(format!(
+                                    "budget {budget}: {} cost {} != bb cost {}",
+                                    s.name(),
+                                    x.cost,
+                                    r.cost
+                                ));
+                            }
+                            if x.latency > budget + BUDGET_EPS {
+                                return Err(format!(
+                                    "budget {budget}: {} over budget",
+                                    s.name()
+                                ));
+                            }
+                            // Canonical evaluate sums, original indices.
+                            let e = prob.evaluate(&x.pick);
+                            if e.cost != x.cost || e.latency != x.latency {
+                                return Err(format!(
+                                    "budget {budget}: {} answer not canonical",
+                                    s.name()
+                                ));
+                            }
+                        }
+                        _ => {
+                            return Err(format!(
+                                "budget {budget}: {} feasibility disagrees with bb",
+                                s.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_eps_registry_solver_stays_within_its_bound() {
+        prop_check("solver-eps-bound", 6, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let prob = random_problem(&mut rng, g.int(2, 5), g.int(2, 5));
+            let eps = *g.choice(&[0.01, 0.1]);
+            let exact = make_solver(SolverKind::BranchAndBound, &SolverOpts::default());
+            let approx = make_solver(
+                SolverKind::Frontier,
+                &SolverOpts { epsilon: Some(eps), ..SolverOpts::default() },
+            );
+            let min_lat = prob.min_latency();
+            for i in 0..6 {
+                let budget = 0.6 * min_lat + i as f64 * 23.0;
+                match (exact.solve(&prob, budget), approx.solve(&prob, budget)) {
+                    (None, None) => {}
+                    (Some(e), Some(a)) => {
+                        let tol = 1e-9 * (1.0 + e.cost.abs());
+                        if a.cost < e.cost - tol {
+                            return Err(format!("budget {budget}: eps beats exact"));
+                        }
+                        if a.cost > (1.0 + eps) * e.cost + tol {
+                            return Err(format!(
+                                "budget {budget}: eps {} exceeds (1+{eps}) x {}",
+                                a.cost, e.cost
+                            ));
+                        }
+                        if a.latency > budget + BUDGET_EPS {
+                            return Err(format!("budget {budget}: eps over budget"));
+                        }
+                    }
+                    _ => return Err(format!("budget {budget}: feasibility disagreement")),
+                }
+            }
+            Ok(())
+        });
+    }
+}

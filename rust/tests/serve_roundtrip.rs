@@ -22,6 +22,7 @@ fn serve_cfg() -> ServeConfig {
         max_choices_per_layer: 16,
         latency_budget: 50_000.0,
         max_points: None,
+        epsilon: None,
         workload: None,
     }
 }
@@ -69,6 +70,68 @@ fn second_session_serves_sweep_from_store_without_building() {
             assert_eq!(prob.layers[layer][j].reuse, r);
         }
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn eps_frontier_round_trips_scoped_apart_from_exact() {
+    // The ε-mode serving contract, end to end: an ε service persists its
+    // coarsened frontier as a distinct document, a second ε session
+    // answers from the store without building, every answer verifies
+    // within the proven (1+ε)× bound of fresh B&B solves — and an exact
+    // service over the SAME store never touches the ε document (zero
+    // cross-mode hits, its own build, exact answers).
+    let eps = 0.05;
+    let eps_cfg = || ServeConfig { epsilon: Some(eps), ..serve_cfg() };
+    let pipe = Pipeline::new(PipelineConfig::smoke());
+    let db = pipe.synth_database();
+    let models = pipe.fit_models(&db);
+    let net = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]);
+    let budgets: Vec<f64> = (1..=20).map(|i| 3_000.0 * i as f64).collect();
+    let dir = temp_store("eps_roundtrip");
+
+    // ε session 1: cold build, persisted under the ε-scoped key.
+    let svc1 = FrontierService::new(eps_cfg(), Some(FrontierStore::new(&dir)));
+    let first: Vec<_> = budgets.iter().map(|&b| svc1.query(&models, &net, b)).collect();
+    assert_eq!(svc1.stats.snapshot().builds, 1);
+    assert!(first.iter().any(|s| s.is_some()));
+
+    // ε session 2: answers purely from the store, identically.
+    let svc2 = FrontierService::new(eps_cfg(), Some(FrontierStore::new(&dir)));
+    let second: Vec<_> = budgets.iter().map(|&b| svc2.query(&models, &net, b)).collect();
+    let s2 = svc2.stats.snapshot();
+    assert_eq!((s2.builds, s2.store_hits), (0, 1), "eps store must stay warm");
+    assert_eq!(first, second, "eps answers identical across sessions");
+
+    // The loaded document carries its bound and verifies within it
+    // against fresh B&B re-solves.
+    let served = svc2.resolve(&models, &net);
+    assert_eq!(served.index.stats.epsilon, eps);
+    let prob = models.build_problem(&net.plan(), 50_000.0, 16);
+    served
+        .index
+        .cross_check_bb_within(&prob, &budgets, eps)
+        .expect("eps answers must stay within (1+eps) of fresh B&B solves");
+
+    // An exact service sharing the store: distinct key, own build, and
+    // its answers reproduce B&B exactly — the ε document is invisible.
+    let exact = FrontierService::new(serve_cfg(), Some(FrontierStore::new(&dir)));
+    assert_ne!(exact.key_for(&net).hash, svc2.key_for(&net).hash);
+    let _ = exact.query(&models, &net, 50_000.0);
+    let se = exact.stats.snapshot();
+    assert_eq!((se.builds, se.store_hits), (1, 0), "no cross-mode store hit");
+    let exact_served = exact.resolve(&models, &net);
+    assert_eq!(exact_served.index.stats.epsilon, 0.0);
+    exact_served
+        .index
+        .cross_check_bb(&prob, &budgets)
+        .expect("exact answers must reproduce fresh B&B solves");
+    // Two documents now live side by side, eps-slugged apart.
+    let store = FrontierStore::new(&dir);
+    assert_eq!(store.list().len(), 2);
+    assert!(store.contains(&svc2.model_key(&models, &net)));
+    assert!(store.contains(&exact.model_key(&models, &net)));
+    assert!(svc2.model_key(&models, &net).name.starts_with("eps-"));
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -161,6 +161,81 @@ fn workloads_never_collide_in_a_shared_store() {
 }
 
 #[test]
+fn eps_mode_never_collides_with_exact_in_a_shared_store() {
+    // The ε axis composes with the workload axis: one store directory,
+    // one layer plan, every (workload, ε-mode) pair gets its own key,
+    // its own build and its own document — zero cross-mode hits in
+    // either direction, even warm.
+    let dir = temp_dir("eps_store");
+    let net = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]);
+    let mk = |name: &str, epsilon: Option<f64>| {
+        FrontierService::new(
+            ServeConfig {
+                epsilon,
+                workload: Some(WorkloadKey {
+                    name: name.into(),
+                    sample_rate_hz: workload::sample_rate_of(name).unwrap(),
+                }),
+                ..ServeConfig::default()
+            },
+            Some(FrontierStore::new(&dir)),
+        )
+    };
+    let services: Vec<(FrontierService, u64)> = workload::ALL
+        .into_iter()
+        .enumerate()
+        .flat_map(|(i, name)| {
+            [
+                (mk(name, None), i as u64),
+                (mk(name, Some(0.05)), 8 + i as u64),
+            ]
+        })
+        .collect();
+    // All six keys distinct; ε keys carry the eps- slug inside the
+    // workload prefix.
+    let keys: Vec<_> = services.iter().map(|(s, _)| s.key_for(&net)).collect();
+    for i in 0..keys.len() {
+        for j in i + 1..keys.len() {
+            assert_ne!(keys[i].hash, keys[j].hash, "key collision at {i},{j}");
+        }
+    }
+    for (i, name) in workload::ALL.into_iter().enumerate() {
+        assert!(!keys[2 * i].name.contains("eps-"));
+        assert!(keys[2 * i + 1].name.starts_with(&format!("{name}-eps-")));
+    }
+    // Cold pass: every (workload, mode) builds its own frontier despite
+    // the shared directory filling up around it.
+    for (svc, tag) in &services {
+        svc.resolve_with(svc.key_for(&net), || toy_problem(*tag));
+        let s = svc.stats.snapshot();
+        assert_eq!((s.builds, s.store_hits), (1, 0), "cross-mode store hit");
+    }
+    assert_eq!(FrontierStore::new(&dir).list().len(), services.len());
+    // Warm pass from fresh services: each loads only its own document.
+    for (i, name) in workload::ALL.into_iter().enumerate() {
+        for (epsilon, tag) in [(None, i as u64), (Some(0.05), 8 + i as u64)] {
+            let fresh = mk(name, epsilon);
+            let served = fresh.resolve_with(fresh.key_for(&net), || {
+                unreachable!("store must answer")
+            });
+            let s = fresh.stats.snapshot();
+            assert_eq!((s.builds, s.store_hits), (0, 1), "{name} eps={epsilon:?}");
+            // The served document is the one built from this pair's own
+            // problem, in this pair's own mode.
+            assert_eq!(served.index.stats.epsilon, epsilon.unwrap_or(0.0));
+            let expect = ntorc::frontier::ParetoFrontier::new(1)
+                .with_epsilon(epsilon)
+                .build(&toy_problem(tag));
+            assert_eq!(served.index.len(), expect.len(), "{name}: wrong document");
+            for k in 0..expect.len() {
+                assert_eq!(served.index.point(k), expect.point(k), "{name}: point {k}");
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn pipelines_scope_frontier_keys_by_workload() {
     // The end-to-end wiring: two pipelines differing only in workload
     // file the same architecture under different keys.
