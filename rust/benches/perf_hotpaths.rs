@@ -32,7 +32,7 @@ use ntorc::mip::{Choice, DeployProblem};
 use ntorc::nn::{train_step, Adam, AdamConfig, NativeModel};
 use ntorc::rng::Rng;
 use ntorc::ser::{parse_json, Json};
-use ntorc::serve::{BatchRequest, FrontierService, FrontierStore, ServeConfig};
+use ntorc::serve::{BatchOptions, BatchRequest, FrontierService, FrontierStore, ServeConfig};
 use ntorc::tensor::{matmul, Tensor};
 
 fn main() {
@@ -253,7 +253,7 @@ fn main() {
         })
         .collect();
     let t0 = std::time::Instant::now();
-    let responses = svc.query_batch(&models, &requests);
+    let responses = svc.batch(&requests, &BatchOptions::models(&models));
     let serve_batch_ns = t0.elapsed().as_nanos() as f64;
     assert_eq!(responses.len(), 64);
     let serve_batch_ns_per_query = serve_batch_ns / responses.len() as f64;

@@ -1,0 +1,710 @@
+//! Versioned wire protocol for the serving front-end.
+//!
+//! One envelope grammar, shared **verbatim** by the three clients of the
+//! serving stack: file-mode `ntorc serve`, the HTTP front-end
+//! ([`crate::httpd`]) and the load generator ([`crate::loadgen`]).
+//! Extracting the shapes out of `serve::parse_requests` means a request
+//! document behaves identically whether it arrives on stdin, as a file,
+//! or as an HTTP body — and a response parses identically whether it is
+//! read back from `results/serve_stats.json` or off a socket.
+//!
+//! ## Request envelope (v1)
+//!
+//! ```json
+//! {"v": 1,
+//!  "workload": "dropbear",
+//!  "requests": [
+//!    {"network": "model1", "budget": 50000},
+//!    {"net": {"window": 64, "conv": [[3, 8]], "lstm": [8], "dense": [16, 1]},
+//!     "budgets": [20000, 50000]}
+//! ]}
+//! ```
+//!
+//! * `v` — protocol version; optional. A document without `v` (or a
+//!   bare array of request objects) is **legacy input, treated as v1**,
+//!   so every pre-existing request file (`rust/ci/serve_requests.json`)
+//!   keeps parsing unchanged. Any other version is a clean
+//!   [`ErrorCode::BadRequest`].
+//! * `workload` — optional scenario assertion. A server configured for a
+//!   different scenario family rejects the batch with
+//!   [`ErrorCode::UnknownWorkload`] instead of silently answering from
+//!   the wrong key space.
+//! * each request names a catalog network (`network`) or inlines one
+//!   (`net`), and carries one `budget` or a `budgets` list (expanded to
+//!   one query per budget).
+//!
+//! ## Response envelope (v1)
+//!
+//! ```json
+//! {"v": 1, "ok": {"count": 2, "feasible": 2, "results": [
+//!   {"key": "8c56e7875565265d", "slug": "w32-c-3x4-l-5-d-6-1",
+//!    "budget": 50000, "feasible": true, "cost": 123, "latency_cycles": 480,
+//!    "reuse_factors": [4, 2, 1]}, ...]}}
+//! ```
+//!
+//! or, on failure, a structured error with a **stable machine-readable
+//! code** (see [`ErrorCode`]; the golden test pins every string):
+//!
+//! ```json
+//! {"v": 1, "error": {"code": "bad_request", "message": "...", "key": "..."}}
+//! ```
+//!
+//! Codes are the contract; messages are for humans and may change.
+
+use crate::layers::NetConfig;
+use crate::ser::Json;
+use crate::serve::{BatchRequest, BatchResponse};
+
+/// Wire protocol version spoken by this crate.
+pub const API_VERSION: i64 = 1;
+
+// ---------------------------------------------------------------------------
+// Error codes
+// ---------------------------------------------------------------------------
+
+/// Stable machine-readable error codes. The string form ([`as_str`])
+/// and the HTTP status mapping ([`status`]) are frozen wire contract:
+/// clients dispatch on them, so renaming one is a protocol break (the
+/// `error_codes_are_stable` test pins every value).
+///
+/// [`as_str`]: ErrorCode::as_str
+/// [`status`]: ErrorCode::status
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed envelope, body, or JSON (including unsupported `v`).
+    BadRequest,
+    /// A `network` name the server's catalog does not know.
+    UnknownNetwork,
+    /// The envelope asserted a `workload` the server is not serving.
+    UnknownWorkload,
+    /// Admission control: the build queue is saturated; retry later.
+    Overloaded,
+    /// The server is draining and no longer accepts new work.
+    Draining,
+    /// No route at this path.
+    NotFound,
+    /// The path exists but not for this HTTP method.
+    MethodNotAllowed,
+    /// The request body exceeds the server's size cap.
+    PayloadTooLarge,
+    /// A persisted frontier document failed verification.
+    StoreCorrupt,
+    /// Unexpected server-side failure.
+    Internal,
+}
+
+/// Every code, for table-driven tests and docs.
+pub const ERROR_CODES: [ErrorCode; 10] = [
+    ErrorCode::BadRequest,
+    ErrorCode::UnknownNetwork,
+    ErrorCode::UnknownWorkload,
+    ErrorCode::Overloaded,
+    ErrorCode::Draining,
+    ErrorCode::NotFound,
+    ErrorCode::MethodNotAllowed,
+    ErrorCode::PayloadTooLarge,
+    ErrorCode::StoreCorrupt,
+    ErrorCode::Internal,
+];
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownNetwork => "unknown_network",
+            ErrorCode::UnknownWorkload => "unknown_workload",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Draining => "draining",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::MethodNotAllowed => "method_not_allowed",
+            ErrorCode::PayloadTooLarge => "payload_too_large",
+            ErrorCode::StoreCorrupt => "store_corrupt",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        ERROR_CODES.into_iter().find(|c| c.as_str() == s)
+    }
+
+    /// The HTTP status the front-end maps this code to.
+    pub fn status(self) -> u16 {
+        match self {
+            ErrorCode::BadRequest => 400,
+            ErrorCode::UnknownNetwork => 404,
+            ErrorCode::UnknownWorkload => 409,
+            ErrorCode::Overloaded => 429,
+            ErrorCode::Draining => 503,
+            ErrorCode::NotFound => 404,
+            ErrorCode::MethodNotAllowed => 405,
+            ErrorCode::PayloadTooLarge => 413,
+            ErrorCode::StoreCorrupt => 500,
+            ErrorCode::Internal => 500,
+        }
+    }
+
+    /// Whether a client should retry the same request later (the
+    /// condition is transient, not a fault in the request).
+    pub fn retryable(self) -> bool {
+        matches!(self, ErrorCode::Overloaded | ErrorCode::Draining)
+    }
+}
+
+/// A structured wire error: stable code, human message, optional key
+/// (the frontier key / request item the failure is about).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+    pub key: Option<String>,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError { code, message: message.into(), key: None }
+    }
+
+    pub fn with_key(mut self, key: impl Into<String>) -> ApiError {
+        self.key = Some(key.into());
+        self
+    }
+
+    fn bad(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::BadRequest, message)
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)?;
+        if let Some(k) = &self.key {
+            write!(f, " (key {k})")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// A parsed v1 request document.
+#[derive(Clone, Debug)]
+pub struct ParsedRequests {
+    /// One entry per (network, budget) pair, budget lists expanded.
+    pub requests: Vec<BatchRequest>,
+    /// The optional scenario assertion from the envelope.
+    pub workload: Option<String>,
+}
+
+/// Parse a request document (v1 envelope, legacy un-versioned object,
+/// or bare request array — all the same grammar). Named networks
+/// resolve through `named`; inline nets are validated with
+/// [`NetConfig::is_valid`]. Every failure is a typed [`ApiError`] the
+/// front-end can put on the wire unchanged.
+pub fn parse_request_doc(
+    doc: &Json,
+    named: &dyn Fn(&str) -> Option<NetConfig>,
+) -> Result<ParsedRequests, ApiError> {
+    if let Some(v) = doc.as_obj().and_then(|o| o.get("v")) {
+        let version = v.as_f64().filter(|f| f.fract() == 0.0).map(|f| f as i64);
+        if version != Some(API_VERSION) {
+            return Err(ApiError::bad(format!(
+                "unsupported api version {} (this server speaks v{API_VERSION})",
+                v.to_string()
+            )));
+        }
+    }
+    let workload = match doc.as_obj().and_then(|o| o.get("workload")) {
+        Some(w) => Some(
+            w.as_str()
+                .ok_or_else(|| ApiError::bad("'workload' must be a string"))?
+                .to_string(),
+        ),
+        None => None,
+    };
+    let items = if let Some(arr) = doc.as_arr() {
+        arr
+    } else {
+        doc.as_obj()
+            .and_then(|o| o.get("requests"))
+            .and_then(|r| r.as_arr())
+            .ok_or_else(|| ApiError::bad("'requests' must be an array"))?
+    };
+    let mut out = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let net = if let Some(name) = item.as_obj().and_then(|o| o.get("network")) {
+            let name = name
+                .as_str()
+                .ok_or_else(|| ApiError::bad(format!("request {i}: 'network' must be a string")))?;
+            named(name).ok_or_else(|| {
+                ApiError::new(
+                    ErrorCode::UnknownNetwork,
+                    format!("request {i}: unknown network '{name}'"),
+                )
+                .with_key(name)
+            })?
+        } else if let Some(net) = item.as_obj().and_then(|o| o.get("net")) {
+            parse_net(net).map_err(|e| ApiError::bad(format!("request {i}: {}", e.message)))?
+        } else {
+            return Err(ApiError::bad(format!(
+                "request {i}: needs 'network' (named) or 'net' (inline)"
+            )));
+        };
+        let mut budgets = Vec::new();
+        if let Some(b) = item.as_obj().and_then(|o| o.get("budget")) {
+            budgets.push(
+                b.as_f64()
+                    .ok_or_else(|| ApiError::bad(format!("request {i}: 'budget' must be a number")))?,
+            );
+        }
+        if let Some(list) = item.as_obj().and_then(|o| o.get("budgets")) {
+            for b in list
+                .as_arr()
+                .ok_or_else(|| ApiError::bad(format!("request {i}: 'budgets' must be an array")))?
+            {
+                budgets.push(b.as_f64().ok_or_else(|| {
+                    ApiError::bad(format!("request {i}: budgets hold non-numbers"))
+                })?);
+            }
+        }
+        if budgets.is_empty() {
+            return Err(ApiError::bad(format!("request {i}: needs 'budget' or 'budgets'")));
+        }
+        for budget in budgets {
+            out.push(BatchRequest { net: net.clone(), budget });
+        }
+    }
+    if out.is_empty() {
+        return Err(ApiError::bad("no requests in document"));
+    }
+    Ok(ParsedRequests { requests: out, workload })
+}
+
+/// Parse an inline network: `{"window": w, "conv": [[k, f], ...],
+/// "lstm": [u, ...], "dense": [n, ..., 1]}`.
+fn parse_net(j: &Json) -> Result<NetConfig, ApiError> {
+    let field = |key: &str| {
+        j.as_obj()
+            .and_then(|o| o.get(key))
+            .ok_or_else(|| ApiError::bad(format!("missing net field '{key}'")))
+    };
+    let window = field("window")?
+        .as_usize()
+        .ok_or_else(|| ApiError::bad("'window' must be a number"))?;
+    let mut conv = Vec::new();
+    for (i, pair) in field("conv")?
+        .as_arr()
+        .ok_or_else(|| ApiError::bad("'conv' must be an array of [kernel, filters]"))?
+        .iter()
+        .enumerate()
+    {
+        let p = pair
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| ApiError::bad(format!("conv[{i}] must be a [kernel, filters] pair")))?;
+        let k = p[0].as_usize().ok_or_else(|| ApiError::bad(format!("conv[{i}] kernel")))?;
+        let f = p[1].as_usize().ok_or_else(|| ApiError::bad(format!("conv[{i}] filters")))?;
+        conv.push((k, f));
+    }
+    let usizes = |key: &str| -> Result<Vec<usize>, ApiError> {
+        field(key)?
+            .as_arr()
+            .ok_or_else(|| ApiError::bad(format!("'{key}' must be an array")))?
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                v.as_usize().ok_or_else(|| ApiError::bad(format!("{key}[{i}] must be a number")))
+            })
+            .collect()
+    };
+    let cfg = NetConfig { window, conv, lstm: usizes("lstm")?, dense: usizes("dense")? };
+    if !cfg.is_valid() {
+        return Err(ApiError::bad(format!("invalid network configuration: {cfg:?}")));
+    }
+    Ok(cfg)
+}
+
+/// Serialize one network in the inline `net` form [`parse_request_doc`]
+/// accepts (the exact inverse of [`parse_net`]).
+pub fn net_to_json(net: &NetConfig) -> Json {
+    Json::obj(vec![
+        ("window", Json::num(net.window as f64)),
+        (
+            "conv",
+            Json::Arr(
+                net.conv
+                    .iter()
+                    .map(|&(k, f)| Json::arr_usize(&[k, f]))
+                    .collect(),
+            ),
+        ),
+        ("lstm", Json::arr_usize(&net.lstm)),
+        ("dense", Json::arr_usize(&net.dense)),
+    ])
+}
+
+/// Build a v1 request envelope from typed requests (what `loadgen` puts
+/// on the wire; round-trips through [`parse_request_doc`]).
+pub fn request_envelope(requests: &[BatchRequest], workload: Option<&str>) -> Json {
+    let items: Vec<Json> = requests
+        .iter()
+        .map(|r| {
+            Json::obj(vec![("net", net_to_json(&r.net)), ("budget", Json::num(r.budget))])
+        })
+        .collect();
+    let mut pairs = vec![
+        ("v", Json::num(API_VERSION as f64)),
+        ("requests", Json::Arr(items)),
+    ];
+    if let Some(w) = workload {
+        pairs.push(("workload", Json::str(w)));
+    }
+    Json::obj(pairs)
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// One answered query as it rides the wire (the JSON form of a
+/// [`BatchResponse`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResult {
+    pub key: u64,
+    pub slug: String,
+    pub budget: f64,
+    pub feasible: bool,
+    pub cost: f64,
+    pub latency_cycles: f64,
+    pub reuse_factors: Vec<usize>,
+}
+
+/// A parsed response envelope: the payload or the structured error.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ApiResponse {
+    Ok(Vec<WireResult>),
+    Err(ApiError),
+}
+
+/// Build the success envelope for a batch of answers.
+pub fn ok_envelope(responses: &[BatchResponse]) -> Json {
+    let feasible = responses.iter().filter(|r| r.solution.is_some()).count();
+    let results: Vec<Json> = responses
+        .iter()
+        .map(|r| {
+            let mut pairs = vec![
+                ("key", Json::u64_hex(r.key.hash)),
+                ("slug", Json::str(r.key.name.clone())),
+                ("budget", Json::num(r.budget)),
+                ("feasible", Json::Bool(r.solution.is_some())),
+            ];
+            if let Some(s) = &r.solution {
+                pairs.push(("cost", Json::num(s.cost)));
+                pairs.push(("latency_cycles", Json::num(s.latency)));
+                pairs.push(("reuse_factors", Json::arr_usize(&r.reuse)));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("v", Json::num(API_VERSION as f64)),
+        (
+            "ok",
+            Json::obj(vec![
+                ("count", Json::num(responses.len() as f64)),
+                ("feasible", Json::num(feasible as f64)),
+                ("results", Json::Arr(results)),
+            ]),
+        ),
+    ])
+}
+
+/// Build the error envelope for a typed failure.
+pub fn error_envelope(err: &ApiError) -> Json {
+    let mut pairs = vec![
+        ("code", Json::str(err.code.as_str())),
+        ("message", Json::str(err.message.clone())),
+    ];
+    if let Some(k) = &err.key {
+        pairs.push(("key", Json::str(k.clone())));
+    }
+    Json::obj(vec![
+        ("v", Json::num(API_VERSION as f64)),
+        ("error", Json::obj(pairs)),
+    ])
+}
+
+/// Parse a response envelope back into its typed form (the loadgen
+/// side of the contract). A malformed envelope is itself a
+/// [`ErrorCode::BadRequest`]-coded error.
+pub fn parse_response(doc: &Json) -> Result<ApiResponse, ApiError> {
+    if let Some(err) = doc.as_obj().and_then(|o| o.get("error")) {
+        let code = err
+            .as_obj()
+            .and_then(|o| o.get("code"))
+            .and_then(|c| c.as_str())
+            .and_then(ErrorCode::parse)
+            .ok_or_else(|| ApiError::bad("error envelope carries an unknown code"))?;
+        let message = err
+            .as_obj()
+            .and_then(|o| o.get("message"))
+            .and_then(|m| m.as_str())
+            .unwrap_or("")
+            .to_string();
+        let key = err
+            .as_obj()
+            .and_then(|o| o.get("key"))
+            .and_then(|k| k.as_str())
+            .map(|k| k.to_string());
+        return Ok(ApiResponse::Err(ApiError { code, message, key }));
+    }
+    let ok = doc
+        .as_obj()
+        .and_then(|o| o.get("ok"))
+        .ok_or_else(|| ApiError::bad("response envelope has neither 'ok' nor 'error'"))?;
+    let mut results = Vec::new();
+    for (i, r) in ok
+        .as_obj()
+        .and_then(|o| o.get("results"))
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| ApiError::bad("'ok.results' must be an array"))?
+        .iter()
+        .enumerate()
+    {
+        let get = |key: &str| {
+            r.as_obj()
+                .and_then(|o| o.get(key))
+                .ok_or_else(|| ApiError::bad(format!("results[{i}] missing '{key}'")))
+        };
+        let feasible = get("feasible")?
+            .as_bool()
+            .ok_or_else(|| ApiError::bad(format!("results[{i}].feasible must be a bool")))?;
+        let reuse_factors = match r.as_obj().and_then(|o| o.get("reuse_factors")) {
+            Some(list) => list
+                .as_arr()
+                .ok_or_else(|| ApiError::bad(format!("results[{i}].reuse_factors")))?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| ApiError::bad(format!("results[{i}].reuse_factors")))
+                })
+                .collect::<Result<Vec<usize>, ApiError>>()?,
+            None => Vec::new(),
+        };
+        let num_or = |key: &str, default: f64| -> Result<f64, ApiError> {
+            match r.as_obj().and_then(|o| o.get(key)) {
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| ApiError::bad(format!("results[{i}].{key} must be a number"))),
+                None => Ok(default),
+            }
+        };
+        results.push(WireResult {
+            key: get("key")?
+                .as_u64_hex()
+                .ok_or_else(|| ApiError::bad(format!("results[{i}].key must be hex")))?,
+            slug: get("slug")?
+                .as_str()
+                .ok_or_else(|| ApiError::bad(format!("results[{i}].slug must be a string")))?
+                .to_string(),
+            budget: get("budget")?
+                .as_f64()
+                .ok_or_else(|| ApiError::bad(format!("results[{i}].budget must be a number")))?,
+            feasible,
+            cost: num_or("cost", f64::NAN)?,
+            latency_cycles: num_or("latency_cycles", f64::NAN)?,
+            reuse_factors,
+        });
+    }
+    Ok(ApiResponse::Ok(results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::parse_json;
+    use crate::serve::FrontierKey;
+    use crate::testkit::prop_check;
+
+    fn named(name: &str) -> Option<NetConfig> {
+        (name == "tiny").then(|| NetConfig::new(16, vec![], vec![], vec![8, 1]))
+    }
+
+    #[test]
+    fn error_codes_are_stable() {
+        // The wire contract: code strings and status mappings are
+        // frozen. Changing any entry breaks deployed clients — this
+        // golden table is the tripwire.
+        let golden: [(&str, u16); 10] = [
+            ("bad_request", 400),
+            ("unknown_network", 404),
+            ("unknown_workload", 409),
+            ("overloaded", 429),
+            ("draining", 503),
+            ("not_found", 404),
+            ("method_not_allowed", 405),
+            ("payload_too_large", 413),
+            ("store_corrupt", 500),
+            ("internal", 500),
+        ];
+        for (code, (s, status)) in ERROR_CODES.into_iter().zip(golden) {
+            assert_eq!(code.as_str(), s);
+            assert_eq!(code.status(), status);
+            assert_eq!(ErrorCode::parse(s), Some(code), "parse must invert as_str");
+        }
+        assert!(ErrorCode::parse("no_such_code").is_none());
+        assert!(ErrorCode::Overloaded.retryable());
+        assert!(ErrorCode::Draining.retryable());
+        assert!(!ErrorCode::BadRequest.retryable());
+    }
+
+    #[test]
+    fn versioned_and_legacy_requests_parse_identically() {
+        let legacy = parse_json(
+            r#"{"requests": [{"network": "tiny", "budget": 50000},
+                {"net": {"window": 16, "conv": [], "lstm": [], "dense": [4, 1]},
+                 "budgets": [100, 200]}]}"#,
+        )
+        .unwrap();
+        let versioned = parse_json(
+            r#"{"v": 1, "requests": [{"network": "tiny", "budget": 50000},
+                {"net": {"window": 16, "conv": [], "lstm": [], "dense": [4, 1]},
+                 "budgets": [100, 200]}]}"#,
+        )
+        .unwrap();
+        let bare = parse_json(r#"[{"network": "tiny", "budget": 50000}]"#).unwrap();
+        let a = parse_request_doc(&legacy, &named).unwrap();
+        let b = parse_request_doc(&versioned, &named).unwrap();
+        assert_eq!(a.requests.len(), 3);
+        assert_eq!(b.requests.len(), 3);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.net, y.net);
+            assert_eq!(x.budget, y.budget);
+        }
+        assert_eq!(a.workload, None);
+        assert_eq!(parse_request_doc(&bare, &named).unwrap().requests.len(), 1);
+        // An unsupported version is a clean bad_request, not a guess.
+        let v9 = parse_json(r#"{"v": 9, "requests": [{"network": "tiny", "budget": 1}]}"#)
+            .unwrap();
+        assert_eq!(parse_request_doc(&v9, &named).unwrap_err().code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn workload_assertion_and_typed_errors() {
+        let doc = parse_json(
+            r#"{"v": 1, "workload": "rotor",
+                "requests": [{"network": "tiny", "budget": 1}]}"#,
+        )
+        .unwrap();
+        assert_eq!(parse_request_doc(&doc, &named).unwrap().workload.as_deref(), Some("rotor"));
+        let unknown = parse_json(r#"{"requests": [{"network": "nope", "budget": 1}]}"#).unwrap();
+        let err = parse_request_doc(&unknown, &named).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownNetwork);
+        assert_eq!(err.key.as_deref(), Some("nope"));
+        for bad in [
+            r#"{}"#,
+            r#"{"requests": []}"#,
+            r#"{"requests": [{"network": 3, "budget": 1}]}"#,
+            r#"{"requests": [{"net": {"window": 8, "conv": [], "lstm": [], "dense": [4]},
+                "budget": 1}]}"#,
+            r#"{"requests": [{"net": {"window": 8, "conv": [], "lstm": [], "dense": [4, 1]}}]}"#,
+        ] {
+            let doc = parse_json(bad).unwrap();
+            let err = parse_request_doc(&doc, &named).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "wrong code for: {bad}");
+        }
+    }
+
+    #[test]
+    fn request_envelope_round_trips() {
+        prop_check("api-request-round-trip", 25, |g| {
+            let n = g.int(1, 5);
+            let mut requests = Vec::new();
+            for _ in 0..n {
+                let net = NetConfig::new(
+                    [16, 32, 64][g.int(0, 2)],
+                    if g.rng.bool(0.5) { vec![(3, 4)] } else { vec![] },
+                    if g.rng.bool(0.5) { vec![4] } else { vec![] },
+                    vec![g.int(2, 16), 1],
+                );
+                requests.push(BatchRequest { net, budget: g.rng.range_f64(1.0, 1e6) });
+            }
+            let doc = request_envelope(&requests, Some("dropbear"));
+            // Through the serializer and back, like a real HTTP body.
+            let text = doc.to_string();
+            let back = parse_request_doc(
+                &parse_json(&text).map_err(|e| format!("reparse: {e}"))?,
+                &|_| None,
+            )
+            .map_err(|e| format!("parse: {e}"))?;
+            if back.workload.as_deref() != Some("dropbear") {
+                return Err("workload lost".into());
+            }
+            if back.requests.len() != requests.len() {
+                return Err("length changed".into());
+            }
+            for (a, b) in requests.iter().zip(&back.requests) {
+                if a.net != b.net || a.budget != b.budget {
+                    return Err(format!("entry changed: {a:?} vs {b:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn response_envelopes_round_trip() {
+        let responses = vec![
+            BatchResponse {
+                key: FrontierKey { hash: 0x8c56e7875565265d, name: "w32".into() },
+                budget: 50_000.0,
+                solution: Some(crate::mip::Solution {
+                    pick: vec![0, 1],
+                    cost: 123.0,
+                    latency: 480.0,
+                }),
+                reuse: vec![4, 2],
+            },
+            BatchResponse {
+                key: FrontierKey { hash: 7, name: "w16".into() },
+                budget: 1.0,
+                solution: None,
+                reuse: Vec::new(),
+            },
+        ];
+        let doc = ok_envelope(&responses);
+        let text = doc.to_pretty();
+        let back = parse_response(&parse_json(&text).unwrap()).unwrap();
+        let ApiResponse::Ok(results) = back else { panic!("expected ok") };
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].key, 0x8c56e7875565265d);
+        assert_eq!(results[0].slug, "w32");
+        assert_eq!(results[0].budget, 50_000.0);
+        assert!(results[0].feasible);
+        assert_eq!(results[0].cost, 123.0);
+        assert_eq!(results[0].latency_cycles, 480.0);
+        assert_eq!(results[0].reuse_factors, vec![4, 2]);
+        assert!(!results[1].feasible);
+        assert!(results[1].cost.is_nan());
+        assert!(results[1].reuse_factors.is_empty());
+        // Error envelopes round-trip too, key and all.
+        let err = ApiError::new(ErrorCode::Overloaded, "build queue full").with_key("w32-abc");
+        let back = parse_response(&parse_json(&error_envelope(&err).to_string()).unwrap());
+        assert_eq!(back.unwrap(), ApiResponse::Err(err));
+        // Garbage is a typed failure, not a panic.
+        let garbage = parse_json(r#"{"v": 1}"#).unwrap();
+        assert_eq!(parse_response(&garbage).unwrap_err().code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn net_to_json_inverts_parse_net() {
+        let net = NetConfig::new(64, vec![(3, 8), (5, 4)], vec![8], vec![16, 1]);
+        let back = parse_net(&net_to_json(&net)).unwrap();
+        assert_eq!(back, net);
+        let empty = NetConfig::new(16, vec![], vec![], vec![4, 1]);
+        assert_eq!(parse_net(&net_to_json(&empty)).unwrap(), empty);
+    }
+}

@@ -116,6 +116,16 @@ Pipeline commands
                   throughput, hit rate and the serve-stats table
                   (--requests file|stdin --store dir ("" = memory-only)
                   --capacity n --repeat n --expect-warm --stats-out name)
+  httpd           Serve the frontier store over HTTP/1.1 (POST /v1/query,
+                  GET /v1/stats, GET /healthz, POST /v1/shutdown; see
+                  docs/WIRE_API.md). Flags: --addr host:port --threads n
+                  --store dir --capacity n --duration secs (auto-drain)
+                  --stats-out name; [http] config keys set the rest
+  loadgen         Tail-latency harness against a running httpd: N client
+                  threads, seeded workload mix, p50/p99/p999 + histogram,
+                  writes results/BENCH_loadgen.json (--addr host:port
+                  --requests file --threads n --count n --cold-ratio f
+                  --drain-after n --expect-warm --baseline path)
   train           Train a fixed AOT model through the PJRT runtime
 
 Experiment regeneration (tables/figures of the paper)

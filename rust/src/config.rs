@@ -138,6 +138,14 @@ fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
             let n = as_usize(v)?;
             cfg.store_max_docs = if n == 0 { None } else { Some(n) };
         }
+        // [http]
+        "http.addr" => {
+            let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
+            cfg.http.addr = s.to_string();
+        }
+        "http.threads" => cfg.http.threads = as_usize(v)?,
+        "http.max_inflight_builds" => cfg.http.max_inflight_builds = as_usize(v)?,
+        "http.drain_timeout_ms" => cfg.http.drain_timeout_ms = as_usize(v)? as u64,
         // [solver]
         "solver.kind" => {
             let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
@@ -229,6 +237,12 @@ store = ""            # e.g. "results/frontiers" to persist built frontiers
 max_points = 0        # frontier guardrail cap (0 = exact, unlimited)
 store_max_docs = 0    # persisted-document cap, oldest evicted (0 = unbounded)
 
+[http]
+addr = "127.0.0.1:7070"   # ntorc httpd bind address (:0 = ephemeral port)
+threads = 4               # worker pool; one live connection per worker
+max_inflight_builds = 2   # cold-build admission permits (beyond: 429)
+drain_timeout_ms = 2000   # post-drain grace window for queued requests
+
 [solver]
 kind = "frontier"     # bb | dp | frontier: registry solver for direct
                       # per-budget solves (crate::solver::SolverKind)
@@ -268,6 +282,10 @@ mod tests {
         assert_eq!(cfg.store_max_docs, None);
         assert_eq!(cfg.solver, SolverKind::Frontier);
         assert_eq!(cfg.frontier_epsilon, None);
+        assert_eq!(cfg.http.addr, "127.0.0.1:7070");
+        assert_eq!(cfg.http.threads, 4);
+        assert_eq!(cfg.http.max_inflight_builds, 2);
+        assert_eq!(cfg.http.drain_timeout_ms, 2_000);
     }
 
     #[test]
@@ -302,6 +320,20 @@ mod tests {
         assert_eq!(cfg.store_max_docs, Some(64));
         apply_override(&mut cfg, "serve.store_max_docs=0").unwrap();
         assert_eq!(cfg.store_max_docs, None);
+    }
+
+    #[test]
+    fn http_overrides_parse() {
+        let mut cfg = Preset::Smoke.pipeline();
+        apply_override(&mut cfg, "http.addr=127.0.0.1:0").unwrap();
+        assert_eq!(cfg.http.addr, "127.0.0.1:0");
+        apply_override(&mut cfg, "http.threads=12").unwrap();
+        assert_eq!(cfg.http.threads, 12);
+        apply_override(&mut cfg, "http.max_inflight_builds=0").unwrap();
+        assert_eq!(cfg.http.max_inflight_builds, 0);
+        apply_override(&mut cfg, "http.drain_timeout_ms=500").unwrap();
+        assert_eq!(cfg.http.drain_timeout_ms, 500);
+        assert!(apply_override(&mut cfg, "http.port=80").is_err());
     }
 
     #[test]

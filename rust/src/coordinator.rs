@@ -453,6 +453,8 @@ pub struct PipelineConfig {
     /// Optional document cap on the persistent store (oldest evicted;
     /// `serve.store_max_docs`). `None` = unbounded.
     pub store_max_docs: Option<usize>,
+    /// HTTP front-end knobs (`ntorc httpd`; `[http]` keys).
+    pub http: crate::httpd::HttpConfig,
 }
 
 impl Default for PipelineConfig {
@@ -474,6 +476,7 @@ impl Default for PipelineConfig {
             frontier_epsilon: None,
             solver: SolverKind::Frontier,
             store_max_docs: None,
+            http: crate::httpd::HttpConfig::default(),
         }
     }
 }
@@ -486,6 +489,31 @@ impl PipelineConfig {
         self.workload = name.to_string();
         self.latency_budget = workload::deadline_cycles_for(rate);
         Ok(())
+    }
+
+    /// The [`ServeConfig`] this pipeline's frontier service runs with.
+    /// `ntorc httpd` builds its service through the same derivation, so
+    /// frontier keys (workload identity, ε scope, guardrails) match
+    /// between a store warmed by `ntorc serve` and the HTTP front-end.
+    /// Errors on unregistered workload names.
+    pub fn serve_config(&self) -> crate::Result<ServeConfig> {
+        let sample_rate_hz = workload::sample_rate_of(&self.workload)?;
+        Ok(ServeConfig {
+            capacity: self.serve_capacity,
+            workers: self.workers,
+            max_choices_per_layer: self.max_choices_per_layer,
+            latency_budget: self.latency_budget,
+            max_points: self.frontier_max_points,
+            epsilon: self.frontier_epsilon,
+            workload: Some(WorkloadKey { name: self.workload.clone(), sample_rate_hz }),
+        })
+    }
+
+    /// The persistent store this config points at (`None` = memory-only).
+    pub fn frontier_store(&self) -> Option<FrontierStore> {
+        self.frontier_store
+            .as_ref()
+            .map(|d| FrontierStore::new(d.as_str()).with_max_docs(self.store_max_docs))
     }
 
     /// Fast preset for tests / smoke runs.
@@ -534,31 +562,15 @@ pub struct Pipeline {
 impl Pipeline {
     pub fn new(cfg: PipelineConfig) -> Pipeline {
         let hls = HlsSim::new(hls::HlsConfig { seed: cfg.hls_seed, ..Default::default() });
-        let store = cfg
-            .frontier_store
-            .as_ref()
-            .map(|d| FrontierStore::new(d.as_str()).with_max_docs(cfg.store_max_docs));
-        // Fold the workload identity (name + sample rate) into every
-        // frontier key this pipeline files, so a store shared across
-        // scenarios never mixes them. The lookup is metadata-only (no
-        // simulator construction); unknown names fail loudly here.
-        let sample_rate_hz = workload::sample_rate_of(&cfg.workload)
+        // serve_config folds the workload identity (name + sample rate)
+        // into every frontier key this pipeline files, so a store
+        // shared across scenarios never mixes them. The lookup is
+        // metadata-only (no simulator construction); unknown names fail
+        // loudly here.
+        let serve_cfg = cfg
+            .serve_config()
             .unwrap_or_else(|e| panic!("PipelineConfig.workload: {e}"));
-        let serve = FrontierService::new(
-            ServeConfig {
-                capacity: cfg.serve_capacity,
-                workers: cfg.workers,
-                max_choices_per_layer: cfg.max_choices_per_layer,
-                latency_budget: cfg.latency_budget,
-                max_points: cfg.frontier_max_points,
-                epsilon: cfg.frontier_epsilon,
-                workload: Some(WorkloadKey {
-                    name: cfg.workload.clone(),
-                    sample_rate_hz,
-                }),
-            },
-            store,
-        );
+        let serve = FrontierService::new(serve_cfg, cfg.frontier_store());
         Pipeline { cfg, hls, serve }
     }
 

@@ -1,0 +1,806 @@
+//! Zero-dependency HTTP/1.1 front-end over [`FrontierService`].
+//!
+//! N-TORC's pitch is answering latency-constrained deployment queries
+//! interactively instead of re-running HLS sweeps — but until this
+//! module the serving stack stopped at the crate boundary: `ntorc
+//! serve` ran scripted batches in one process, so concurrent remote
+//! callers had no way to hit the warm store + LRU. This server is the
+//! full path from socket accept to frontier query, hand-rolled on
+//! `std::net::TcpListener` (zero-dep discipline — no hyper, no tokio):
+//!
+//! * **Worker pool** — one accept thread feeds accepted connections
+//!   through an `mpsc` channel to `http.threads` workers
+//!   (`coordinator`-style: bounded, queue-fed). Each worker owns one
+//!   connection at a time for its whole keep-alive lifetime, so size
+//!   the pool at least as large as the expected number of concurrent
+//!   persistent clients.
+//! * **Routes** — `POST /v1/query` (single + batch requests in the
+//!   [`crate::api`] v1 envelope; legacy un-versioned documents parse
+//!   too), `GET /v1/stats` ([`ServeStats`](crate::serve::ServeStats)
+//!   snapshot plus HTTP-layer counters), `GET /healthz` (503 while
+//!   draining, so load balancers stop routing), `POST /v1/shutdown`
+//!   (the drain token). Every failure is a structured
+//!   [`api::error_envelope`] with a stable code.
+//! * **Keep-alive** — HTTP/1.1 persistent connections with pipelining
+//!   (leftover bytes after one request seed the next), `Connection:
+//!   close` honored, `Expect: 100-continue` answered.
+//! * **Admission control** — a batch whose keys are all warm
+//!   ([`FrontierService::is_warm`]) bypasses the gate entirely: warm
+//!   traffic can never be 429'd. A batch needing at least one frontier
+//!   build must take one of `http.max_inflight_builds` permits; when
+//!   they are exhausted the request is refused with `429` +
+//!   `Retry-After` and an [`ErrorCode::Overloaded`] envelope instead
+//!   of queueing unbounded DP work behind interactive queries.
+//! * **Graceful drain** — `POST /v1/shutdown` (or
+//!   [`ShutdownHandle::shutdown`]) stops the accept loop, lets
+//!   in-flight requests finish, serves pipelined stragglers for a
+//!   `http.drain_timeout_ms` grace window (then refuses with
+//!   [`ErrorCode::Draining`]), closes keep-alive connections, and
+//!   [`Server::join`] finally flushes the serve-stats snapshot
+//!   atomically ([`crate::ser::write_atomic`] — a killed server never
+//!   leaves a truncated stats file). There is no SIGTERM hook: catching
+//!   signals portably needs a signal-handling crate, so the honest
+//!   zero-dep drain triggers are the shutdown endpoint, the programmatic
+//!   handle, and `ntorc httpd --duration`.
+//!
+//! `tests/http_roundtrip.rs` exercises the contract over real sockets;
+//! `ntorc loadgen` ([`crate::loadgen`]) measures its tail latency under
+//! a seeded workload mix, gated in CI.
+
+use std::collections::BTreeMap;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::api::{self, ApiError, ErrorCode};
+use crate::coordinator::CostModels;
+use crate::layers::NetConfig;
+use crate::mip::DeployProblem;
+use crate::ser::{parse_json, Json};
+use crate::serve::{BatchOptions, FrontierKey, FrontierService};
+
+/// HTTP front-end knobs (`[http]` in config).
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Bind address (`http.addr`; `127.0.0.1:0` picks an ephemeral
+    /// port — [`Server::addr`] reports the real one).
+    pub addr: String,
+    /// Worker threads, one live connection each (`http.threads`).
+    pub threads: usize,
+    /// Build-permit pool for admission control
+    /// (`http.max_inflight_builds`; 0 = refuse every cold batch).
+    pub max_inflight_builds: usize,
+    /// Grace window after a drain begins during which requests already
+    /// queued on kept-alive connections are still served
+    /// (`http.drain_timeout_ms`).
+    pub drain_timeout_ms: u64,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            threads: 4,
+            max_inflight_builds: 2,
+            drain_timeout_ms: 2_000,
+        }
+    }
+}
+
+/// How the server turns a cold network into a [`DeployProblem`]:
+/// fitted cost models (production; keys carry the model fingerprint)
+/// or an injected builder (tests; plain architecture keys).
+pub enum ProblemSource {
+    Models(Arc<CostModels>),
+    Builder(Arc<dyn Fn(&NetConfig) -> DeployProblem + Send + Sync>),
+}
+
+/// Catalog resolver for `"network"`-named requests.
+pub type NamedNets = Arc<dyn Fn(&str) -> Option<NetConfig> + Send + Sync>;
+
+/// Poll granularity for idle keep-alive reads: the drain flag is
+/// re-checked at this cadence, bounding how long a drained server waits
+/// on idle connections.
+const POLL: Duration = Duration::from_millis(200);
+
+/// Idle keep-alive connections are closed after this long, freeing
+/// their worker for queued connections.
+const IDLE_CLOSE: Duration = Duration::from_secs(60);
+
+/// A started request (first byte seen) must complete within this long.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Header-section size cap.
+const MAX_HEAD: usize = 16 * 1024;
+
+/// Body size cap (413 beyond this).
+const MAX_BODY: usize = 4 * 1024 * 1024;
+
+struct Shared {
+    cfg: HttpConfig,
+    svc: Arc<FrontierService>,
+    source: ProblemSource,
+    named: NamedNets,
+    stats_path: Option<PathBuf>,
+    addr: SocketAddr,
+    draining: AtomicBool,
+    drain_started: Mutex<Option<Instant>>,
+    build_permits: Mutex<usize>,
+    served: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl Shared {
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Whether the post-drain grace window has expired (new requests
+    /// are refused with `draining` from here on).
+    fn drain_refusing(&self) -> bool {
+        self.drain_started
+            .lock()
+            .unwrap()
+            .is_some_and(|t| t.elapsed() > Duration::from_millis(self.cfg.drain_timeout_ms))
+    }
+
+    fn begin_drain(&self) {
+        {
+            let mut started = self.drain_started.lock().unwrap();
+            if started.is_none() {
+                *started = Some(Instant::now());
+            }
+            self.draining.store(true, Ordering::SeqCst);
+        }
+        // The accept thread may be blocked in accept(2) and would not
+        // observe the flag until the next organic connection; nudge it
+        // with a throwaway self-connect (closed unserved).
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    fn try_build_permit(&self) -> Option<PermitGuard<'_>> {
+        let mut p = self.build_permits.lock().unwrap();
+        if *p == 0 {
+            return None;
+        }
+        *p -= 1;
+        Some(PermitGuard { permits: &self.build_permits })
+    }
+
+    fn workload_name(&self) -> Option<String> {
+        self.svc.config().workload.as_ref().map(|w| w.name.clone())
+    }
+
+    fn key_of(&self, net: &NetConfig) -> FrontierKey {
+        match &self.source {
+            ProblemSource::Models(m) => self.svc.model_key(m, net),
+            ProblemSource::Builder(_) => self.svc.key_for(net),
+        }
+    }
+
+    fn run_batch(
+        &self,
+        requests: &[crate::serve::BatchRequest],
+    ) -> Vec<crate::serve::BatchResponse> {
+        match &self.source {
+            ProblemSource::Models(m) => self.svc.batch(requests, &BatchOptions::models(m)),
+            ProblemSource::Builder(b) => {
+                let f: &(dyn Fn(&NetConfig) -> DeployProblem) = &**b;
+                self.svc.batch(requests, &BatchOptions::builder(f))
+            }
+        }
+    }
+
+    /// Flush the serve-stats snapshot atomically (the drain-exit write;
+    /// also safe to call on a live server).
+    fn flush_stats(&self) {
+        let Some(path) = &self.stats_path else {
+            return;
+        };
+        let doc = Json::obj(vec![
+            ("requests", Json::num(self.served.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("stats", self.svc.stats.snapshot().to_json()),
+        ]);
+        if let Err(e) = crate::ser::write_atomic(path, &doc.to_pretty()) {
+            eprintln!("[httpd] warning: could not flush stats to {}: {e:#}", path.display());
+        }
+    }
+}
+
+/// Releases one build permit on drop (even on a panicking build).
+struct PermitGuard<'a> {
+    permits: &'a Mutex<usize>,
+}
+
+impl Drop for PermitGuard<'_> {
+    fn drop(&mut self) {
+        *self.permits.lock().unwrap() += 1;
+    }
+}
+
+/// A running HTTP server: accept thread + worker pool.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Cheap clonable handle for triggering a drain from another thread
+/// (the CLI's `--duration` timer, tests).
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+}
+
+impl ShutdownHandle {
+    /// Begin the graceful drain: stop accepting, finish in-flight,
+    /// refuse new work after the grace window. Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.begin_drain();
+    }
+
+    /// The server's bound address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Server {
+    /// Bind and start serving. `stats_path` is where [`join`][Self::join]
+    /// flushes the final stats snapshot (atomic tmp + rename).
+    pub fn start(
+        cfg: HttpConfig,
+        svc: Arc<FrontierService>,
+        source: ProblemSource,
+        named: NamedNets,
+        stats_path: Option<PathBuf>,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind http listener on {}", cfg.addr))?;
+        let addr = listener.local_addr().context("local_addr of http listener")?;
+        let threads = cfg.threads.max(1);
+        let permits = cfg.max_inflight_builds;
+        let shared = Arc::new(Shared {
+            cfg,
+            svc,
+            source,
+            named,
+            stats_path,
+            addr,
+            draining: AtomicBool::new(false),
+            drain_started: Mutex::new(None),
+            build_permits: Mutex::new(permits),
+            served: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        });
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            let sh = Arc::clone(&shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("httpd-worker-{i}"))
+                    .spawn(move || loop {
+                        let next = rx.lock().unwrap().recv();
+                        match next {
+                            Ok(stream) => handle_connection(&sh, stream),
+                            Err(_) => break,
+                        }
+                    })
+                    .context("spawn http worker")?,
+            );
+        }
+        let sh = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("httpd-accept".to_string())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if sh.draining() {
+                        break;
+                    }
+                    if let Ok(s) = stream {
+                        let _ = tx.send(s);
+                    }
+                }
+                // Dropping the sender lets workers drain the queue and
+                // exit; queued connections still get (drain) responses.
+            })
+            .context("spawn http accept thread")?;
+        Ok(Server { shared, addr, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves `:0` ephemeral binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn handle(&self) -> ShutdownHandle {
+        ShutdownHandle { shared: Arc::clone(&self.shared), addr: self.addr }
+    }
+
+    pub fn draining(&self) -> bool {
+        self.shared.draining()
+    }
+
+    /// Block until the server has drained (a shutdown was requested and
+    /// every worker finished), then flush the stats snapshot. Returns
+    /// (served, rejected) request counts.
+    pub fn join(mut self) -> Result<(u64, u64)> {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.shared.flush_stats();
+        Ok((
+            self.shared.served.load(Ordering::Relaxed),
+            self.shared.rejected.load(Ordering::Relaxed),
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+/// One parsed HTTP request.
+struct Request {
+    method: String,
+    path: String,
+    headers: BTreeMap<String, String>,
+    body: Vec<u8>,
+}
+
+impl Request {
+    fn wants_close(&self) -> bool {
+        self.headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+enum Outcome {
+    Request(Request),
+    /// Peer closed cleanly between requests.
+    Closed,
+    /// Nothing arrived within one poll tick (connection idle).
+    Idle,
+    /// Protocol violation; the error was not yet written.
+    Fail(ApiError),
+}
+
+enum Fill {
+    Data,
+    Eof,
+    Timeout,
+}
+
+/// A buffered connection: unconsumed bytes survive across requests, so
+/// pipelined requests seed the next read.
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    fn fill(&mut self) -> Fill {
+        let mut chunk = [0u8; 4096];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => Fill::Eof,
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Fill::Data
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                Fill::Timeout
+            }
+            Err(_) => Fill::Eof,
+        }
+    }
+
+    /// Read one request (head + body), honoring `Expect: 100-continue`.
+    fn read_request(&mut self) -> Outcome {
+        let mut deadline: Option<Instant> = None;
+        let head_end = loop {
+            if let Some(pos) = find_head_end(&self.buf) {
+                break pos;
+            }
+            if self.buf.len() > MAX_HEAD {
+                return Outcome::Fail(ApiError::new(
+                    ErrorCode::PayloadTooLarge,
+                    format!("request head exceeds {MAX_HEAD} bytes"),
+                ));
+            }
+            if !self.buf.is_empty() && deadline.is_none() {
+                deadline = Some(Instant::now() + REQUEST_DEADLINE);
+            }
+            match self.fill() {
+                Fill::Data => {}
+                Fill::Eof => {
+                    return if self.buf.is_empty() {
+                        Outcome::Closed
+                    } else {
+                        Outcome::Fail(ApiError::new(
+                            ErrorCode::BadRequest,
+                            "connection closed mid-request",
+                        ))
+                    };
+                }
+                Fill::Timeout => {
+                    if self.buf.is_empty() {
+                        return Outcome::Idle;
+                    }
+                    if deadline.is_some_and(|d| Instant::now() > d) {
+                        return Outcome::Fail(ApiError::new(
+                            ErrorCode::BadRequest,
+                            "request head timed out",
+                        ));
+                    }
+                }
+            }
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).into_owned();
+        self.buf.drain(..head_end + 4);
+        let (method, path, headers) = match parse_head(&head) {
+            Ok(h) => h,
+            Err(e) => return Outcome::Fail(e),
+        };
+        let content_length = match headers.get("content-length") {
+            Some(v) => match v.trim().parse::<usize>() {
+                Ok(n) => n,
+                Err(_) => {
+                    return Outcome::Fail(ApiError::new(
+                        ErrorCode::BadRequest,
+                        "unparseable Content-Length",
+                    ));
+                }
+            },
+            None => 0,
+        };
+        if content_length > MAX_BODY {
+            return Outcome::Fail(ApiError::new(
+                ErrorCode::PayloadTooLarge,
+                format!("body of {content_length} bytes exceeds the {MAX_BODY} cap"),
+            ));
+        }
+        if headers
+            .get("expect")
+            .is_some_and(|v| v.to_ascii_lowercase().contains("100-continue"))
+        {
+            let _ = self.stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+        }
+        let body_deadline = Instant::now() + REQUEST_DEADLINE;
+        while self.buf.len() < content_length {
+            match self.fill() {
+                Fill::Data => {}
+                Fill::Eof => {
+                    return Outcome::Fail(ApiError::new(
+                        ErrorCode::BadRequest,
+                        "connection closed mid-body",
+                    ));
+                }
+                Fill::Timeout => {
+                    if Instant::now() > body_deadline {
+                        return Outcome::Fail(ApiError::new(
+                            ErrorCode::BadRequest,
+                            "request body timed out",
+                        ));
+                    }
+                }
+            }
+        }
+        let body: Vec<u8> = self.buf.drain(..content_length).collect();
+        Outcome::Request(Request { method, path, headers, body })
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse the request line + header block (already CRLF-split off the
+/// stream). Header names are lowercased; duplicate headers keep the
+/// last value.
+fn parse_head(head: &str) -> Result<(String, String, BTreeMap<String, String>), ApiError> {
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(ApiError::new(
+            ErrorCode::BadRequest,
+            format!("malformed request line '{request_line}'"),
+        ));
+    }
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(ApiError::new(
+                ErrorCode::BadRequest,
+                format!("malformed header line '{line}'"),
+            ));
+        };
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+    Ok((method, path, headers))
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    retry_after: Option<u32>,
+    close: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
+        status_reason(status),
+        body.len()
+    );
+    if let Some(s) = retry_after {
+        head.push_str(&format!("Retry-After: {s}\r\n"));
+    }
+    head.push_str(if close {
+        "Connection: close\r\n\r\n"
+    } else {
+        "Connection: keep-alive\r\n\r\n"
+    });
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn handle_connection(sh: &Shared, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(POLL));
+    let mut conn = Conn { stream, buf: Vec::new() };
+    let mut idle_since = Instant::now();
+    loop {
+        match conn.read_request() {
+            Outcome::Idle => {
+                // Draining with nothing pipelined: close so the worker
+                // can exit; otherwise close only long-idle connections.
+                if sh.draining() || idle_since.elapsed() > IDLE_CLOSE {
+                    break;
+                }
+            }
+            Outcome::Closed => break,
+            Outcome::Fail(err) => {
+                // Protocol-level failure: answer if the socket still
+                // writes, then drop the connection (its framing state
+                // is unknown).
+                sh.rejected.fetch_add(1, Ordering::Relaxed);
+                let body = api::error_envelope(&err).to_string();
+                let _ = write_response(&mut conn.stream, err.code.status(), &body, None, true);
+                break;
+            }
+            Outcome::Request(req) => {
+                let close = req.wants_close() || sh.draining();
+                let reply = route(sh, &req);
+                let body = reply.body.to_string();
+                if write_response(
+                    &mut conn.stream,
+                    reply.status,
+                    &body,
+                    reply.retry_after,
+                    close || sh.draining(),
+                )
+                .is_err()
+                {
+                    break;
+                }
+                if close || sh.draining() {
+                    break;
+                }
+                idle_since = Instant::now();
+            }
+        }
+    }
+}
+
+struct Reply {
+    status: u16,
+    body: Json,
+    retry_after: Option<u32>,
+}
+
+impl Reply {
+    fn ok(body: Json) -> Reply {
+        Reply { status: 200, body, retry_after: None }
+    }
+
+    fn err(e: ApiError) -> Reply {
+        let retry = e.code.retryable().then_some(1);
+        Reply { status: e.code.status(), body: api::error_envelope(&e), retry_after: retry }
+    }
+}
+
+fn route(sh: &Shared, req: &Request) -> Reply {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            if sh.draining() {
+                Reply::err(ApiError::new(ErrorCode::Draining, "server is draining"))
+            } else {
+                Reply::ok(Json::obj(vec![
+                    ("v", Json::num(api::API_VERSION as f64)),
+                    ("ok", Json::obj(vec![("status", Json::str("ok"))])),
+                ]))
+            }
+        }
+        ("GET", "/v1/stats") => {
+            let http = Json::obj(vec![
+                ("served", Json::num(sh.served.load(Ordering::Relaxed) as f64)),
+                ("rejected", Json::num(sh.rejected.load(Ordering::Relaxed) as f64)),
+                ("draining", Json::Bool(sh.draining())),
+                (
+                    "build_permits_free",
+                    Json::num(*sh.build_permits.lock().unwrap() as f64),
+                ),
+            ]);
+            Reply::ok(Json::obj(vec![
+                ("v", Json::num(api::API_VERSION as f64)),
+                (
+                    "ok",
+                    Json::obj(vec![
+                        ("stats", sh.svc.stats.snapshot().to_json()),
+                        ("http", http),
+                    ]),
+                ),
+            ]))
+        }
+        ("POST", "/v1/shutdown") => {
+            sh.begin_drain();
+            Reply::ok(Json::obj(vec![
+                ("v", Json::num(api::API_VERSION as f64)),
+                ("ok", Json::obj(vec![("draining", Json::Bool(true))])),
+            ]))
+        }
+        ("POST", "/v1/query") => handle_query(sh, &req.body),
+        (_, "/healthz" | "/v1/stats" | "/v1/shutdown" | "/v1/query") => Reply::err(ApiError::new(
+            ErrorCode::MethodNotAllowed,
+            format!("{} is not valid for {}", req.method, req.path),
+        )),
+        (_, path) => {
+            Reply::err(ApiError::new(ErrorCode::NotFound, format!("no route at '{path}'")))
+        }
+    }
+}
+
+fn handle_query(sh: &Shared, body: &[u8]) -> Reply {
+    if sh.drain_refusing() {
+        sh.rejected.fetch_add(1, Ordering::Relaxed);
+        return Reply::err(ApiError::new(ErrorCode::Draining, "server is draining"));
+    }
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => {
+            sh.rejected.fetch_add(1, Ordering::Relaxed);
+            return Reply::err(ApiError::new(ErrorCode::BadRequest, "body is not UTF-8"));
+        }
+    };
+    let doc = match parse_json(text) {
+        Ok(d) => d,
+        Err(e) => {
+            sh.rejected.fetch_add(1, Ordering::Relaxed);
+            return Reply::err(ApiError::new(ErrorCode::BadRequest, format!("invalid JSON: {e}")));
+        }
+    };
+    let parsed = match api::parse_request_doc(&doc, &|name| (sh.named)(name)) {
+        Ok(p) => p,
+        Err(e) => {
+            sh.rejected.fetch_add(1, Ordering::Relaxed);
+            return Reply::err(e);
+        }
+    };
+    if let (Some(want), Some(have)) = (&parsed.workload, sh.workload_name()) {
+        if *want != have {
+            sh.rejected.fetch_add(1, Ordering::Relaxed);
+            return Reply::err(
+                ApiError::new(
+                    ErrorCode::UnknownWorkload,
+                    format!("this server serves workload '{have}', not '{want}'"),
+                )
+                .with_key(want.clone()),
+            );
+        }
+    }
+    // Admission control: all-warm batches bypass the build gate; a
+    // batch needing any build takes one permit for its whole run.
+    let needs_build = parsed
+        .requests
+        .iter()
+        .any(|r| !sh.svc.is_warm(&sh.key_of(&r.net)));
+    let _permit = if needs_build {
+        match sh.try_build_permit() {
+            Some(p) => Some(p),
+            None => {
+                sh.rejected.fetch_add(1, Ordering::Relaxed);
+                return Reply::err(ApiError::new(
+                    ErrorCode::Overloaded,
+                    "build queue saturated; retry later",
+                ));
+            }
+        }
+    } else {
+        None
+    };
+    let responses = sh.run_batch(&parsed.requests);
+    sh.served.fetch_add(responses.len() as u64, Ordering::Relaxed);
+    Reply::ok(api::ok_envelope(&responses))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_parsing_accepts_http11_and_rejects_garbage() {
+        let (method, path, headers) = parse_head(
+            "POST /v1/query HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\nConnection: close",
+        )
+        .unwrap();
+        assert_eq!(method, "POST");
+        assert_eq!(path, "/v1/query");
+        assert_eq!(headers.get("content-length").map(|s| s.as_str()), Some("12"));
+        assert_eq!(headers.get("connection").map(|s| s.as_str()), Some("close"));
+        for bad in ["", "GET", "GET /", "GET / SPDY/3", "GET / HTTP/1.1\r\nno-colon-here"] {
+            let err = parse_head(bad).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn find_head_end_locates_the_blank_line() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some(16));
+        assert_eq!(find_head_end(b"partial\r\n"), None);
+        assert_eq!(find_head_end(b""), None);
+    }
+
+    #[test]
+    fn default_config_matches_example_config() {
+        let d = HttpConfig::default();
+        assert_eq!(d.addr, "127.0.0.1:7070");
+        assert_eq!(d.threads, 4);
+        assert_eq!(d.max_inflight_builds, 2);
+        assert_eq!(d.drain_timeout_ms, 2_000);
+    }
+}

@@ -81,6 +81,22 @@
 //! frontier DP exactly once per store lifetime — solve once, serve
 //! many, across processes.
 //!
+//! ## The network front-end ([`httpd`], [`api`], [`loadgen`])
+//!
+//! [`httpd::Server`] exposes the shared service to non-Rust clients
+//! over hand-rolled HTTP/1.1 (`ntorc httpd`): `POST /v1/query`,
+//! `GET /v1/stats`, `GET /healthz`, keep-alive, warm-bypass admission
+//! control (cold builds bounded by `http.max_inflight_builds`; beyond
+//! that `429` + `Retry-After`), and a graceful drain token
+//! (`POST /v1/shutdown`) that finishes in-flight work and flushes
+//! stats atomically. The wire shapes live in [`api`] — a `v: 1`
+//! envelope with stable machine-readable error codes, shared verbatim
+//! by file-mode `ntorc serve`, the server, and [`loadgen`] (`ntorc
+//! loadgen`): a seeded N-thread workload-mix client that measures
+//! throughput and p50/p99/p999 tail latency and writes gateable
+//! `results/BENCH_loadgen.json`. `rust/docs/WIRE_API.md` specifies the
+//! protocol.
+//!
 //! ## The workload abstraction ([`workload`])
 //!
 //! Every pipeline runs against a [`workload::Workload`] — a seeded,
@@ -102,7 +118,9 @@
 //! The CI workflow adds `cargo fmt --check`, `cargo clippy -- -D
 //! warnings`, a bench-smoke job (`cargo bench --no-run`), the
 //! bench-regression gate (`perf_hotpaths` vs the committed baseline), a
-//! serve-smoke job (`ntorc serve` cold then `--expect-warm`) and the
+//! serve-smoke job (`ntorc serve` cold then `--expect-warm`), a
+//! loadgen-smoke job (`ntorc httpd` + `ntorc loadgen` against a warm
+//! store, p99/throughput gated vs the baseline, drain mid-load) and the
 //! Python suite (`pytest python/tests -q`, skipped when JAX is absent).
 
 // The numeric code deliberately favours explicit index loops and
@@ -132,6 +150,7 @@
     clippy::while_let_on_iterator
 )]
 
+pub mod api;
 pub mod battery;
 pub mod bench;
 pub mod cli;
@@ -144,7 +163,9 @@ pub mod forest;
 pub mod frontier;
 pub mod hls;
 pub mod hpo;
+pub mod httpd;
 pub mod layers;
+pub mod loadgen;
 pub mod mip;
 pub mod nn;
 pub mod quant;

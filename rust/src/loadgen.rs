@@ -1,0 +1,651 @@
+//! Tail-latency load generator for the [`crate::httpd`] front-end.
+//!
+//! `ntorc loadgen` answers the question the serving stack exists for:
+//! what p99 does a warm frontier store actually deliver over the wire?
+//! N client threads hammer a running server with a seeded workload-mix
+//! request distribution (catalog networks from a requests file, budget
+//! jitter, a warm/cold ratio knob that perturbs the input window so the
+//! key misses the store), each over its own keep-alive connection —
+//! mirroring the "many persistent clients" deployment the ROADMAP
+//! targets. The run reports throughput plus p50/p99/p999 latency and a
+//! log₂ histogram, and writes `results/BENCH_loadgen.json` with
+//! gateable keys (`loadgen_p99_ns`, `loadgen_throughput_rps`) that CI
+//! checks against `benches/BENCH_frontier.baseline.json`.
+//!
+//! Accounting is exact about the drain contract:
+//!
+//! * **completed** — HTTP 200 with a v1 `ok` envelope.
+//! * **rejected** — the server refused cleanly: a structured 4xx/5xx
+//!   envelope (`overloaded`, `draining`, …) or a connection that died
+//!   before a single response byte (the server never read the request).
+//! * **lost** — a response *started* and never finished: the request
+//!   was accepted and then dropped. A graceful drain must keep this at
+//!   zero, and CI asserts it.
+//!
+//! The [`HttpClient`] here is the crate's only HTTP client and is
+//! shared by `tests/http_roundtrip.rs`, so the wire framing is
+//! exercised from both ends by the same code only once removed.
+
+use std::collections::BTreeMap;
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::api;
+use crate::ser::{parse_json, Json};
+use crate::serve::BatchRequest;
+
+// ---------------------------------------------------------------------------
+// HTTP client
+// ---------------------------------------------------------------------------
+
+/// How a request failed, split along the accepted/not-accepted line
+/// that drain accounting needs.
+#[derive(Debug)]
+pub enum ClientError {
+    /// The server never emitted a response byte (connect refused, or
+    /// the connection closed before any of the reply arrived). The
+    /// request was not accepted.
+    Unreachable(String),
+    /// The response started but never completed: the server accepted
+    /// the request and then dropped it. This is the "lost" bucket.
+    Truncated(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Unreachable(m) => write!(f, "unreachable: {m}"),
+            ClientError::Truncated(m) => write!(f, "truncated response: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// One parsed HTTP response.
+pub struct HttpReply {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: String,
+}
+
+impl HttpReply {
+    /// Parse the body as JSON (most replies carry a v1 envelope).
+    pub fn json(&self) -> Result<Json> {
+        parse_json(&self.body).with_context(|| format!("response body: {}", self.body))
+    }
+}
+
+/// A keep-alive HTTP/1.1 client for one server address. Reconnects
+/// lazily; a stale kept-alive connection (closed server-side between
+/// requests) is retried once on a fresh connection.
+pub struct HttpClient {
+    addr: String,
+    stream: Option<TcpStream>,
+    buf: Vec<u8>,
+}
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(30);
+
+impl HttpClient {
+    pub fn new(addr: impl Into<String>) -> HttpClient {
+        HttpClient { addr: addr.into(), stream: None, buf: Vec::new() }
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<HttpReply, ClientError> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> Result<HttpReply, ClientError> {
+        self.request("POST", path, Some(body))
+    }
+
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<HttpReply, ClientError> {
+        let had_conn = self.stream.is_some();
+        match self.request_once(method, path, body) {
+            Ok(r) => Ok(r),
+            Err(ClientError::Unreachable(_)) if had_conn => {
+                // The kept-alive connection went stale (idle close,
+                // drain close) before this request was read — safe to
+                // retry exactly once on a fresh connection.
+                self.stream = None;
+                let out = self.request_once(method, path, body);
+                if out.is_err() {
+                    self.stream = None;
+                }
+                out
+            }
+            Err(e) => {
+                self.stream = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn connect(&mut self) -> Result<(), ClientError> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(&self.addr)
+                .map_err(|e| ClientError::Unreachable(format!("connect {}: {e}", self.addr)))?;
+            let _ = s.set_nodelay(true);
+            let _ = s.set_read_timeout(Some(CLIENT_TIMEOUT));
+            self.buf.clear();
+            self.stream = Some(s);
+        }
+        Ok(())
+    }
+
+    fn request_once(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<HttpReply, ClientError> {
+        self.connect()?;
+        let payload = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: ntorc\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            payload.len()
+        );
+        {
+            let stream = self.stream.as_mut().unwrap();
+            stream
+                .write_all(head.as_bytes())
+                .and_then(|()| stream.write_all(payload.as_bytes()))
+                .map_err(|e| ClientError::Unreachable(format!("send: {e}")))?;
+        }
+        self.read_reply()
+    }
+
+    fn read_reply(&mut self) -> Result<HttpReply, ClientError> {
+        self.buf.clear();
+        let mut started = false;
+        // The loop skips `100 Continue` interim responses (no body);
+        // the final reply follows on the same connection.
+        loop {
+            let head_end = loop {
+                if let Some(p) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                    break p;
+                }
+                self.fill(started)?;
+                started = started || !self.buf.is_empty();
+            };
+            let head = String::from_utf8_lossy(&self.buf[..head_end]).into_owned();
+            self.buf.drain(..head_end + 4);
+            let mut lines = head.split("\r\n");
+            let status_line = lines.next().unwrap_or("");
+            let status = status_line
+                .split_whitespace()
+                .nth(1)
+                .and_then(|s| s.parse::<u16>().ok())
+                .ok_or_else(|| {
+                    ClientError::Truncated(format!("unparseable status line '{status_line}'"))
+                })?;
+            if status == 100 {
+                continue;
+            }
+            let mut headers = BTreeMap::new();
+            for line in lines {
+                if let Some((k, v)) = line.split_once(':') {
+                    headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+                }
+            }
+            let len = headers
+                .get("content-length")
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .unwrap_or(0);
+            while self.buf.len() < len {
+                self.fill(true)?;
+            }
+            let body_bytes: Vec<u8> = self.buf.drain(..len).collect();
+            let body = String::from_utf8_lossy(&body_bytes).into_owned();
+            if headers.get("connection").is_some_and(|v| v.eq_ignore_ascii_case("close")) {
+                self.stream = None;
+            }
+            return Ok(HttpReply { status, headers, body });
+        }
+    }
+
+    /// `started` = some of this response already arrived, so a failure
+    /// now means the request was accepted and then lost.
+    fn fill(&mut self, started: bool) -> Result<(), ClientError> {
+        let classify = move |m: String| {
+            if started {
+                ClientError::Truncated(m)
+            } else {
+                ClientError::Unreachable(m)
+            }
+        };
+        let stream = self.stream.as_mut().expect("connected");
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) => Err(classify("connection closed".to_string())),
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(())
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // No bytes for CLIENT_TIMEOUT: the request was read and
+                // is being sat on — that counts as accepted-and-lost.
+                Err(ClientError::Truncated("response timed out".to_string()))
+            }
+            Err(e) => Err(classify(format!("read: {e}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load generation
+// ---------------------------------------------------------------------------
+
+/// Knobs for one load run.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Client threads, one keep-alive connection each.
+    pub threads: usize,
+    /// Total requests to attempt across all threads.
+    pub count: usize,
+    /// Fraction of requests perturbed to a cold key (input window
+    /// bumped, so the frontier must be built). 0.0 = pure warm mix.
+    pub cold_ratio: f64,
+    /// Seed for the per-thread request mix.
+    pub seed: u64,
+    /// Post `/v1/shutdown` once this many requests have completed
+    /// (0 = never drain; `>= count` drains after the full run).
+    pub drain_after: usize,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            threads: 8,
+            count: 5_000,
+            cold_ratio: 0.0,
+            seed: 7,
+            drain_after: 0,
+        }
+    }
+}
+
+/// Aggregated result of a load run.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub completed: u64,
+    pub rejected: u64,
+    pub lost: u64,
+    /// Non-200 responses that are not clean refusals (4xx protocol
+    /// errors) — a correct run keeps this at zero.
+    pub failed: u64,
+    pub elapsed_ns: u64,
+    pub throughput_rps: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub p999_ns: f64,
+    /// Log₂ latency histogram as (le_ns, count) buckets; the final
+    /// bucket's bound is `u64::MAX`.
+    pub histogram: Vec<(u64, u64)>,
+    /// `builds` from the server's `/v1/stats`, fetched just before the
+    /// drain was posted (or after the run when not draining). `None`
+    /// when the stats fetch failed.
+    pub server_builds: Option<f64>,
+    pub drained: bool,
+}
+
+impl Summary {
+    /// The gateable document written to `results/BENCH_loadgen.json`.
+    pub fn to_json(&self) -> Json {
+        let hist = Json::Arr(
+            self.histogram
+                .iter()
+                .map(|(le, n)| {
+                    Json::obj(vec![
+                        ("le_ns", Json::u64_hex(*le)),
+                        ("count", Json::num(*n as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let builds = match self.server_builds {
+            Some(b) => Json::num(b),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("loadgen_completed", Json::num(self.completed as f64)),
+            ("loadgen_rejected", Json::num(self.rejected as f64)),
+            ("loadgen_lost", Json::num(self.lost as f64)),
+            ("loadgen_failed", Json::num(self.failed as f64)),
+            ("loadgen_elapsed_ns", Json::num(self.elapsed_ns as f64)),
+            ("loadgen_throughput_rps", Json::num(self.throughput_rps)),
+            ("loadgen_p50_ns", Json::num(self.p50_ns)),
+            ("loadgen_p99_ns", Json::num(self.p99_ns)),
+            ("loadgen_p999_ns", Json::num(self.p999_ns)),
+            ("server_builds", builds),
+            ("drained", Json::Bool(self.drained)),
+            ("histogram", hist),
+        ])
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample in ns.
+pub fn percentile_ns(sorted: &[u64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[idx.min(sorted.len() - 1)] as f64
+}
+
+/// Log₂ buckets from 1 µs up, with a catch-all overflow bucket.
+pub fn histogram(sorted: &[u64]) -> Vec<(u64, u64)> {
+    let mut buckets: Vec<(u64, u64)> = (0..=14).map(|k| (1_024u64 << k, 0)).collect();
+    buckets.push((u64::MAX, 0));
+    for &ns in sorted {
+        let slot = buckets
+            .iter()
+            .position(|(le, _)| ns <= *le)
+            .unwrap_or(buckets.len() - 1);
+        buckets[slot].1 += 1;
+    }
+    buckets
+}
+
+/// Apply the bench-gate convention to a load summary: latency metrics
+/// fail above 2x baseline, throughput (bigger-is-better) fails below
+/// 0.5x. Keys absent from the baseline are not gated. Returns failure
+/// strings (empty = pass).
+pub fn gate(summary: &Summary, baseline: &Json) -> Vec<String> {
+    let mut failures = Vec::new();
+    for (key, measured) in
+        [("loadgen_p99_ns", summary.p99_ns), ("loadgen_p999_ns", summary.p999_ns)]
+    {
+        if let Some(base) = baseline.get(key).ok().and_then(|j| j.as_f64()) {
+            if measured > 2.0 * base {
+                failures.push(format!("{key}: {measured:.0} > 2x baseline {base:.0}"));
+            }
+        }
+    }
+    if let Some(base) = baseline
+        .get("loadgen_throughput_rps")
+        .ok()
+        .and_then(|j| j.as_f64())
+    {
+        if summary.throughput_rps < 0.5 * base {
+            failures.push(format!(
+                "loadgen_throughput_rps: {:.1} < 0.5x baseline {base:.1}",
+                summary.throughput_rps
+            ));
+        }
+    }
+    failures
+}
+
+/// Run the load: `cfg.threads` clients draw from `catalog` (budget
+/// jitter always; a `cold_ratio` fraction get their input window bumped
+/// so the key misses the store) until `cfg.count` requests have been
+/// attempted or the server drains away.
+pub fn run(cfg: &LoadConfig, catalog: &[BatchRequest], workload: Option<&str>) -> Result<Summary> {
+    anyhow::ensure!(!catalog.is_empty(), "loadgen needs a non-empty request catalog");
+    let threads = cfg.threads.max(1);
+    let completed = Arc::new(AtomicU64::new(0));
+    let drain_posted = Arc::new(AtomicBool::new(false));
+    let workers_done = Arc::new(AtomicU64::new(0));
+    let server_builds: Arc<Mutex<Option<f64>>> = Arc::new(Mutex::new(None));
+    let started = Instant::now();
+
+    let controller = if cfg.drain_after > 0 {
+        let completed = Arc::clone(&completed);
+        let drain_posted = Arc::clone(&drain_posted);
+        let workers_done = Arc::clone(&workers_done);
+        let server_builds = Arc::clone(&server_builds);
+        let trigger = cfg.drain_after.min(cfg.count) as u64;
+        let addr = cfg.addr.clone();
+        let total_workers = threads as u64;
+        Some(std::thread::spawn(move || {
+            loop {
+                if completed.load(Ordering::Relaxed) >= trigger {
+                    break;
+                }
+                if workers_done.load(Ordering::Relaxed) >= total_workers {
+                    // Every worker finished before the trigger was
+                    // reached (heavy rejection); drain anyway so the
+                    // server exits.
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let mut client = HttpClient::new(addr);
+            if let Ok(reply) = client.get("/v1/stats") {
+                if let Ok(doc) = reply.json() {
+                    let builds = doc
+                        .get("ok")
+                        .and_then(|ok| ok.get("stats"))
+                        .and_then(|s| s.get("builds"))
+                        .ok()
+                        .and_then(|b| b.as_f64());
+                    *server_builds.lock().unwrap() = builds;
+                }
+            }
+            let posted = client.post("/v1/shutdown", "{}").is_ok();
+            drain_posted.store(posted, Ordering::SeqCst);
+        }))
+    } else {
+        None
+    };
+
+    let per_thread: Vec<usize> = (0..threads)
+        .map(|i| cfg.count / threads + usize::from(i < cfg.count % threads))
+        .collect();
+    let mut handles = Vec::with_capacity(threads);
+    for (ti, quota) in per_thread.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        let catalog: Vec<BatchRequest> = catalog.to_vec();
+        let workload = workload.map(|w| w.to_string());
+        let completed = Arc::clone(&completed);
+        let workers_done = Arc::clone(&workers_done);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = crate::rng::Rng::new(cfg.seed ^ (0x9e37_79b9_7f4a_7c15u64
+                .wrapping_mul(ti as u64 + 1)));
+            let mut client = HttpClient::new(cfg.addr.clone());
+            let mut latencies: Vec<u64> = Vec::with_capacity(quota);
+            let (mut ok, mut rejected, mut lost, mut failed) = (0u64, 0u64, 0u64, 0u64);
+            let mut unreachable_streak = 0u32;
+            for _ in 0..quota {
+                let mut req = catalog[rng.below(catalog.len())].clone();
+                req.budget *= rng.range_f64(0.9, 1.1);
+                if rng.bool(cfg.cold_ratio) {
+                    // A different window is a different architecture,
+                    // hence a different frontier key: guaranteed cold.
+                    req.net.window += 1 + rng.below(7);
+                }
+                let body = api::request_envelope(
+                    std::slice::from_ref(&req),
+                    workload.as_deref(),
+                )
+                .to_string();
+                let t0 = Instant::now();
+                match client.post("/v1/query", &body) {
+                    Ok(reply) if reply.status == 200 => {
+                        latencies.push(t0.elapsed().as_nanos() as u64);
+                        ok += 1;
+                        completed.fetch_add(1, Ordering::Relaxed);
+                        unreachable_streak = 0;
+                    }
+                    Ok(reply) if reply.status == 429 || reply.status == 503 => {
+                        rejected += 1;
+                        unreachable_streak = 0;
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Ok(_) => {
+                        failed += 1;
+                        unreachable_streak = 0;
+                    }
+                    Err(ClientError::Unreachable(_)) => {
+                        rejected += 1;
+                        unreachable_streak += 1;
+                        if unreachable_streak >= 3 {
+                            // Server is gone (drained); stop burning
+                            // the remaining quota on refused connects.
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(ClientError::Truncated(_)) => {
+                        lost += 1;
+                    }
+                }
+            }
+            workers_done.fetch_add(1, Ordering::Relaxed);
+            (latencies, ok, rejected, lost, failed)
+        }));
+    }
+
+    let mut all: Vec<u64> = Vec::with_capacity(cfg.count);
+    let (mut ok, mut rejected, mut lost, mut failed) = (0u64, 0u64, 0u64, 0u64);
+    for h in handles {
+        let (lat, o, r, l, f) = h.join().expect("loadgen worker panicked");
+        all.extend(lat);
+        ok += o;
+        rejected += r;
+        lost += l;
+        failed += f;
+    }
+    let elapsed_ns = started.elapsed().as_nanos() as u64;
+    if let Some(c) = controller {
+        let _ = c.join();
+    } else {
+        // No drain: the server is still up — fetch builds now.
+        let mut client = HttpClient::new(cfg.addr.clone());
+        if let Ok(reply) = client.get("/v1/stats") {
+            if let Ok(doc) = reply.json() {
+                *server_builds.lock().unwrap() = doc
+                    .get("ok")
+                    .and_then(|okj| okj.get("stats"))
+                    .and_then(|s| s.get("builds"))
+                    .ok()
+                    .and_then(|b| b.as_f64());
+            }
+        }
+    }
+    all.sort_unstable();
+    let secs = (elapsed_ns as f64 / 1e9).max(1e-9);
+    Ok(Summary {
+        completed: ok,
+        rejected,
+        lost,
+        failed,
+        elapsed_ns,
+        throughput_rps: ok as f64 / secs,
+        p50_ns: percentile_ns(&all, 50.0),
+        p99_ns: percentile_ns(&all, 99.0),
+        p999_ns: percentile_ns(&all, 99.9),
+        histogram: histogram(&all),
+        server_builds: *server_builds.lock().unwrap(),
+        drained: drain_posted.load(Ordering::SeqCst),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop_check;
+
+    #[test]
+    fn percentile_is_nearest_rank_and_monotone() {
+        let sorted: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_ns(&sorted, 0.0), 1.0);
+        assert_eq!(percentile_ns(&sorted, 100.0), 100.0);
+        assert_eq!(percentile_ns(&sorted, 50.0), 51.0);
+        assert_eq!(percentile_ns(&[], 99.0), 0.0);
+        prop_check("percentile monotone in q", 50, |g| {
+            let mut xs: Vec<u64> = (0..g.int(1, 200)).map(|_| g.rng.next_u64() >> 32).collect();
+            xs.sort_unstable();
+            let (a, b) = (g.f64(0.0, 100.0), g.f64(0.0, 100.0));
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            if percentile_ns(&xs, lo) > percentile_ns(&xs, hi) {
+                return Err(format!("p{lo} > p{hi}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn histogram_buckets_cover_every_sample_once() {
+        let samples = [1u64, 1_024, 1_025, 2_048, 1 << 24, u64::MAX];
+        let hist = histogram(&samples);
+        let total: u64 = hist.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, samples.len() as u64);
+        assert!(hist.windows(2).all(|w| w[0].0 < w[1].0), "bounds ascend");
+        assert_eq!(hist.last().unwrap().0, u64::MAX);
+        assert_eq!(hist[0], (1_024, 2), "1 and 1024 land in the first bucket");
+    }
+
+    #[test]
+    fn gate_applies_2x_latency_and_half_throughput_rules() {
+        let mut s = Summary {
+            completed: 100,
+            rejected: 0,
+            lost: 0,
+            failed: 0,
+            elapsed_ns: 1,
+            throughput_rps: 300.0,
+            p50_ns: 1.0,
+            p99_ns: 900.0,
+            p999_ns: 1_000.0,
+            histogram: Vec::new(),
+            server_builds: Some(0.0),
+            drained: true,
+        };
+        let baseline = Json::obj(vec![
+            ("loadgen_p99_ns", Json::num(1_000.0)),
+            ("loadgen_throughput_rps", Json::num(250.0)),
+        ]);
+        assert!(gate(&s, &baseline).is_empty(), "within 2x and above 0.5x passes");
+        s.p99_ns = 2_500.0;
+        s.throughput_rps = 100.0;
+        let failures = gate(&s, &baseline);
+        assert_eq!(failures.len(), 2, "{failures:?}");
+        assert!(gate(&s, &Json::obj(vec![])).is_empty(), "absent keys are not gated");
+    }
+
+    #[test]
+    fn summary_json_carries_the_gateable_keys() {
+        let s = Summary {
+            completed: 7,
+            rejected: 1,
+            lost: 0,
+            failed: 0,
+            elapsed_ns: 2_000_000_000,
+            throughput_rps: 3.5,
+            p50_ns: 10.0,
+            p99_ns: 20.0,
+            p999_ns: 30.0,
+            histogram: histogram(&[5_000, 9_000]),
+            server_builds: None,
+            drained: false,
+        };
+        let doc = s.to_json();
+        for key in ["loadgen_completed", "loadgen_p99_ns", "loadgen_throughput_rps", "histogram"] {
+            assert!(doc.get(key).is_ok(), "missing {key}");
+        }
+        assert_eq!(doc.get("loadgen_p99_ns").unwrap().as_f64(), Some(20.0));
+        assert!(matches!(doc.get("server_builds").unwrap(), Json::Null));
+    }
+}

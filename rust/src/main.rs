@@ -94,6 +94,30 @@ fn warn_truncated(snap: &ntorc::serve::ServeSnapshot) {
     }
 }
 
+/// Resolve a `"network"` catalog name from request documents (the
+/// Table IV models the repo ships) — shared by `serve`, `httpd` and
+/// `loadgen` so the three speak about the same catalog.
+fn catalog_net(name: &str) -> Option<ntorc::layers::NetConfig> {
+    report::table4_models()
+        .into_iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, c)| c)
+}
+
+/// Read a request document from `--requests <path>` or stdin.
+fn read_requests(args: &Args) -> Result<ntorc::ser::Json> {
+    let text = match args.get("requests") {
+        Some(path) => std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read requests file {path}: {e}"))?,
+        None => {
+            let mut s = String::new();
+            std::io::Read::read_to_string(&mut std::io::stdin(), &mut s)?;
+            s
+        }
+    };
+    ntorc::ser::parse_json(&text)
+}
+
 fn emit(args: &Args, default_name: &str, title: &str, headers: &[&str], rows: &[Vec<String>]) {
     let name = args.get("out").unwrap_or(default_name);
     print!("{}", report::fmt_table(title, headers, rows));
@@ -394,23 +418,18 @@ fn run(raw: &[String]) -> Result<()> {
                 .unwrap_or_else(|| "(memory-only)".to_string());
             cfg.serve_capacity = args.usize_or("capacity", cfg.serve_capacity)?;
             // Parse the request document before paying for model fitting.
-            let text = match args.get("requests") {
-                Some(path) => std::fs::read_to_string(path)
-                    .map_err(|e| anyhow::anyhow!("read requests file {path}: {e}"))?,
-                None => {
-                    let mut s = String::new();
-                    std::io::Read::read_to_string(&mut std::io::stdin(), &mut s)?;
-                    s
+            let doc = read_requests(&args)?;
+            let parsed = ntorc::api::parse_request_doc(&doc, &catalog_net)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            if let Some(w) = &parsed.workload {
+                if *w != cfg.workload {
+                    bail!(
+                        "requests assert workload '{w}' but this run serves '{}'",
+                        cfg.workload
+                    );
                 }
-            };
-            let doc = ntorc::ser::parse_json(&text)?;
-            let named = |name: &str| {
-                report::table4_models()
-                    .into_iter()
-                    .find(|(n, _)| *n == name)
-                    .map(|(_, c)| c)
-            };
-            let requests = ntorc::serve::parse_requests(&doc, &named)?;
+            }
+            let requests = parsed.requests;
             let repeat = args.usize_or("repeat", 1)?.max(1);
             println!(
                 "[serve] {} requests x{repeat}, store {store_dir}",
@@ -421,7 +440,9 @@ fn run(raw: &[String]) -> Result<()> {
             let mut answered = 0usize;
             let mut feasible = 0usize;
             for _ in 0..repeat {
-                let responses = pipe.serve().query_batch(&models, &requests);
+                let responses = pipe
+                    .serve()
+                    .batch(&requests, &ntorc::serve::BatchOptions::models(&models));
                 answered += responses.len();
                 feasible += responses.iter().filter(|r| r.solution.is_some()).count();
             }
@@ -447,9 +468,10 @@ fn run(raw: &[String]) -> Result<()> {
                 ),
                 ("stats", snap.to_json()),
             ]);
-            std::fs::create_dir_all("results")?;
+            // Atomic tmp+rename (like FrontierStore saves): a killed or
+            // drained process can't leave a truncated stats file.
             let stats_path = format!("results/{stats_name}.json");
-            std::fs::write(&stats_path, out.to_pretty())?;
+            ntorc::ser::write_atomic(&stats_path, &out.to_pretty())?;
             println!("[json] {stats_path}");
             if args.has("expect-warm") {
                 if snap.builds > 0 {
@@ -467,6 +489,182 @@ fn run(raw: &[String]) -> Result<()> {
                     100.0 * snap.hit_rate()
                 );
             }
+        }
+        "httpd" => {
+            // The network front-end: FrontierService behind hand-rolled
+            // HTTP/1.1 (see crate::httpd and docs/WIRE_API.md).
+            args.check_known(
+                &[
+                    COMMON_FLAGS,
+                    &["store", "capacity", "addr", "threads", "duration", "stats-out"],
+                ]
+                .concat(),
+            )?;
+            let mut cfg = pipeline_config(&args, Preset::Smoke)?;
+            // Store precedence mirrors `serve` so the two commands
+            // share warm frontiers by default.
+            match args.get("store") {
+                Some("") => cfg.frontier_store = None,
+                Some(dir) => cfg.frontier_store = Some(dir.to_string()),
+                None if cfg.frontier_store.is_none() => {
+                    cfg.frontier_store = Some("results/frontiers".to_string());
+                }
+                None => {}
+            }
+            cfg.serve_capacity = args.usize_or("capacity", cfg.serve_capacity)?;
+            if let Some(addr) = args.get("addr") {
+                cfg.http.addr = addr.to_string();
+            }
+            cfg.http.threads = args.usize_or("threads", cfg.http.threads)?;
+            let duration_s: f64 = args
+                .get("duration")
+                .map(|d| d.parse())
+                .transpose()
+                .map_err(|e| anyhow::anyhow!("--duration expects seconds: {e}"))?
+                .unwrap_or(0.0);
+            let stats_name = args.get("stats-out").unwrap_or("serve_stats");
+            let stats_path = std::path::PathBuf::from(format!("results/{stats_name}.json"));
+            let store_dir = cfg
+                .frontier_store
+                .clone()
+                .unwrap_or_else(|| "(memory-only)".to_string());
+            // serve_config() is the same derivation Pipeline::new uses,
+            // so keys match a store warmed by `ntorc serve`.
+            let serve_cfg = cfg.serve_config()?;
+            let store = cfg.frontier_store();
+            let http = cfg.http.clone();
+            println!("[httpd] fitting cost models (preset-determined, same as serve) ...");
+            let (_pipe, models) = report::standard_models(cfg);
+            let svc = std::sync::Arc::new(ntorc::serve::FrontierService::new(serve_cfg, store));
+            let named: ntorc::httpd::NamedNets = std::sync::Arc::new(catalog_net);
+            let server = ntorc::httpd::Server::start(
+                http,
+                svc,
+                ntorc::httpd::ProblemSource::Models(std::sync::Arc::new(models)),
+                named,
+                Some(stats_path.clone()),
+            )?;
+            println!(
+                "[httpd] listening on http://{} (store {store_dir}); \
+                 POST /v1/shutdown to drain",
+                server.addr()
+            );
+            if duration_s > 0.0 {
+                let h = server.handle();
+                std::thread::spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(duration_s));
+                    h.shutdown();
+                });
+                println!("[httpd] auto-drain after {duration_s}s");
+            }
+            let (served, rejected) = server.join()?;
+            println!(
+                "[httpd] drained: {served} request(s) served, {rejected} rejected; \
+                 stats flushed to {}",
+                stats_path.display()
+            );
+        }
+        "loadgen" => {
+            // Tail-latency harness against a running `ntorc httpd`
+            // (see crate::loadgen).
+            args.check_known(
+                &[
+                    COMMON_FLAGS,
+                    &[
+                        "addr",
+                        "requests",
+                        "threads",
+                        "count",
+                        "cold-ratio",
+                        "drain-after",
+                        "expect-warm",
+                        "baseline",
+                    ],
+                ]
+                .concat(),
+            )?;
+            let cfg = pipeline_config(&args, Preset::Smoke)?;
+            let doc = read_requests(&args)?;
+            let parsed = ntorc::api::parse_request_doc(&doc, &catalog_net)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            // Assert the pipeline's workload on the wire unless the
+            // request document already asserts one.
+            let workload = parsed.workload.clone().unwrap_or_else(|| cfg.workload.clone());
+            let lcfg = ntorc::loadgen::LoadConfig {
+                addr: args.get("addr").unwrap_or("127.0.0.1:7070").to_string(),
+                threads: args.usize_or("threads", 8)?,
+                count: args.usize_or("count", 5_000)?,
+                cold_ratio: args
+                    .get("cold-ratio")
+                    .map(|s| s.parse())
+                    .transpose()
+                    .map_err(|e| anyhow::anyhow!("--cold-ratio expects a fraction: {e}"))?
+                    .unwrap_or(0.0),
+                seed: args.u64_or("seed", 7)?,
+                drain_after: args.usize_or("drain-after", 0)?,
+            };
+            println!(
+                "[loadgen] {} threads x {} requests against {} \
+                 (catalog {}, cold ratio {}, drain after {})",
+                lcfg.threads,
+                lcfg.count,
+                lcfg.addr,
+                parsed.requests.len(),
+                lcfg.cold_ratio,
+                lcfg.drain_after
+            );
+            let summary = ntorc::loadgen::run(&lcfg, &parsed.requests, Some(&workload))?;
+            let (h, rows) = report::loadgen_rows(&summary);
+            print!("{}", report::fmt_table("Loadgen — wire tail latency", &h, &rows));
+            ntorc::ser::write_atomic(
+                "results/BENCH_loadgen.json",
+                &summary.to_json().to_pretty(),
+            )?;
+            println!("[json] results/BENCH_loadgen.json");
+            let mut failures: Vec<String> = Vec::new();
+            if let Some(path) = args.get("baseline") {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("read baseline {path}: {e}"))?;
+                let baseline = ntorc::ser::parse_json(&text)?;
+                failures.extend(ntorc::loadgen::gate(&summary, &baseline));
+            }
+            if summary.lost > 0 {
+                failures.push(format!(
+                    "{} accepted request(s) lost — a graceful drain must lose zero",
+                    summary.lost
+                ));
+            }
+            if summary.failed > 0 {
+                failures.push(format!(
+                    "{} request(s) got non-retryable error responses",
+                    summary.failed
+                ));
+            }
+            if args.has("expect-warm") {
+                match summary.server_builds {
+                    Some(b) if b == 0.0 => {
+                        println!("[loadgen] warm check passed: server builds=0");
+                    }
+                    Some(b) => failures.push(format!(
+                        "--expect-warm: server reported {b:.0} frontier build(s)"
+                    )),
+                    None => failures.push(
+                        "--expect-warm: could not read builds from /v1/stats".to_string(),
+                    ),
+                }
+            }
+            if !failures.is_empty() {
+                for f in &failures {
+                    eprintln!("[loadgen] FAIL {f}");
+                }
+                bail!("loadgen gate failed ({} failure(s))", failures.len());
+            }
+            println!(
+                "[loadgen] ok: {} completed at {:.1} req/s, p99 {}",
+                summary.completed,
+                summary.throughput_rps,
+                ntorc::bench::fmt_ns(summary.p99_ns)
+            );
         }
         "fig7" => {
             args.check_known(COMMON_FLAGS)?;

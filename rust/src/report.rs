@@ -856,6 +856,28 @@ pub fn serve_stats_rows(
     (headers, rows)
 }
 
+/// One-row summary of an `ntorc loadgen` run (wire tail latency).
+pub fn loadgen_rows(s: &crate::loadgen::Summary) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let headers = vec![
+        "completed", "rejected", "lost", "failed", "elapsed_s", "throughput_rps", "p50",
+        "p99", "p999", "server_builds", "drained",
+    ];
+    let rows = vec![vec![
+        s.completed.to_string(),
+        s.rejected.to_string(),
+        s.lost.to_string(),
+        s.failed.to_string(),
+        format!("{:.3}", s.elapsed_ns as f64 / 1e9),
+        f(s.throughput_rps, 1),
+        crate::bench::fmt_ns(s.p50_ns),
+        crate::bench::fmt_ns(s.p99_ns),
+        crate::bench::fmt_ns(s.p999_ns),
+        s.server_builds.map(|b| format!("{b:.0}")).unwrap_or_else(|| "?".to_string()),
+        s.drained.to_string(),
+    ]];
+    (headers, rows)
+}
+
 pub fn table4_rows(rows: &[Table4Row]) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let headers = vec!["network", "solver", "trials", "luts", "dsps", "latency_us", "search_s"];
     let out = rows

@@ -204,6 +204,30 @@ fn write_str(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Write `text` to `path` atomically: write a sibling tmp file (pid
+/// suffix, so concurrent processes never share one), then rename into
+/// place. A crashed or killed writer leaves either the old file or
+/// none — never a truncated document under the served name. Parent
+/// directories are created as needed. Used by the frontier store, the
+/// serve-stats flush (a drained HTTP server writes through this too)
+/// and the loadgen bench report.
+pub fn write_atomic(path: impl AsRef<std::path::Path>, text: &str) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create dir {}", parent.display()))?;
+        }
+    }
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(format!(".tmp.{}", std::process::id()));
+    let tmp = path.with_file_name(name);
+    std::fs::write(&tmp, text).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename into {}", path.display()))?;
+    Ok(())
+}
+
 /// Parse a JSON document.
 pub fn parse_json(text: &str) -> Result<Json> {
     let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
@@ -458,6 +482,26 @@ fn parse_toml_value(v: &str, lineno: usize) -> Result<Json> {
 mod tests {
     use super::*;
     use crate::testkit::{prop_check, GenCtx};
+
+    #[test]
+    fn write_atomic_creates_dirs_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir()
+            .join(format!("ntorc_ser_atomic_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("doc.json");
+        write_atomic(&path, "{\"a\": 1}\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"a\": 1}\n");
+        // Overwrite is atomic replace, and no tmp debris survives.
+        write_atomic(&path, "{\"a\": 2}\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"a\": 2}\n");
+        let entries: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(entries, vec!["doc.json".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     /// Characters that exercise every branch of the string escaper:
     /// quotes, backslashes, the named escapes, raw control characters

@@ -57,10 +57,13 @@
 //!   [`ServeStats`] (memory hits / store hits / builds / evictions), the
 //!   numbers behind the CLI's hit-rate report and the CI warm-serve
 //!   assertion. [`query`](FrontierService::query) answers one budget;
-//!   [`query_batch`](FrontierService::query_batch) answers a whole
-//!   request list, resolving duplicates through the LRU once and
-//!   sharding the pure index lookups over
+//!   [`batch`](FrontierService::batch) answers a whole request list
+//!   (source + key derivation selected by [`BatchOptions`]), resolving
+//!   duplicates through the LRU once and sharding the pure index
+//!   lookups over
 //!   [`coordinator::parallel_map`](crate::coordinator::parallel_map).
+//!   The request/response wire grammar lives in [`crate::api`]; the
+//!   HTTP front-end over this service is [`crate::httpd`].
 //!
 //! The service fronts `Pipeline::deploy`/`deploy_sweep` and the
 //! deployment-aware HPO loop (`hpo::run_hpo_served`), and the `ntorc
@@ -489,11 +492,7 @@ impl FrontierStore {
     pub fn save(&self, sf: &ServedFrontier) -> Result<PathBuf> {
         let _lock = StoreLock::acquire(&self.dir, LOCK_STALE)?;
         let path = self.path_for(&sf.key);
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, sf.to_json().to_pretty())
-            .with_context(|| format!("write {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
-            .with_context(|| format!("rename into {}", path.display()))?;
+        crate::ser::write_atomic(&path, &sf.to_json().to_pretty())?;
         self.gc_keeping(Some(&path));
         Ok(path)
     }
@@ -771,6 +770,46 @@ pub struct BatchResponse {
     pub key: FrontierKey,
     pub budget: f64,
     pub solution: Option<Solution>,
+    /// Per-layer hardware reuse factors of `solution`
+    /// ([`ServedFrontier::reuse_of`]); empty when infeasible. Rides the
+    /// wire as `reuse_factors` so remote clients can act on an answer
+    /// without the original choice lists.
+    pub reuse: Vec<usize>,
+}
+
+/// How [`FrontierService::batch`] turns a cold network into a
+/// [`DeployProblem`]: through fitted cost models (the production path,
+/// keys scoped by the model fingerprint) or an injected builder (tests
+/// and non-CostModels clients, keys scoped by architecture only).
+pub enum BatchSource<'a> {
+    Models(&'a CostModels),
+    Builder(&'a dyn Fn(&NetConfig) -> DeployProblem),
+}
+
+/// Options for [`FrontierService::batch`] — a struct, not positional
+/// arguments, so the entry point can grow (new knobs default via
+/// [`BatchOptions::models`]/[`BatchOptions::builder`]) without touching
+/// every caller again.
+pub struct BatchOptions<'a> {
+    /// Problem source for cold keys.
+    pub source: BatchSource<'a>,
+    /// Override the key derivation (default: [`FrontierService::model_key`]
+    /// for a [`BatchSource::Models`] source, [`FrontierService::key_for`]
+    /// for a [`BatchSource::Builder`]).
+    pub key_of: Option<&'a dyn Fn(&NetConfig) -> FrontierKey>,
+}
+
+impl<'a> BatchOptions<'a> {
+    /// The production configuration: cost-model-backed builds under
+    /// fingerprint-scoped keys.
+    pub fn models(models: &'a CostModels) -> BatchOptions<'a> {
+        BatchOptions { source: BatchSource::Models(models), key_of: None }
+    }
+
+    /// Injected problem builder under plain architecture keys.
+    pub fn builder(build: &'a dyn Fn(&NetConfig) -> DeployProblem) -> BatchOptions<'a> {
+        BatchOptions { source: BatchSource::Builder(build), key_of: None }
+    }
 }
 
 /// Below this many batched requests the per-lookup work (an O(log n)
@@ -959,37 +998,62 @@ impl FrontierService {
         self.resolve(models, net).index.query(latency_budget)
     }
 
-    /// Batch endpoint: answer every request, resolving duplicate
+    /// Whether `key` would resolve without a frontier build: hot in the
+    /// LRU, or persisted in the store. The HTTP front-end's admission
+    /// control uses this to let warm traffic bypass the build permits
+    /// (a warm request can never be 429'd by a saturated build queue).
+    pub fn is_warm(&self, key: &FrontierKey) -> bool {
+        if self.state.lock().unwrap().entries.contains_key(&key.hash) {
+            return true;
+        }
+        self.store.as_ref().is_some_and(|s| s.contains(key))
+    }
+
+    /// **The** batch endpoint: answer every request, resolving duplicate
     /// architectures through the LRU once and sharding the pure index
-    /// lookups over the worker pool. Responses keep request order.
+    /// lookups over the worker pool. Responses keep request order and
+    /// carry per-layer reuse factors. [`BatchOptions`] selects the
+    /// problem source and (optionally) the key derivation; the former
+    /// `query_batch`/`query_batch_with` pair are deprecated shims over
+    /// this method.
+    pub fn batch(&self, requests: &[BatchRequest], opts: &BatchOptions) -> Vec<BatchResponse> {
+        match (&opts.source, opts.key_of) {
+            (BatchSource::Models(models), key_of) => self.batch_impl(
+                requests,
+                key_of.unwrap_or(&|net| self.model_key(models, net)),
+                &|net| {
+                    models.build_problem_parallel(
+                        &net.plan(),
+                        self.cfg.latency_budget,
+                        self.cfg.max_choices_per_layer,
+                        self.cfg.workers,
+                    )
+                },
+            ),
+            (BatchSource::Builder(build), key_of) => {
+                self.batch_impl(requests, key_of.unwrap_or(&|net| self.key_for(net)), *build)
+            }
+        }
+    }
+
+    /// Deprecated shim over [`batch`](Self::batch) (one PR of grace).
+    #[deprecated(note = "use FrontierService::batch(requests, &BatchOptions::models(models))")]
     pub fn query_batch(
         &self,
         models: &CostModels,
         requests: &[BatchRequest],
     ) -> Vec<BatchResponse> {
-        self.batch_impl(
-            requests,
-            &|net| self.model_key(models, net),
-            &|net| {
-                models.build_problem_parallel(
-                    &net.plan(),
-                    self.cfg.latency_budget,
-                    self.cfg.max_choices_per_layer,
-                    self.cfg.workers,
-                )
-            },
-        )
+        self.batch(requests, &BatchOptions::models(models))
     }
 
-    /// [`query_batch`](Self::query_batch) with an injected problem
-    /// builder (tests and non-CostModels clients); entries are filed
-    /// under the plain architecture key.
+    /// Deprecated shim over [`batch`](Self::batch) (one PR of grace).
+    #[deprecated(note = "use FrontierService::batch(requests, &BatchOptions::builder(build))")]
     pub fn query_batch_with(
         &self,
         requests: &[BatchRequest],
         build: &dyn Fn(&NetConfig) -> DeployProblem,
     ) -> Vec<BatchResponse> {
-        self.batch_impl(requests, &|net| self.key_for(net), build)
+        self.batch(requests, &BatchOptions::builder(build))
     }
 
     fn batch_impl(
@@ -1014,11 +1078,11 @@ impl FrontierService {
         // Phase 2: the lookups are O(log n) binary searches — sharding
         // them only pays once the batch is big enough to amortize the
         // worker-pool thread spawns.
-        let answer = |sf: &ServedFrontier, budget: f64| BatchResponse {
-            key: sf.key.clone(),
-            budget,
-            solution: sf.index.query(budget),
-        };
+        fn answer(sf: &ServedFrontier, budget: f64) -> BatchResponse {
+            let solution = sf.index.query(budget);
+            let reuse = solution.as_ref().map(|s| sf.reuse_of(&s.pick)).unwrap_or_default();
+            BatchResponse { key: sf.key.clone(), budget, solution, reuse }
+        }
         let workers = self.cfg.workers.min(pairs.len()).max(1);
         if workers <= 1 || pairs.len() < BATCH_SHARD_MIN {
             return pairs.iter().map(|(sf, b)| answer(sf, *b)).collect();
@@ -1028,16 +1092,8 @@ impl FrontierService {
             .chunks(per)
             .map(|chunk| {
                 let chunk: Vec<(Arc<ServedFrontier>, f64)> = chunk.to_vec();
-                Box::new(move || {
-                    chunk
-                        .iter()
-                        .map(|(sf, b)| BatchResponse {
-                            key: sf.key.clone(),
-                            budget: *b,
-                            solution: sf.index.query(*b),
-                        })
-                        .collect()
-                }) as Box<dyn FnOnce() -> Vec<BatchResponse> + Send>
+                Box::new(move || chunk.iter().map(|(sf, b)| answer(sf, *b)).collect())
+                    as Box<dyn FnOnce() -> Vec<BatchResponse> + Send>
             })
             .collect();
         parallel_map(workers, jobs).into_iter().flatten().collect()
@@ -1080,112 +1136,19 @@ impl FrontierService {
 // Batch-request documents (the `ntorc serve` wire format)
 // ---------------------------------------------------------------------------
 
-/// Parse a batch-request document. Accepted shapes:
-///
-/// ```json
-/// {"requests": [
-///   {"network": "model1", "budget": 50000},
-///   {"net": {"window": 64, "conv": [[3, 8]], "lstm": [8], "dense": [16, 1]},
-///    "budgets": [20000, 50000]}
-/// ]}
-/// ```
-///
-/// or a bare array of the same request objects. Named networks resolve
-/// through `named` (the CLI wires `report::table4_models`); inline nets
-/// are validated with [`NetConfig::is_valid`]. Each entry carries one
-/// `budget` or a `budgets` list (expanded to one request per budget).
+/// Deprecated shim (one PR of grace): the request grammar now lives in
+/// [`crate::api`] as the versioned wire protocol, shared by file-mode
+/// serve, the HTTP front-end and the load generator. This wrapper
+/// preserves the old signature (anyhow errors, envelope fields beyond
+/// the request list dropped).
+#[deprecated(note = "use api::parse_request_doc (typed errors + v1 envelope)")]
 pub fn parse_requests(
     doc: &Json,
     named: &dyn Fn(&str) -> Option<NetConfig>,
 ) -> Result<Vec<BatchRequest>> {
-    let items = if let Some(arr) = doc.as_arr() {
-        arr
-    } else {
-        doc.get("requests")?
-            .as_arr()
-            .ok_or_else(|| anyhow!("'requests' must be an array"))?
-    };
-    let mut out = Vec::new();
-    for (i, item) in items.iter().enumerate() {
-        let net = if let Ok(name) = item.get("network") {
-            let name = name
-                .as_str()
-                .ok_or_else(|| anyhow!("request {i}: 'network' must be a string"))?;
-            named(name).ok_or_else(|| anyhow!("request {i}: unknown network '{name}'"))?
-        } else {
-            parse_net(item.get("net").with_context(|| {
-                format!("request {i}: needs 'network' (named) or 'net' (inline)")
-            })?)
-            .with_context(|| format!("request {i}"))?
-        };
-        let mut budgets = Vec::new();
-        if let Ok(b) = item.get("budget") {
-            budgets.push(
-                b.as_f64()
-                    .ok_or_else(|| anyhow!("request {i}: 'budget' must be a number"))?,
-            );
-        }
-        if let Ok(list) = item.get("budgets") {
-            for b in list
-                .as_arr()
-                .ok_or_else(|| anyhow!("request {i}: 'budgets' must be an array"))?
-            {
-                budgets.push(
-                    b.as_f64()
-                        .ok_or_else(|| anyhow!("request {i}: budgets hold non-numbers"))?,
-                );
-            }
-        }
-        if budgets.is_empty() {
-            bail!("request {i}: needs 'budget' or 'budgets'");
-        }
-        for budget in budgets {
-            out.push(BatchRequest { net: net.clone(), budget });
-        }
-    }
-    if out.is_empty() {
-        bail!("no requests in document");
-    }
-    Ok(out)
-}
-
-/// Parse an inline network: `{"window": w, "conv": [[k, f], ...],
-/// "lstm": [u, ...], "dense": [n, ..., 1]}`.
-fn parse_net(j: &Json) -> Result<NetConfig> {
-    let window = j
-        .get("window")?
-        .as_usize()
-        .ok_or_else(|| anyhow!("'window' must be a number"))?;
-    let mut conv = Vec::new();
-    for (i, pair) in j
-        .get("conv")?
-        .as_arr()
-        .ok_or_else(|| anyhow!("'conv' must be an array of [kernel, filters]"))?
-        .iter()
-        .enumerate()
-    {
-        let p = pair
-            .as_arr()
-            .filter(|p| p.len() == 2)
-            .ok_or_else(|| anyhow!("conv[{i}] must be a [kernel, filters] pair"))?;
-        let k = p[0].as_usize().ok_or_else(|| anyhow!("conv[{i}] kernel"))?;
-        let f = p[1].as_usize().ok_or_else(|| anyhow!("conv[{i}] filters"))?;
-        conv.push((k, f));
-    }
-    let usizes = |key: &str| -> Result<Vec<usize>> {
-        j.get(key)?
-            .as_arr()
-            .ok_or_else(|| anyhow!("'{key}' must be an array"))?
-            .iter()
-            .enumerate()
-            .map(|(i, v)| v.as_usize().ok_or_else(|| anyhow!("{key}[{i}] must be a number")))
-            .collect()
-    };
-    let cfg = NetConfig { window, conv, lstm: usizes("lstm")?, dense: usizes("dense")? };
-    if !cfg.is_valid() {
-        bail!("invalid network configuration: {cfg:?}");
-    }
-    Ok(cfg)
+    crate::api::parse_request_doc(doc, named)
+        .map(|p| p.requests)
+        .map_err(|e| anyhow!("{e}"))
 }
 
 #[cfg(test)]
@@ -1640,7 +1603,7 @@ mod tests {
         for workers in [1usize, 4] {
             let cfg = ServeConfig { workers, ..ServeConfig::default() };
             let svc = FrontierService::new(cfg, None);
-            let responses = svc.query_batch_with(&requests, &build);
+            let responses = svc.batch(&requests, &BatchOptions::builder(&build));
             assert_eq!(responses.len(), requests.len());
             // Order preserved; duplicates deduped into 2 builds.
             let s = svc.stats.snapshot();
@@ -1651,11 +1614,13 @@ mod tests {
             for (req, resp) in requests.iter().zip(&responses) {
                 assert_eq!(resp.budget, req.budget);
                 assert_eq!(resp.key, svc.key_for(&req.net));
-                let direct = svc
-                    .resolve_with(svc.key_for(&req.net), || unreachable!())
-                    .index
-                    .query(req.budget);
-                assert_eq!(resp.solution, direct);
+                let served = svc.resolve_with(svc.key_for(&req.net), || unreachable!());
+                assert_eq!(resp.solution, served.index.query(req.budget));
+                // Reuse factors ride along, matching the served table.
+                match &resp.solution {
+                    Some(s) => assert_eq!(resp.reuse, served.reuse_of(&s.pick)),
+                    None => assert!(resp.reuse.is_empty()),
+                }
             }
             let answers: Vec<Option<Solution>> =
                 responses.into_iter().map(|r| r.solution).collect();
@@ -1697,6 +1662,51 @@ mod tests {
     }
 
     #[test]
+    fn is_warm_tracks_lru_and_store() {
+        let dir = temp_dir("warm");
+        let svc =
+            FrontierService::new(ServeConfig::default(), Some(FrontierStore::new(&dir)));
+        let key = toy_key(71);
+        assert!(!svc.is_warm(&key), "cold key");
+        svc.resolve_with(key.clone(), || toy_problem(71, 2));
+        assert!(svc.is_warm(&key), "hot in the LRU");
+        // A fresh service over the same store sees it warm from disk.
+        let second =
+            FrontierService::new(ServeConfig::default(), Some(FrontierStore::new(&dir)));
+        assert!(second.is_warm(&key), "warm via the store");
+        assert_eq!(second.stats.snapshot().resolves(), 0, "is_warm never resolves");
+        // Memory-only service: cold again.
+        assert!(!FrontierService::new(ServeConfig::default(), None).is_warm(&key));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_batch_shims_match_the_unified_entry_point() {
+        let build = |net: &NetConfig| toy_problem(net.dense[0] as u64, net.plan().len());
+        let requests = vec![
+            BatchRequest {
+                net: NetConfig::new(16, vec![], vec![], vec![4, 1]),
+                budget: 40.0,
+            },
+            BatchRequest {
+                net: NetConfig::new(16, vec![], vec![], vec![8, 1]),
+                budget: 90.0,
+            },
+        ];
+        let a = FrontierService::new(ServeConfig::default(), None);
+        let b = FrontierService::new(ServeConfig::default(), None);
+        let via_shim = a.query_batch_with(&requests, &build);
+        let via_batch = b.batch(&requests, &BatchOptions::builder(&build));
+        for (x, y) in via_shim.iter().zip(&via_batch) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.solution, y.solution);
+            assert_eq!(x.reuse, y.reuse);
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
     fn parse_requests_accepts_named_inline_and_budget_lists() {
         let doc = parse_json(
             r#"{"requests": [
@@ -1721,6 +1731,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn parse_requests_rejects_malformed_documents() {
         let named = |_: &str| -> Option<NetConfig> { None };
         for bad in [

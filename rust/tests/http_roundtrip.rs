@@ -1,0 +1,259 @@
+//! The HTTP front-end contract over real sockets: an ephemeral-port
+//! [`ntorc::httpd::Server`] driven by the crate's own
+//! [`ntorc::loadgen::HttpClient`]. Covers the ISSUE's four scenarios —
+//! cold query → warm re-query (builds stay at 1), malformed body →
+//! structured `bad_request` envelope, saturation → `429` +
+//! `Retry-After` (with the warm-bypass exception), and a graceful drain
+//! that completes in-flight requests and flushes the stats file
+//! atomically.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ntorc::httpd::{HttpConfig, NamedNets, ProblemSource, Server};
+use ntorc::layers::NetConfig;
+use ntorc::loadgen::{ClientError, HttpClient};
+use ntorc::mip::{Choice, DeployProblem};
+use ntorc::ser::{parse_json, Json};
+use ntorc::serve::{FrontierService, FrontierStore, ServeConfig};
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        capacity: 8,
+        workers: 1,
+        max_choices_per_layer: 16,
+        latency_budget: 50_000.0,
+        max_points: None,
+        epsilon: None,
+        workload: None,
+    }
+}
+
+fn tiny_net() -> NetConfig {
+    NetConfig::new(16, vec![], vec![], vec![4, 1])
+}
+
+fn named() -> NamedNets {
+    Arc::new(|name: &str| (name == "tiny").then(tiny_net))
+}
+
+/// Deterministic toy problems (same net → same problem), optionally
+/// slowed down so a build is observably "in flight".
+fn toy_builder(delay_ms: u64) -> Arc<dyn Fn(&NetConfig) -> DeployProblem + Send + Sync> {
+    Arc::new(move |net: &NetConfig| {
+        if delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(delay_ms));
+        }
+        let layers = (0..net.plan().len().max(1))
+            .map(|k| {
+                (0..4)
+                    .map(|j| Choice {
+                        reuse: 1 << j,
+                        cost: 500.0 / (j + 1) as f64 + k as f64,
+                        latency: (8 * (j + 1)) as f64,
+                    })
+                    .collect()
+            })
+            .collect();
+        DeployProblem { layers, latency_budget: 0.0 }
+    })
+}
+
+fn http_cfg(threads: usize, permits: usize) -> HttpConfig {
+    HttpConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads,
+        max_inflight_builds: permits,
+        drain_timeout_ms: 2_000,
+    }
+}
+
+fn start(
+    http: HttpConfig,
+    store: Option<FrontierStore>,
+    delay_ms: u64,
+    stats_path: Option<std::path::PathBuf>,
+) -> Server {
+    let svc = Arc::new(FrontierService::new(serve_cfg(), store));
+    Server::start(
+        http,
+        svc,
+        ProblemSource::Builder(toy_builder(delay_ms)),
+        named(),
+        stats_path,
+    )
+    .expect("server starts on an ephemeral port")
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ntorc_httpd_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn builds_of(stats_body: &Json) -> f64 {
+    stats_body
+        .get("ok")
+        .and_then(|ok| ok.get("stats"))
+        .and_then(|s| s.get("builds"))
+        .expect("stats carry builds")
+        .as_f64()
+        .unwrap()
+}
+
+fn error_code_of(body: &Json) -> String {
+    body.get("error")
+        .and_then(|e| e.get("code"))
+        .expect("error envelope carries a code")
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn cold_query_then_warm_requery_over_the_wire() {
+    let server = start(http_cfg(2, 2), None, 0, None);
+    let addr = server.addr().to_string();
+    let mut client = HttpClient::new(addr);
+
+    let health = client.get("/healthz").unwrap();
+    assert_eq!(health.status, 200);
+
+    // Cold: versioned envelope, one build.
+    let body = r#"{"v": 1, "requests": [{"network": "tiny", "budget": 100}]}"#;
+    let reply = client.post("/v1/query", body).unwrap();
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    let doc = reply.json().unwrap();
+    assert_eq!(doc.get("v").unwrap().as_f64(), Some(1.0));
+    let ok = doc.get("ok").unwrap();
+    assert_eq!(ok.get("count").unwrap().as_f64(), Some(1.0));
+    let results = ok.get("results").unwrap().as_arr().unwrap();
+    assert!(results[0].get("feasible").unwrap().as_bool().unwrap());
+    assert!(!results[0].get("reuse_factors").unwrap().as_arr().unwrap().is_empty());
+
+    // Warm re-query on the SAME keep-alive connection: builds stay 1.
+    let reply = client.post("/v1/query", body).unwrap();
+    assert_eq!(reply.status, 200);
+    let stats = client.get("/v1/stats").unwrap();
+    assert_eq!(stats.status, 200);
+    let sdoc = stats.json().unwrap();
+    assert_eq!(builds_of(&sdoc), 1.0, "second query must be served warm");
+
+    // Legacy un-versioned body keeps parsing (treated as v1).
+    let legacy = r#"[{"network": "tiny", "budget": 100}]"#;
+    assert_eq!(client.post("/v1/query", legacy).unwrap().status, 200);
+
+    // Structured errors: malformed JSON, bad version, unknown network,
+    // wrong method, unknown route.
+    let bad = client.post("/v1/query", "this is not json").unwrap();
+    assert_eq!(bad.status, 400);
+    assert_eq!(error_code_of(&bad.json().unwrap()), "bad_request");
+    let v9 = client
+        .post("/v1/query", r#"{"v": 9, "requests": [{"network": "tiny", "budget": 1}]}"#)
+        .unwrap();
+    assert_eq!(v9.status, 400);
+    assert_eq!(error_code_of(&v9.json().unwrap()), "bad_request");
+    let unknown = client
+        .post("/v1/query", r#"{"requests": [{"network": "nope", "budget": 1}]}"#)
+        .unwrap();
+    assert_eq!(unknown.status, 404);
+    assert_eq!(error_code_of(&unknown.json().unwrap()), "unknown_network");
+    let method = client.request("GET", "/v1/query", None).unwrap();
+    assert_eq!(method.status, 405);
+    assert_eq!(error_code_of(&method.json().unwrap()), "method_not_allowed");
+    let route = client.get("/nope").unwrap();
+    assert_eq!(route.status, 404);
+    assert_eq!(error_code_of(&route.json().unwrap()), "not_found");
+
+    let down = client.post("/v1/shutdown", "{}").unwrap();
+    assert_eq!(down.status, 200);
+    let (served, _rejected) = server.join().unwrap();
+    assert!(served >= 3, "three successful query batches were served, got {served}");
+}
+
+#[test]
+fn saturation_returns_429_and_warm_requests_bypass_the_gate() {
+    // Zero build permits: every cold batch is refused deterministically.
+    let dir = temp_dir("saturation");
+    let server = start(http_cfg(2, 0), Some(FrontierStore::new(&dir)), 0, None);
+    let addr = server.addr().to_string();
+    let mut client = HttpClient::new(addr);
+    let body = r#"{"v": 1, "requests": [{"network": "tiny", "budget": 100}]}"#;
+    let reply = client.post("/v1/query", body).unwrap();
+    assert_eq!(reply.status, 429);
+    assert_eq!(error_code_of(&reply.json().unwrap()), "overloaded");
+    assert_eq!(
+        reply.headers.get("retry-after").map(|s| s.as_str()),
+        Some("1"),
+        "429 must carry Retry-After"
+    );
+    client.post("/v1/shutdown", "{}").unwrap();
+    server.join().unwrap();
+
+    // Warm the store out of band, then restart with zero permits: the
+    // same request now bypasses the gate entirely (warm traffic can
+    // never be 429'd).
+    let warmer = start(http_cfg(2, 1), Some(FrontierStore::new(&dir)), 0, None);
+    let mut client = HttpClient::new(warmer.addr().to_string());
+    assert_eq!(client.post("/v1/query", body).unwrap().status, 200);
+    client.post("/v1/shutdown", "{}").unwrap();
+    warmer.join().unwrap();
+
+    let gated = start(http_cfg(2, 0), Some(FrontierStore::new(&dir)), 0, None);
+    let mut client = HttpClient::new(gated.addr().to_string());
+    let warm = client.post("/v1/query", body).unwrap();
+    assert_eq!(warm.status, 200, "warm request must bypass the build gate: {}", warm.body);
+    client.post("/v1/shutdown", "{}").unwrap();
+    gated.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn graceful_drain_completes_in_flight_requests_and_flushes_stats() {
+    let dir = temp_dir("drain");
+    std::fs::create_dir_all(&dir).unwrap();
+    let stats_path = dir.join("serve_stats.json");
+    // Slow builder (300 ms): the drain lands while a build is in flight.
+    let server = start(http_cfg(3, 2), None, 300, Some(stats_path.clone()));
+    let addr = server.addr().to_string();
+
+    let slow_addr = addr.clone();
+    let in_flight = std::thread::spawn(move || {
+        let mut client = HttpClient::new(slow_addr);
+        client.post(
+            "/v1/query",
+            r#"{"v": 1, "requests": [{"network": "tiny", "budget": 100}]}"#,
+        )
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    let mut client = HttpClient::new(addr.clone());
+    assert_eq!(client.post("/v1/shutdown", "{}").unwrap().status, 200);
+
+    // The in-flight request completes with a full 200 despite the drain.
+    let reply = in_flight.join().unwrap().expect("in-flight request must not be dropped");
+    assert_eq!(reply.status, 200, "{}", reply.body);
+
+    let (served, _rejected) = server.join().unwrap();
+    assert!(served >= 1, "the in-flight request counts as served");
+    // join() flushed the stats snapshot atomically: the file exists,
+    // parses, and no tmp litter remains.
+    let text = std::fs::read_to_string(&stats_path).expect("stats file flushed on drain");
+    let doc = parse_json(&text).expect("stats file is valid JSON");
+    assert!(doc.get("stats").and_then(|s| s.get("builds")).is_ok());
+    let litter: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+        .collect();
+    assert!(litter.is_empty(), "atomic flush must not leave tmp files");
+
+    // The drained server is gone: fresh connections are refused, which
+    // the client classifies as rejected (never "lost").
+    let mut after = HttpClient::new(addr);
+    match after.get("/healthz") {
+        Err(ClientError::Unreachable(_)) => {}
+        Ok(r) => panic!("drained server still answering: {}", r.status),
+        Err(e) => panic!("expected clean refusal, got {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

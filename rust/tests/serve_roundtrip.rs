@@ -7,7 +7,7 @@
 
 use ntorc::coordinator::{Pipeline, PipelineConfig};
 use ntorc::layers::NetConfig;
-use ntorc::serve::{BatchRequest, FrontierService, FrontierStore, ServeConfig};
+use ntorc::serve::{BatchOptions, BatchRequest, FrontierService, FrontierStore, ServeConfig};
 
 fn temp_store(tag: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("ntorc_serve_it_{tag}_{}", std::process::id()));
@@ -154,7 +154,7 @@ fn batch_endpoint_serves_mixed_workload_across_sessions() {
     let dir = temp_store("batch");
 
     let svc1 = FrontierService::new(serve_cfg(), Some(FrontierStore::new(&dir)));
-    let cold = svc1.query_batch(&models, &requests);
+    let cold = svc1.batch(&requests, &BatchOptions::models(&models));
     let s1 = svc1.stats.snapshot();
     assert_eq!(cold.len(), requests.len());
     assert_eq!(s1.builds, 2, "two unique architectures, two builds");
@@ -164,7 +164,7 @@ fn batch_endpoint_serves_mixed_workload_across_sessions() {
     // A warm session answers the identical workload purely from disk +
     // LRU, and byte-for-byte identically.
     let svc2 = FrontierService::new(serve_cfg(), Some(FrontierStore::new(&dir)));
-    let warm = svc2.query_batch(&models, &requests);
+    let warm = svc2.batch(&requests, &BatchOptions::models(&models));
     let s2 = svc2.stats.snapshot();
     assert_eq!(s2.builds, 0);
     assert_eq!(s2.store_hits, 2);
