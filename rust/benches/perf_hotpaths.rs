@@ -32,7 +32,10 @@ use ntorc::mip::{Choice, DeployProblem};
 use ntorc::nn::{train_step, Adam, AdamConfig, NativeModel};
 use ntorc::rng::Rng;
 use ntorc::ser::{parse_json, Json};
-use ntorc::serve::{BatchOptions, BatchRequest, FrontierService, FrontierStore, ServeConfig};
+use ntorc::serve::{
+    BatchOptions, BatchRequest, FrontierKey, FrontierService, FrontierStore, ServeConfig,
+    ServedFrontier, StoreFormat,
+};
 use ntorc::tensor::{matmul, Tensor};
 
 fn main() {
@@ -348,6 +351,58 @@ fn main() {
     }
     println!("    -> {verified} sweep answers verified within 1% of the exact optimum");
 
+    // --- binary vs JSON store codec on the wide-grid frontier --------------
+    // The store-format acceptance bar (docs/STORE_FORMAT.md): on the
+    // 4^10-point exact frontier a binary cold load must be >= 5x faster
+    // than the JSON parse and spend <= 0.5x the bytes per point.
+    let wide_key = FrontierKey { hash: 0x51DE_6121D, name: "wide-4pow10".to_string() };
+    let sf_wide = ServedFrontier::from_problem(wide_key.clone(), &wide, exact_wide);
+    let json_dir = std::env::temp_dir().join(format!("ntorc_bench_sj_{}", std::process::id()));
+    let bin_dir = std::env::temp_dir().join(format!("ntorc_bench_sb_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&json_dir);
+    let _ = std::fs::remove_dir_all(&bin_dir);
+    let json_store = FrontierStore::new(&json_dir);
+    let bin_store = FrontierStore::new(&bin_dir).with_format(StoreFormat::Bin);
+    let json_path = json_store.save(&sf_wide).expect("json save");
+    let bin_path = bin_store.save(&sf_wide).expect("bin save");
+    let points = sf_wide.index.len() as f64;
+    let json_bytes = std::fs::metadata(&json_path).expect("json doc").len() as f64;
+    let bin_bytes = std::fs::metadata(&bin_path).expect("bin doc").len() as f64;
+    let t0 = std::time::Instant::now();
+    let via_json = json_store.load(&wide_key).expect("json load").expect("json doc present");
+    let json_load_ns = t0.elapsed().as_nanos() as f64;
+    b.record("store_load_json/4pow10", json_load_ns);
+    let t0 = std::time::Instant::now();
+    let via_bin = bin_store.load(&wide_key).expect("bin load").expect("bin doc present");
+    let store_load_ns = t0.elapsed().as_nanos() as f64;
+    b.record("store_load_bin/4pow10", store_load_ns);
+    let store_bytes_per_point = bin_bytes / points;
+    assert_eq!(via_bin.index.len(), via_json.index.len());
+    for i in [0usize, 1, 1 << 10, (1 << 20) - 1] {
+        assert_eq!(via_bin.index.point(i), via_json.index.point(i), "stored point {i}");
+        assert_eq!(via_bin.index.pick(i), via_json.index.pick(i), "stored pick {i}");
+    }
+    println!(
+        "    -> bin load {:.1} ms vs json {:.1} ms ({:.1}x faster); {:.1} B/pt vs {:.1} B/pt \
+         ({:.2}x)",
+        store_load_ns / 1e6,
+        json_load_ns / 1e6,
+        json_load_ns / store_load_ns.max(1.0),
+        store_bytes_per_point,
+        json_bytes / points,
+        bin_bytes / json_bytes
+    );
+    assert!(
+        store_load_ns * 5.0 <= json_load_ns,
+        "bin load {store_load_ns}ns not 5x faster than json {json_load_ns}ns"
+    );
+    assert!(
+        bin_bytes * 2.0 <= json_bytes,
+        "bin doc {bin_bytes}B not half the json doc {json_bytes}B"
+    );
+    let _ = std::fs::remove_dir_all(&json_dir);
+    let _ = std::fs::remove_dir_all(&bin_dir);
+
     // Regression report + gate (see module docs).
     let report = Json::obj(vec![
         ("frontier_build_ns", Json::num(frontier_build_ns)),
@@ -361,6 +416,8 @@ fn main() {
         ("serve_batch_ns_per_query", Json::num(serve_batch_ns_per_query)),
         ("eps_build_ns", Json::num(eps_build_ns)),
         ("eps_points_ratio", Json::num(eps_points_ratio)),
+        ("store_load_ns", Json::num(store_load_ns)),
+        ("store_bytes_per_point", Json::num(store_bytes_per_point)),
     ]);
     std::fs::create_dir_all("results").expect("results dir");
     std::fs::write("results/BENCH_frontier.json", report.to_pretty()).expect("bench json");
@@ -375,9 +432,9 @@ fn main() {
         let v = report.get(key).unwrap().as_f64().unwrap();
         if key == "bb_nodes" {
             v.ceil()
-        } else if key == "eps_points_ratio" {
-            // A machine-independent size ratio (< 1), not wall-clock:
-            // 2x headroom without the integer ceil.
+        } else if key == "eps_points_ratio" || key == "store_bytes_per_point" {
+            // Machine-independent size metrics, not wall-clock: 2x
+            // headroom without the integer ceil.
             2.0 * v
         } else {
             (3.0 * v).ceil()
@@ -405,6 +462,11 @@ fn main() {
         ),
         ("eps_build_ns", Json::num(ratchet("eps_build_ns"))),
         ("eps_points_ratio", Json::num(ratchet("eps_points_ratio"))),
+        ("store_load_ns", Json::num(ratchet("store_load_ns"))),
+        (
+            "store_bytes_per_point",
+            Json::num(ratchet("store_bytes_per_point")),
+        ),
     ]);
     std::fs::write("results/BENCH_frontier.ratchet.json", ratchet_doc.to_pretty())
         .expect("ratchet json");
@@ -425,6 +487,8 @@ fn main() {
             "serve_batch_ns_per_query",
             "eps_build_ns",
             "eps_points_ratio",
+            "store_load_ns",
+            "store_bytes_per_point",
         ] {
             let measured = report.get(key).unwrap().as_f64().unwrap();
             // Keys absent from the baseline are not gated (lets the

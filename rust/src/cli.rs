@@ -11,6 +11,9 @@ use anyhow::{bail, Result};
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: String,
+    /// Optional subcommand (`ntorc store migrate`); empty when absent.
+    /// Commands that take no subcommand reject a non-empty one.
+    pub sub: String,
     pub flags: BTreeMap<String, Vec<String>>,
 }
 
@@ -22,6 +25,11 @@ impl Args {
         if let Some(cmd) = it.peek() {
             if !cmd.starts_with("--") {
                 out.command = it.next().unwrap().clone();
+                if let Some(sub) = it.peek() {
+                    if !sub.starts_with("--") {
+                        out.sub = it.next().unwrap().clone();
+                    }
+                }
             }
         }
         while let Some(arg) = it.next() {
@@ -132,6 +140,11 @@ Experiment regeneration (tables/figures of the paper)
   fig4  fig5  fig7  fig8  table1  table2  table3  table4
 
 Utilities
+  store migrate   Re-encode a frontier store in place (--store dir
+                  --format bin|json; docs/STORE_FORMAT.md) and rebuild
+                  its manifest
+  store verify    Audit a store: every document decodes and agrees with
+                  the manifest (--store dir); non-empty findings exit 1
   list-models     List AOT artifacts the runtime can load
   export-dataset  Emit one simulated run (sensor input + target) as CSV
                   (--profile <name> from the workload's profile list;
@@ -197,8 +210,17 @@ mod tests {
     }
 
     #[test]
-    fn positional_after_command_rejected() {
-        let r = Args::parse(&["cmd".to_string(), "stray".to_string()]);
-        assert!(r.is_err());
+    fn subcommand_parses_and_third_positional_rejected() {
+        // One extra positional is the subcommand slot (`ntorc store
+        // migrate`) — main.rs rejects it for commands that take none.
+        let a = parse(&["store", "migrate", "--format", "bin"]);
+        assert_eq!(a.command, "store");
+        assert_eq!(a.sub, "migrate");
+        assert_eq!(a.get("format"), Some("bin"));
+        let plain = parse(&["serve", "--capacity", "4"]);
+        assert_eq!(plain.sub, "");
+        // A third positional is always an error.
+        let raw = vec!["store".to_string(), "migrate".to_string(), "stray".to_string()];
+        assert!(Args::parse(&raw).is_err());
     }
 }

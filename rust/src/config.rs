@@ -12,6 +12,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::PipelineConfig;
 use crate::hpo::{Sampler, SearchSpace};
 use crate::ser::{parse_toml_subset, Json};
+use crate::serve::StoreFormat;
 use crate::solver::SolverKind;
 
 /// Named presets.
@@ -138,6 +139,11 @@ fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
             let n = as_usize(v)?;
             cfg.store_max_docs = if n == 0 { None } else { Some(n) };
         }
+        // [store]
+        "store.format" => {
+            let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
+            cfg.store_format = StoreFormat::parse(s)?;
+        }
         // [http]
         "http.addr" => {
             let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
@@ -237,6 +243,11 @@ store = ""            # e.g. "results/frontiers" to persist built frontiers
 max_points = 0        # frontier guardrail cap (0 = exact, unlimited)
 store_max_docs = 0    # persisted-document cap, oldest evicted (0 = unbounded)
 
+[store]
+format = "bin"        # bin | json: on-disk frontier document encoding
+                      # (docs/STORE_FORMAT.md); loads accept both, and
+                      # `ntorc store migrate` converts a store in place
+
 [http]
 addr = "127.0.0.1:7070"   # ntorc httpd bind address (:0 = ephemeral port)
 threads = 4               # worker pool; one live connection per worker
@@ -280,6 +291,7 @@ mod tests {
         assert_eq!(cfg.frontier_store, None);
         assert_eq!(cfg.frontier_max_points, None);
         assert_eq!(cfg.store_max_docs, None);
+        assert_eq!(cfg.store_format, StoreFormat::Bin);
         assert_eq!(cfg.solver, SolverKind::Frontier);
         assert_eq!(cfg.frontier_epsilon, None);
         assert_eq!(cfg.http.addr, "127.0.0.1:7070");
@@ -320,6 +332,12 @@ mod tests {
         assert_eq!(cfg.store_max_docs, Some(64));
         apply_override(&mut cfg, "serve.store_max_docs=0").unwrap();
         assert_eq!(cfg.store_max_docs, None);
+        apply_override(&mut cfg, "store.format=json").unwrap();
+        assert_eq!(cfg.store_format, StoreFormat::Json);
+        apply_override(&mut cfg, "store.format=bin").unwrap();
+        assert_eq!(cfg.store_format, StoreFormat::Bin);
+        assert!(apply_override(&mut cfg, "store.format=cbor").is_err());
+        assert_eq!(cfg.store_format, StoreFormat::Bin, "failed override must not apply");
     }
 
     #[test]

@@ -34,7 +34,9 @@ use crate::layers::{LayerKind, LayerSpec, NetConfig};
 use crate::mip::{DeployProblem, Solution};
 use crate::nn::{Adam, AdamConfig, NativeModel};
 use crate::rng::Rng;
-use crate::serve::{FrontierService, FrontierStore, ServeConfig, ServedFrontier, WorkloadKey};
+use crate::serve::{
+    FrontierService, FrontierStore, ServeConfig, ServedFrontier, StoreFormat, WorkloadKey,
+};
 use crate::solver::{self, Solver, SolverKind, SolverOpts};
 use crate::workload::{self, Workload};
 
@@ -453,6 +455,10 @@ pub struct PipelineConfig {
     /// Optional document cap on the persistent store (oldest evicted;
     /// `serve.store_max_docs`). `None` = unbounded.
     pub store_max_docs: Option<usize>,
+    /// On-disk encoding new store documents are written in
+    /// (`store.format = json|bin`); loads accept both, so flipping this
+    /// never cold-starts an existing store.
+    pub store_format: StoreFormat,
     /// HTTP front-end knobs (`ntorc httpd`; `[http]` keys).
     pub http: crate::httpd::HttpConfig,
 }
@@ -476,6 +482,7 @@ impl Default for PipelineConfig {
             frontier_epsilon: None,
             solver: SolverKind::Frontier,
             store_max_docs: None,
+            store_format: StoreFormat::Bin,
             http: crate::httpd::HttpConfig::default(),
         }
     }
@@ -511,9 +518,11 @@ impl PipelineConfig {
 
     /// The persistent store this config points at (`None` = memory-only).
     pub fn frontier_store(&self) -> Option<FrontierStore> {
-        self.frontier_store
-            .as_ref()
-            .map(|d| FrontierStore::new(d.as_str()).with_max_docs(self.store_max_docs))
+        self.frontier_store.as_ref().map(|d| {
+            FrontierStore::new(d.as_str())
+                .with_max_docs(self.store_max_docs)
+                .with_format(self.store_format)
+        })
     }
 
     /// Fast preset for tests / smoke runs.

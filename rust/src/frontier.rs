@@ -510,6 +510,24 @@ impl FrontierIndex {
         self.costs.is_empty()
     }
 
+    /// The cost slab (strictly decreasing; parallel to
+    /// [`latencies`](Self::latencies)). Exposed so the binary codec can
+    /// write points as flat slabs instead of walking `point(i)`.
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// The latency slab (strictly increasing).
+    pub fn latencies(&self) -> &[f64] {
+        &self.latencies
+    }
+
+    /// The flat row-major pick slab (`len() * n_layers()` entries; see
+    /// [`pick`](Self::pick) for the per-point view).
+    pub fn picks_flat(&self) -> &[u32] {
+        &self.picks
+    }
+
     /// Latency of the fastest (most expensive) point.
     pub fn min_latency(&self) -> Option<f64> {
         self.latencies.first().copied()

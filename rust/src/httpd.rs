@@ -676,6 +676,13 @@ fn route(sh: &Shared, req: &Request) -> Reply {
                     Json::num(*sh.build_permits.lock().unwrap() as f64),
                 ),
             ]);
+            // Store totals come from the manifest (docs/STORE_FORMAT.md)
+            // — no directory walk on this endpoint; null = memory-only.
+            let store = sh
+                .svc
+                .store()
+                .map(|s| s.stats().to_json())
+                .unwrap_or(Json::Null);
             Reply::ok(Json::obj(vec![
                 ("v", Json::num(api::API_VERSION as f64)),
                 (
@@ -683,6 +690,7 @@ fn route(sh: &Shared, req: &Request) -> Reply {
                     Json::obj(vec![
                         ("stats", sh.svc.stats.snapshot().to_json()),
                         ("http", http),
+                        ("store", store),
                     ]),
                 ),
             ]))

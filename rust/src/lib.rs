@@ -69,10 +69,14 @@
 //!
 //! Frontiers outlive the process that built them:
 //! [`serve::FrontierStore`] persists each built index (plus its
-//! reuse-factor table) as JSON keyed by a stable
-//! [`serve::FrontierKey`] (FNV over the network's layer plan), and
-//! [`serve::FrontierService`] fronts the store with a bounded LRU of
-//! hot indices, building misses on demand and answering single
+//! reuse-factor table) keyed by a stable [`serve::FrontierKey`] (FNV
+//! over the network's layer plan) — by default as checksummed binary
+//! slab documents under two-level hash-sharded directories, with JSON
+//! as the interchange/debug encoding (`store.format`, `ntorc store
+//! migrate|verify`; `rust/docs/STORE_FORMAT.md`), indexed by a
+//! per-store manifest so GC and stats never walk the directory tree —
+//! and [`serve::FrontierService`] fronts the store with a bounded LRU
+//! of hot indices, building misses on demand and answering single
 //! (`query`) and batched (`query_batch`) budget requests with
 //! hit/miss/build telemetry ([`serve::ServeStats`]).
 //! `Pipeline::deploy`/`deploy_sweep`, the deployment-aware HPO loop and

@@ -133,6 +133,11 @@ fn run(raw: &[String]) -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     }
+    // Only `store` takes a subcommand; everywhere else an extra
+    // positional is the typo it always was.
+    if !args.sub.is_empty() && args.command != "store" {
+        bail!("unexpected positional argument '{}'", args.sub);
+    }
     match args.command.as_str() {
         "synth-db" => {
             args.check_known(COMMON_FLAGS)?;
@@ -456,6 +461,15 @@ fn run(raw: &[String]) -> Result<()> {
             );
             let (sh, srows) = report::serve_stats_rows(&snap);
             print!("{}", report::fmt_table("Frontier serve stats", &sh, &srows));
+            // Manifest-backed totals — one JSON read, no directory walk.
+            if let Some(st) = pipe.serve().store().map(|s| s.stats()) {
+                println!(
+                    "[store] {} document(s), {} point(s), {} KiB on disk",
+                    st.docs,
+                    st.points,
+                    st.bytes / 1024
+                );
+            }
             warn_truncated(&snap);
             let stats_name = args.get("stats-out").unwrap_or("serve_stats");
             let out = ntorc::ser::Json::obj(vec![
@@ -838,6 +852,47 @@ fn run(raw: &[String]) -> Result<()> {
             let path = args.get("path").unwrap_or("ntorc.toml");
             std::fs::write(path, config::EXAMPLE_CONFIG)?;
             println!("wrote {path}");
+        }
+        "store" => {
+            // Store maintenance (docs/STORE_FORMAT.md): re-encode in
+            // place or audit manifest <-> directory agreement.
+            args.check_known(&[COMMON_FLAGS, &["store", "format"]].concat())?;
+            let dir = args.get("store").unwrap_or("results/frontiers");
+            let store = ntorc::serve::FrontierStore::new(dir);
+            match args.sub.as_str() {
+                "migrate" => {
+                    let to =
+                        ntorc::serve::StoreFormat::parse(args.get("format").unwrap_or("bin"))?;
+                    let r = store.migrate(to)?;
+                    println!(
+                        "[store] {dir}: migrated to {} — {} converted, {} already {}, {} failed",
+                        to.name(),
+                        r.converted,
+                        r.kept,
+                        to.name(),
+                        r.failed
+                    );
+                    if r.failed > 0 {
+                        bail!("{} document(s) failed to decode (left in place)", r.failed);
+                    }
+                }
+                "verify" => {
+                    let r = store.verify()?;
+                    println!(
+                        "[store] {dir}: {} document(s), {} point(s), {} byte(s)",
+                        r.docs, r.points, r.bytes
+                    );
+                    if !r.problems.is_empty() {
+                        for p in &r.problems {
+                            eprintln!("[store]   problem: {p}");
+                        }
+                        bail!("store verification found {} problem(s)", r.problems.len());
+                    }
+                    println!("[store] manifest and directory agree");
+                }
+                "" => bail!("'store' needs a subcommand: migrate | verify"),
+                other => bail!("unknown store subcommand '{other}' (migrate | verify)"),
+            }
         }
         other => bail!("unknown command '{other}' — try `ntorc help`"),
     }

@@ -212,6 +212,12 @@ fn write_str(out: &mut String, s: &str) {
 /// serve-stats flush (a drained HTTP server writes through this too)
 /// and the loadgen bench report.
 pub fn write_atomic(path: impl AsRef<std::path::Path>, text: &str) -> Result<()> {
+    write_atomic_bytes(path, text.as_bytes())
+}
+
+/// [`write_atomic`] for binary content (the `.nfb` frontier documents
+/// of [`crate::serve::FrontierStore`]).
+pub fn write_atomic_bytes(path: impl AsRef<std::path::Path>, bytes: &[u8]) -> Result<()> {
     let path = path.as_ref();
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
@@ -222,7 +228,7 @@ pub fn write_atomic(path: impl AsRef<std::path::Path>, text: &str) -> Result<()>
     let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
     name.push(format!(".tmp.{}", std::process::id()));
     let tmp = path.with_file_name(name);
-    std::fs::write(&tmp, text).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::write(&tmp, bytes).with_context(|| format!("write {}", tmp.display()))?;
     std::fs::rename(&tmp, path)
         .with_context(|| format!("rename into {}", path.display()))?;
     Ok(())
@@ -478,6 +484,217 @@ fn parse_toml_value(v: &str, lineno: usize) -> Result<Json> {
         .map_err(|_| anyhow!("line {lineno}: cannot parse value '{v}'"))
 }
 
+// ---------------------------------------------------------------------------
+// Binary codec primitives (the `.nfb` frontier store format)
+// ---------------------------------------------------------------------------
+
+/// Little-endian binary writer for frontier store documents
+/// (`docs/STORE_FORMAT.md`). Appends fixed-width primitives and flat
+/// slabs to an owned buffer; [`finish`](Self::finish) seals the
+/// document with a trailing FNV-1a checksum over everything written,
+/// which [`BinReader::checked`] verifies before any field is decoded.
+pub struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    pub fn new() -> BinWriter {
+        BinWriter { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> BinWriter {
+        BinWriter { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed (u32) UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+
+    /// Raw f64 slab, no length prefix — the count lives in the caller's
+    /// header so a reader can bounds-check the whole document up front.
+    pub fn f64_slab(&mut self, vals: &[f64]) {
+        self.buf.reserve(vals.len() * 8);
+        for &v in vals {
+            self.f64(v);
+        }
+    }
+
+    /// Raw u32 slab, no length prefix (see [`f64_slab`](Self::f64_slab)).
+    pub fn u32_slab(&mut self, vals: &[u32]) {
+        self.buf.reserve(vals.len() * 4);
+        for &v in vals {
+            self.u32(v);
+        }
+    }
+
+    /// Raw u32 slab narrowed to `width` ∈ {1, 2, 4} bytes per value —
+    /// the caller guarantees every value fits (frontier picks index
+    /// per-layer choice lists, so one byte almost always suffices).
+    pub fn u32_slab_narrow(&mut self, vals: &[u32], width: u8) {
+        self.buf.reserve(vals.len() * width as usize);
+        match width {
+            1 => {
+                for &v in vals {
+                    self.buf.push(v as u8);
+                }
+            }
+            2 => {
+                for &v in vals {
+                    self.bytes(&(v as u16).to_le_bytes());
+                }
+            }
+            _ => self.u32_slab(vals),
+        }
+    }
+
+    /// Append the FNV-1a checksum of everything written and return the
+    /// sealed document.
+    pub fn finish(mut self) -> Vec<u8> {
+        let sum = crate::rng::fnv1a(&self.buf);
+        self.buf.extend_from_slice(&sum.to_le_bytes());
+        self.buf
+    }
+}
+
+impl Default for BinWriter {
+    fn default() -> Self {
+        BinWriter::new()
+    }
+}
+
+/// Bounds-checked little-endian reader over a [`BinWriter`]-sealed
+/// document. Every accessor fails closed (`Err`, never a panic) on
+/// truncation, and [`checked`](Self::checked) rejects the whole
+/// document before the first field if the trailing checksum disagrees.
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    /// Verify the trailing FNV-1a checksum and return a reader over the
+    /// payload bytes that precede it.
+    pub fn checked(buf: &'a [u8]) -> Result<BinReader<'a>> {
+        if buf.len() < 8 {
+            bail!("binary document too short ({} bytes) to carry a checksum", buf.len());
+        }
+        let (payload, tail) = buf.split_at(buf.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().unwrap());
+        let got = crate::rng::fnv1a(payload);
+        if got != want {
+            bail!("binary document checksum mismatch (stored {want:#018x}, computed {got:#018x})");
+        }
+        Ok(BinReader { buf: payload, pos: 0 })
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Fail unless every payload byte was consumed — a sealed document
+    /// with trailing garbage is as corrupt as a truncated one.
+    pub fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("binary document has {} unread trailing byte(s)", self.remaining());
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow!("truncated binary document: need {n} byte(s) at offset {}", self.pos)
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed (u32) UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        Ok(std::str::from_utf8(b)
+            .map_err(|e| anyhow!("binary string is not UTF-8: {e}"))?
+            .to_string())
+    }
+
+    /// Read `n` f64s as one flat slab (the no-parse load path: a single
+    /// bounds check, then fixed-width chunking).
+    pub fn f64_slab(&mut self, n: usize) -> Result<Vec<f64>> {
+        let nbytes = n.checked_mul(8).ok_or_else(|| anyhow!("f64 slab length overflows"))?;
+        let b = self.take(nbytes)?;
+        Ok(b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Read `n` u32s as one flat slab.
+    pub fn u32_slab(&mut self, n: usize) -> Result<Vec<u32>> {
+        let nbytes = n.checked_mul(4).ok_or_else(|| anyhow!("u32 slab length overflows"))?;
+        let b = self.take(nbytes)?;
+        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Read `n` u32s stored at `width` ∈ {1, 2, 4} bytes each
+    /// ([`BinWriter::u32_slab_narrow`]).
+    pub fn u32_slab_narrow(&mut self, n: usize, width: u8) -> Result<Vec<u32>> {
+        match width {
+            1 => Ok(self.take(n)?.iter().map(|&b| b as u32).collect()),
+            2 => {
+                let nbytes =
+                    n.checked_mul(2).ok_or_else(|| anyhow!("u16 slab length overflows"))?;
+                let b = self.take(nbytes)?;
+                Ok(b.chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()) as u32)
+                    .collect())
+            }
+            4 => self.u32_slab(n),
+            w => bail!("invalid slab width {w} (expected 1, 2 or 4)"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -715,5 +932,82 @@ mod tests {
     #[test]
     fn toml_bad_line_errors() {
         assert!(parse_toml_subset("just words").is_err());
+    }
+
+    #[test]
+    fn bin_primitives_round_trip_through_checksum() {
+        let mut w = BinWriter::new();
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 7);
+        w.f64(-0.0);
+        w.str("nfb/δ-doc");
+        w.f64_slab(&[1.5, f64::MIN_POSITIVE, 1e300]);
+        w.u32_slab(&[0, 1, u32::MAX]);
+        let doc = w.finish();
+        let mut r = BinReader::checked(&doc).unwrap();
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 7);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.str().unwrap(), "nfb/δ-doc");
+        assert_eq!(r.f64_slab(3).unwrap(), vec![1.5, f64::MIN_POSITIVE, 1e300]);
+        assert_eq!(r.u32_slab(3).unwrap(), vec![0, 1, u32::MAX]);
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn bin_reader_rejects_corruption_truncation_and_trailing_bytes() {
+        let mut w = BinWriter::new();
+        w.u64(42);
+        w.f64_slab(&[3.25; 4]);
+        let doc = w.finish();
+
+        // Any flipped payload or checksum byte fails closed at `checked`.
+        for i in 0..doc.len() {
+            let mut bad = doc.clone();
+            bad[i] ^= 0x01;
+            assert!(BinReader::checked(&bad).is_err(), "flip at byte {i} accepted");
+        }
+        // Truncation: either the checksum no longer matches or the
+        // document is too short to carry one.
+        for cut in 0..doc.len() {
+            assert!(BinReader::checked(&doc[..cut]).is_err(), "truncation at {cut} accepted");
+        }
+        // Reads past the payload end fail, not panic.
+        let mut r = BinReader::checked(&doc).unwrap();
+        assert_eq!(r.u64().unwrap(), 42);
+        assert!(r.f64_slab(5).is_err());
+        // A checksum-valid document with unread bytes fails `done`.
+        let mut r2 = BinReader::checked(&doc).unwrap();
+        assert_eq!(r2.u64().unwrap(), 42);
+        assert!(r2.done().is_err());
+    }
+
+    #[test]
+    fn bin_narrow_slabs_round_trip_and_reject_bad_widths() {
+        for (width, vals) in [
+            (1u8, vec![0u32, 7, 255]),
+            (2, vec![0, 256, 65535]),
+            (4, vec![0, 65536, u32::MAX]),
+        ] {
+            let mut w = BinWriter::new();
+            w.u32_slab_narrow(&vals, width);
+            let doc = w.finish();
+            let mut r = BinReader::checked(&doc).unwrap();
+            assert_eq!(r.u32_slab_narrow(vals.len(), width).unwrap(), vals);
+            r.done().unwrap();
+        }
+        let doc = BinWriter::new().finish();
+        let mut r = BinReader::checked(&doc).unwrap();
+        assert!(r.u32_slab_narrow(0, 3).is_err());
+    }
+
+    #[test]
+    fn bin_str_rejects_invalid_utf8() {
+        let mut w = BinWriter::new();
+        w.u32(2);
+        w.bytes(&[0xFF, 0xFE]);
+        let doc = w.finish();
+        let mut r = BinReader::checked(&doc).unwrap();
+        assert!(r.str().is_err());
     }
 }

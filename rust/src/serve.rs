@@ -73,7 +73,7 @@
 //! store answers a full budget sweep with its build counter still at
 //! zero, bit-identical to fresh `solve_bb` re-solves.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -83,11 +83,11 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{parallel_map, CostModels, LATENCY_BUDGET_CYCLES};
-use crate::frontier::FrontierIndex;
+use crate::frontier::{FrontierIndex, FrontierStats};
 use crate::layers::{LayerKind, NetConfig};
 use crate::mip::{DeployProblem, Solution};
 use crate::rng::hash_fields;
-use crate::ser::{parse_json, Json};
+use crate::ser::{parse_json, BinReader, BinWriter, Json};
 use crate::solver::{configured_frontier, SolverOpts};
 
 // ---------------------------------------------------------------------------
@@ -285,11 +285,329 @@ impl ServedFrontier {
         out.check()?;
         Ok(out)
     }
+
+    /// Encode as a binary `.nfb` document (`docs/STORE_FORMAT.md`):
+    /// magic + version + key header, the stats block, the per-layer
+    /// reuse table, then the three point slabs (costs, latencies, picks)
+    /// flat little-endian, sealed by a trailing FNV-1a checksum. Picks
+    /// are narrowed to the smallest width ∈ {1, 2, 4} bytes that holds
+    /// every choice index — on wide frontiers the pick slab dominates
+    /// the document, and choice lists are short.
+    pub fn to_bin(&self) -> Vec<u8> {
+        let n = self.index.len();
+        let n_layers = self.index.n_layers();
+        let pick_width = pick_width_for(&self.reuse);
+        let cap = 96
+            + self.key.name.len()
+            + 16 * n
+            + pick_width as usize * n * n_layers
+            + 8 * self.reuse.iter().map(|l| l.len()).sum::<usize>();
+        let mut w = BinWriter::with_capacity(cap);
+        w.bytes(&BIN_MAGIC);
+        w.u32(BIN_VERSION);
+        w.u64(self.key.hash);
+        w.str(&self.key.name);
+        w.u32(n_layers as u32);
+        w.u64(n as u64);
+        w.u32(pick_width as u32);
+        let st = &self.index.stats;
+        w.u64(st.candidates);
+        w.u64(st.pruned);
+        w.u64(st.peak_level as u64);
+        w.f64(st.build_seconds);
+        w.u64(st.workers as u64);
+        w.u32(st.truncated as u32);
+        w.f64(st.epsilon);
+        w.u64(st.eps_pruned);
+        for layer in &self.reuse {
+            w.u32(layer.len() as u32);
+            for &r in layer {
+                w.u32(r as u32);
+            }
+        }
+        w.f64_slab(self.index.costs());
+        w.f64_slab(self.index.latencies());
+        w.u32_slab_narrow(self.index.picks_flat(), pick_width);
+        w.finish()
+    }
+
+    /// Decode and re-verify a binary document: checksum first (a flipped
+    /// bit anywhere fails before any field is trusted), then bounds-
+    /// checked field reads, then the same structural invariants the JSON
+    /// path enforces ([`FrontierIndex::from_parts`] + [`check`](Self::check)).
+    pub fn from_bin(buf: &[u8]) -> Result<ServedFrontier> {
+        let mut r = BinReader::checked(buf)?;
+        if r.u32()? != u32::from_le_bytes(BIN_MAGIC) {
+            bail!("not a binary frontier document (bad magic)");
+        }
+        let version = r.u32()?;
+        if version != BIN_VERSION {
+            bail!("unsupported binary frontier version {version}");
+        }
+        let hash = r.u64()?;
+        let name = r.str()?;
+        let n_layers = r.u32()? as usize;
+        let n = usize::try_from(r.u64()?)
+            .map_err(|_| anyhow!("point count does not fit this platform"))?;
+        let pick_width = u8::try_from(r.u32()?).unwrap_or(0);
+        // Claimed sizes are bounded by the actual payload before any
+        // allocation keys off them (defense in depth past the checksum).
+        if n_layers > r.remaining() / 4 {
+            bail!("layer count {n_layers} exceeds the document size");
+        }
+        if n > 0 && n.saturating_mul(16) > r.remaining() {
+            bail!("point count {n} exceeds the document size");
+        }
+        let stats = FrontierStats {
+            points: n,
+            candidates: r.u64()?,
+            pruned: r.u64()?,
+            peak_level: r.u64()? as usize,
+            build_seconds: r.f64()?,
+            workers: r.u64()? as usize,
+            truncated: match r.u32()? {
+                0 => false,
+                1 => true,
+                v => bail!("'truncated' flag holds {v} (expected 0 or 1)"),
+            },
+            epsilon: r.f64()?,
+            eps_pruned: r.u64()?,
+        };
+        let mut reuse: Vec<Vec<usize>> = Vec::with_capacity(n_layers);
+        for k in 0..n_layers {
+            let len = r.u32()? as usize;
+            let layer = r.u32_slab(len)?;
+            if layer.iter().any(|&v| v == 0) {
+                bail!("reuse[{k}] holds a zero reuse factor");
+            }
+            reuse.push(layer.into_iter().map(|v| v as usize).collect());
+        }
+        let costs = r.f64_slab(n)?;
+        let latencies = r.f64_slab(n)?;
+        let n_picks = n
+            .checked_mul(n_layers)
+            .ok_or_else(|| anyhow!("pick slab length overflows"))?;
+        let picks = r.u32_slab_narrow(n_picks, pick_width)?;
+        r.done()?;
+        let index = FrontierIndex::from_parts(costs, latencies, picks, n_layers, stats)
+            .map_err(|e| anyhow!("frontier invariants: {e}"))?;
+        let out = ServedFrontier { key: FrontierKey { hash, name }, index, reuse };
+        out.check()?;
+        Ok(out)
+    }
+}
+
+/// Smallest pick width (bytes) that can hold every choice index: picks
+/// index the per-layer choice lists, so the longest list bounds them.
+fn pick_width_for(reuse: &[Vec<usize>]) -> u8 {
+    let max_choices = reuse.iter().map(|l| l.len()).max().unwrap_or(0);
+    if max_choices <= 1 << 8 {
+        1
+    } else if max_choices <= 1 << 16 {
+        2
+    } else {
+        4
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Persistence
 // ---------------------------------------------------------------------------
+
+/// Magic prefix of a binary frontier document.
+pub const BIN_MAGIC: [u8; 4] = *b"NTFB";
+
+/// Format version written into (and required from) every binary
+/// document. Bump on any layout change; old readers fail closed.
+pub const BIN_VERSION: u32 = 1;
+
+/// File extension of binary frontier documents.
+pub const BIN_EXT: &str = "nfb";
+
+/// Name of the per-store manifest (`docs/STORE_FORMAT.md`): one entry
+/// per persisted document with its size, point count, ε and mtime, so
+/// GC and stats reporting read one JSON file instead of statting the
+/// directory tree. Excluded from [`FrontierStore::list`].
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// On-disk encoding of store documents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreFormat {
+    /// Pretty-printed JSON, flat in the store directory — the
+    /// interchange/debug format (and the only one before format v1).
+    Json,
+    /// Binary `.nfb` slabs under two-level FNV-prefix shard directories
+    /// — one read + checksum, no parse.
+    Bin,
+}
+
+impl StoreFormat {
+    /// Parse a `store.format` config value.
+    pub fn parse(s: &str) -> Result<StoreFormat> {
+        match s {
+            "json" => Ok(StoreFormat::Json),
+            "bin" => Ok(StoreFormat::Bin),
+            other => bail!("unknown store format '{other}' (expected 'json' or 'bin')"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreFormat::Json => "json",
+            StoreFormat::Bin => "bin",
+        }
+    }
+
+    /// The one other format (loads fall back to it; saves clean it up).
+    fn other(self) -> StoreFormat {
+        match self {
+            StoreFormat::Json => StoreFormat::Bin,
+            StoreFormat::Bin => StoreFormat::Json,
+        }
+    }
+}
+
+/// One manifest row: everything GC and stats need about a document
+/// without opening it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    /// Store-relative path, `/`-separated.
+    pub file: String,
+    pub bytes: u64,
+    pub points: u64,
+    pub epsilon: f64,
+    /// Document mtime in millis since the epoch (the GC eviction order).
+    pub mtime_ms: u64,
+}
+
+/// The per-store manifest: key hash → [`ManifestEntry`], persisted as
+/// `manifest.json` next to the documents. Read-modify-write only ever
+/// happens under the store's [`StoreLock`]; a missing or corrupt
+/// manifest is rebuilt from a directory scan, so it can never gate
+/// correctness — only save the stat storm.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub docs: BTreeMap<u64, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Read the manifest of `dir`; `None` when missing or unreadable
+    /// (callers rebuild from the directory).
+    pub fn load(dir: &Path) -> Option<Manifest> {
+        let text = std::fs::read_to_string(dir.join(MANIFEST_FILE)).ok()?;
+        Manifest::from_json(&parse_json(&text).ok()?).ok()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let docs = self
+            .docs
+            .iter()
+            .map(|(hash, e)| {
+                (
+                    format!("{hash:016x}"),
+                    Json::obj(vec![
+                        ("file", Json::str(e.file.clone())),
+                        ("bytes", Json::num(e.bytes as f64)),
+                        ("points", Json::num(e.points as f64)),
+                        ("epsilon", Json::num(e.epsilon)),
+                        ("mtime_ms", Json::num(e.mtime_ms as f64)),
+                    ]),
+                )
+            })
+            .collect::<BTreeMap<String, Json>>();
+        Json::obj(vec![("version", Json::num(1.0)), ("docs", Json::Obj(docs))])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let version = j.get("version")?.as_f64().unwrap_or(0.0);
+        if version != 1.0 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut docs = BTreeMap::new();
+        for (hex, entry) in j
+            .get("docs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("'docs' must be an object"))?
+        {
+            let hash = u64::from_str_radix(hex, 16)
+                .map_err(|_| anyhow!("manifest key '{hex}' is not a hex hash"))?;
+            let field = |name: &str| -> Result<f64> {
+                entry
+                    .get(name)?
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("manifest {hex}.{name} must be a number"))
+            };
+            let file = entry
+                .get("file")?
+                .as_str()
+                .ok_or_else(|| anyhow!("manifest {hex}.file must be a string"))?
+                .to_string();
+            docs.insert(
+                hash,
+                ManifestEntry {
+                    file,
+                    bytes: field("bytes")? as u64,
+                    points: field("points")? as u64,
+                    epsilon: field("epsilon")?,
+                    mtime_ms: field("mtime_ms")? as u64,
+                },
+            );
+        }
+        Ok(Manifest { docs })
+    }
+
+    /// Aggregate the manifest into [`StoreStats`].
+    pub fn stats(&self) -> StoreStats {
+        let mut out = StoreStats::default();
+        for e in self.docs.values() {
+            out.docs += 1;
+            out.bytes += e.bytes;
+            out.points += e.points;
+        }
+        out
+    }
+}
+
+/// Manifest-derived aggregates (what `ntorc serve` and `/v1/stats`
+/// report without walking the store directory).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StoreStats {
+    pub docs: u64,
+    pub bytes: u64,
+    pub points: u64,
+}
+
+impl StoreStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("docs", Json::num(self.docs as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("points", Json::num(self.points as f64)),
+        ])
+    }
+}
+
+/// What [`FrontierStore::migrate`] did.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MigrateReport {
+    /// Documents re-encoded into the target format.
+    pub converted: usize,
+    /// Documents already in the target format (left in place).
+    pub kept: usize,
+    /// Documents that failed to decode (left untouched).
+    pub failed: usize,
+}
+
+/// What [`FrontierStore::verify`] found.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub docs: usize,
+    pub bytes: u64,
+    pub points: u64,
+    /// Human-readable manifest ↔ directory disagreements and decode
+    /// failures; empty means the store is healthy.
+    pub problems: Vec<String>,
+}
 
 /// Name of the advisory writer-lock file inside a store directory
 /// (filtered out of [`FrontierStore::list`] by its extension).
@@ -439,22 +757,31 @@ fn lock_is_stale(path: &Path, stale_after: Duration) -> bool {
     stamp_stale || mtime_stale
 }
 
-/// On-disk frontier store: one JSON document per [`FrontierKey`] under
-/// `dir`. Writes are atomic (tmp file + rename) and serialized by the
-/// cross-process [`StoreLock`] (held across save + GC); loads re-verify
-/// every invariant before a document can serve queries and never need
-/// the lock. An optional document cap
-/// ([`with_max_docs`](Self::with_max_docs)) garbage-collects the
-/// oldest documents after each save, so a long-lived store shared
-/// across many architectures and workloads cannot grow unboundedly.
+/// On-disk frontier store: one document per [`FrontierKey`] under
+/// `dir`, in the configured [`StoreFormat`] — flat pretty-JSON
+/// (interchange/debug, and every store before format v1) or binary
+/// `.nfb` slabs under two-level FNV-prefix shards. Writes are atomic
+/// (tmp file + rename) and serialized by the cross-process
+/// [`StoreLock`] (held across save + manifest update + GC); loads
+/// re-verify every invariant before a document can serve queries and
+/// never need the lock. Loads also fall back to the *other* format, so
+/// a bin-configured service serves a legacy flat-JSON store warm (and
+/// vice versa) — `ntorc store migrate` makes the conversion permanent.
+/// An optional document cap ([`with_max_docs`](Self::with_max_docs))
+/// garbage-collects the oldest documents after each save, ordered by
+/// the per-store [`Manifest`] rather than a directory stat storm.
 pub struct FrontierStore {
     dir: PathBuf,
     max_docs: Option<usize>,
+    format: StoreFormat,
 }
 
 impl FrontierStore {
+    /// A store writing JSON documents (the historical default —
+    /// [`with_format`](Self::with_format) opts into binary; the
+    /// pipeline config defaults to [`StoreFormat::Bin`]).
     pub fn new(dir: impl Into<PathBuf>) -> FrontierStore {
-        FrontierStore { dir: dir.into(), max_docs: None }
+        FrontierStore { dir: dir.into(), max_docs: None, format: StoreFormat::Json }
     }
 
     /// Cap the number of persisted documents (`None` = unbounded; caps
@@ -467,125 +794,466 @@ impl FrontierStore {
         self
     }
 
+    /// Select the on-disk format new saves are written in (loads always
+    /// accept both).
+    pub fn with_format(mut self, format: StoreFormat) -> FrontierStore {
+        self.format = format;
+        self
+    }
+
     pub fn max_docs(&self) -> Option<usize> {
         self.max_docs
+    }
+
+    pub fn format(&self) -> StoreFormat {
+        self.format
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// Where a save of `key` would land in the store's own format.
     pub fn path_for(&self, key: &FrontierKey) -> PathBuf {
-        self.dir.join(format!("{}.json", key.file_stem()))
+        self.path_in(self.format, key)
+    }
+
+    /// Document path for `key` in `fmt`: JSON lives flat (legacy
+    /// layout), binary under `<hh>/<hh>/` two-level shards keyed by the
+    /// leading bytes of the FNV hash — a million-document store keeps
+    /// every directory small.
+    fn path_in(&self, fmt: StoreFormat, key: &FrontierKey) -> PathBuf {
+        let stem = key.file_stem();
+        match fmt {
+            StoreFormat::Json => self.dir.join(format!("{stem}.json")),
+            StoreFormat::Bin => {
+                let hex = format!("{:016x}", key.hash);
+                self.dir.join(&hex[0..2]).join(&hex[2..4]).join(format!("{stem}.{BIN_EXT}"))
+            }
+        }
     }
 
     pub fn contains(&self, key: &FrontierKey) -> bool {
-        self.path_for(key).exists()
+        self.path_in(self.format, key).exists()
+            || self.path_in(self.format.other(), key).exists()
     }
 
     /// Persist one frontier. The tmp-then-rename dance means a crashed
     /// writer leaves either the old document or none — never half a file
-    /// under the served name. The whole save (write + rename + GC) runs
-    /// under the store's cross-process [`StoreLock`], so a concurrent
-    /// writer's GC pass can never race this one. With a document cap
-    /// set, the save then garbage-collects oldest-first down to the cap.
+    /// under the served name. The whole save (write + rename + manifest
+    /// update + GC) runs under the store's cross-process [`StoreLock`],
+    /// so a concurrent writer's GC pass can never race this one. With a
+    /// document cap set, the save then garbage-collects oldest-first
+    /// down to the cap, ordered by the manifest.
     pub fn save(&self, sf: &ServedFrontier) -> Result<PathBuf> {
         let _lock = StoreLock::acquire(&self.dir, LOCK_STALE)?;
-        let path = self.path_for(&sf.key);
-        crate::ser::write_atomic(&path, &sf.to_json().to_pretty())?;
-        self.gc_keeping(Some(&path));
+        let path = self.path_in(self.format, &sf.key);
+        let bytes = match self.format {
+            StoreFormat::Json => sf.to_json().to_pretty().into_bytes(),
+            StoreFormat::Bin => sf.to_bin(),
+        };
+        crate::ser::write_atomic_bytes(&path, &bytes)?;
+        // A save supersedes any other-format twin of the same key — a
+        // fallback load must never answer from the stale encoding.
+        let twin = self.path_in(self.format.other(), &sf.key);
+        if twin.exists() {
+            let _ = std::fs::remove_file(&twin);
+        }
+        let mut manifest = self.manifest_locked();
+        manifest.docs.insert(
+            sf.key.hash,
+            ManifestEntry {
+                file: self.relative(&path),
+                bytes: bytes.len() as u64,
+                points: sf.index.len() as u64,
+                epsilon: sf.index.stats.epsilon,
+                mtime_ms: mtime_ms(&path),
+            },
+        );
+        self.gc_manifest(&mut manifest, Some(sf.key.hash));
+        self.write_manifest(&manifest);
         Ok(path)
     }
 
-    /// Enforce the document cap: remove oldest-mtime documents until at
-    /// most `max_docs` remain (ties broken by path for determinism).
-    /// Returns the number of documents removed. Unreadable metadata or
-    /// failed removals are skipped — GC is best-effort by design; the
-    /// correctness of the store never depends on it. A standalone GC
-    /// takes the writer lock like a save; if a live writer holds it,
-    /// this pass is skipped (that writer GCs on its own way out).
+    /// Enforce the document cap through the manifest: remove
+    /// oldest-mtime documents until at most `max_docs` remain. Returns
+    /// the number removed. A standalone GC takes the writer lock like a
+    /// save; if a live writer holds it, this pass is skipped (that
+    /// writer GCs on its own way out).
     pub fn gc(&self) -> usize {
         if self.max_docs.is_none() {
             return 0;
         }
         match StoreLock::try_acquire(&self.dir, LOCK_STALE) {
-            Ok(Some(_lock)) => self.gc_keeping(None),
+            Ok(Some(_lock)) => {
+                let mut manifest = self.manifest_locked();
+                let removed = self.gc_manifest(&mut manifest, None);
+                if removed > 0 {
+                    self.write_manifest(&manifest);
+                }
+                removed
+            }
             _ => 0,
         }
     }
 
-    /// [`gc`](Self::gc), never evicting `keep` — `save` passes the path
-    /// it just renamed into place, so an mtime tie on a coarse-mtime
-    /// filesystem cannot evict the document the caller was promised.
-    fn gc_keeping(&self, keep: Option<&Path>) -> usize {
+    /// The eviction pass (caller holds the lock): order by the
+    /// manifest's `(mtime_ms, file)` — no per-document stat — and never
+    /// evict `keep` (the key a save just wrote; an mtime tie on a
+    /// coarse-mtime filesystem cannot evict the document the caller was
+    /// promised). Failed removals are skipped — GC is best-effort by
+    /// design; the correctness of the store never depends on it.
+    fn gc_manifest(&self, manifest: &mut Manifest, keep: Option<u64>) -> usize {
         let Some(cap) = self.max_docs else {
             return 0;
         };
-        let mut entries: Vec<(std::time::SystemTime, PathBuf)> = self
-            .list()
-            .into_iter()
-            .filter_map(|p| {
-                let mtime = std::fs::metadata(&p).and_then(|m| m.modified()).ok()?;
-                Some((mtime, p))
-            })
-            .collect();
-        if entries.len() <= cap {
+        if manifest.docs.len() <= cap {
             return 0;
         }
-        entries.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
-        let excess = entries.len() - cap;
+        let mut order: Vec<(u64, String, u64)> = manifest
+            .docs
+            .iter()
+            .map(|(&h, e)| (e.mtime_ms, e.file.clone(), h))
+            .collect();
+        order.sort();
+        let excess = manifest.docs.len() - cap;
         let mut removed = 0usize;
-        for (_, p) in entries.into_iter() {
+        for (_, file, hash) in order {
             if removed == excess {
                 break;
             }
-            if keep.is_some_and(|k| k == p.as_path()) {
+            if keep == Some(hash) {
                 continue;
             }
-            if std::fs::remove_file(&p).is_ok() {
+            if std::fs::remove_file(self.dir.join(&file)).is_ok() {
+                manifest.docs.remove(&hash);
                 removed += 1;
             }
         }
         removed
     }
 
-    /// Load the frontier for `key`: `Ok(None)` when absent, a clean
-    /// error when present but unreadable, corrupt, or keyed differently.
+    /// Load the frontier for `key`: `Ok(None)` when absent in either
+    /// format, a clean error when present but unreadable, corrupt, or
+    /// keyed differently. The store's own format is tried first, then
+    /// the other — cross-format transparency in both directions.
     pub fn load(&self, key: &FrontierKey) -> Result<Option<ServedFrontier>> {
-        let path = self.path_for(key);
-        if !path.exists() {
-            return Ok(None);
+        for fmt in [self.format, self.format.other()] {
+            let path = self.path_in(fmt, key);
+            if !path.exists() {
+                continue;
+            }
+            let sf = Self::load_doc(&path, fmt)?;
+            if sf.key.hash != key.hash {
+                bail!(
+                    "{}: stored key {:016x} does not match requested {:016x}",
+                    path.display(),
+                    sf.key.hash,
+                    key.hash
+                );
+            }
+            return Ok(Some(sf));
         }
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("read {}", path.display()))?;
-        let doc = parse_json(&text).with_context(|| format!("parse {}", path.display()))?;
-        let sf = ServedFrontier::from_json(&doc)
-            .with_context(|| format!("verify {}", path.display()))?;
-        if sf.key.hash != key.hash {
-            bail!(
-                "{}: stored key {:016x} does not match requested {:016x}",
-                path.display(),
-                sf.key.hash,
-                key.hash
-            );
-        }
-        Ok(Some(sf))
+        Ok(None)
     }
 
-    /// Paths of every persisted frontier (empty when the directory does
-    /// not exist yet).
+    /// Decode + re-verify one document in a known format.
+    fn load_doc(path: &Path, fmt: StoreFormat) -> Result<ServedFrontier> {
+        match fmt {
+            StoreFormat::Json => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("read {}", path.display()))?;
+                let doc = parse_json(&text).with_context(|| format!("parse {}", path.display()))?;
+                ServedFrontier::from_json(&doc)
+                    .with_context(|| format!("verify {}", path.display()))
+            }
+            StoreFormat::Bin => {
+                let bytes = std::fs::read(path)
+                    .with_context(|| format!("read {}", path.display()))?;
+                ServedFrontier::from_bin(&bytes)
+                    .with_context(|| format!("verify {}", path.display()))
+            }
+        }
+    }
+
+    /// Paths of every persisted frontier in either format (empty when
+    /// the directory does not exist yet). The manifest and lock files
+    /// are store metadata, not documents.
     pub fn list(&self) -> Vec<PathBuf> {
+        let mut out = Vec::new();
         let Ok(entries) = std::fs::read_dir(&self.dir) else {
-            return Vec::new();
+            return out;
         };
-        let mut out: Vec<PathBuf> = entries
-            .filter_map(|e| e.ok())
-            .map(|e| e.path())
-            .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
-            .collect();
+        for e in entries.filter_map(|e| e.ok()) {
+            let p = e.path();
+            if p.is_dir() {
+                walk_bin_shards(&p, 2, &mut out);
+            } else if is_doc(&p) {
+                out.push(p);
+            }
+        }
         out.sort();
         out
     }
+
+    /// Aggregate store stats from the manifest (no directory walk on
+    /// the happy path; a missing manifest costs one read-only scan).
+    pub fn stats(&self) -> StoreStats {
+        Manifest::load(&self.dir).unwrap_or_else(|| self.rebuild_manifest()).stats()
+    }
+
+    /// Re-encode every document into `to`, in place, under the store
+    /// lock; sources are removed after their replacement is durably
+    /// renamed in. The manifest is rebuilt from exactly what was seen.
+    /// Undecodable documents are left untouched and counted in
+    /// [`MigrateReport::failed`].
+    pub fn migrate(&self, to: StoreFormat) -> Result<MigrateReport> {
+        let _lock = StoreLock::acquire(&self.dir, LOCK_STALE)?;
+        let mut report = MigrateReport::default();
+        let mut manifest = Manifest::default();
+        for path in self.list() {
+            let fmt = doc_format(&path);
+            let sf = match Self::load_doc(&path, fmt) {
+                Ok(sf) => sf,
+                Err(e) => {
+                    eprintln!("[store] migrate: skipping {}: {e:#}", path.display());
+                    report.failed += 1;
+                    continue;
+                }
+            };
+            let target = self.path_in(to, &sf.key);
+            if fmt == to {
+                report.kept += 1;
+            } else {
+                let bytes = match to {
+                    StoreFormat::Json => sf.to_json().to_pretty().into_bytes(),
+                    StoreFormat::Bin => sf.to_bin(),
+                };
+                crate::ser::write_atomic_bytes(&target, &bytes)?;
+                let _ = std::fs::remove_file(&path);
+                report.converted += 1;
+            }
+            manifest.docs.insert(
+                sf.key.hash,
+                ManifestEntry {
+                    file: self.relative(&target),
+                    bytes: std::fs::metadata(&target).map(|m| m.len()).unwrap_or(0),
+                    points: sf.index.len() as u64,
+                    epsilon: sf.index.stats.epsilon,
+                    mtime_ms: mtime_ms(&target),
+                },
+            );
+        }
+        self.write_manifest(&manifest);
+        Ok(report)
+    }
+
+    /// Full store audit: every document decodes cleanly and agrees with
+    /// its manifest entry (present, same file, same byte size); every
+    /// manifest entry points at an existing file. Disagreements land in
+    /// [`VerifyReport::problems`] — an empty list means healthy.
+    pub fn verify(&self) -> Result<VerifyReport> {
+        let mut report = VerifyReport::default();
+        let manifest = Manifest::load(&self.dir).unwrap_or_default();
+        let mut seen: Vec<u64> = Vec::new();
+        for path in self.list() {
+            let rel = self.relative(&path);
+            let sf = match Self::load_doc(&path, doc_format(&path)) {
+                Ok(sf) => sf,
+                Err(e) => {
+                    report.problems.push(format!("{rel}: undecodable: {e:#}"));
+                    continue;
+                }
+            };
+            report.docs += 1;
+            report.points += sf.index.len() as u64;
+            let size = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            report.bytes += size;
+            seen.push(sf.key.hash);
+            match manifest.docs.get(&sf.key.hash) {
+                None => report.problems.push(format!("{rel}: not in the manifest")),
+                Some(e) if e.file != rel => report.problems.push(format!(
+                    "{rel}: manifest points at '{}' instead",
+                    e.file
+                )),
+                Some(e) if e.bytes != size => report.problems.push(format!(
+                    "{rel}: {size} bytes on disk, {} in the manifest",
+                    e.bytes
+                )),
+                Some(e) if e.points != sf.index.len() as u64 => report.problems.push(format!(
+                    "{rel}: {} points on disk, {} in the manifest",
+                    sf.index.len(),
+                    e.points
+                )),
+                Some(_) => {}
+            }
+        }
+        for (hash, e) in &manifest.docs {
+            if !seen.contains(hash) {
+                report
+                    .problems
+                    .push(format!("manifest entry {hash:016x} ({}) has no document", e.file));
+            }
+        }
+        Ok(report)
+    }
+
+    /// Load the manifest, rebuilding from a directory scan when missing
+    /// or corrupt (legacy stores get indexed on their first locked
+    /// operation). Caller must hold the [`StoreLock`].
+    fn manifest_locked(&self) -> Manifest {
+        Manifest::load(&self.dir).unwrap_or_else(|| self.rebuild_manifest())
+    }
+
+    /// Index the directory from scratch: binary headers are peeked with
+    /// a positioned read (no slab I/O, no parse); JSON documents pay
+    /// one full parse each — acceptable for a one-time rebuild.
+    /// Undecodable documents are skipped ([`verify`](Self::verify)
+    /// reports them; loads self-heal them).
+    fn rebuild_manifest(&self) -> Manifest {
+        let mut manifest = Manifest::default();
+        for path in self.list() {
+            let meta = match doc_format(&path) {
+                StoreFormat::Bin => peek_bin_header(&path).map(|h| (h.hash, h.points, h.epsilon)),
+                StoreFormat::Json => Self::load_doc(&path, StoreFormat::Json)
+                    .map(|sf| (sf.key.hash, sf.index.len() as u64, sf.index.stats.epsilon)),
+            };
+            let Ok((hash, points, epsilon)) = meta else {
+                continue;
+            };
+            manifest.docs.insert(
+                hash,
+                ManifestEntry {
+                    file: self.relative(&path),
+                    bytes: std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0),
+                    points,
+                    epsilon,
+                    mtime_ms: mtime_ms(&path),
+                },
+            );
+        }
+        manifest
+    }
+
+    /// Best-effort manifest write (atomic): a lost manifest is rebuilt
+    /// on the next locked operation, never a wrong answer.
+    fn write_manifest(&self, manifest: &Manifest) {
+        let path = self.dir.join(MANIFEST_FILE);
+        if let Err(e) = crate::ser::write_atomic(&path, &manifest.to_json().to_pretty()) {
+            eprintln!("[store] warning: could not write manifest: {e:#}");
+        }
+    }
+
+    /// Store-relative `/`-separated path (the manifest's `file` field).
+    fn relative(&self, path: &Path) -> String {
+        let rel = path.strip_prefix(&self.dir).unwrap_or(path);
+        rel.components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/")
+    }
+}
+
+/// Is this path a store document (either format)?
+fn is_doc(p: &Path) -> bool {
+    if p.file_name().is_some_and(|n| n == MANIFEST_FILE) {
+        return false;
+    }
+    p.extension().is_some_and(|x| x == "json" || x == BIN_EXT)
+}
+
+/// Format implied by a document's extension.
+fn doc_format(p: &Path) -> StoreFormat {
+    if p.extension().is_some_and(|x| x == BIN_EXT) {
+        StoreFormat::Bin
+    } else {
+        StoreFormat::Json
+    }
+}
+
+/// Collect `.nfb` documents under a shard directory, at most `depth`
+/// levels deep (the layout is exactly two).
+fn walk_bin_shards(dir: &Path, depth: usize, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for e in entries.filter_map(|e| e.ok()) {
+        let p = e.path();
+        if p.is_dir() {
+            if depth > 0 {
+                walk_bin_shards(&p, depth - 1, out);
+            }
+        } else if is_doc(&p) {
+            out.push(p);
+        }
+    }
+}
+
+/// File mtime in millis since the epoch (0 when unreadable — such an
+/// entry sorts oldest and gets evicted first, which is safe: eviction
+/// only ever costs a rebuild).
+fn mtime_ms(path: &Path) -> u64 {
+    std::fs::metadata(path)
+        .and_then(|m| m.modified())
+        .ok()
+        .and_then(|t| t.duration_since(UNIX_EPOCH).ok())
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// The header fields a manifest rebuild needs from a binary document,
+/// read without touching the point slabs.
+struct BinPeek {
+    hash: u64,
+    points: u64,
+    epsilon: f64,
+}
+
+/// Decode just the fixed header of a `.nfb` document via positioned
+/// reads — two small `pread`s instead of reading (and checksumming)
+/// multi-MB slabs. Used by manifest rebuilds; real loads always go
+/// through the checksummed [`ServedFrontier::from_bin`] path.
+fn peek_bin_header(path: &Path) -> Result<BinPeek> {
+    // Fixed prefix: magic(4) version(4) hash(8) name_len(4).
+    let mut head = [0u8; 20];
+    read_exact_at(path, &mut head, 0)?;
+    if head[0..4] != BIN_MAGIC {
+        bail!("{}: not a binary frontier document", path.display());
+    }
+    let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    if version != BIN_VERSION {
+        bail!("{}: unsupported binary frontier version {version}", path.display());
+    }
+    let hash = u64::from_le_bytes(head[8..16].try_into().unwrap());
+    let name_len = u32::from_le_bytes(head[16..20].try_into().unwrap()) as u64;
+    // After the name: n_layers(4) n_points(8) pick_width(4), then the
+    // stats block — candidates(8) pruned(8) peak_level(8)
+    // build_seconds(8) workers(8) truncated(4) epsilon(8) eps_pruned(8).
+    let mut rest = [0u8; 76];
+    read_exact_at(path, &mut rest, 20 + name_len)?;
+    let points = u64::from_le_bytes(rest[4..12].try_into().unwrap());
+    let epsilon = f64::from_le_bytes(rest[60..68].try_into().unwrap());
+    Ok(BinPeek { hash, points, epsilon })
+}
+
+/// Positioned exact read: `pread`-style on unix (no seek, no shared
+/// cursor), portable seek + read elsewhere.
+#[cfg(unix)]
+fn read_exact_at(path: &Path, buf: &mut [u8], offset: u64) -> Result<()> {
+    use std::os::unix::fs::FileExt;
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    f.read_exact_at(buf, offset)
+        .with_context(|| format!("read {} bytes at {offset} from {}", buf.len(), path.display()))
+}
+
+#[cfg(not(unix))]
+fn read_exact_at(path: &Path, buf: &mut [u8], offset: u64) -> Result<()> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    f.seek(SeekFrom::Start(offset))
+        .with_context(|| format!("seek to {offset} in {}", path.display()))?;
+    f.read_exact(buf)
+        .with_context(|| format!("read {} bytes at {offset} from {}", buf.len(), path.display()))
 }
 
 // ---------------------------------------------------------------------------
@@ -1518,6 +2186,186 @@ mod tests {
         let other = toy_key(4);
         std::fs::write(store.path_for(&other), &text).unwrap();
         assert!(store.load(&other).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn served_frontier_bin_round_trips_bit_identical() {
+        // ε-build so the stats block carries a non-trivial epsilon and
+        // eps_pruned — the binary codec must preserve every f64 field
+        // bit-for-bit, exactly like the JSON path.
+        let prob = toy_problem(9, 3);
+        let index = ParetoFrontier::new(1).with_epsilon(Some(0.05)).build(&prob);
+        let sf = ServedFrontier::from_problem(toy_key(9), &prob, index);
+        sf.check().unwrap();
+        let back = ServedFrontier::from_bin(&sf.to_bin()).unwrap();
+        assert_eq!(back.key, sf.key);
+        assert_eq!(back.reuse, sf.reuse);
+        assert_eq!(back.index.n_layers(), sf.index.n_layers());
+        assert_eq!(back.index.picks_flat(), sf.index.picks_flat());
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(back.index.costs()), bits(sf.index.costs()));
+        assert_eq!(bits(back.index.latencies()), bits(sf.index.latencies()));
+        let (a, b) = (back.index.stats, sf.index.stats);
+        assert_eq!(a.epsilon.to_bits(), b.epsilon.to_bits());
+        assert_eq!(a.build_seconds.to_bits(), b.build_seconds.to_bits());
+        assert_eq!(
+            (a.points, a.candidates, a.pruned, a.eps_pruned),
+            (b.points, b.candidates, b.pruned, b.eps_pruned)
+        );
+        assert_eq!((a.peak_level, a.workers, a.truncated), (b.peak_level, b.workers, b.truncated));
+        // Both persistence formats answer queries identically.
+        let via_json =
+            ServedFrontier::from_json(&parse_json(&sf.to_json().to_pretty()).unwrap()).unwrap();
+        for i in 0..sf.index.len() {
+            assert_eq!(via_json.index.point(i), back.index.point(i));
+            assert_eq!(via_json.index.pick(i), back.index.pick(i));
+        }
+        // The manifest-rebuild header peek reads the same fields the
+        // full decode does — pins the fixed offsets.
+        let dir = temp_dir("peek");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("doc.nfb");
+        std::fs::write(&p, sf.to_bin()).unwrap();
+        let h = peek_bin_header(&p).unwrap();
+        assert_eq!(h.hash, sf.key.hash);
+        assert_eq!(h.points, sf.index.len() as u64);
+        assert_eq!(h.epsilon.to_bits(), sf.index.stats.epsilon.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bin_codec_fails_closed_on_corruption_and_zero_layers() {
+        let prob = toy_problem(5, 2);
+        let index = ParetoFrontier::new(1).build(&prob);
+        let sf = ServedFrontier::from_problem(toy_key(5), &prob, index);
+        let bytes = sf.to_bin();
+        // Any single flipped bit anywhere fails the trailing checksum.
+        for pos in [0, 4, 12, bytes.len() / 2, bytes.len() - 1] {
+            let mut evil = bytes.clone();
+            evil[pos] ^= 0x40;
+            assert!(ServedFrontier::from_bin(&evil).is_err(), "flip at {pos} must fail");
+        }
+        // Truncation at any prefix fails (checksum or bounds check).
+        for cut in [0, 7, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(ServedFrontier::from_bin(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        // A checksum-valid document claiming zero layers but two points
+        // violates the frontier invariants and is rejected after decode.
+        let mut w = BinWriter::new();
+        w.bytes(&BIN_MAGIC);
+        w.u32(BIN_VERSION);
+        w.u64(5);
+        w.str("toy5");
+        w.u32(0); // n_layers
+        w.u64(2); // n_points
+        w.u32(1); // pick_width
+        for _ in 0..3 {
+            w.u64(0); // candidates, pruned, peak_level
+        }
+        w.f64(0.0); // build_seconds
+        w.u64(1); // workers
+        w.u32(0); // truncated
+        w.f64(0.0); // epsilon
+        w.u64(0); // eps_pruned
+        w.f64_slab(&[2.0, 1.0]); // costs (decreasing)
+        w.f64_slab(&[1.0, 2.0]); // latencies (increasing)
+        let err = ServedFrontier::from_bin(&w.finish()).unwrap_err();
+        assert!(err.to_string().contains("invariants"), "got: {err:#}");
+    }
+
+    #[test]
+    fn store_bin_format_shards_self_heals_and_reads_legacy_json() {
+        let dir = temp_dir("binstore");
+        let store = FrontierStore::new(&dir).with_format(StoreFormat::Bin);
+        let prob = toy_problem(13, 3);
+        let index = ParetoFrontier::new(1).build(&prob);
+        let sf = ServedFrontier::from_problem(toy_key(13), &prob, index);
+        let path = store.save(&sf).unwrap();
+        // Two-level FNV-prefix shards: dir/<hh>/<hh>/<stem>.nfb.
+        let hex = format!("{:016x}", sf.key.hash);
+        assert_eq!(path, dir.join(&hex[0..2]).join(&hex[2..4]).join(format!(
+            "{}.{BIN_EXT}",
+            sf.key.file_stem()
+        )));
+        assert!(store.contains(&sf.key));
+        assert_eq!(store.list(), vec![path.clone()]);
+        let back = store.load(&sf.key).unwrap().expect("persisted");
+        assert_eq!(back.index.len(), sf.index.len());
+        // A flipped byte on disk is a clean load error, and the service
+        // self-heals it by rebuild exactly like corrupt JSON.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(store.load(&sf.key).is_err());
+        let svc = FrontierService::new(
+            ServeConfig::default(),
+            Some(FrontierStore::new(&dir).with_format(StoreFormat::Bin)),
+        );
+        let healed = svc.resolve_with(sf.key.clone(), || toy_problem(13, 3));
+        let s = svc.stats.snapshot();
+        assert_eq!((s.builds, s.store_errors), (1, 1));
+        assert_eq!(healed.index.len(), sf.index.len());
+        // Legacy flat JSON loads transparently through a bin store ...
+        let json_side = FrontierStore::new(&dir);
+        let prob2 = toy_problem(14, 2);
+        let sf2 = ServedFrontier::from_problem(
+            toy_key(14),
+            &prob2,
+            ParetoFrontier::new(1).build(&prob2),
+        );
+        let json_path = json_side.save(&sf2).unwrap();
+        assert!(store.contains(&sf2.key));
+        assert!(store.load(&sf2.key).unwrap().is_some());
+        // ... and a bin-format save supersedes the JSON twin.
+        store.save(&sf2).unwrap();
+        assert!(!json_path.exists(), "stale twin must be removed");
+        assert!(store.load(&sf2.key).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_migrate_verify_and_manifest_agree() {
+        let dir = temp_dir("migrate");
+        let json_store = FrontierStore::new(&dir);
+        let mut keys = Vec::new();
+        for tag in 40..43u64 {
+            let prob = toy_problem(tag, 2);
+            let sf = ServedFrontier::from_problem(
+                toy_key(tag),
+                &prob,
+                ParetoFrontier::new(1).build(&prob),
+            );
+            json_store.save(&sf).unwrap();
+            keys.push((sf.key.clone(), sf.index.len()));
+        }
+        let stats = json_store.stats();
+        assert_eq!(stats.docs, 3);
+        assert!(stats.bytes > 0 && stats.points > 0);
+        // Migrate in place: every document converts, none fail.
+        let bin_store = FrontierStore::new(&dir).with_format(StoreFormat::Bin);
+        let report = bin_store.migrate(StoreFormat::Bin).unwrap();
+        assert_eq!(report, MigrateReport { converted: 3, kept: 0, failed: 0 });
+        assert!(bin_store.list().iter().all(|p| p.extension().is_some_and(|x| x == BIN_EXT)));
+        for (key, len) in &keys {
+            let back = bin_store.load(key).unwrap().expect("survives migration");
+            assert_eq!(back.index.len(), *len);
+        }
+        // Re-migrating is a no-op; manifest and directory agree.
+        let again = bin_store.migrate(StoreFormat::Bin).unwrap();
+        assert_eq!(again, MigrateReport { converted: 0, kept: 3, failed: 0 });
+        let verify = bin_store.verify().unwrap();
+        assert_eq!((verify.docs, verify.problems.len()), (3, 0), "{:?}", verify.problems);
+        assert_eq!(bin_store.stats().docs, 3);
+        // A deleted manifest is rebuilt from header peeks on demand.
+        std::fs::remove_file(dir.join(MANIFEST_FILE)).unwrap();
+        let rebuilt = bin_store.stats();
+        assert_eq!((rebuilt.docs, rebuilt.points), (3, stats.points));
+        // Deleting a document behind the manifest's back is reported.
+        std::fs::remove_file(&bin_store.list()[0]).unwrap();
+        let broken = bin_store.verify().unwrap();
+        assert!(!broken.problems.is_empty(), "missing document must be flagged");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
