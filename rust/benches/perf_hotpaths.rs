@@ -17,7 +17,10 @@
 //! node count, plus the serve-path metrics). When `NTORC_BENCH_BASELINE`
 //! points at a baseline JSON (CI uses the committed
 //! `benches/BENCH_frontier.baseline.json`), any metric more than 2x
-//! worse than its baseline value fails the run. The ratchet procedure is
+//! worse than its baseline value fails the run — except
+//! `obs_overhead_ratio`, whose baseline stores the absolute 1.05 bound
+//! (obs-on frontier build <= 5% over obs-off) and is compared directly.
+//! The ratchet procedure is
 //! documented in `benches/README.md`: copy a fresh
 //! `results/BENCH_frontier.json` over the committed file (keep headroom:
 //! CI runners are slow and shared).
@@ -351,6 +354,53 @@ fn main() {
     }
     println!("    -> {verified} sweep answers verified within 1% of the exact optimum");
 
+    // --- observability overhead (obs-on vs obs-off frontier build) ---------
+    // The [obs] acceptance bar (docs/OBSERVABILITY.md): with tracing
+    // enabled AND a live trace installed — so every build/level{k} and
+    // eps_prune span actually records — the eps wide-grid build must stay
+    // within 5% of the obs-off build. min-of-N with a warmup pass sheds
+    // scheduler noise; the baseline stores the 1.05 bound itself and the
+    // gate below compares directly against it (not the generic 2x rule).
+    let obs_bench = |n: usize| -> f64 {
+        let mut best = f64::INFINITY;
+        for i in 0..=n {
+            let t0 = std::time::Instant::now();
+            let f = ParetoFrontier::new(1).with_epsilon(Some(0.01)).build(&wide);
+            let ns = t0.elapsed().as_nanos() as f64;
+            assert!(!f.is_empty());
+            if i > 0 {
+                // Iteration 0 is the warmup.
+                best = best.min(ns);
+            }
+        }
+        best
+    };
+    let obs_off_ns = obs_bench(7);
+    let obs_dir = std::env::temp_dir().join(format!("ntorc_bench_obs_{}", std::process::id()));
+    let _ = std::fs::create_dir_all(&obs_dir);
+    let obs_cfg = ntorc::obs::ObsConfig {
+        enabled: true,
+        log_path: obs_dir.join("obs.jsonl").to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    ntorc::obs::init(&obs_cfg).expect("obs init");
+    let obs_trace = ntorc::obs::Trace::new(ntorc::obs::next_trace_id());
+    let obs_guard = ntorc::obs::install(std::sync::Arc::clone(&obs_trace));
+    let obs_on_ns = obs_bench(7);
+    drop(obs_guard);
+    ntorc::obs::init(&ntorc::obs::ObsConfig::default()).expect("obs reset");
+    let _ = std::fs::remove_dir_all(&obs_dir);
+    let obs_overhead_ratio = obs_on_ns / obs_off_ns.max(1.0);
+    b.record("obs_eps_build_on/4pow10", obs_on_ns);
+    b.record("obs_eps_build_off/4pow10", obs_off_ns);
+    println!(
+        "    -> obs-on {:.1} ms vs obs-off {:.1} ms ({:.3}x overhead, {} spans recorded)",
+        obs_on_ns / 1e6,
+        obs_off_ns / 1e6,
+        obs_overhead_ratio,
+        obs_trace.spans().len()
+    );
+
     // --- binary vs JSON store codec on the wide-grid frontier --------------
     // The store-format acceptance bar (docs/STORE_FORMAT.md): on the
     // 4^10-point exact frontier a binary cold load must be >= 5x faster
@@ -416,6 +466,7 @@ fn main() {
         ("serve_batch_ns_per_query", Json::num(serve_batch_ns_per_query)),
         ("eps_build_ns", Json::num(eps_build_ns)),
         ("eps_points_ratio", Json::num(eps_points_ratio)),
+        ("obs_overhead_ratio", Json::num(obs_overhead_ratio)),
         ("store_load_ns", Json::num(store_load_ns)),
         ("store_bytes_per_point", Json::num(store_bytes_per_point)),
     ]);
@@ -432,6 +483,10 @@ fn main() {
         let v = report.get(key).unwrap().as_f64().unwrap();
         if key == "bb_nodes" {
             v.ceil()
+        } else if key == "obs_overhead_ratio" {
+            // Fixed acceptance bound (obs-on <= 5% over obs-off), never
+            // ratcheted from a measurement.
+            1.05
         } else if key == "eps_points_ratio" || key == "store_bytes_per_point" {
             // Machine-independent size metrics, not wall-clock: 2x
             // headroom without the integer ceil.
@@ -462,6 +517,7 @@ fn main() {
         ),
         ("eps_build_ns", Json::num(ratchet("eps_build_ns"))),
         ("eps_points_ratio", Json::num(ratchet("eps_points_ratio"))),
+        ("obs_overhead_ratio", Json::num(ratchet("obs_overhead_ratio"))),
         ("store_load_ns", Json::num(ratchet("store_load_ns"))),
         (
             "store_bytes_per_point",
@@ -487,6 +543,7 @@ fn main() {
             "serve_batch_ns_per_query",
             "eps_build_ns",
             "eps_points_ratio",
+            "obs_overhead_ratio",
             "store_load_ns",
             "store_bytes_per_point",
         ] {
@@ -494,10 +551,16 @@ fn main() {
             // Keys absent from the baseline are not gated (lets the
             // baseline trail new metrics without breaking CI).
             if let Some(base) = baseline.get(key).ok().and_then(|j| j.as_f64()) {
-                if measured > 2.0 * base {
-                    failures.push(format!("{key}: {measured:.0} > 2x baseline {base:.0}"));
+                // obs_overhead_ratio is an absolute bound: the baseline
+                // stores the 1.05 ceiling itself (obs-on <= 5% over
+                // obs-off), so the generic 2x headroom does not apply.
+                let limit = if key == "obs_overhead_ratio" { base } else { 2.0 * base };
+                if measured > limit {
+                    failures.push(format!(
+                        "{key}: {measured:.3} > limit {limit:.3} (baseline {base:.3})"
+                    ));
                 } else {
-                    println!("    {key}: {measured:.0} vs baseline {base:.0} (<= 2x) ok");
+                    println!("    {key}: {measured:.3} vs limit {limit:.3} ok");
                 }
             }
         }
@@ -508,7 +571,7 @@ fn main() {
             }
             std::process::exit(1);
         }
-        println!("[perf_hotpaths] frontier metrics within 2x of baseline {path}");
+        println!("[perf_hotpaths] frontier metrics within their limits vs baseline {path}");
     }
 
     // --- candidate enumeration -------------------------------------------

@@ -152,6 +152,22 @@ fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
         "http.threads" => cfg.http.threads = as_usize(v)?,
         "http.max_inflight_builds" => cfg.http.max_inflight_builds = as_usize(v)?,
         "http.drain_timeout_ms" => cfg.http.drain_timeout_ms = as_usize(v)? as u64,
+        // [obs]
+        "obs.enabled" => {
+            cfg.obs.enabled = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?;
+        }
+        "obs.log_path" => {
+            let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
+            cfg.obs.log_path = s.to_string();
+        }
+        "obs.sample" => {
+            let f = as_f64(v)?;
+            if !(0.0..=1.0).contains(&f) {
+                bail!("obs.sample must be in [0, 1], got {f}");
+            }
+            cfg.obs.sample = f;
+        }
+        "obs.slow_ms" => cfg.obs.slow_ms = as_usize(v)? as u64,
         // [solver]
         "solver.kind" => {
             let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
@@ -254,6 +270,14 @@ threads = 4               # worker pool; one live connection per worker
 max_inflight_builds = 2   # cold-build admission permits (beyond: 429)
 drain_timeout_ms = 2000   # post-drain grace window for queued requests
 
+[obs]
+enabled = false       # request tracing + JSONL event log (the metrics
+                      # registry and GET /v1/metrics are always live;
+                      # docs/OBSERVABILITY.md)
+log_path = "results/obs.jsonl"   # JSONL event log ("" = no log)
+sample = 0.0          # fraction of fast requests logged (trace-ID hash)
+slow_ms = 250         # requests over this always log their span tree
+
 [solver]
 kind = "frontier"     # bb | dp | frontier: registry solver for direct
                       # per-budget solves (crate::solver::SolverKind)
@@ -298,6 +322,26 @@ mod tests {
         assert_eq!(cfg.http.threads, 4);
         assert_eq!(cfg.http.max_inflight_builds, 2);
         assert_eq!(cfg.http.drain_timeout_ms, 2_000);
+        assert!(!cfg.obs.enabled);
+        assert_eq!(cfg.obs.log_path, "results/obs.jsonl");
+        assert_eq!(cfg.obs.sample, 0.0);
+        assert_eq!(cfg.obs.slow_ms, 250);
+    }
+
+    #[test]
+    fn obs_overrides_parse_and_validate() {
+        let mut cfg = Preset::Smoke.pipeline();
+        apply_override(&mut cfg, "obs.enabled=true").unwrap();
+        assert!(cfg.obs.enabled);
+        apply_override(&mut cfg, "obs.log_path=results/custom.jsonl").unwrap();
+        assert_eq!(cfg.obs.log_path, "results/custom.jsonl");
+        apply_override(&mut cfg, "obs.sample=0.25").unwrap();
+        assert_eq!(cfg.obs.sample, 0.25);
+        apply_override(&mut cfg, "obs.slow_ms=10").unwrap();
+        assert_eq!(cfg.obs.slow_ms, 10);
+        assert!(apply_override(&mut cfg, "obs.sample=1.5").is_err());
+        assert_eq!(cfg.obs.sample, 0.25, "failed override must not apply");
+        assert!(apply_override(&mut cfg, "obs.enabled=7").is_err());
     }
 
     #[test]

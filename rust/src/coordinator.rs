@@ -461,6 +461,9 @@ pub struct PipelineConfig {
     pub store_format: StoreFormat,
     /// HTTP front-end knobs (`ntorc httpd`; `[http]` keys).
     pub http: crate::httpd::HttpConfig,
+    /// Observability knobs (`[obs]` keys; [`crate::obs::init`] installs
+    /// them process-wide in the serving commands).
+    pub obs: crate::obs::ObsConfig,
 }
 
 impl Default for PipelineConfig {
@@ -484,6 +487,7 @@ impl Default for PipelineConfig {
             store_max_docs: None,
             store_format: StoreFormat::Bin,
             http: crate::httpd::HttpConfig::default(),
+            obs: crate::obs::ObsConfig::default(),
         }
     }
 }

@@ -245,7 +245,9 @@ impl ParetoFrontier {
     /// budget).
     pub fn build(&self, prob: &DeployProblem) -> FrontierIndex {
         let t0 = Instant::now();
+        let _sp_prune = crate::obs::span("build/prune");
         let (pruned, maps) = prob.prune_dominated();
+        drop(_sp_prune);
         let n_layers = pruned.layers.len();
         let mut stats = FrontierStats {
             workers: self.workers,
@@ -275,20 +277,35 @@ impl ParetoFrontier {
         // Level 0: the first layer's staircase. `prune_dominated` already
         // sorted it by latency with strictly decreasing cost.
         let mut levels: Vec<Vec<Entry>> = Vec::with_capacity(n_layers);
-        let first: Vec<Entry> = pruned.layers[0]
-            .iter()
-            .enumerate()
-            .map(|(j, c)| Entry { prev: 0, choice: j as u32, cost: c.cost, latency: c.latency })
-            .collect();
-        stats.candidates += first.len() as u64;
-        stats.peak_level = stats.peak_level.max(first.len());
-        let first = self.coarsen_level(first, delta, &mut stats);
-        let first = self.cap_level(first, &mut stats);
-        levels.push(first);
+        {
+            let _sp = crate::obs::span("build/level0");
+            let first: Vec<Entry> = pruned.layers[0]
+                .iter()
+                .enumerate()
+                .map(|(j, c)| Entry {
+                    prev: 0,
+                    choice: j as u32,
+                    cost: c.cost,
+                    latency: c.latency,
+                })
+                .collect();
+            stats.candidates += first.len() as u64;
+            stats.peak_level = stats.peak_level.max(first.len());
+            let first = {
+                let _e = crate::obs::span("eps_prune");
+                self.coarsen_level(first, delta, &mut stats)
+            };
+            let first = self.cap_level(first, &mut stats);
+            levels.push(first);
+        }
         for k in 1..n_layers {
+            let _sp = crate::obs::span_with(|| format!("build/level{k}"));
             let merged = self.merge_level(levels.last().unwrap(), &pruned.layers[k], &mut stats);
             stats.peak_level = stats.peak_level.max(merged.len());
-            let merged = self.coarsen_level(merged, delta, &mut stats);
+            let merged = {
+                let _e = crate::obs::span("eps_prune");
+                self.coarsen_level(merged, delta, &mut stats)
+            };
             let merged = self.cap_level(merged, &mut stats);
             levels.push(merged);
         }

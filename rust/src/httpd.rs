@@ -17,10 +17,15 @@
 //! * **Routes** — `POST /v1/query` (single + batch requests in the
 //!   [`crate::api`] v1 envelope; legacy un-versioned documents parse
 //!   too), `GET /v1/stats` ([`ServeStats`](crate::serve::ServeStats)
-//!   snapshot plus HTTP-layer counters), `GET /healthz` (503 while
-//!   draining, so load balancers stop routing), `POST /v1/shutdown`
-//!   (the drain token). Every failure is a structured
-//!   [`api::error_envelope`] with a stable code.
+//!   snapshot plus HTTP-layer counters), `GET /v1/metrics` (the
+//!   [`crate::obs`] registry in Prometheus text exposition; also
+//!   flushed to `metrics.prom` beside the stats snapshot on drain),
+//!   `GET /healthz` (503 while draining, so load balancers stop
+//!   routing), `POST /v1/shutdown` (the drain token). Every failure is
+//!   a structured [`api::error_envelope`] with a stable code. Query
+//!   requests carry an optional `X-Ntorc-Trace` header; the ID (or a
+//!   generated one when obs is on) is echoed as the envelope's `trace`
+//!   field and keys the request's span tree in the JSONL event log.
 //! * **Keep-alive** — HTTP/1.1 persistent connections with pipelining
 //!   (leftover bytes after one request seed the next), `Connection:
 //!   close` honored, `Expect: 100-continue` answered.
@@ -134,11 +139,41 @@ struct Shared {
     build_permits: Mutex<usize>,
     served: AtomicU64,
     rejected: AtomicU64,
+    reg: HttpMirror,
+}
+
+/// Registry-backed mirrors of the HTTP-layer telemetry (frozen names;
+/// `rust/docs/OBSERVABILITY.md` is the catalog). The `served`/`rejected`
+/// atomics stay the source of truth for `/v1/stats` and the drain
+/// snapshot; these export the same counts at `GET /v1/metrics`.
+struct HttpMirror {
+    requests: Arc<crate::obs::Counter>,
+    rejected: Arc<crate::obs::Counter>,
+    request_ns: Arc<crate::obs::Histogram>,
+    permits_free: Arc<crate::obs::Gauge>,
+}
+
+impl Default for HttpMirror {
+    fn default() -> Self {
+        let r = crate::obs::registry();
+        HttpMirror {
+            requests: r.counter("ntorc_requests_total"),
+            rejected: r.counter("ntorc_rejected_total"),
+            request_ns: r.histogram("ntorc_request_ns"),
+            permits_free: r.gauge("ntorc_build_permits_free"),
+        }
+    }
 }
 
 impl Shared {
     fn draining(&self) -> bool {
         self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Count one refused request (HTTP counter + registry mirror).
+    fn reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.reg.rejected.inc();
     }
 
     /// Whether the post-drain grace window has expired (new requests
@@ -170,7 +205,11 @@ impl Shared {
             return None;
         }
         *p -= 1;
-        Some(PermitGuard { permits: &self.build_permits })
+        self.reg.permits_free.set(*p as i64);
+        Some(PermitGuard {
+            permits: &self.build_permits,
+            gauge: Arc::clone(&self.reg.permits_free),
+        })
     }
 
     fn workload_name(&self) -> Option<String> {
@@ -211,17 +250,32 @@ impl Shared {
         if let Err(e) = crate::ser::write_atomic(path, &doc.to_pretty()) {
             eprintln!("[httpd] warning: could not flush stats to {}: {e:#}", path.display());
         }
+        // The Prometheus exposition lands next to the stats snapshot
+        // (`results/metrics.prom` under the default layout) so a drained
+        // server leaves the same numbers `GET /v1/metrics` was serving.
+        let prom_path = path.with_file_name("metrics.prom");
+        if let Err(e) =
+            crate::ser::write_atomic(&prom_path, &crate::obs::registry().render_prometheus())
+        {
+            eprintln!(
+                "[httpd] warning: could not flush metrics to {}: {e:#}",
+                prom_path.display()
+            );
+        }
     }
 }
 
 /// Releases one build permit on drop (even on a panicking build).
 struct PermitGuard<'a> {
     permits: &'a Mutex<usize>,
+    gauge: Arc<crate::obs::Gauge>,
 }
 
 impl Drop for PermitGuard<'_> {
     fn drop(&mut self) {
-        *self.permits.lock().unwrap() += 1;
+        let mut p = self.permits.lock().unwrap();
+        *p += 1;
+        self.gauge.set(*p as i64);
     }
 }
 
@@ -281,7 +335,9 @@ impl Server {
             build_permits: Mutex::new(permits),
             served: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            reg: HttpMirror::default(),
         });
+        shared.reg.permits_free.set(permits as i64);
         let (tx, rx) = mpsc::channel::<TcpStream>();
         let rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::with_capacity(threads);
@@ -567,12 +623,13 @@ fn status_reason(status: u16) -> &'static str {
 fn write_response(
     stream: &mut TcpStream,
     status: u16,
+    content_type: &str,
     body: &str,
     retry_after: Option<u32>,
     close: bool,
 ) -> std::io::Result<()> {
     let mut head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
         status_reason(status),
         body.len()
     );
@@ -608,20 +665,32 @@ fn handle_connection(sh: &Shared, stream: TcpStream) {
                 // Protocol-level failure: answer if the socket still
                 // writes, then drop the connection (its framing state
                 // is unknown).
-                sh.rejected.fetch_add(1, Ordering::Relaxed);
+                sh.reject();
                 let body = api::error_envelope(&err).to_string();
-                let _ = write_response(&mut conn.stream, err.code.status(), &body, None, true);
+                let _ = write_response(
+                    &mut conn.stream,
+                    err.code.status(),
+                    "application/json",
+                    &body,
+                    None,
+                    true,
+                );
                 break;
             }
             Outcome::Request(req) => {
                 let close = req.wants_close() || sh.draining();
                 let reply = route(sh, &req);
-                let body = reply.body.to_string();
+                let (status, retry_after) = (reply.status, reply.retry_after);
+                let (body, content_type) = match reply.body {
+                    ReplyBody::Json(j) => (j.to_string(), "application/json"),
+                    ReplyBody::Text(t, ct) => (t, ct),
+                };
                 if write_response(
                     &mut conn.stream,
-                    reply.status,
+                    status,
+                    content_type,
                     &body,
-                    reply.retry_after,
+                    retry_after,
                     close || sh.draining(),
                 )
                 .is_err()
@@ -637,20 +706,34 @@ fn handle_connection(sh: &Shared, stream: TcpStream) {
     }
 }
 
+enum ReplyBody {
+    Json(Json),
+    /// Non-JSON payload (the Prometheus exposition) with its MIME type.
+    Text(String, &'static str),
+}
+
 struct Reply {
     status: u16,
-    body: Json,
+    body: ReplyBody,
     retry_after: Option<u32>,
 }
 
 impl Reply {
     fn ok(body: Json) -> Reply {
-        Reply { status: 200, body, retry_after: None }
+        Reply { status: 200, body: ReplyBody::Json(body), retry_after: None }
+    }
+
+    fn text(body: String, content_type: &'static str) -> Reply {
+        Reply { status: 200, body: ReplyBody::Text(body, content_type), retry_after: None }
     }
 
     fn err(e: ApiError) -> Reply {
         let retry = e.code.retryable().then_some(1);
-        Reply { status: e.code.status(), body: api::error_envelope(&e), retry_after: retry }
+        Reply {
+            status: e.code.status(),
+            body: ReplyBody::Json(api::error_envelope(&e)),
+            retry_after: retry,
+        }
     }
 }
 
@@ -702,46 +785,101 @@ fn route(sh: &Shared, req: &Request) -> Reply {
                 ("ok", Json::obj(vec![("draining", Json::Bool(true))])),
             ]))
         }
-        ("POST", "/v1/query") => handle_query(sh, &req.body),
-        (_, "/healthz" | "/v1/stats" | "/v1/shutdown" | "/v1/query") => Reply::err(ApiError::new(
-            ErrorCode::MethodNotAllowed,
-            format!("{} is not valid for {}", req.method, req.path),
-        )),
+        ("GET", "/v1/metrics") => Reply::text(
+            crate::obs::registry().render_prometheus(),
+            "text/plain; version=0.0.4; charset=utf-8",
+        ),
+        ("POST", "/v1/query") => handle_query(sh, req),
+        (_, "/healthz" | "/v1/stats" | "/v1/metrics" | "/v1/shutdown" | "/v1/query") => {
+            Reply::err(ApiError::new(
+                ErrorCode::MethodNotAllowed,
+                format!("{} is not valid for {}", req.method, req.path),
+            ))
+        }
         (_, path) => {
             Reply::err(ApiError::new(ErrorCode::NotFound, format!("no route at '{path}'")))
         }
     }
 }
 
-fn handle_query(sh: &Shared, body: &[u8]) -> Reply {
+/// `X-Ntorc-Trace` values up to this long are adopted verbatim as the
+/// request's trace ID; anything longer (or empty) is replaced by a
+/// generated ID rather than trusted into the log.
+const MAX_TRACE_ID: usize = 64;
+
+/// The traced wrapper around the query path: installs the per-request
+/// [`crate::obs::Trace`] (ID from `X-Ntorc-Trace` or generated),
+/// observes the end-to-end latency histogram, echoes the trace ID into
+/// the response envelope, and hands the finished trace to the event
+/// log (`obs.slow_ms` / `obs.sample` decide whether it is written).
+fn handle_query(sh: &Shared, req: &Request) -> Reply {
+    let t0 = Instant::now();
+    let client_trace = req
+        .headers
+        .get("x-ntorc-trace")
+        .map(|v| v.trim())
+        .filter(|v| !v.is_empty() && v.len() <= MAX_TRACE_ID)
+        .map(|v| v.to_string());
+    let trace = crate::obs::enabled().then(|| {
+        crate::obs::Trace::new(client_trace.clone().unwrap_or_else(crate::obs::next_trace_id))
+    });
+    let guard = trace.as_ref().map(|t| crate::obs::install(Arc::clone(t)));
+    let mut reply = query_reply(sh, &req.body);
+    drop(guard);
+    sh.reg.request_ns.observe(t0.elapsed().as_nanos() as u64);
+    let trace_id = trace.as_ref().map(|t| t.id.clone()).or(client_trace);
+    if let (Some(id), ReplyBody::Json(Json::Obj(doc))) = (&trace_id, &mut reply.body) {
+        // Additive envelope field: `api::parse_response` ignores
+        // unknown keys, so old clients are unaffected.
+        doc.insert("trace".to_string(), Json::str(id.clone()));
+    }
+    if let Some(t) = &trace {
+        crate::obs::log_request(
+            t,
+            &[
+                ("path", Json::str("/v1/query")),
+                ("status", Json::num(reply.status as f64)),
+            ],
+        );
+    }
+    reply
+}
+
+fn query_reply(sh: &Shared, body: &[u8]) -> Reply {
     if sh.drain_refusing() {
-        sh.rejected.fetch_add(1, Ordering::Relaxed);
+        sh.reject();
         return Reply::err(ApiError::new(ErrorCode::Draining, "server is draining"));
     }
-    let text = match std::str::from_utf8(body) {
-        Ok(t) => t,
-        Err(_) => {
-            sh.rejected.fetch_add(1, Ordering::Relaxed);
-            return Reply::err(ApiError::new(ErrorCode::BadRequest, "body is not UTF-8"));
-        }
-    };
-    let doc = match parse_json(text) {
-        Ok(d) => d,
-        Err(e) => {
-            sh.rejected.fetch_add(1, Ordering::Relaxed);
-            return Reply::err(ApiError::new(ErrorCode::BadRequest, format!("invalid JSON: {e}")));
-        }
-    };
-    let parsed = match api::parse_request_doc(&doc, &|name| (sh.named)(name)) {
-        Ok(p) => p,
-        Err(e) => {
-            sh.rejected.fetch_add(1, Ordering::Relaxed);
-            return Reply::err(e);
+    let parsed = {
+        let _sp = crate::obs::span("parse");
+        let text = match std::str::from_utf8(body) {
+            Ok(t) => t,
+            Err(_) => {
+                sh.reject();
+                return Reply::err(ApiError::new(ErrorCode::BadRequest, "body is not UTF-8"));
+            }
+        };
+        let doc = match parse_json(text) {
+            Ok(d) => d,
+            Err(e) => {
+                sh.reject();
+                return Reply::err(ApiError::new(
+                    ErrorCode::BadRequest,
+                    format!("invalid JSON: {e}"),
+                ));
+            }
+        };
+        match api::parse_request_doc(&doc, &|name| (sh.named)(name)) {
+            Ok(p) => p,
+            Err(e) => {
+                sh.reject();
+                return Reply::err(e);
+            }
         }
     };
     if let (Some(want), Some(have)) = (&parsed.workload, sh.workload_name()) {
         if *want != have {
-            sh.rejected.fetch_add(1, Ordering::Relaxed);
+            sh.reject();
             return Reply::err(
                 ApiError::new(
                     ErrorCode::UnknownWorkload,
@@ -752,27 +890,34 @@ fn handle_query(sh: &Shared, body: &[u8]) -> Reply {
         }
     }
     // Admission control: all-warm batches bypass the build gate; a
-    // batch needing any build takes one permit for its whole run.
-    let needs_build = parsed
-        .requests
-        .iter()
-        .any(|r| !sh.svc.is_warm(&sh.key_of(&r.net)));
-    let _permit = if needs_build {
-        match sh.try_build_permit() {
-            Some(p) => Some(p),
-            None => {
-                sh.rejected.fetch_add(1, Ordering::Relaxed);
-                return Reply::err(ApiError::new(
-                    ErrorCode::Overloaded,
-                    "build queue saturated; retry later",
-                ));
+    // batch needing any build takes one permit for its whole run. The
+    // span covers the warmth probe plus the permit grab, i.e. the
+    // admission wait the request actually paid.
+    let _permit = {
+        let _sp = crate::obs::span("admission");
+        let needs_build = parsed
+            .requests
+            .iter()
+            .any(|r| !sh.svc.is_warm(&sh.key_of(&r.net)));
+        if needs_build {
+            match sh.try_build_permit() {
+                Some(p) => Some(p),
+                None => {
+                    sh.reject();
+                    return Reply::err(ApiError::new(
+                        ErrorCode::Overloaded,
+                        "build queue saturated; retry later",
+                    ));
+                }
             }
+        } else {
+            None
         }
-    } else {
-        None
     };
     let responses = sh.run_batch(&parsed.requests);
     sh.served.fetch_add(responses.len() as u64, Ordering::Relaxed);
+    sh.reg.requests.add(responses.len() as u64);
+    let _sp = crate::obs::span("encode");
     Reply::ok(api::ok_envelope(&responses))
 }
 

@@ -172,6 +172,7 @@ pub mod layers;
 pub mod loadgen;
 pub mod mip;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod rng;

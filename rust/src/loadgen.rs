@@ -83,18 +83,24 @@ impl HttpReply {
 
 /// A keep-alive HTTP/1.1 client for one server address. Reconnects
 /// lazily; a stale kept-alive connection (closed server-side between
-/// requests) is retried once on a fresh connection.
+/// requests) is retried once on a fresh connection ([`retries`]
+/// counts those, so the loadgen summary can report them).
+///
+/// [`retries`]: HttpClient::retries
 pub struct HttpClient {
     addr: String,
     stream: Option<TcpStream>,
     buf: Vec<u8>,
+    /// Stale-keep-alive retries taken so far (each one paid a fresh
+    /// connect inside the caller's latency window).
+    pub retries: u64,
 }
 
 const CLIENT_TIMEOUT: Duration = Duration::from_secs(30);
 
 impl HttpClient {
     pub fn new(addr: impl Into<String>) -> HttpClient {
-        HttpClient { addr: addr.into(), stream: None, buf: Vec::new() }
+        HttpClient { addr: addr.into(), stream: None, buf: Vec::new(), retries: 0 }
     }
 
     pub fn get(&mut self, path: &str) -> Result<HttpReply, ClientError> {
@@ -105,21 +111,43 @@ impl HttpClient {
         self.request("POST", path, Some(body))
     }
 
+    /// `POST` with an `X-Ntorc-Trace` header: the server adopts the ID
+    /// for its span tree and echoes it in the response envelope.
+    pub fn post_traced(
+        &mut self,
+        path: &str,
+        body: &str,
+        trace: &str,
+    ) -> Result<HttpReply, ClientError> {
+        self.request_with("POST", path, Some(body), Some(trace))
+    }
+
     pub fn request(
         &mut self,
         method: &str,
         path: &str,
         body: Option<&str>,
     ) -> Result<HttpReply, ClientError> {
+        self.request_with(method, path, body, None)
+    }
+
+    fn request_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        trace: Option<&str>,
+    ) -> Result<HttpReply, ClientError> {
         let had_conn = self.stream.is_some();
-        match self.request_once(method, path, body) {
+        match self.request_once(method, path, body, trace) {
             Ok(r) => Ok(r),
             Err(ClientError::Unreachable(_)) if had_conn => {
                 // The kept-alive connection went stale (idle close,
                 // drain close) before this request was read — safe to
                 // retry exactly once on a fresh connection.
                 self.stream = None;
-                let out = self.request_once(method, path, body);
+                self.retries += 1;
+                let out = self.request_once(method, path, body, trace);
                 if out.is_err() {
                     self.stream = None;
                 }
@@ -149,14 +177,19 @@ impl HttpClient {
         method: &str,
         path: &str,
         body: Option<&str>,
+        trace: Option<&str>,
     ) -> Result<HttpReply, ClientError> {
         self.connect()?;
         let payload = body.unwrap_or("");
-        let head = format!(
+        let mut head = format!(
             "{method} {path} HTTP/1.1\r\nHost: ntorc\r\nContent-Type: application/json\r\n\
-             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+             Content-Length: {}\r\n",
             payload.len()
         );
+        if let Some(t) = trace {
+            head.push_str(&format!("X-Ntorc-Trace: {t}\r\n"));
+        }
+        head.push_str("Connection: keep-alive\r\n\r\n");
         {
             let stream = self.stream.as_mut().unwrap();
             stream
@@ -294,6 +327,10 @@ pub struct Summary {
     /// Non-200 responses that are not clean refusals (4xx protocol
     /// errors) — a correct run keeps this at zero.
     pub failed: u64,
+    /// Stale-keep-alive retries the clients took (each retry's fresh
+    /// connect is *inside* the recorded latency of its request — the
+    /// timer starts before the first send attempt).
+    pub retried: u64,
     pub elapsed_ns: u64,
     pub throughput_rps: f64,
     pub p50_ns: f64,
@@ -332,6 +369,7 @@ impl Summary {
             ("loadgen_rejected", Json::num(self.rejected as f64)),
             ("loadgen_lost", Json::num(self.lost as f64)),
             ("loadgen_failed", Json::num(self.failed as f64)),
+            ("loadgen_retried", Json::num(self.retried as f64)),
             ("loadgen_elapsed_ns", Json::num(self.elapsed_ns as f64)),
             ("loadgen_throughput_rps", Json::num(self.throughput_rps)),
             ("loadgen_p50_ns", Json::num(self.p50_ns)),
@@ -345,26 +383,17 @@ impl Summary {
 }
 
 /// Nearest-rank percentile over an ascending-sorted sample in ns.
+/// (The implementation moved verbatim to [`crate::obs::Histogram`] so
+/// client and server percentiles share one definition; the fixtures in
+/// this module's tests pin the delegation bit-identical.)
 pub fn percentile_ns(sorted: &[u64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((q / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
-    sorted[idx.min(sorted.len() - 1)] as f64
+    crate::obs::Histogram::percentile_sorted(sorted, q)
 }
 
-/// Log₂ buckets from 1 µs up, with a catch-all overflow bucket.
+/// Log₂ buckets from 1 µs up, with a catch-all overflow bucket (bounds
+/// shared with [`crate::obs::Histogram::bounds`]).
 pub fn histogram(sorted: &[u64]) -> Vec<(u64, u64)> {
-    let mut buckets: Vec<(u64, u64)> = (0..=14).map(|k| (1_024u64 << k, 0)).collect();
-    buckets.push((u64::MAX, 0));
-    for &ns in sorted {
-        let slot = buckets
-            .iter()
-            .position(|(le, _)| ns <= *le)
-            .unwrap_or(buckets.len() - 1);
-        buckets[slot].1 += 1;
-    }
-    buckets
+    crate::obs::Histogram::buckets_of_sorted(sorted)
 }
 
 /// Apply the bench-gate convention to a load summary: latency metrics
@@ -480,8 +509,14 @@ pub fn run(cfg: &LoadConfig, catalog: &[BatchRequest], workload: Option<&str>) -
                     workload.as_deref(),
                 )
                 .to_string();
+                // A seeded per-request trace ID: the server's span
+                // trees and event-log lines key back to this client.
+                let trace_id = format!("lg-{:016x}", rng.next_u64());
+                // The timer starts before the first send attempt, so a
+                // lazy connect or a stale-keep-alive retry is part of
+                // the recorded latency — what a real client paid.
                 let t0 = Instant::now();
-                match client.post("/v1/query", &body) {
+                match client.post_traced("/v1/query", &body, &trace_id) {
                     Ok(reply) if reply.status == 200 => {
                         latencies.push(t0.elapsed().as_nanos() as u64);
                         ok += 1;
@@ -513,19 +548,20 @@ pub fn run(cfg: &LoadConfig, catalog: &[BatchRequest], workload: Option<&str>) -
                 }
             }
             workers_done.fetch_add(1, Ordering::Relaxed);
-            (latencies, ok, rejected, lost, failed)
+            (latencies, ok, rejected, lost, failed, client.retries)
         }));
     }
 
     let mut all: Vec<u64> = Vec::with_capacity(cfg.count);
-    let (mut ok, mut rejected, mut lost, mut failed) = (0u64, 0u64, 0u64, 0u64);
+    let (mut ok, mut rejected, mut lost, mut failed, mut retried) = (0u64, 0u64, 0u64, 0u64, 0u64);
     for h in handles {
-        let (lat, o, r, l, f) = h.join().expect("loadgen worker panicked");
+        let (lat, o, r, l, f, rt) = h.join().expect("loadgen worker panicked");
         all.extend(lat);
         ok += o;
         rejected += r;
         lost += l;
         failed += f;
+        retried += rt;
     }
     let elapsed_ns = started.elapsed().as_nanos() as u64;
     if let Some(c) = controller {
@@ -551,6 +587,7 @@ pub fn run(cfg: &LoadConfig, catalog: &[BatchRequest], workload: Option<&str>) -
         rejected,
         lost,
         failed,
+        retried,
         elapsed_ns,
         throughput_rps: ok as f64 / secs,
         p50_ns: percentile_ns(&all, 50.0),
@@ -604,6 +641,7 @@ mod tests {
             rejected: 0,
             lost: 0,
             failed: 0,
+            retried: 0,
             elapsed_ns: 1,
             throughput_rps: 300.0,
             p50_ns: 1.0,
@@ -632,6 +670,7 @@ mod tests {
             rejected: 1,
             lost: 0,
             failed: 0,
+            retried: 2,
             elapsed_ns: 2_000_000_000,
             throughput_rps: 3.5,
             p50_ns: 10.0,
@@ -646,6 +685,47 @@ mod tests {
             assert!(doc.get(key).is_ok(), "missing {key}");
         }
         assert_eq!(doc.get("loadgen_p99_ns").unwrap().as_f64(), Some(20.0));
+        assert_eq!(doc.get("loadgen_retried").unwrap().as_f64(), Some(2.0));
         assert!(matches!(doc.get("server_builds").unwrap(), Json::Null));
+    }
+
+    #[test]
+    fn stale_keepalive_retry_is_counted_and_inside_the_latency_window() {
+        use std::io::{Read as _, Write as _};
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        // A minimal one-request-per-connection server: the client's
+        // kept-alive stream goes stale after every reply, forcing its
+        // once-only retry path on the second request.
+        let server = std::thread::spawn(move || {
+            for _ in 0..2 {
+                let (mut s, _) = listener.accept().unwrap();
+                let mut head = Vec::new();
+                let mut chunk = [0u8; 4096];
+                loop {
+                    let n = s.read(&mut chunk).unwrap();
+                    head.extend_from_slice(&chunk[..n]);
+                    if head.windows(4).any(|w| w == b"\r\n\r\n") {
+                        break;
+                    }
+                }
+                s.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\n{}").unwrap();
+                // Connection drops here (end of scope): stale keep-alive.
+            }
+        });
+        let mut client = HttpClient::new(addr);
+        let t0 = Instant::now();
+        assert_eq!(client.get("/healthz").unwrap().status, 200);
+        assert_eq!(client.retries, 0, "first request needs no retry");
+        // The first connection is now closed server-side; this request
+        // hits the stale stream, retries once on a fresh connect, and
+        // the whole journey happens inside one caller-side timer.
+        let reply = client.get("/healthz").unwrap();
+        let elapsed = t0.elapsed();
+        assert_eq!(reply.status, 200);
+        assert_eq!(client.retries, 1, "stale keep-alive retry is counted");
+        assert!(elapsed.as_nanos() > 0);
+        server.join().unwrap();
     }
 }

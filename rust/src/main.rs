@@ -422,6 +422,9 @@ fn run(raw: &[String]) -> Result<()> {
                 .clone()
                 .unwrap_or_else(|| "(memory-only)".to_string());
             cfg.serve_capacity = args.usize_or("capacity", cfg.serve_capacity)?;
+            // Install [obs] process-wide (tracing + event log; the
+            // metrics registry is always live regardless).
+            ntorc::obs::init(&cfg.obs)?;
             // Parse the request document before paying for model fitting.
             let doc = read_requests(&args)?;
             let parsed = ntorc::api::parse_request_doc(&doc, &catalog_net)
@@ -530,6 +533,9 @@ fn run(raw: &[String]) -> Result<()> {
                 cfg.http.addr = addr.to_string();
             }
             cfg.http.threads = args.usize_or("threads", cfg.http.threads)?;
+            // Install [obs] process-wide before the server starts: spans
+            // and the JSONL event log follow `--set obs.enabled=true`.
+            ntorc::obs::init(&cfg.obs)?;
             let duration_s: f64 = args
                 .get("duration")
                 .map(|d| d.parse())

@@ -1,0 +1,794 @@
+//! Unified zero-dep observability: metrics registry, request tracing,
+//! and a structured JSONL event log (std-only, matching the crate's
+//! `anyhow`-only dependency policy; `rust/docs/OBSERVABILITY.md` is the
+//! instrument catalog).
+//!
+//! Three parts, one module:
+//!
+//! * **Metrics registry** — named [`Counter`]s, [`Gauge`]s and
+//!   fixed-bucket log₂ [`Histogram`]s behind relaxed atomics, resolved
+//!   once (`registry().counter("ntorc_requests_total")`) and bumped
+//!   lock-free thereafter. [`Registry::render_prometheus`] emits the
+//!   Prometheus text exposition served at `GET /v1/metrics` and dumped
+//!   to `results/metrics.prom` on drain. The registry is **always
+//!   live** (a counter bump is one relaxed `fetch_add`, the same cost
+//!   [`crate::serve::ServeStats`] already paid); `obs.enabled` gates
+//!   only the tracing and event-log machinery below.
+//! * **Request tracing** — a [`Trace`] per request (ID from the
+//!   `X-Ntorc-Trace` header, or [`next_trace_id`]: seeded-deterministic,
+//!   no wall clock) installed thread-local via [`install`], with
+//!   [`ScopedTimer`] spans ([`span`]/[`span_with`]) recording per-stage
+//!   durations (parse, admission wait, store load, per-DP-level merges,
+//!   ε-prune, query, encode) into a per-request span tree (depth =
+//!   nesting at record time). When `obs.enabled` is off — or no trace
+//!   is installed on this thread — a span is a branch on a relaxed
+//!   atomic and nothing else: no allocation, no clock read, which is
+//!   what lets the DP inner loop carry spans (`perf_hotpaths` gates the
+//!   obs-on build overhead at ≤ 5%).
+//! * **Structured event log** — [`log_request`] appends one JSON line
+//!   per selected request to `obs.log_path`: requests over
+//!   `obs.slow_ms` always (level `"slow"`, full span tree), otherwise
+//!   a deterministic `obs.sample` fraction chosen by hashing the trace
+//!   ID (level `"info"`). Each line is a single `write_all` on an
+//!   `O_APPEND` handle, so concurrent writers interleave whole lines,
+//!   never bytes.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::rng::fnv1a;
+use crate::ser::Json;
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// The `[obs]` config section (`config.rs` wires `obs.*` keys here).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Master switch for tracing + event log (the metrics registry is
+    /// always live; see the module docs).
+    pub enabled: bool,
+    /// JSONL event log path ("" = no log even when enabled).
+    pub log_path: String,
+    /// Fraction of non-slow requests logged, chosen deterministically
+    /// by hashing the trace ID (0.0 = slow-only, 1.0 = everything).
+    pub sample: f64,
+    /// Requests slower than this always log their full span tree.
+    pub slow_ms: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: false,
+            log_path: "results/obs.jsonl".to_string(),
+            sample: 0.0,
+            slow_ms: 250,
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SAMPLE_BITS: AtomicU64 = AtomicU64::new(0);
+static SLOW_MS: AtomicU64 = AtomicU64::new(u64::MAX);
+static TRACE_SEQ: AtomicU64 = AtomicU64::new(1);
+
+struct LogSink {
+    file: std::fs::File,
+}
+
+static LOG: Mutex<Option<LogSink>> = Mutex::new(None);
+
+/// Install an [`ObsConfig`] process-wide: sets the enabled flag and
+/// slow/sample thresholds, and (re)opens the JSONL log in append mode.
+/// Idempotent; callable again to reconfigure (tests do).
+pub fn init(cfg: &ObsConfig) -> Result<()> {
+    SAMPLE_BITS.store(cfg.sample.to_bits(), Ordering::Relaxed);
+    SLOW_MS.store(cfg.slow_ms, Ordering::Relaxed);
+    let mut log = LOG.lock().unwrap();
+    *log = None;
+    if cfg.enabled && !cfg.log_path.is_empty() {
+        let path = PathBuf::from(&cfg.log_path);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("create dir {}", parent.display()))?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("open event log {}", path.display()))?;
+        *log = Some(LogSink { file });
+    }
+    drop(log);
+    ENABLED.store(cfg.enabled, Ordering::Release);
+    Ok(())
+}
+
+/// The one branch every disabled span pays.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------------
+
+/// Monotonic counter (relaxed `fetch_add`).
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge (relaxed).
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of histogram buckets: log₂ bounds from 1 µs (1024 ns) up
+/// through `1024 << 14` ns (≈ 16.8 ms), plus a `u64::MAX` catch-all —
+/// exactly the shape `loadgen` has always reported.
+pub const HIST_BUCKETS: usize = 16;
+
+/// Fixed-bucket log₂ histogram of nanosecond durations.
+///
+/// Doubles as the home of the percentile/bucketing code `loadgen`
+/// hand-rolled (`percentile_sorted`, `buckets_of_sorted`) so client and
+/// server report through one implementation.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// The shared bucket upper bounds (inclusive, ascending).
+    pub fn bounds() -> [u64; HIST_BUCKETS] {
+        let mut b = [0u64; HIST_BUCKETS];
+        for (k, slot) in b.iter_mut().enumerate().take(HIST_BUCKETS - 1) {
+            *slot = 1_024u64 << k;
+        }
+        b[HIST_BUCKETS - 1] = u64::MAX;
+        b
+    }
+
+    fn slot(ns: u64) -> usize {
+        Self::bounds()
+            .iter()
+            .position(|&le| ns <= le)
+            .unwrap_or(HIST_BUCKETS - 1)
+    }
+
+    pub fn observe(&self, ns: u64) {
+        self.buckets[Self::slot(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Per-bucket (le_ns, count) snapshot — same shape as
+    /// [`buckets_of_sorted`](Self::buckets_of_sorted).
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        Self::bounds()
+            .iter()
+            .zip(self.buckets.iter())
+            .map(|(&le, n)| (le, n.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank percentile over an ascending-sorted sample in ns
+    /// (moved verbatim from `loadgen`; its p50/p99/p999 are
+    /// bit-identical to the pre-extraction implementation).
+    pub fn percentile_sorted(sorted: &[u64], q: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((q / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[idx.min(sorted.len() - 1)] as f64
+    }
+
+    /// Log₂ (le_ns, count) buckets of a sample (moved verbatim from
+    /// `loadgen`; bounds match [`bounds`](Self::bounds)).
+    pub fn buckets_of_sorted(sorted: &[u64]) -> Vec<(u64, u64)> {
+        let mut buckets: Vec<(u64, u64)> =
+            Self::bounds().iter().map(|&le| (le, 0)).collect();
+        for &ns in sorted {
+            let slot = buckets
+                .iter()
+                .position(|(le, _)| ns <= *le)
+                .unwrap_or(buckets.len() - 1);
+            buckets[slot].1 += 1;
+        }
+        buckets
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// The global instrument registry. Instrument handles are resolved once
+/// (a short `Mutex` hold) and then bumped lock-free; exposition walks
+/// the name-sorted maps so output order is deterministic.
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(|| Registry {
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+        histograms: Mutex::new(BTreeMap::new()),
+    })
+}
+
+impl Registry {
+    /// Get-or-create a named counter (created at zero).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        Arc::clone(
+            m.entry(name.to_string())
+                .or_insert_with(|| Arc::new(Counter(AtomicU64::new(0)))),
+        )
+    }
+
+    /// Get-or-create a named gauge (created at zero).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        Arc::clone(
+            m.entry(name.to_string())
+                .or_insert_with(|| Arc::new(Gauge(AtomicI64::new(0)))),
+        )
+    }
+
+    /// Get-or-create a named log₂ histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().unwrap();
+        Arc::clone(
+            m.entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new())),
+        )
+    }
+
+    /// Prometheus text exposition (counters, then gauges, then
+    /// histograms, each name-sorted; histogram buckets cumulative with
+    /// `le` labels, `+Inf` last, plus `_sum`/`_count` series).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", g.get());
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let mut cumulative = 0u64;
+            for (le, n) in h.snapshot() {
+                cumulative += n;
+                if le == u64::MAX {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cumulative}");
+                } else {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cumulative}");
+                }
+            }
+            let _ = writeln!(out, "{name}_sum {}", h.sum());
+            let _ = writeln!(out, "{name}_count {}", h.count());
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request tracing
+// ---------------------------------------------------------------------------
+
+/// One recorded span: stage name, nesting depth at record time, start
+/// offset from the trace origin, duration.
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub name: String,
+    pub depth: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// A per-request trace: an ID plus the span tree recorded while it was
+/// [`install`]ed on the handling thread.
+pub struct Trace {
+    pub id: String,
+    t0: Instant,
+    spans: Mutex<Vec<SpanRec>>,
+}
+
+impl Trace {
+    pub fn new(id: impl Into<String>) -> Arc<Trace> {
+        Arc::new(Trace { id: id.into(), t0: Instant::now(), spans: Mutex::new(Vec::new()) })
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    fn push(&self, rec: SpanRec) {
+        self.spans.lock().unwrap().push(rec);
+    }
+
+    /// Recorded spans, ordered by start offset (spans are pushed on
+    /// drop, i.e. end-time order; sorting restores tree order).
+    pub fn spans(&self) -> Vec<SpanRec> {
+        let mut out = self.spans.lock().unwrap().clone();
+        out.sort_by_key(|s| (s.start_ns, s.depth));
+        out
+    }
+
+    /// The span tree as a JSON array (the `spans` field of event-log
+    /// lines).
+    pub fn spans_json(&self) -> Json {
+        Json::Arr(
+            self.spans()
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("name", Json::str(s.name.clone())),
+                        ("depth", Json::num(s.depth as f64)),
+                        ("start_ns", Json::num(s.start_ns as f64)),
+                        ("dur_ns", Json::num(s.dur_ns as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// A deterministic trace ID: FNV over a process-global sequence — no
+/// wall clock, no pid, so tests see the same IDs run over run.
+pub fn next_trace_id() -> String {
+    let seq = TRACE_SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("{:016x}", crate::rng::hash_fields(&[0x6e746f72635f7472, seq]))
+}
+
+struct TraceCtx {
+    trace: Arc<Trace>,
+    depth: u32,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<TraceCtx>> = const { RefCell::new(None) };
+}
+
+/// Make `trace` the current trace for this thread until the returned
+/// guard drops (the previous trace, if any, is restored).
+pub fn install(trace: Arc<Trace>) -> TraceGuard {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(TraceCtx { trace, depth: 0 }));
+    TraceGuard { prev }
+}
+
+/// Restores the previously installed trace on drop.
+pub struct TraceGuard {
+    prev: Option<TraceCtx>,
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+struct SpanCtx {
+    trace: Arc<Trace>,
+    name: String,
+    depth: u32,
+    start_ns: u64,
+    started: Instant,
+}
+
+/// Records its stage duration into the current trace on drop. Inert
+/// (`None` inside) when obs is disabled or no trace is installed.
+pub struct ScopedTimer(Option<SpanCtx>);
+
+impl Drop for ScopedTimer {
+    fn drop(&mut self) {
+        if let Some(ctx) = self.0.take() {
+            let dur_ns = ctx.started.elapsed().as_nanos() as u64;
+            CURRENT.with(|c| {
+                if let Some(cur) = c.borrow_mut().as_mut() {
+                    cur.depth = cur.depth.saturating_sub(1);
+                }
+            });
+            ctx.trace.push(SpanRec {
+                name: ctx.name,
+                depth: ctx.depth,
+                start_ns: ctx.start_ns,
+                dur_ns,
+            });
+        }
+    }
+}
+
+/// Open a span with a lazily built name — the closure (and its
+/// allocation) runs only when a trace is active, which keeps
+/// per-DP-level `format!` names off the disabled hot path.
+pub fn span_with(name: impl FnOnce() -> String) -> ScopedTimer {
+    if !enabled() {
+        return ScopedTimer(None);
+    }
+    CURRENT.with(|c| {
+        let mut cur = c.borrow_mut();
+        match cur.as_mut() {
+            None => ScopedTimer(None),
+            Some(ctx) => {
+                let depth = ctx.depth;
+                ctx.depth += 1;
+                ScopedTimer(Some(SpanCtx {
+                    trace: Arc::clone(&ctx.trace),
+                    name: name(),
+                    depth,
+                    start_ns: ctx.trace.elapsed_ns(),
+                    started: Instant::now(),
+                }))
+            }
+        }
+    })
+}
+
+/// Open a span with a fixed stage name.
+pub fn span(name: &str) -> ScopedTimer {
+    span_with(|| name.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Structured event log
+// ---------------------------------------------------------------------------
+
+/// Deterministic hash-fraction of a trace ID in [0, 1) — the sampling
+/// coin flip, reproducible for a given ID.
+fn sample_fraction(id: &str) -> f64 {
+    (fnv1a(id.as_bytes()) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Log one finished request: always when its duration exceeds
+/// `obs.slow_ms` (level `"slow"`, full span tree), otherwise for the
+/// deterministic `obs.sample` fraction of trace IDs (level `"info"`).
+/// No-op when obs is disabled.
+pub fn log_request(trace: &Trace, extra: &[(&str, Json)]) {
+    if !enabled() {
+        return;
+    }
+    let dur_ns = trace.elapsed_ns();
+    let slow_ns = SLOW_MS.load(Ordering::Relaxed).saturating_mul(1_000_000);
+    let slow = dur_ns > slow_ns;
+    let sample = f64::from_bits(SAMPLE_BITS.load(Ordering::Relaxed));
+    let sampled = sample > 0.0 && sample_fraction(&trace.id) < sample;
+    if !(slow || sampled) {
+        return;
+    }
+    let mut fields = vec![
+        ("event", Json::str("request")),
+        ("level", Json::str(if slow { "slow" } else { "info" })),
+        ("trace", Json::str(trace.id.clone())),
+        ("dur_ns", Json::num(dur_ns as f64)),
+        ("slow", Json::Bool(slow)),
+        ("spans", trace.spans_json()),
+    ];
+    for (k, v) in extra {
+        fields.push((k, v.clone()));
+    }
+    append_line(&Json::obj(fields).to_string());
+}
+
+/// Append one free-form event line (no sampling — callers decide).
+/// No-op when obs is disabled.
+pub fn log_event(event: &str, fields: &[(&str, Json)]) {
+    if !enabled() {
+        return;
+    }
+    let mut all = vec![("event", Json::str(event))];
+    for (k, v) in fields {
+        all.push((k, v.clone()));
+    }
+    append_line(&Json::obj(all).to_string());
+}
+
+fn append_line(line: &str) {
+    let mut guard = LOG.lock().unwrap();
+    if let Some(sink) = guard.as_mut() {
+        let mut buf = String::with_capacity(line.len() + 1);
+        buf.push_str(line);
+        buf.push('\n');
+        // One write_all per line on an O_APPEND handle: concurrent
+        // processes interleave whole lines, never partial ones.
+        let _ = sink.file.write_all(buf.as_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::parse_json;
+
+    /// The obs globals (enabled flag, log sink, thresholds) are
+    /// process-wide; tests that reconfigure them serialize here.
+    fn global_lock() -> std::sync::MutexGuard<'static, ()> {
+        static L: Mutex<()> = Mutex::new(());
+        L.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    // -- Histogram: the loadgen fixtures, preserved bit-identically ---
+
+    #[test]
+    fn percentile_matches_loadgen_fixtures() {
+        let sorted: Vec<u64> = (1..=100).collect();
+        assert_eq!(Histogram::percentile_sorted(&sorted, 0.0), 1.0);
+        assert_eq!(Histogram::percentile_sorted(&sorted, 100.0), 100.0);
+        assert_eq!(Histogram::percentile_sorted(&sorted, 50.0), 51.0);
+        assert_eq!(Histogram::percentile_sorted(&[], 99.0), 0.0);
+    }
+
+    #[test]
+    fn bucket_fixtures_match_loadgen() {
+        let samples = [1u64, 1_024, 1_025, 2_048, 1 << 24, u64::MAX];
+        let hist = Histogram::buckets_of_sorted(&samples);
+        let total: u64 = hist.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, samples.len() as u64);
+        assert!(hist.windows(2).all(|w| w[0].0 < w[1].0), "bounds ascend");
+        assert_eq!(hist.last().unwrap().0, u64::MAX);
+        assert_eq!(hist[0], (1_024, 2), "1 and 1024 land in the first bucket");
+    }
+
+    #[test]
+    fn atomic_histogram_agrees_with_batch_bucketing() {
+        let samples = [1u64, 1_024, 1_025, 2_048, 1 << 24, u64::MAX];
+        let h = Histogram::new();
+        for &s in &samples {
+            h.observe(s);
+        }
+        assert_eq!(h.snapshot(), Histogram::buckets_of_sorted(&samples));
+        assert_eq!(h.count(), samples.len() as u64);
+        let expected: u64 = samples.iter().fold(0, |a, &b| a.wrapping_add(b));
+        assert_eq!(h.sum(), expected, "sum wraps like the atomic does");
+    }
+
+    // -- Registry ------------------------------------------------------
+
+    #[test]
+    fn registry_instruments_round_trip_and_share_handles() {
+        let r = registry();
+        let c = r.counter("test_obs_roundtrip_total");
+        c.inc();
+        c.add(2);
+        assert_eq!(r.counter("test_obs_roundtrip_total").get(), 3);
+        let g = r.gauge("test_obs_roundtrip_gauge");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(r.gauge("test_obs_roundtrip_gauge").get(), 3);
+        let h = r.histogram("test_obs_roundtrip_ns");
+        h.observe(2_000);
+        assert_eq!(r.histogram("test_obs_roundtrip_ns").count(), 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_parseable_and_cumulative() {
+        let r = registry();
+        r.counter("test_obs_expo_total").add(7);
+        r.gauge("test_obs_expo_gauge").set(-2);
+        let h = r.histogram("test_obs_expo_ns");
+        h.observe(500);
+        h.observe(3_000);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE test_obs_expo_total counter"));
+        assert!(text.contains("test_obs_expo_total 7"));
+        assert!(text.contains("test_obs_expo_gauge -2"));
+        assert!(text.contains("test_obs_expo_ns_bucket{le=\"1024\"} 1"));
+        assert!(text.contains("test_obs_expo_ns_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("test_obs_expo_ns_count 2"));
+        assert!(text.contains("test_obs_expo_ns_sum 3500"));
+        // Every line is `# TYPE ...` or `name[{labels}] value`.
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (_, value) = line.rsplit_once(' ').expect("name value");
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in '{line}'");
+        }
+    }
+
+    // -- Tracing -------------------------------------------------------
+
+    #[test]
+    fn spans_record_a_tree_when_enabled_and_nothing_when_disabled() {
+        let _g = global_lock();
+        init(&ObsConfig { enabled: true, log_path: String::new(), ..ObsConfig::default() })
+            .unwrap();
+        let trace = Trace::new("t-tree");
+        {
+            let _guard = install(Arc::clone(&trace));
+            let _outer = span("query");
+            {
+                let _inner = span_with(|| format!("build/level{}", 3));
+            }
+        }
+        let spans = trace.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!((spans[0].name.as_str(), spans[0].depth), ("query", 0));
+        assert_eq!((spans[1].name.as_str(), spans[1].depth), ("build/level3", 1));
+        assert!(spans[0].start_ns <= spans[1].start_ns);
+
+        // Disabled: same code records nothing.
+        init(&ObsConfig::default()).unwrap();
+        let cold = Trace::new("t-cold");
+        {
+            let _guard = install(Arc::clone(&cold));
+            let _sp = span("query");
+        }
+        assert!(cold.spans().is_empty());
+        // No trace installed: spans are inert even when enabled.
+        init(&ObsConfig { enabled: true, log_path: String::new(), ..ObsConfig::default() })
+            .unwrap();
+        let _sp = span("orphan");
+        init(&ObsConfig::default()).unwrap();
+    }
+
+    #[test]
+    fn trace_ids_are_distinct_hex() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, b);
+        for id in [&a, &b] {
+            assert_eq!(id.len(), 16);
+            assert!(id.chars().all(|c| c.is_ascii_hexdigit()));
+        }
+    }
+
+    // -- Event log -----------------------------------------------------
+
+    #[test]
+    fn slow_requests_always_log_a_full_span_tree() {
+        let _g = global_lock();
+        let dir = std::env::temp_dir().join(format!("ntorc_obs_log_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("obs.jsonl");
+        init(&ObsConfig {
+            enabled: true,
+            log_path: path.to_string_lossy().into_owned(),
+            sample: 0.0,
+            slow_ms: 0, // everything is slow
+        })
+        .unwrap();
+        let trace = Trace::new("t-slow-log");
+        {
+            let _guard = install(Arc::clone(&trace));
+            let _sp = span("store_load");
+        }
+        log_request(&trace, &[("status", Json::num(200.0))]);
+        init(&ObsConfig::default()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let line = text.lines().find(|l| l.contains("t-slow-log")).expect("line logged");
+        let doc = parse_json(line).unwrap();
+        assert_eq!(doc.get("level").unwrap().as_str(), Some("slow"));
+        assert_eq!(doc.get("slow").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("status").unwrap().as_f64(), Some(200.0));
+        let spans = doc.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans[0].get("name").unwrap().as_str(), Some("store_load"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fast_requests_are_dropped_unless_sampled() {
+        let _g = global_lock();
+        let dir = std::env::temp_dir().join(format!("ntorc_obs_sample_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("obs.jsonl");
+        let cfg = ObsConfig {
+            enabled: true,
+            log_path: path.to_string_lossy().into_owned(),
+            sample: 0.0,
+            slow_ms: 1_000_000, // nothing is slow
+        };
+        init(&cfg).unwrap();
+        log_request(&Trace::new("t-dropped"), &[]);
+        // sample = 1.0 logs every fast request, deterministically.
+        init(&ObsConfig { sample: 1.0, ..cfg.clone() }).unwrap();
+        log_request(&Trace::new("t-sampled"), &[]);
+        init(&ObsConfig::default()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("t-dropped"));
+        let line = text.lines().find(|l| l.contains("t-sampled")).expect("sampled line");
+        let doc = parse_json(line).unwrap();
+        assert_eq!(doc.get("level").unwrap().as_str(), Some("info"));
+        assert_eq!(doc.get("slow").unwrap().as_bool(), Some(false));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn log_event_writes_free_form_lines() {
+        let _g = global_lock();
+        let dir = std::env::temp_dir().join(format!("ntorc_obs_event_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("obs.jsonl");
+        init(&ObsConfig {
+            enabled: true,
+            log_path: path.to_string_lossy().into_owned(),
+            ..ObsConfig::default()
+        })
+        .unwrap();
+        log_event("drain", &[("served", Json::num(12.0))]);
+        init(&ObsConfig::default()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = parse_json(text.lines().next().unwrap()).unwrap();
+        assert_eq!(doc.get("event").unwrap().as_str(), Some("drain"));
+        assert_eq!(doc.get("served").unwrap().as_f64(), Some(12.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sampling_fraction_is_deterministic_and_in_unit_interval() {
+        for id in ["a", "b", "0123456789abcdef"] {
+            let f = sample_fraction(id);
+            assert_eq!(f, sample_fraction(id));
+            assert!((0.0..1.0).contains(&f), "{f}");
+        }
+        assert_ne!(sample_fraction("a"), sample_fraction("b"));
+    }
+}

@@ -859,14 +859,15 @@ pub fn serve_stats_rows(
 /// One-row summary of an `ntorc loadgen` run (wire tail latency).
 pub fn loadgen_rows(s: &crate::loadgen::Summary) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let headers = vec![
-        "completed", "rejected", "lost", "failed", "elapsed_s", "throughput_rps", "p50",
-        "p99", "p999", "server_builds", "drained",
+        "completed", "rejected", "lost", "failed", "retried", "elapsed_s", "throughput_rps",
+        "p50", "p99", "p999", "server_builds", "drained",
     ];
     let rows = vec![vec![
         s.completed.to_string(),
         s.rejected.to_string(),
         s.lost.to_string(),
         s.failed.to_string(),
+        s.retried.to_string(),
         format!("{:.3}", s.elapsed_ns as f64 / 1e9),
         f(s.throughput_rps, 1),
         crate::bench::fmt_ns(s.p50_ns),

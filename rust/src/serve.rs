@@ -1261,6 +1261,14 @@ fn read_exact_at(path: &Path, buf: &mut [u8], offset: u64) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 /// Lock-free counters behind the service (shared by every caller).
+///
+/// Every bump is mirrored into the global metrics registry
+/// ([`crate::obs::registry`], frozen `ntorc_serve_*` names — see
+/// `docs/OBSERVABILITY.md`), so `GET /v1/metrics` always agrees with
+/// `/v1/stats`. The local atomics stay per-service (tests and
+/// multi-service processes read exact per-instance counts through the
+/// unchanged [`snapshot`](Self::snapshot) API); the registry aggregates
+/// process-wide.
 #[derive(Default)]
 pub struct ServeStats {
     mem_hits: AtomicU64,
@@ -1273,11 +1281,47 @@ pub struct ServeStats {
     build_ns: AtomicU64,
     truncated_builds: AtomicU64,
     eps_pruned: AtomicU64,
+    reg: RegMirror,
+}
+
+/// Registry handles resolved once per service (frozen metric names).
+struct RegMirror {
+    mem_hits: Arc<crate::obs::Counter>,
+    store_hits: Arc<crate::obs::Counter>,
+    builds: Arc<crate::obs::Counter>,
+    evictions: Arc<crate::obs::Counter>,
+    store_errors: Arc<crate::obs::Counter>,
+    queries: Arc<crate::obs::Counter>,
+    batches: Arc<crate::obs::Counter>,
+    build_ns: Arc<crate::obs::Counter>,
+    truncated_builds: Arc<crate::obs::Counter>,
+    eps_pruned: Arc<crate::obs::Counter>,
+    build_hist: Arc<crate::obs::Histogram>,
+}
+
+impl Default for RegMirror {
+    fn default() -> Self {
+        let r = crate::obs::registry();
+        RegMirror {
+            mem_hits: r.counter("ntorc_serve_mem_hits_total"),
+            store_hits: r.counter("ntorc_serve_store_hits_total"),
+            builds: r.counter("ntorc_serve_builds_total"),
+            evictions: r.counter("ntorc_serve_evictions_total"),
+            store_errors: r.counter("ntorc_serve_store_errors_total"),
+            queries: r.counter("ntorc_serve_queries_total"),
+            batches: r.counter("ntorc_serve_batches_total"),
+            build_ns: r.counter("ntorc_serve_build_ns_total"),
+            truncated_builds: r.counter("ntorc_serve_truncated_builds_total"),
+            eps_pruned: r.counter("ntorc_serve_eps_pruned_total"),
+            build_hist: r.histogram("ntorc_build_ns"),
+        }
+    }
 }
 
 impl ServeStats {
-    fn bump(counter: &AtomicU64) {
+    fn bump(counter: &AtomicU64, mirror: &crate::obs::Counter) {
         counter.fetch_add(1, Ordering::Relaxed);
+        mirror.inc();
     }
 
     /// Consistent point-in-time copy for reporting.
@@ -1601,20 +1645,21 @@ impl FrontierService {
         build_problem: impl FnOnce() -> DeployProblem,
     ) -> Arc<ServedFrontier> {
         if let Some(hit) = self.lookup(key.hash) {
-            ServeStats::bump(&self.stats.mem_hits);
+            ServeStats::bump(&self.stats.mem_hits, &self.stats.reg.mem_hits);
             return hit;
         }
         if let Some(store) = &self.store {
+            let _sp = crate::obs::span("store_load");
             match store.load(&key) {
                 Ok(Some(sf)) => {
-                    ServeStats::bump(&self.stats.store_hits);
+                    ServeStats::bump(&self.stats.store_hits, &self.stats.reg.store_hits);
                     let sf = Arc::new(sf);
                     self.insert(key.hash, Arc::clone(&sf));
                     return sf;
                 }
                 Ok(None) => {}
                 Err(e) => {
-                    ServeStats::bump(&self.stats.store_errors);
+                    ServeStats::bump(&self.stats.store_errors, &self.stats.reg.store_errors);
                     eprintln!(
                         "[serve] warning: discarding unreadable frontier {}: {e:#}",
                         key.file_stem()
@@ -1623,27 +1668,36 @@ impl FrontierService {
             }
         }
         let t0 = Instant::now();
-        let prob = build_problem();
-        let index = configured_frontier(&SolverOpts {
-            workers: self.cfg.workers,
-            max_points: self.cfg.max_points,
-            epsilon: self.cfg.epsilon,
-        })
-        .build(&prob);
-        ServeStats::bump(&self.stats.builds);
-        self.stats
-            .build_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let prob = {
+            let _sp = crate::obs::span("collapse");
+            build_problem()
+        };
+        let index = {
+            let _sp = crate::obs::span("build");
+            configured_frontier(&SolverOpts {
+                workers: self.cfg.workers,
+                max_points: self.cfg.max_points,
+                epsilon: self.cfg.epsilon,
+            })
+            .build(&prob)
+        };
+        let build_ns = t0.elapsed().as_nanos() as u64;
+        ServeStats::bump(&self.stats.builds, &self.stats.reg.builds);
+        self.stats.build_ns.fetch_add(build_ns, Ordering::Relaxed);
+        self.stats.reg.build_ns.add(build_ns);
+        self.stats.reg.build_hist.observe(build_ns);
         if index.stats.truncated {
-            ServeStats::bump(&self.stats.truncated_builds);
+            ServeStats::bump(&self.stats.truncated_builds, &self.stats.reg.truncated_builds);
         }
         self.stats
             .eps_pruned
             .fetch_add(index.stats.eps_pruned, Ordering::Relaxed);
+        self.stats.reg.eps_pruned.add(index.stats.eps_pruned);
         let sf = Arc::new(ServedFrontier::from_problem(key.clone(), &prob, index));
         if let Some(store) = &self.store {
+            let _sp = crate::obs::span("store_save");
             if let Err(e) = store.save(&sf) {
-                ServeStats::bump(&self.stats.store_errors);
+                ServeStats::bump(&self.stats.store_errors, &self.stats.reg.store_errors);
                 eprintln!(
                     "[serve] warning: could not persist frontier {}: {e:#}",
                     key.file_stem()
@@ -1662,7 +1716,7 @@ impl FrontierService {
         net: &NetConfig,
         latency_budget: f64,
     ) -> Option<Solution> {
-        ServeStats::bump(&self.stats.queries);
+        ServeStats::bump(&self.stats.queries, &self.stats.reg.queries);
         self.resolve(models, net).index.query(latency_budget)
     }
 
@@ -1733,10 +1787,11 @@ impl FrontierService {
         if requests.is_empty() {
             return Vec::new();
         }
-        ServeStats::bump(&self.stats.batches);
+        ServeStats::bump(&self.stats.batches, &self.stats.reg.batches);
         self.stats
             .queries
             .fetch_add(requests.len() as u64, Ordering::Relaxed);
+        self.stats.reg.queries.add(requests.len() as u64);
         // Phase 1: resolve sequentially (duplicates hit the LRU; each
         // build already fans its DP merges out over the worker pool).
         let pairs: Vec<(Arc<ServedFrontier>, f64)> = requests
@@ -1751,6 +1806,7 @@ impl FrontierService {
             let reuse = solution.as_ref().map(|s| sf.reuse_of(&s.pick)).unwrap_or_default();
             BatchResponse { key: sf.key.clone(), budget, solution, reuse }
         }
+        let _sp = crate::obs::span("query");
         let workers = self.cfg.workers.min(pairs.len()).max(1);
         if workers <= 1 || pairs.len() < BATCH_SHARD_MIN {
             return pairs.iter().map(|(sf, b)| answer(sf, *b)).collect();
@@ -1795,7 +1851,7 @@ impl FrontierService {
                 break;
             };
             st.entries.remove(&oldest);
-            ServeStats::bump(&self.stats.evictions);
+            ServeStats::bump(&self.stats.evictions, &self.stats.reg.evictions);
         }
     }
 }

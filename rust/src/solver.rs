@@ -87,6 +87,7 @@ impl Solver for BranchAndBound {
     }
 
     fn solve(&self, prob: &DeployProblem, latency_budget: f64) -> Option<Solution> {
+        let _sp = crate::obs::span("solve/bb");
         mip::solve_bb(&prob.with_budget(latency_budget)).map(|(s, _)| s)
     }
 }
@@ -110,6 +111,7 @@ impl Solver for ExactDp {
     }
 
     fn solve(&self, prob: &DeployProblem, latency_budget: f64) -> Option<Solution> {
+        let _sp = crate::obs::span("solve/dp");
         mip::solve_dp(&prob.with_budget(latency_budget))
     }
 }
@@ -138,6 +140,7 @@ impl Solver for ParetoFrontier {
     /// mode); amortized callers should hold the [`FrontierIndex`] (or go
     /// through [`crate::serve::FrontierService`]) instead.
     fn solve(&self, prob: &DeployProblem, latency_budget: f64) -> Option<Solution> {
+        let _sp = crate::obs::span("solve/frontier");
         ParetoFrontier::build(self, prob).query(latency_budget)
     }
 }

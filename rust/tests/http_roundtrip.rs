@@ -209,6 +209,86 @@ fn saturation_returns_429_and_warm_requests_bypass_the_gate() {
 }
 
 #[test]
+fn trace_header_round_trips_and_slow_builds_log_a_span_tree() {
+    let dir = temp_dir("obs");
+    std::fs::create_dir_all(&dir).unwrap();
+    let log_path = dir.join("obs.jsonl");
+    // obs on, slow_ms far below the 200 ms builder delay: the cold
+    // build below is guaranteed to be logged as "slow". (The obs
+    // globals are process-wide; concurrent tests may add lines to this
+    // log, but they carry different trace IDs.)
+    ntorc::obs::init(&ntorc::obs::ObsConfig {
+        enabled: true,
+        log_path: log_path.to_string_lossy().into_owned(),
+        sample: 0.0,
+        slow_ms: 50,
+    })
+    .unwrap();
+    let server = start(http_cfg(2, 2), None, 200, None);
+    let mut client = HttpClient::new(server.addr().to_string());
+    let body = r#"{"v": 1, "requests": [{"network": "tiny", "budget": 100}]}"#;
+
+    // Client-chosen trace ID round-trips into the response envelope.
+    let reply = client.post_traced("/v1/query", body, "it-trace-cold-1").unwrap();
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    let doc = reply.json().unwrap();
+    assert_eq!(
+        doc.get("trace").unwrap().as_str(),
+        Some("it-trace-cold-1"),
+        "X-Ntorc-Trace must echo as the envelope's trace field"
+    );
+
+    // No header: the server generates a distinct ID.
+    let doc = client.post("/v1/query", body).unwrap().json().unwrap();
+    let generated = doc.get("trace").unwrap().as_str().unwrap().to_string();
+    assert!(!generated.is_empty() && generated != "it-trace-cold-1");
+
+    // /v1/metrics: plain-text Prometheus exposition with frozen names.
+    let metrics = client.get("/v1/metrics").unwrap();
+    assert_eq!(metrics.status, 200);
+    assert!(
+        metrics
+            .headers
+            .get("content-type")
+            .is_some_and(|ct| ct.starts_with("text/plain")),
+        "metrics are text, not JSON"
+    );
+    for name in ["ntorc_requests_total", "ntorc_serve_builds_total", "ntorc_request_ns_bucket"] {
+        assert!(metrics.body.contains(name), "exposition missing {name}");
+    }
+    assert_eq!(
+        client.request("POST", "/v1/metrics", Some("{}")).unwrap().status,
+        405,
+        "metrics endpoint is GET-only"
+    );
+
+    client.post("/v1/shutdown", "{}").unwrap();
+    server.join().unwrap();
+    ntorc::obs::init(&ntorc::obs::ObsConfig::default()).unwrap();
+
+    // The slow cold request logged one JSONL line whose span tree
+    // attributes the time to named stages, down to the DP levels.
+    let text = std::fs::read_to_string(&log_path).expect("event log written");
+    let line = text
+        .lines()
+        .find(|l| l.contains("it-trace-cold-1"))
+        .expect("slow request logged by trace ID");
+    let doc = parse_json(line).unwrap();
+    assert_eq!(doc.get("level").unwrap().as_str(), Some("slow"));
+    assert_eq!(doc.get("slow").unwrap().as_bool(), Some(true));
+    assert_eq!(doc.get("path").unwrap().as_str(), Some("/v1/query"));
+    let spans = doc.get("spans").unwrap().as_arr().unwrap();
+    let names: Vec<String> = spans
+        .iter()
+        .map(|s| s.get("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    for want in ["parse", "admission", "collapse", "build", "build/level0", "query", "encode"] {
+        assert!(names.iter().any(|n| n == want), "span tree missing '{want}': {names:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn graceful_drain_completes_in_flight_requests_and_flushes_stats() {
     let dir = temp_dir("drain");
     std::fs::create_dir_all(&dir).unwrap();
