@@ -2,6 +2,9 @@
 //!   * native-trainer GEMM + full train step (HPO inner loop),
 //!   * random-forest inference (MIP candidate enumeration),
 //!   * batched vs unbatched cost-model grid evaluation (crate::eval),
+//!   * analytical systolic collapse vs the batched forest collapse
+//!     (>= 10x faster with zero forest calls — the closed-form
+//!     acceptance bar, asserted here),
 //!   * MIP B&B solve + DP oracle,
 //!   * Pareto-frontier build / query / sweep (crate::frontier),
 //!   * ε-dominance coarsened frontier vs exact on the adversarial
@@ -25,6 +28,7 @@
 //! `results/BENCH_frontier.json` over the committed file (keep headroom:
 //! CI runners are slow and shared).
 
+use ntorc::backend::{Backend, SystolicBackend, SystolicParams};
 use ntorc::bench::Bencher;
 use ntorc::coordinator::{candidate_reuse_factors, Pipeline, PipelineConfig};
 use ntorc::eval::BatchEvaluator;
@@ -172,6 +176,49 @@ fn main() {
     );
     println!("    -> solve_bb bit-identical with and without the cache");
 
+    // --- analytical systolic collapse (closed-form, zero forest calls) -----
+    // The overlay backend's acceptance bar (docs/BACKENDS.md): collapsing
+    // the same model1 plan through the systolic closed forms must be
+    // >= 10x faster than the batched forest-predicted collapse above and
+    // must never touch the forests at all. This bench is single-threaded,
+    // so the process-wide prediction counters are exact here (they are
+    // racy under `cargo test`'s parallel runner — which is why this
+    // assertion lives here and not in a unit test).
+    let systolic = SystolicBackend::new(SystolicParams::gemmini());
+    ntorc::forest::reset_prediction_counters();
+    let t0 = std::time::Instant::now();
+    let sys_prob = systolic
+        .build_problem(None, &plan, 50_000.0, 48, 1)
+        .expect("closed-form backends build without models");
+    let systolic_build_ns = t0.elapsed().as_nanos() as f64;
+    b.record("systolic_build/model1", systolic_build_ns);
+    assert_eq!(sys_prob.layers.len(), plan.len());
+    assert_eq!(
+        ntorc::forest::predict_batch_calls(),
+        0,
+        "the analytical path must issue no batched forest calls"
+    );
+    assert_eq!(
+        ntorc::forest::predict_calls(),
+        0,
+        "the analytical path must issue no per-row forest calls"
+    );
+    assert!(
+        systolic_build_ns * 10.0 <= batched_ns,
+        "systolic collapse {systolic_build_ns}ns not 10x faster than batched forest {batched_ns}ns"
+    );
+    // The frontier engine runs backend-agnostic on the collapsed problem.
+    let sys_index = ParetoFrontier::new(1).build(&sys_prob);
+    sys_index.check_invariants().expect("systolic frontier invariants");
+    println!(
+        "    -> closed-form collapse {:.1} µs vs batched forest {:.1} µs ({:.1}x faster), \
+         zero forest calls, {} frontier points",
+        systolic_build_ns / 1e3,
+        batched_ns / 1e3,
+        batched_ns / systolic_build_ns.max(1.0),
+        sys_index.len()
+    );
+
     b.bench("mip_build_problem/model1", || {
         models.build_problem(&net.plan(), 50_000.0, 48).layers.len()
     });
@@ -236,6 +283,7 @@ fn main() {
         max_points: None,
         epsilon: None,
         workload: None,
+        backend: None,
     };
     let svc = FrontierService::new(serve_cfg.clone(), Some(FrontierStore::new(&serve_dir)));
     let t0 = std::time::Instant::now();
@@ -469,6 +517,7 @@ fn main() {
         ("obs_overhead_ratio", Json::num(obs_overhead_ratio)),
         ("store_load_ns", Json::num(store_load_ns)),
         ("store_bytes_per_point", Json::num(store_bytes_per_point)),
+        ("systolic_build_ns", Json::num(systolic_build_ns)),
     ]);
     std::fs::create_dir_all("results").expect("results dir");
     std::fs::write("results/BENCH_frontier.json", report.to_pretty()).expect("bench json");
@@ -523,6 +572,7 @@ fn main() {
             "store_bytes_per_point",
             Json::num(ratchet("store_bytes_per_point")),
         ),
+        ("systolic_build_ns", Json::num(ratchet("systolic_build_ns"))),
     ]);
     std::fs::write("results/BENCH_frontier.ratchet.json", ratchet_doc.to_pretty())
         .expect("ratchet json");
@@ -546,6 +596,7 @@ fn main() {
             "obs_overhead_ratio",
             "store_load_ns",
             "store_bytes_per_point",
+            "systolic_build_ns",
         ] {
             let measured = report.get(key).unwrap().as_f64().unwrap();
             // Keys absent from the baseline are not gated (lets the

@@ -3,7 +3,7 @@
 //! One envelope grammar, shared **verbatim** by the three clients of the
 //! serving stack: file-mode `ntorc serve`, the HTTP front-end
 //! ([`crate::httpd`]) and the load generator ([`crate::loadgen`]).
-//! Extracting the shapes out of `serve::parse_requests` means a request
+//! Owning the request/response shapes in one module means a request
 //! document behaves identically whether it arrives on stdin, as a file,
 //! or as an HTTP body — and a response parses identically whether it is
 //! read back from `results/serve_stats.json` or off a socket.
@@ -29,6 +29,11 @@
 //!   different scenario family rejects the batch with
 //!   [`ErrorCode::UnknownWorkload`] instead of silently answering from
 //!   the wrong key space.
+//! * `backend` — optional hardware cost-target assertion (default
+//!   `hls4ml`; see `docs/BACKENDS.md`). A server serving a different
+//!   backend rejects the batch with [`ErrorCode::UnknownBackend`] —
+//!   backend-scoped frontier keys make a silent wrong-backend answer
+//!   impossible, and the typed rejection makes it *visible*.
 //! * each request names a catalog network (`network`) or inlines one
 //!   (`net`), and carries one `budget` or a `budgets` list (expanded to
 //!   one query per budget).
@@ -77,6 +82,8 @@ pub enum ErrorCode {
     UnknownNetwork,
     /// The envelope asserted a `workload` the server is not serving.
     UnknownWorkload,
+    /// The envelope asserted a `backend` the server is not serving.
+    UnknownBackend,
     /// Admission control: the build queue is saturated; retry later.
     Overloaded,
     /// The server is draining and no longer accepts new work.
@@ -94,10 +101,11 @@ pub enum ErrorCode {
 }
 
 /// Every code, for table-driven tests and docs.
-pub const ERROR_CODES: [ErrorCode; 10] = [
+pub const ERROR_CODES: [ErrorCode; 11] = [
     ErrorCode::BadRequest,
     ErrorCode::UnknownNetwork,
     ErrorCode::UnknownWorkload,
+    ErrorCode::UnknownBackend,
     ErrorCode::Overloaded,
     ErrorCode::Draining,
     ErrorCode::NotFound,
@@ -113,6 +121,7 @@ impl ErrorCode {
             ErrorCode::BadRequest => "bad_request",
             ErrorCode::UnknownNetwork => "unknown_network",
             ErrorCode::UnknownWorkload => "unknown_workload",
+            ErrorCode::UnknownBackend => "unknown_backend",
             ErrorCode::Overloaded => "overloaded",
             ErrorCode::Draining => "draining",
             ErrorCode::NotFound => "not_found",
@@ -133,6 +142,7 @@ impl ErrorCode {
             ErrorCode::BadRequest => 400,
             ErrorCode::UnknownNetwork => 404,
             ErrorCode::UnknownWorkload => 409,
+            ErrorCode::UnknownBackend => 409,
             ErrorCode::Overloaded => 429,
             ErrorCode::Draining => 503,
             ErrorCode::NotFound => 404,
@@ -197,6 +207,9 @@ pub struct ParsedRequests {
     pub requests: Vec<BatchRequest>,
     /// The optional scenario assertion from the envelope.
     pub workload: Option<String>,
+    /// The optional hardware cost-target assertion from the envelope
+    /// (`None` = the `hls4ml` default; see `docs/BACKENDS.md`).
+    pub backend: Option<String>,
 }
 
 /// Parse a request document (v1 envelope, legacy un-versioned object,
@@ -221,6 +234,14 @@ pub fn parse_request_doc(
         Some(w) => Some(
             w.as_str()
                 .ok_or_else(|| ApiError::bad("'workload' must be a string"))?
+                .to_string(),
+        ),
+        None => None,
+    };
+    let backend = match doc.as_obj().and_then(|o| o.get("backend")) {
+        Some(b) => Some(
+            b.as_str()
+                .ok_or_else(|| ApiError::bad("'backend' must be a string"))?
                 .to_string(),
         ),
         None => None,
@@ -280,7 +301,7 @@ pub fn parse_request_doc(
     if out.is_empty() {
         return Err(ApiError::bad("no requests in document"));
     }
-    Ok(ParsedRequests { requests: out, workload })
+    Ok(ParsedRequests { requests: out, workload, backend })
 }
 
 /// Parse an inline network: `{"window": w, "conv": [[k, f], ...],
@@ -349,6 +370,16 @@ pub fn net_to_json(net: &NetConfig) -> Json {
 /// Build a v1 request envelope from typed requests (what `loadgen` puts
 /// on the wire; round-trips through [`parse_request_doc`]).
 pub fn request_envelope(requests: &[BatchRequest], workload: Option<&str>) -> Json {
+    request_envelope_with(requests, workload, None)
+}
+
+/// [`request_envelope`] with the optional `backend` assertion spelled
+/// out (`None` leaves the field off the wire — the `hls4ml` default).
+pub fn request_envelope_with(
+    requests: &[BatchRequest],
+    workload: Option<&str>,
+    backend: Option<&str>,
+) -> Json {
     let items: Vec<Json> = requests
         .iter()
         .map(|r| {
@@ -361,6 +392,9 @@ pub fn request_envelope(requests: &[BatchRequest], workload: Option<&str>) -> Js
     ];
     if let Some(w) = workload {
         pairs.push(("workload", Json::str(w)));
+    }
+    if let Some(b) = backend {
+        pairs.push(("backend", Json::str(b)));
     }
     Json::obj(pairs)
 }
@@ -538,10 +572,11 @@ mod tests {
         // The wire contract: code strings and status mappings are
         // frozen. Changing any entry breaks deployed clients — this
         // golden table is the tripwire.
-        let golden: [(&str, u16); 10] = [
+        let golden: [(&str, u16); 11] = [
             ("bad_request", 400),
             ("unknown_network", 404),
             ("unknown_workload", 409),
+            ("unknown_backend", 409),
             ("overloaded", 429),
             ("draining", 503),
             ("not_found", 404),
@@ -559,6 +594,9 @@ mod tests {
         assert!(ErrorCode::Overloaded.retryable());
         assert!(ErrorCode::Draining.retryable());
         assert!(!ErrorCode::BadRequest.retryable());
+        // Asking for a backend this server doesn't serve is a fault in
+        // the request, not a transient condition.
+        assert!(!ErrorCode::UnknownBackend.retryable());
     }
 
     #[test]
@@ -600,6 +638,22 @@ mod tests {
         )
         .unwrap();
         assert_eq!(parse_request_doc(&doc, &named).unwrap().workload.as_deref(), Some("rotor"));
+        // The backend assertion parses the same way — and its absence
+        // is None (the hls4ml default), not a guess.
+        let with_backend = parse_json(
+            r#"{"v": 1, "backend": "systolic",
+                "requests": [{"network": "tiny", "budget": 1}]}"#,
+        )
+        .unwrap();
+        let parsed = parse_request_doc(&with_backend, &named).unwrap();
+        assert_eq!(parsed.backend.as_deref(), Some("systolic"));
+        let plain = parse_json(r#"{"requests": [{"network": "tiny", "budget": 1}]}"#).unwrap();
+        assert_eq!(parse_request_doc(&plain, &named).unwrap().backend, None);
+        let bad_backend =
+            parse_json(r#"{"backend": 3, "requests": [{"network": "tiny", "budget": 1}]}"#)
+                .unwrap();
+        let err = parse_request_doc(&bad_backend, &named).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
         let unknown = parse_json(r#"{"requests": [{"network": "nope", "budget": 1}]}"#).unwrap();
         let err = parse_request_doc(&unknown, &named).unwrap_err();
         assert_eq!(err.code, ErrorCode::UnknownNetwork);
@@ -632,7 +686,8 @@ mod tests {
                 );
                 requests.push(BatchRequest { net, budget: g.rng.range_f64(1.0, 1e6) });
             }
-            let doc = request_envelope(&requests, Some("dropbear"));
+            let backend = if g.rng.bool(0.5) { Some("systolic") } else { None };
+            let doc = request_envelope_with(&requests, Some("dropbear"), backend);
             // Through the serializer and back, like a real HTTP body.
             let text = doc.to_string();
             let back = parse_request_doc(
@@ -642,6 +697,9 @@ mod tests {
             .map_err(|e| format!("parse: {e}"))?;
             if back.workload.as_deref() != Some("dropbear") {
                 return Err("workload lost".into());
+            }
+            if back.backend.as_deref() != backend {
+                return Err("backend lost".into());
             }
             if back.requests.len() != requests.len() {
                 return Err("length changed".into());

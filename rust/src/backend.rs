@@ -1,0 +1,483 @@
+//! Pluggable hardware cost backends — the overlay-vs-dataflow axis.
+//!
+//! N-TORC's forest-predicted cost models exist because *dataflow* HLS
+//! targets (HLS4ML-style, one tailored datapath per layer) have
+//! post-synthesis area/latency too irregular for closed forms. *Overlay*
+//! architectures — a fixed systolic array the compiler maps every layer
+//! onto, Gemmini being the canonical example — are the opposite: their
+//! cost structure is analytical. The paper cites this contrast; this
+//! module makes it measurable. A [`Backend`] bundles everything the
+//! deployment stack needs from a hardware target:
+//!
+//! * a registry **name** (`--backend`, `backend.name`, the wire-API
+//!   `backend` field, and the identity folded into frontier-store keys
+//!   via [`crate::serve::BackendKey`]);
+//! * the per-layer **candidate space** ([`Backend::candidates`] — for
+//!   both built-ins the HLS4ML reuse-factor divisor grid, so solver and
+//!   store shapes stay uniform across backends);
+//! * the **cost source** ([`CostSource`]): forest-predicted (needs a
+//!   fitted [`CostModels`]) or closed-form (pure arithmetic, no forest
+//!   inference at all — `perf_hotpaths` asserts zero `predict_batch`
+//!   calls on this path);
+//! * the collapse to a [`DeployProblem`] ([`Backend::build_problem`]),
+//!   after which the entire solver/frontier/serve stack is
+//!   backend-agnostic.
+//!
+//! Two implementations:
+//!
+//! * [`Hls4mlBackend`] — the default; a zero-cost wrapper over today's
+//!   `CostModels::build_problem_parallel` path. **Bit-identical** to the
+//!   pre-backend pipeline: same candidate grids, same forest-predicted
+//!   costs, and (because [`crate::serve::FrontierService`] normalizes
+//!   the default backend out of key mixing) the same frontier keys and
+//!   store documents existing warm stores already hold.
+//! * [`SystolicBackend`] — an analytical Gemmini-like overlay: a 16×16
+//!   PE mesh behind a DRAM → scratchpad → register hierarchy with an
+//!   output accumulator, parameterized by the FactorFlow Gemmini `Arch`
+//!   description (see [`SystolicParams`] for the provenance of every
+//!   constant). Per-layer latency and LUT-equivalent resources come
+//!   from closed forms over the layer plan — no database sweep, no
+//!   forest fit, no inference.
+//!
+//! **Adding a third backend** (mirrors the [`crate::workload`] and
+//! [`crate::solver::SolverKind`] recipes): implement [`Backend`], add
+//! the name to [`ALL`] and the match in [`by_name`], and everything
+//! else — key scoping, config/CLI/wire selection, the CI
+//! workload × backend matrix — picks it up by name. The contract your
+//! implementation must honor: `candidates` non-empty and deterministic,
+//! `build_problem` layer order = plan order with `Choice` lists in
+//! candidate order, and (for closed-form backends) `layer_cost`
+//! returning the exact per-choice numbers `build_problem` uses.
+//! `rust/docs/BACKENDS.md` walks through the full checklist.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{candidate_reuse_factors, CostModels};
+use crate::hls::LayerCost;
+use crate::layers::LayerSpec;
+use crate::mip::{Choice, DeployProblem};
+
+/// The default backend (today's forest-predicted HLS4ML path). Keys,
+/// costs and store documents under this name are bit-identical to every
+/// pre-backend release.
+pub const DEFAULT: &str = "hls4ml";
+
+/// Every registered backend name, in registry order.
+pub const ALL: [&str; 2] = ["hls4ml", "systolic"];
+
+/// Where a backend's per-layer costs come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostSource {
+    /// Fitted random forests — the backend needs a trained
+    /// [`CostModels`] (and frontier keys are additionally scoped by the
+    /// model fingerprint).
+    Forest,
+    /// Closed-form arithmetic over the layer plan — no models, no
+    /// forest inference; frontier keys are architecture-scoped only.
+    Analytical,
+}
+
+/// One hardware target the deployment stack can optimize for.
+pub trait Backend: Send + Sync {
+    /// Registry name (`--backend`, `backend.name`, the wire field).
+    fn name(&self) -> &'static str;
+
+    /// Forest-predicted or closed-form (selects the resolve path and
+    /// the key-scoping rule in [`crate::coordinator::Pipeline`]).
+    fn source(&self) -> CostSource;
+
+    /// Per-layer candidate mapping factors at the configured cap. Both
+    /// built-ins use the HLS4ML divisor grid
+    /// ([`candidate_reuse_factors`]): for the overlay it is the
+    /// temporal folding factor — how many grid MACs share one PE.
+    fn candidates(&self, spec: &LayerSpec, cap: usize) -> Vec<usize>;
+
+    /// Closed-form cost of one layer at one candidate; `None` for
+    /// forest-backed backends (their costs live in [`CostModels`]).
+    fn layer_cost(&self, spec: &LayerSpec, reuse: usize) -> Option<LayerCost>;
+
+    /// Collapse a layer plan into the multiple-choice knapsack. Layer
+    /// order follows `plan`; choice order follows
+    /// [`candidates`](Self::candidates). Forest-backed backends require
+    /// `models` and error without them.
+    fn build_problem(
+        &self,
+        models: Option<&CostModels>,
+        plan: &[LayerSpec],
+        latency_budget: f64,
+        max_choices_per_layer: usize,
+        workers: usize,
+    ) -> Result<DeployProblem>;
+}
+
+/// Look up a backend by registry name. Unknown names list the registry
+/// (the same error surface as `workload::by_name` / `SolverKind::parse`).
+pub fn by_name(name: &str) -> Result<Arc<dyn Backend>> {
+    match name {
+        "hls4ml" => Ok(Arc::new(Hls4mlBackend)),
+        "systolic" => Ok(Arc::new(SystolicBackend::new(SystolicParams::gemmini()))),
+        other => bail!("unknown backend '{other}' (registered: {})", ALL.join(", ")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLS4ML (forest-predicted dataflow — the default)
+// ---------------------------------------------------------------------------
+
+/// The forest-predicted HLS4ML dataflow target — a transparent wrapper
+/// over [`CostModels::build_problem_parallel`], kept bit-identical to
+/// the pre-backend pipeline by construction (same call, same grids,
+/// same costs).
+pub struct Hls4mlBackend;
+
+impl Backend for Hls4mlBackend {
+    fn name(&self) -> &'static str {
+        "hls4ml"
+    }
+
+    fn source(&self) -> CostSource {
+        CostSource::Forest
+    }
+
+    fn candidates(&self, spec: &LayerSpec, cap: usize) -> Vec<usize> {
+        candidate_reuse_factors(spec, cap)
+    }
+
+    fn layer_cost(&self, _spec: &LayerSpec, _reuse: usize) -> Option<LayerCost> {
+        None
+    }
+
+    fn build_problem(
+        &self,
+        models: Option<&CostModels>,
+        plan: &[LayerSpec],
+        latency_budget: f64,
+        max_choices_per_layer: usize,
+        workers: usize,
+    ) -> Result<DeployProblem> {
+        let Some(models) = models else {
+            bail!("the hls4ml backend needs fitted cost models (CostModels)");
+        };
+        Ok(models.build_problem_parallel(plan, latency_budget, max_choices_per_layer, workers))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Systolic overlay (closed-form Gemmini-like)
+// ---------------------------------------------------------------------------
+
+/// Analytical parameters of the overlay, following the FactorFlow
+/// Gemmini `Arch` description (SNIPPETS.md): a 16×16 PE mesh (SARows ×
+/// SACols fanout levels), DRAM at 64.00 pJ/operand and 8 operands/cycle,
+/// a scratchpad at 3.47 pJ and 32 operands/cycle, an output accumulator
+/// at 4.01 pJ and 8 operands/cycle, per-PE registers at 0.01 pJ and a
+/// 0.28 pJ/MAC compute level. The area proxies (`lut_per_pe`,
+/// `ff_per_pe`, 16-bit operands against 18,432-bit BRAM18 blocks) are
+/// this crate's LUT-equivalent normalization so overlay and dataflow
+/// costs land in one comparable unit ([`LayerCost::resource_sum`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SystolicParams {
+    /// PE mesh rows × columns (Gemmini: 16 × 16).
+    pub mesh_rows: usize,
+    pub mesh_cols: usize,
+    /// DRAM: pJ per operand access / operands per cycle.
+    pub dram_energy_pj: f64,
+    pub dram_bw: f64,
+    /// Scratchpad (weights + activations staging).
+    pub spad_energy_pj: f64,
+    pub spad_bw: f64,
+    /// Output accumulator (partial-sum spills when the demanded
+    /// parallelism overflows the mesh).
+    pub acc_energy_pj: f64,
+    pub acc_bw: f64,
+    /// Per-PE operand registers (two accesses per MAC).
+    pub reg_energy_pj: f64,
+    /// Compute level: pJ per MAC, one MAC per PE per cycle.
+    pub compute_energy_pj: f64,
+    /// LUT-equivalent area per active PE (MAC + control).
+    pub lut_per_pe: f64,
+    /// FF-equivalent area per active PE (pipeline + operand registers).
+    pub ff_per_pe: f64,
+    /// Operand width in bits (Gemmini's int16 configuration).
+    pub operand_bits: f64,
+}
+
+impl SystolicParams {
+    /// The FactorFlow Gemmini operating point.
+    pub fn gemmini() -> SystolicParams {
+        SystolicParams {
+            mesh_rows: 16,
+            mesh_cols: 16,
+            dram_energy_pj: 64.00,
+            dram_bw: 8.0,
+            spad_energy_pj: 3.47,
+            spad_bw: 32.0,
+            acc_energy_pj: 4.01,
+            acc_bw: 8.0,
+            reg_energy_pj: 0.01,
+            compute_energy_pj: 0.28,
+            lut_per_pe: 50.0,
+            ff_per_pe: 100.0,
+            operand_bits: 16.0,
+        }
+    }
+
+    /// Total PEs in the mesh.
+    pub fn mesh(&self) -> usize {
+        self.mesh_rows * self.mesh_cols
+    }
+}
+
+/// Per-layer operand counts the closed forms run on: the folded GEMV
+/// grid is `n_in × n_out`, swept `seq` times (conv output positions /
+/// LSTM timesteps — the kind-specific structure is already encoded in
+/// the plan's `(n_in, n_out, seq)`, so the forms are kind-agnostic,
+/// exactly like [`crate::hls::features_of`]).
+struct Traffic {
+    macs: f64,
+    weights: f64,
+    inputs: f64,
+    outputs: f64,
+}
+
+fn traffic_of(spec: &LayerSpec) -> Traffic {
+    let seq = spec.seq as f64;
+    Traffic {
+        macs: spec.gemv_mults() as f64,
+        weights: (spec.n_in * spec.n_out) as f64,
+        inputs: spec.n_in as f64 * seq,
+        outputs: spec.n_out as f64 * seq,
+    }
+}
+
+/// The analytical Gemmini-like overlay target. The candidate factor `r`
+/// is the temporal folding of the `n_in × n_out` MAC grid: `P / r` MACs
+/// are demanded in parallel, the mesh caps what it can grant, and any
+/// overflow folds into extra accumulator passes. Latency is the
+/// sequential fill → compute → drain sum (a deliberately conservative
+/// no-overlap model); resources scale with *active* PEs, which is what
+/// makes the cost ↔ latency trade-off the knapsack optimizes.
+pub struct SystolicBackend {
+    params: SystolicParams,
+}
+
+impl SystolicBackend {
+    pub fn new(params: SystolicParams) -> SystolicBackend {
+        SystolicBackend { params }
+    }
+
+    pub fn params(&self) -> &SystolicParams {
+        &self.params
+    }
+
+    /// Active PEs and accumulator folds at folding factor `reuse`:
+    /// `pe = min(P/r, mesh)`, `folds = ceil((P/r) / mesh)` — demand the
+    /// mesh cannot grant becomes partial-sum passes through the
+    /// accumulator.
+    fn occupancy(&self, spec: &LayerSpec, reuse: usize) -> (f64, f64) {
+        let demand = ((spec.n_in * spec.n_out) as f64 / reuse.max(1) as f64).max(1.0);
+        let mesh = self.params.mesh() as f64;
+        (demand.min(mesh), (demand / mesh).ceil().max(1.0))
+    }
+
+    /// Closed-form energy of one inference through this layer (pJ):
+    /// every operand pays DRAM + scratchpad staging, every MAC pays the
+    /// compute level plus two register reads, and partial sums pay the
+    /// accumulator once per fold. Reported by the backend-comparison
+    /// table; not part of the knapsack objective.
+    pub fn layer_energy_pj(&self, spec: &LayerSpec, reuse: usize) -> f64 {
+        let t = traffic_of(spec);
+        let (_, folds) = self.occupancy(spec, reuse);
+        let p = &self.params;
+        t.macs * (p.compute_energy_pj + 2.0 * p.reg_energy_pj)
+            + (t.weights + t.inputs) * p.spad_energy_pj
+            + (t.weights + t.inputs + t.outputs) * p.dram_energy_pj
+            + t.outputs * folds * p.acc_energy_pj
+    }
+
+    /// The closed-form [`LayerCost`]: fill/compute/drain latency in
+    /// cycles and LUT-equivalent resources for the active-PE footprint.
+    pub fn cost_of(&self, spec: &LayerSpec, reuse: usize) -> LayerCost {
+        let t = traffic_of(spec);
+        let (pe, folds) = self.occupancy(spec, reuse);
+        let p = &self.params;
+        let compute_cycles = (t.macs / pe).ceil();
+        let dram_cycles = ((t.weights + t.inputs + t.outputs) / p.dram_bw).ceil();
+        let spad_cycles = ((t.weights + t.inputs) / p.spad_bw).ceil();
+        let acc_cycles = (t.outputs * folds / p.acc_bw).ceil();
+        LayerCost {
+            lut: pe * p.lut_per_pe,
+            ff: pe * p.ff_per_pe,
+            dsp: pe,
+            bram: ((t.weights + t.inputs) * p.operand_bits / 18_432.0).ceil(),
+            latency: compute_cycles + dram_cycles + spad_cycles + acc_cycles,
+        }
+    }
+}
+
+impl Backend for SystolicBackend {
+    fn name(&self) -> &'static str {
+        "systolic"
+    }
+
+    fn source(&self) -> CostSource {
+        CostSource::Analytical
+    }
+
+    fn candidates(&self, spec: &LayerSpec, cap: usize) -> Vec<usize> {
+        candidate_reuse_factors(spec, cap)
+    }
+
+    fn layer_cost(&self, spec: &LayerSpec, reuse: usize) -> Option<LayerCost> {
+        Some(self.cost_of(spec, reuse))
+    }
+
+    fn build_problem(
+        &self,
+        _models: Option<&CostModels>,
+        plan: &[LayerSpec],
+        latency_budget: f64,
+        max_choices_per_layer: usize,
+        _workers: usize,
+    ) -> Result<DeployProblem> {
+        let layers = plan
+            .iter()
+            .map(|spec| {
+                self.candidates(spec, max_choices_per_layer)
+                    .into_iter()
+                    .map(|r| {
+                        let c = self.cost_of(spec, r);
+                        Choice { reuse: r, cost: c.resource_sum(), latency: c.latency }
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(DeployProblem { layers, latency_budget })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::{LayerKind, NetConfig};
+
+    fn dense(n_in: usize, n_out: usize) -> LayerSpec {
+        LayerSpec::new(LayerKind::Dense, n_in, n_out, 1)
+    }
+
+    #[test]
+    fn registry_resolves_every_name_and_rejects_unknowns() {
+        for name in ALL {
+            let b = by_name(name).unwrap();
+            assert_eq!(b.name(), name);
+        }
+        assert_eq!(by_name(DEFAULT).unwrap().source(), CostSource::Forest);
+        assert_eq!(by_name("systolic").unwrap().source(), CostSource::Analytical);
+        let err = by_name("tpu").unwrap_err().to_string();
+        assert!(err.contains("unknown backend"), "{err}");
+        assert!(err.contains("hls4ml") && err.contains("systolic"), "{err}");
+    }
+
+    #[test]
+    fn both_backends_share_the_candidate_grid() {
+        let spec = dense(64, 16);
+        for name in ALL {
+            let b = by_name(name).unwrap();
+            assert_eq!(b.candidates(&spec, 12), candidate_reuse_factors(&spec, 12));
+        }
+    }
+
+    #[test]
+    fn systolic_costs_match_hand_computed_values() {
+        // Dense 4×4 (P = 16 MACs, one GEMV): weights 16, inputs 4,
+        // outputs 4; mesh 256 so no folding at any r.
+        let b = SystolicBackend::new(SystolicParams::gemmini());
+        let spec = dense(4, 4);
+        // r = 1: all 16 MACs in parallel -> 1 compute cycle;
+        // dram ceil(24/8)=3, spad ceil(20/32)=1, acc ceil(4/8)=1.
+        let c = b.cost_of(&spec, 1);
+        assert_eq!(c.latency, 6.0);
+        assert_eq!((c.dsp, c.lut, c.ff, c.bram), (16.0, 800.0, 1600.0, 1.0));
+        // r = 16: one PE grinds all 16 MACs; memory terms unchanged.
+        let c = b.cost_of(&spec, 16);
+        assert_eq!(c.latency, 16.0 + 3.0 + 1.0 + 1.0);
+        assert_eq!((c.dsp, c.lut, c.ff), (1.0, 50.0, 100.0));
+        // Energy at folds = 1:
+        // 16·(0.28 + 0.02) + 20·3.47 + 24·64.00 + 4·4.01 = 1626.24 pJ.
+        assert!((b.layer_energy_pj(&spec, 1) - 1626.24).abs() < 1e-9);
+        assert!((b.layer_energy_pj(&spec, 16) - 1626.24).abs() < 1e-9);
+    }
+
+    #[test]
+    fn systolic_folds_demand_past_the_mesh_into_accumulator_passes() {
+        // Dense 64×64: P = 4096 demanded at r = 1 against a 256-PE mesh
+        // -> 16 folds. compute ceil(4096/256)=16, dram ceil(4224/8)=528,
+        // spad ceil(4160/32)=130, acc ceil(64·16/8)=128.
+        let b = SystolicBackend::new(SystolicParams::gemmini());
+        let spec = dense(64, 64);
+        let c = b.cost_of(&spec, 1);
+        assert_eq!(c.latency, 16.0 + 528.0 + 130.0 + 128.0);
+        assert_eq!((c.dsp, c.lut, c.ff), (256.0, 12_800.0, 25_600.0));
+        assert_eq!(c.bram, 4.0, "ceil(4160·16 / 18432) BRAM18 blocks");
+        // Fold energy term: 64 outputs × 16 folds × 4.01 pJ, on top of
+        // 4096·0.30 + 4160·3.47 + 4224·64.00.
+        assert!((b.layer_energy_pj(&spec, 1) - 290_106.24).abs() < 1e-6);
+        // Fully folded (r = 4096): one PE, no accumulator overflow.
+        let c = b.cost_of(&spec, 4096);
+        assert_eq!(c.latency, 4096.0 + 528.0 + 130.0 + 8.0);
+        assert_eq!(c.dsp, 1.0);
+        assert!(b.layer_energy_pj(&spec, 4096) < b.layer_energy_pj(&spec, 1));
+    }
+
+    #[test]
+    fn systolic_trade_off_spans_the_knapsack_axes() {
+        // More folding -> fewer PEs (cheaper) and more compute cycles
+        // (slower): the monotone trade-off the frontier DP needs.
+        let b = SystolicBackend::new(SystolicParams::gemmini());
+        let spec = dense(32, 16);
+        let rfs = b.candidates(&spec, 48);
+        assert!(rfs.len() > 4);
+        let costs: Vec<LayerCost> = rfs.iter().map(|&r| b.cost_of(&spec, r)).collect();
+        for w in costs.windows(2) {
+            assert!(w[1].resource_sum() <= w[0].resource_sum() + 1e-9);
+            assert!(w[1].latency >= w[0].latency - 1e-9);
+        }
+    }
+
+    #[test]
+    fn systolic_problem_matches_layer_costs_and_solves() {
+        let b = SystolicBackend::new(SystolicParams::gemmini());
+        let net = NetConfig::new(32, vec![(3, 4)], vec![5], vec![6, 1]);
+        let plan = net.plan();
+        let prob = b.build_problem(None, &plan, 50_000.0, 48, 1).unwrap();
+        assert_eq!(prob.layers.len(), plan.len());
+        for (spec, choices) in plan.iter().zip(&prob.layers) {
+            let rfs = b.candidates(spec, 48);
+            assert_eq!(choices.len(), rfs.len());
+            for (choice, &r) in choices.iter().zip(&rfs) {
+                let c = b.layer_cost(spec, r).unwrap();
+                assert_eq!(choice.reuse, r);
+                assert_eq!(choice.cost, c.resource_sum());
+                assert_eq!(choice.latency, c.latency);
+            }
+        }
+        let (sol, _) = crate::mip::solve_bb(&prob).expect("feasible overlay deployment");
+        assert!(sol.latency <= 50_000.0);
+        // The frontier engine runs backend-agnostic on the collapsed
+        // problem.
+        let index = crate::frontier::ParetoFrontier::new(1).build(&prob);
+        index.check_invariants().unwrap();
+        assert!(index.query(50_000.0).is_some());
+    }
+
+    #[test]
+    fn hls4ml_backend_requires_models_and_matches_the_direct_path() {
+        let b = Hls4mlBackend;
+        let net = NetConfig::new(32, vec![], vec![], vec![8, 1]);
+        let err = b.build_problem(None, &net.plan(), 1e4, 16, 1).unwrap_err();
+        assert!(err.to_string().contains("cost models"), "{err}");
+        assert!(b.layer_cost(&net.plan()[0], 1).is_none());
+    }
+}

@@ -119,6 +119,11 @@ Pipeline commands
                   budget (--budgets 10000,50000 --network model1 --points;
                   --epsilon 0.05 builds the coarsened frontier and
                   verifies every answer within (1+eps)x of exact B&B)
+  report          Backend comparison: every registered cost target
+                  solves its own frontier over one budget grid; emits
+                  per-budget winner, cost ratio and build-time ratio
+                  (--budgets 10000,50000 --network model1; see
+                  docs/BACKENDS.md)
   serve           Frontier serving: answer a scripted batch-request
                   workload from the persistent store + LRU; prints
                   throughput, hit rate and the serve-stats table
@@ -159,6 +164,11 @@ Common flags
                            (re-derives the latency budget from its
                            sample rate; dataset, HPO, frontier sweeps
                            and the serve store all follow)
+  --backend <name>         hardware cost target: hls4ml | systolic
+                           (docs/BACKENDS.md; hls4ml = forest-predicted
+                           dataflow, systolic = closed-form analytical
+                           overlay; store keys are backend-scoped;
+                           sugar for --set backend.name=<name>)
   --config <path>          TOML-subset config file
   --set key=value          override one config key (repeatable; e.g.
                            solver.kind=bb|dp|frontier picks the registry

@@ -91,6 +91,11 @@ fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
             let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
             cfg.set_workload(s)?;
         }
+        // [backend] — hardware cost target (crate::backend registry).
+        "backend.name" => {
+            let s = v.as_str().ok_or_else(|| anyhow!("expected string"))?;
+            cfg.set_backend(s)?;
+        }
         // [data]
         "data.seconds_per_run" => cfg.data.seconds_per_run = as_f64(v)?,
         "data.scale" => cfg.data.scale = as_f64(v)?,
@@ -228,6 +233,12 @@ name = "dropbear"     # dropbear | rotor | battery; picking a workload
                       # re-derives latency_budget_cycles from its sample
                       # rate unless you also set it explicitly
 
+[backend]
+name = "hls4ml"       # hls4ml | systolic: hardware cost target
+                      # (docs/BACKENDS.md). hls4ml = forest-predicted
+                      # dataflow (the default); systolic = closed-form
+                      # analytical overlay, no forest on the cost path
+
 [data]
 seconds_per_run = 4.0
 scale = 0.15          # 1.0 = the paper's 150 runs
@@ -311,6 +322,7 @@ mod tests {
         assert_eq!(cfg.forest.n_trees, 60);
         assert_eq!(cfg.latency_budget, 50_000.0);
         assert_eq!(cfg.workload, "dropbear");
+        assert_eq!(cfg.backend, "hls4ml");
         assert_eq!(cfg.serve_capacity, 32);
         assert_eq!(cfg.frontier_store, None);
         assert_eq!(cfg.frontier_max_points, None);
@@ -406,6 +418,18 @@ mod tests {
         assert_eq!(cfg.latency_budget, 5_000.0);
         assert!(apply_override(&mut cfg, "workload.name=warp_drive").is_err());
         assert_eq!(cfg.workload, "rotor", "failed override must not apply");
+    }
+
+    #[test]
+    fn backend_key_selects_target_and_validates() {
+        let mut cfg = Preset::Smoke.pipeline();
+        assert_eq!(cfg.backend, "hls4ml");
+        apply_override(&mut cfg, "backend.name=systolic").unwrap();
+        assert_eq!(cfg.backend, "systolic");
+        apply_override(&mut cfg, "backend.name=hls4ml").unwrap();
+        assert_eq!(cfg.backend, "hls4ml");
+        assert!(apply_override(&mut cfg, "backend.name=tpu").is_err());
+        assert_eq!(cfg.backend, "hls4ml", "failed override must not apply");
     }
 
     #[test]

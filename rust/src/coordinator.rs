@@ -22,6 +22,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::backend::{self, Backend, CostSource};
 use crate::data::{self, WindowedData};
 use crate::eval::{BatchEvaluator, CostCache};
 use crate::forest::{regression_metrics, Forest, ForestConfig, FeatureMatrix, RegMetrics};
@@ -35,7 +36,8 @@ use crate::mip::{DeployProblem, Solution};
 use crate::nn::{Adam, AdamConfig, NativeModel};
 use crate::rng::Rng;
 use crate::serve::{
-    FrontierService, FrontierStore, ServeConfig, ServedFrontier, StoreFormat, WorkloadKey,
+    BackendKey, FrontierService, FrontierStore, ServeConfig, ServedFrontier, StoreFormat,
+    WorkloadKey,
 };
 use crate::solver::{self, Solver, SolverKind, SolverOpts};
 use crate::workload::{self, Workload};
@@ -425,6 +427,11 @@ pub struct PipelineConfig {
     /// default and frontier-store key scoping (see [`crate::workload`];
     /// `--workload` / `workload.name`).
     pub workload: String,
+    /// Hardware cost target every deployment in this pipeline solves
+    /// for (see [`crate::backend`]; `--backend` / `backend.name`).
+    /// Folded into frontier-store key scoping; the default (`hls4ml`)
+    /// mints exactly the pre-backend keys.
+    pub backend: String,
     pub sweep: SweepConfig,
     pub forest: ForestConfig,
     pub hls_seed: u64,
@@ -470,6 +477,7 @@ impl Default for PipelineConfig {
     fn default() -> Self {
         PipelineConfig {
             workload: "dropbear".to_string(),
+            backend: backend::DEFAULT.to_string(),
             sweep: SweepConfig::default(),
             forest: ForestConfig::default(),
             hls_seed: 0xD0_0DBEA7,
@@ -502,6 +510,15 @@ impl PipelineConfig {
         Ok(())
     }
 
+    /// Switch the hardware cost target. Errors on unregistered names
+    /// (and leaves the config untouched, like
+    /// [`set_workload`](Self::set_workload)).
+    pub fn set_backend(&mut self, name: &str) -> crate::Result<()> {
+        backend::by_name(name)?;
+        self.backend = name.to_string();
+        Ok(())
+    }
+
     /// The [`ServeConfig`] this pipeline's frontier service runs with.
     /// `ntorc httpd` builds its service through the same derivation, so
     /// frontier keys (workload identity, ε scope, guardrails) match
@@ -517,6 +534,9 @@ impl PipelineConfig {
             max_points: self.frontier_max_points,
             epsilon: self.frontier_epsilon,
             workload: Some(WorkloadKey { name: self.workload.clone(), sample_rate_hz }),
+            // The service normalizes the default backend to None, so an
+            // hls4ml pipeline keeps minting pre-backend keys verbatim.
+            backend: Some(BackendKey { name: self.backend.clone() }),
         })
     }
 
@@ -548,6 +568,17 @@ impl PipelineConfig {
     }
 }
 
+/// One backend's row of the overlay-vs-dataflow comparison
+/// ([`Pipeline::backend_sweep`]): its frontier solved at every budget,
+/// plus the wall-clock cost of producing that frontier (collapse +
+/// build on a cold key; ~0 when the shared store already holds it).
+#[derive(Clone, Debug)]
+pub struct BackendSweep {
+    pub backend: String,
+    pub build_seconds: f64,
+    pub solutions: Vec<Option<Solution>>,
+}
+
 /// One deployed Pareto model (a Table III row).
 #[derive(Clone, Debug)]
 pub struct DeployedModel {
@@ -570,21 +601,28 @@ pub struct Pipeline {
     /// optional persistent store, so an architecture pays the frontier
     /// DP once per store lifetime.
     serve: FrontierService,
+    /// The configured hardware cost target ([`crate::backend`]): where
+    /// per-layer costs come from (forest vs closed-form) and whose
+    /// identity the serving layer folds into every key.
+    backend: Arc<dyn Backend>,
 }
 
 impl Pipeline {
     pub fn new(cfg: PipelineConfig) -> Pipeline {
         let hls = HlsSim::new(hls::HlsConfig { seed: cfg.hls_seed, ..Default::default() });
         // serve_config folds the workload identity (name + sample rate)
-        // into every frontier key this pipeline files, so a store
-        // shared across scenarios never mixes them. The lookup is
+        // and the backend identity into every frontier key this
+        // pipeline files, so a store shared across scenarios or
+        // hardware targets never mixes them. The lookup is
         // metadata-only (no simulator construction); unknown names fail
         // loudly here.
         let serve_cfg = cfg
             .serve_config()
             .unwrap_or_else(|e| panic!("PipelineConfig.workload: {e}"));
         let serve = FrontierService::new(serve_cfg, cfg.frontier_store());
-        Pipeline { cfg, hls, serve }
+        let backend = backend::by_name(&cfg.backend)
+            .unwrap_or_else(|e| panic!("PipelineConfig.backend: {e}"));
+        Pipeline { cfg, hls, serve, backend }
     }
 
     /// Build this pipeline's workload simulator (full construction; for
@@ -598,6 +636,44 @@ impl Pipeline {
     /// The pipeline's shared frontier service (serve-stats live here).
     pub fn serve(&self) -> &FrontierService {
         &self.serve
+    }
+
+    /// The configured hardware cost target.
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
+    }
+
+    /// Resolve `net` through the shared service on this pipeline's
+    /// backend: forest-predicted backends collapse through the fitted
+    /// models under fingerprint-scoped keys (bit-identical to the
+    /// pre-backend path); closed-form backends build analytically under
+    /// architecture + backend-scoped keys (there is no fit to
+    /// fingerprint — the formulas ARE the identity, already pinned by
+    /// the backend name bits).
+    fn resolve_served(&self, models: &CostModels, net: &NetConfig) -> Arc<ServedFrontier> {
+        match self.backend.source() {
+            CostSource::Forest => self.serve.resolve(models, net),
+            CostSource::Analytical => self.serve.resolve_with(self.serve.key_for(net), || {
+                self.backend
+                    .build_problem(
+                        None,
+                        &net.plan(),
+                        self.cfg.latency_budget,
+                        self.cfg.max_choices_per_layer,
+                        self.cfg.workers,
+                    )
+                    .expect("closed-form backends build without models")
+            }),
+        }
+    }
+
+    /// Budget query through [`resolve_served`](Self::resolve_served) —
+    /// the backend-aware equivalent of [`FrontierService::query`].
+    fn query_served(&self, models: &CostModels, net: &NetConfig, budget: f64) -> Option<Solution> {
+        match self.backend.source() {
+            CostSource::Forest => self.serve.query(models, net, budget),
+            CostSource::Analytical => self.resolve_served(models, net).index.query(budget),
+        }
     }
 
     /// Phase 1: synthesize the layer database.
@@ -642,7 +718,7 @@ impl Pipeline {
     ) -> (Vec<Trial>, Vec<Option<Solution>>, HashMap<usize, PreparedData>) {
         let (trials, datasets) = self.run_hpo(wl);
         let deployments = hpo::resolve_deployments(&trials, |net| {
-            self.serve.query(models, net, self.cfg.latency_budget)
+            self.query_served(models, net, self.cfg.latency_budget)
         });
         (trials, deployments, datasets)
     }
@@ -674,12 +750,19 @@ impl Pipeline {
         models: &CostModels,
         plan: &[LayerSpec],
     ) -> (DeployProblem, FrontierIndex) {
-        let prob = models.build_problem_parallel(
-            plan,
-            self.cfg.latency_budget,
-            self.cfg.max_choices_per_layer,
-            self.cfg.workers,
-        );
+        // One uniform entry: the hls4ml backend delegates to
+        // build_problem_parallel verbatim (bit-identical costs), the
+        // systolic backend runs its closed forms.
+        let prob = self
+            .backend
+            .build_problem(
+                Some(models),
+                plan,
+                self.cfg.latency_budget,
+                self.cfg.max_choices_per_layer,
+                self.cfg.workers,
+            )
+            .unwrap_or_else(|e| panic!("backend {}: {e}", self.backend.name()));
         let index = solver::configured_frontier(&self.solver_opts()).build(&prob);
         (prob, index)
     }
@@ -694,7 +777,7 @@ impl Pipeline {
     /// keep this claim measured) — and the service amortizes even that
     /// one build across every later deploy of the same architecture.
     pub fn deploy(&self, models: &CostModels, trial: &Trial) -> Option<DeployedModel> {
-        let served = self.serve.resolve(models, &trial.cfg);
+        let served = self.resolve_served(models, &trial.cfg);
         let sol = served.index.query(self.cfg.latency_budget)?;
         Some(self.deployed_from_served(models, trial, &served, sol))
     }
@@ -709,12 +792,56 @@ impl Pipeline {
         trial: &Trial,
         budgets: &[f64],
     ) -> Vec<Option<DeployedModel>> {
-        let served = self.serve.resolve(models, &trial.cfg);
+        let served = self.resolve_served(models, &trial.cfg);
         served
             .index
             .sweep(budgets)
             .into_iter()
             .map(|sol| sol.map(|s| self.deployed_from_served(models, trial, &served, s)))
+            .collect()
+    }
+
+    /// Solve the same network across every registered backend — the
+    /// paper's overlay-vs-dataflow comparison, measured
+    /// (`ntorc report` renders the table). Each backend resolves
+    /// through its own [`BackendKey`]-scoped identity over this
+    /// pipeline's store configuration, so rows never cross-contaminate
+    /// and a warm store answers repeat sweeps without rebuilding.
+    pub fn backend_sweep(
+        &self,
+        models: &CostModels,
+        net: &NetConfig,
+        budgets: &[f64],
+    ) -> Vec<BackendSweep> {
+        backend::ALL
+            .iter()
+            .map(|name| {
+                let b = backend::by_name(name).expect("registry name");
+                let cfg = ServeConfig {
+                    backend: Some(BackendKey { name: name.to_string() }),
+                    ..self.serve.config().clone()
+                };
+                let svc = FrontierService::new(cfg, self.cfg.frontier_store());
+                let t0 = std::time::Instant::now();
+                let served = match b.source() {
+                    CostSource::Forest => svc.resolve(models, net),
+                    CostSource::Analytical => svc.resolve_with(svc.key_for(net), || {
+                        b.build_problem(
+                            None,
+                            &net.plan(),
+                            self.cfg.latency_budget,
+                            self.cfg.max_choices_per_layer,
+                            self.cfg.workers,
+                        )
+                        .expect("closed-form backends build without models")
+                    }),
+                };
+                BackendSweep {
+                    backend: name.to_string(),
+                    build_seconds: t0.elapsed().as_secs_f64(),
+                    solutions: served.index.sweep(budgets),
+                }
+            })
             .collect()
     }
 
@@ -740,7 +867,13 @@ impl Pipeline {
         let predicted = plan
             .iter()
             .zip(&reuse)
-            .map(|(spec, &r)| models.predict_layer(spec, r))
+            .map(|(spec, &r)| match self.backend.source() {
+                CostSource::Forest => models.predict_layer(spec, r),
+                CostSource::Analytical => self
+                    .backend
+                    .layer_cost(spec, r)
+                    .expect("closed-form backends cost every layer"),
+            })
             .fold(LayerCost::ZERO, |acc, c| acc.add(&c));
         let (_, actual) = self.hls.synth_network(&plan, &reuse);
         let latency_us = predicted.latency / (hls::ZU7EV.clock_mhz);
@@ -1057,6 +1190,99 @@ mod tests {
             "eps deploy {} vs exact {}",
             eps_dep.solution.cost,
             exact_dep.solution.cost
+        );
+    }
+
+    #[test]
+    fn set_backend_validates_against_the_registry() {
+        let mut cfg = PipelineConfig::default();
+        assert_eq!(cfg.backend, "hls4ml");
+        cfg.set_backend("systolic").unwrap();
+        assert_eq!(cfg.backend, "systolic");
+        assert!(cfg.set_backend("tpu").is_err());
+        // The failed set must not have clobbered the config.
+        assert_eq!(cfg.backend, "systolic");
+    }
+
+    #[test]
+    fn systolic_pipeline_deploys_from_closed_forms_under_its_own_keys() {
+        let mut cfg = PipelineConfig::smoke();
+        cfg.set_backend("systolic").unwrap();
+        let pipe = Pipeline::new(cfg);
+        let default_pipe = Pipeline::new(PipelineConfig::smoke());
+        let trial = Trial {
+            genome: vec![0; hpo::SearchSpace::GENES],
+            cfg: NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]),
+            rmse: 0.1,
+            workload: 1000.0,
+        };
+        // Its serving identity is disjoint from the default pipeline's
+        // and readable in store listings.
+        let key = pipe.serve().key_for(&trial.cfg);
+        assert_ne!(key.hash, default_pipe.serve().key_for(&trial.cfg).hash);
+        assert!(key.name.starts_with("systolic-dropbear-"), "{}", key.name);
+        // Deploys end-to-end; predicted totals are exactly the backend's
+        // closed forms, not forest output.
+        let db = pipe.synth_database();
+        let models = pipe.fit_models(&db);
+        let deployed = pipe.deploy(&models, &trial).expect("deployable");
+        assert_eq!(deployed.reuse.len(), trial.cfg.plan().len());
+        let expected = trial
+            .cfg
+            .plan()
+            .iter()
+            .zip(&deployed.reuse)
+            .map(|(spec, &r)| pipe.backend().layer_cost(spec, r).unwrap())
+            .fold(LayerCost::ZERO, |acc, c| acc.add(&c));
+        assert_eq!(deployed.predicted.latency, expected.latency);
+        assert_eq!(deployed.predicted.lut, expected.lut);
+        assert!(deployed.solution.latency <= pipe.cfg.latency_budget + 1e-6);
+        // Repeat deploys hit the served frontier, exactly like hls4ml.
+        let again = pipe.deploy(&models, &trial).expect("deployable");
+        assert_eq!(pipe.serve().stats.snapshot().builds, 1);
+        assert_eq!(again.solution, deployed.solution);
+    }
+
+    #[test]
+    fn backend_sweep_covers_every_registered_backend() {
+        let pipe = Pipeline::new(PipelineConfig::smoke());
+        let db = pipe.synth_database();
+        let models = pipe.fit_models(&db);
+        let net = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]);
+        let budgets = [5_000.0, LATENCY_BUDGET_CYCLES, 500_000.0];
+        let rows = pipe.backend_sweep(&models, &net, &budgets);
+        assert_eq!(rows.len(), crate::backend::ALL.len());
+        for (row, name) in rows.iter().zip(crate::backend::ALL) {
+            assert_eq!(row.backend, name);
+            assert_eq!(row.solutions.len(), budgets.len());
+            assert!(row.build_seconds >= 0.0);
+            assert!(
+                row.solutions[2].is_some(),
+                "{} infeasible at the loosest budget",
+                row.backend
+            );
+            // Costs are monotone non-increasing in the budget.
+            let mut prev = f64::INFINITY;
+            for sol in row.solutions.iter().flatten() {
+                assert!(sol.cost <= prev + 1e-9);
+                prev = sol.cost;
+            }
+        }
+        // The hls4ml row answers from the same key space as the
+        // pipeline's own (default-backend) service: a second sweep over
+        // the shared LRU-less store config rebuilds nothing persistent,
+        // and the solutions agree with a direct deploy.
+        let trial = Trial {
+            genome: vec![0; hpo::SearchSpace::GENES],
+            cfg: net.clone(),
+            rmse: 0.1,
+            workload: 1000.0,
+        };
+        let direct = pipe.deploy(&models, &trial).expect("deployable");
+        let hls_row = &rows[0];
+        assert_eq!(
+            hls_row.solutions[1].as_ref().expect("feasible").cost,
+            direct.solution.cost
         );
     }
 

@@ -216,6 +216,18 @@ impl Shared {
         self.svc.config().workload.as_ref().map(|w| w.name.clone())
     }
 
+    /// The backend this server answers for. The service normalizes the
+    /// default away (`ServeConfig.backend = None` means `hls4ml`), so
+    /// this always reports a concrete name.
+    fn backend_name(&self) -> String {
+        self.svc
+            .config()
+            .backend
+            .as_ref()
+            .map(|b| b.name.clone())
+            .unwrap_or_else(|| crate::backend::DEFAULT.to_string())
+    }
+
     fn key_of(&self, net: &NetConfig) -> FrontierKey {
         match &self.source {
             ProblemSource::Models(m) => self.svc.model_key(m, net),
@@ -771,6 +783,7 @@ fn route(sh: &Shared, req: &Request) -> Reply {
                 (
                     "ok",
                     Json::obj(vec![
+                        ("backend", Json::str(sh.backend_name())),
                         ("stats", sh.svc.stats.snapshot().to_json()),
                         ("http", http),
                         ("store", store),
@@ -884,6 +897,19 @@ fn query_reply(sh: &Shared, body: &[u8]) -> Reply {
                 ApiError::new(
                     ErrorCode::UnknownWorkload,
                     format!("this server serves workload '{have}', not '{want}'"),
+                )
+                .with_key(want.clone()),
+            );
+        }
+    }
+    if let Some(want) = &parsed.backend {
+        let have = sh.backend_name();
+        if *want != have {
+            sh.reject();
+            return Reply::err(
+                ApiError::new(
+                    ErrorCode::UnknownBackend,
+                    format!("this server serves backend '{have}', not '{want}'"),
                 )
                 .with_key(want.clone()),
             );

@@ -77,7 +77,7 @@
 //! per-store manifest so GC and stats never walk the directory tree —
 //! and [`serve::FrontierService`] fronts the store with a bounded LRU
 //! of hot indices, building misses on demand and answering single
-//! (`query`) and batched (`query_batch`) budget requests with
+//! (`query`) and batched (`batch`) budget requests with
 //! hit/miss/build telemetry ([`serve::ServeStats`]).
 //! `Pipeline::deploy`/`deploy_sweep`, the deployment-aware HPO loop and
 //! the `ntorc serve` CLI command all resolve through one shared
@@ -112,6 +112,21 @@
 //! in [`workload`] spell out the trait contract and how to add a
 //! fourth scenario; CI's `workload-matrix` job runs an e2e smoke per
 //! registered workload.
+//!
+//! ## The backend abstraction ([`backend`])
+//!
+//! Orthogonal to *what* is deployed (workload) is *where*: a
+//! [`backend::Backend`] bundles one hardware cost target
+//! (`--backend hls4ml|systolic`). `hls4ml` is today's forest-predicted
+//! dataflow path, bit-identical to every pre-backend release;
+//! `systolic` is a closed-form analytical Gemmini-like overlay (16×16
+//! PE mesh, FactorFlow memory-level energies) that needs no forest at
+//! all. Backend identity is folded into frontier store keys exactly
+//! like workload identity, the v1 wire envelope carries an optional
+//! `backend` assertion, and `ntorc report` emits the measured
+//! overlay-vs-dataflow comparison table. `rust/docs/BACKENDS.md` spells
+//! out the trait contract and how to add a third target; CI runs the
+//! full workload × backend e2e matrix.
 //!
 //! ## Verification
 //!
@@ -155,6 +170,7 @@
 )]
 
 pub mod api;
+pub mod backend;
 pub mod battery;
 pub mod bench;
 pub mod cli;

@@ -28,7 +28,7 @@ fn main() {
 }
 
 const COMMON_FLAGS: &[&str] =
-    &["preset", "config", "set", "seed", "out", "workload", "epsilon", "help"];
+    &["preset", "config", "set", "seed", "out", "workload", "backend", "epsilon", "help"];
 
 fn pipeline_config(args: &Args, default_preset: Preset) -> Result<PipelineConfig> {
     let preset = match args.get("preset") {
@@ -66,6 +66,12 @@ fn pipeline_config(args: &Args, default_preset: Preset) -> Result<PipelineConfig
     }
     for kv in args.get_all("set") {
         config::apply_override(&mut cfg, kv)?;
+    }
+    // --backend is sugar for `--set backend.name=<name>` applied last
+    // (the flag beats the file): selects the hardware cost target
+    // (docs/BACKENDS.md) and with it the backend-scoped store keys.
+    if let Some(b) = args.get("backend") {
+        config::apply_override(&mut cfg, &format!("backend.name={b}"))?;
     }
     // --epsilon is sugar for `--set frontier.epsilon=<v>` applied last
     // (the flag beats the file): ε-dominance coarsened frontiers with a
@@ -314,6 +320,51 @@ fn run(raw: &[String]) -> Result<()> {
                 &rows,
             );
         }
+        "report" | "compare-backends" => {
+            // The backend-comparison table: every registered cost
+            // target solves its own frontier over the same budget grid
+            // (the paper's Table-IV overlay-vs-dataflow framing,
+            // measured; docs/BACKENDS.md).
+            args.check_known(&[COMMON_FLAGS, &["budgets", "network"]].concat())?;
+            let cfg = pipeline_config(&args, Preset::Smoke)?;
+            let (pipe, models) = report::standard_models(cfg);
+            let budgets: Vec<f64> = match args.get("budgets") {
+                Some(t) => {
+                    let parsed: Vec<f64> =
+                        t.split(',').filter_map(|x| x.trim().parse().ok()).collect();
+                    if parsed.is_empty() {
+                        bail!("--budgets expects a comma-separated list of cycle counts");
+                    }
+                    parsed
+                }
+                None => ntorc::workload::budget_grid_for(
+                    ntorc::workload::sample_rate_of(&pipe.cfg.workload)?,
+                ),
+            };
+            let mut rows = Vec::new();
+            let mut headers: Vec<&str> = Vec::new();
+            for (name, net) in report::table4_models() {
+                if let Some(want) = args.get("network") {
+                    if want != name {
+                        continue;
+                    }
+                }
+                let (h, r) = report::backend_compare_rows(&pipe, &models, name, &net, &budgets);
+                println!("{name}: {} budgets x {} backends", budgets.len(), r.len() / budgets.len());
+                headers = h;
+                rows.extend(r);
+            }
+            if rows.is_empty() {
+                bail!("--network matched nothing (expected model1 or model2)");
+            }
+            emit(
+                &args,
+                "backend_compare",
+                "Backends — overlay vs dataflow, per latency budget",
+                &headers,
+                &rows,
+            );
+        }
         "solve" => {
             // Direct per-budget solve through the registry solver
             // (`solver.kind` = bb | dp | frontier): the typed
@@ -437,20 +488,57 @@ fn run(raw: &[String]) -> Result<()> {
                     );
                 }
             }
+            // File-mode equivalent of the HTTP 409 (unknown_backend):
+            // a document asserting a different cost target is refused
+            // instead of silently answered from the wrong key space.
+            if let Some(b) = &parsed.backend {
+                if *b != cfg.backend {
+                    bail!(
+                        "requests assert backend '{b}' but this run serves '{}'",
+                        cfg.backend
+                    );
+                }
+            }
             let requests = parsed.requests;
             let repeat = args.usize_or("repeat", 1)?.max(1);
             println!(
-                "[serve] {} requests x{repeat}, store {store_dir}",
-                requests.len()
+                "[serve] {} requests x{repeat}, store {store_dir}, backend {}",
+                requests.len(),
+                cfg.backend
             );
-            let (pipe, models) = report::standard_models(cfg);
+            // Closed-form backends need no forest fit: skip the model
+            // pipeline entirely and build cold misses analytically.
+            let analytical = ntorc::backend::by_name(&cfg.backend)?.source()
+                == ntorc::backend::CostSource::Analytical;
+            let (pipe, models) = if analytical {
+                (Pipeline::new(cfg), None)
+            } else {
+                let (p, m) = report::standard_models(cfg);
+                (p, Some(m))
+            };
+            let build = |net: &ntorc::layers::NetConfig| {
+                pipe.backend()
+                    .build_problem(
+                        None,
+                        &net.plan(),
+                        pipe.cfg.latency_budget,
+                        pipe.cfg.max_choices_per_layer,
+                        pipe.cfg.workers,
+                    )
+                    .expect("closed-form backends build without models")
+            };
             let t0 = std::time::Instant::now();
             let mut answered = 0usize;
             let mut feasible = 0usize;
             for _ in 0..repeat {
-                let responses = pipe
-                    .serve()
-                    .batch(&requests, &ntorc::serve::BatchOptions::models(&models));
+                let responses = match &models {
+                    Some(m) => pipe
+                        .serve()
+                        .batch(&requests, &ntorc::serve::BatchOptions::models(m)),
+                    None => pipe
+                        .serve()
+                        .batch(&requests, &ntorc::serve::BatchOptions::builder(&build)),
+                };
                 answered += responses.len();
                 feasible += responses.iter().filter(|r| r.solution.is_some()).count();
             }
@@ -553,19 +641,51 @@ fn run(raw: &[String]) -> Result<()> {
             let serve_cfg = cfg.serve_config()?;
             let store = cfg.frontier_store();
             let http = cfg.http.clone();
-            println!("[httpd] fitting cost models (preset-determined, same as serve) ...");
-            let (_pipe, models) = report::standard_models(cfg);
+            let backend_name = cfg.backend.clone();
+            let backend = ntorc::backend::by_name(&cfg.backend)?;
+            let source = match backend.source() {
+                ntorc::backend::CostSource::Forest => {
+                    println!("[httpd] fitting cost models (preset-determined, same as serve) ...");
+                    let (_pipe, models) = report::standard_models(cfg);
+                    ntorc::httpd::ProblemSource::Models(std::sync::Arc::new(models))
+                }
+                ntorc::backend::CostSource::Analytical => {
+                    // Closed-form target: no forest fit at all — cold
+                    // misses build analytically under the service's
+                    // backend-scoped architecture keys.
+                    println!(
+                        "[httpd] backend {} is closed-form: serving without cost models",
+                        cfg.backend
+                    );
+                    let latency_budget = cfg.latency_budget;
+                    let max_choices = cfg.max_choices_per_layer;
+                    let workers = cfg.workers;
+                    ntorc::httpd::ProblemSource::Builder(std::sync::Arc::new(
+                        move |net: &ntorc::layers::NetConfig| {
+                            backend
+                                .build_problem(
+                                    None,
+                                    &net.plan(),
+                                    latency_budget,
+                                    max_choices,
+                                    workers,
+                                )
+                                .expect("closed-form backends build without models")
+                        },
+                    ))
+                }
+            };
             let svc = std::sync::Arc::new(ntorc::serve::FrontierService::new(serve_cfg, store));
             let named: ntorc::httpd::NamedNets = std::sync::Arc::new(catalog_net);
             let server = ntorc::httpd::Server::start(
                 http,
                 svc,
-                ntorc::httpd::ProblemSource::Models(std::sync::Arc::new(models)),
+                source,
                 named,
                 Some(stats_path.clone()),
             )?;
             println!(
-                "[httpd] listening on http://{} (store {store_dir}); \
+                "[httpd] listening on http://{} (store {store_dir}, backend {backend_name}); \
                  POST /v1/shutdown to drain",
                 server.addr()
             );

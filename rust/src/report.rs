@@ -826,6 +826,72 @@ pub fn frontier_points_rows(
 }
 
 // ---------------------------------------------------------------------------
+// Backend comparison: overlay vs dataflow, measured (ISSUE: Table IV framing)
+// ---------------------------------------------------------------------------
+
+/// Per-budget backend comparison for one network: every registered
+/// backend ([`crate::backend::ALL`]) solves its own frontier over the
+/// same budget grid, and each row reports who won and by how much.
+/// Both cost models are LUT-equivalent area proxies (forest-predicted
+/// `resource_sum` for `hls4ml`, closed-form mesh occupancy for
+/// `systolic`), so the winner column is the paper's Table-IV
+/// overlay-vs-dataflow question answered with measured numbers:
+/// which target is cheaper at this deadline, and how much faster is
+/// the analytical build than the forest collapse.
+pub fn backend_compare_rows(
+    pipe: &Pipeline,
+    models: &CostModels,
+    name: &str,
+    net: &NetConfig,
+    budgets: &[f64],
+) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let sweeps = pipe.backend_sweep(models, net, budgets);
+    let headers = vec![
+        "network", "budget_cycles", "budget_us", "backend", "feasible", "cost",
+        "latency_cycles", "winner", "cost_vs_winner", "build_s", "build_vs_fastest",
+    ];
+    let fastest_build = sweeps
+        .iter()
+        .map(|s| s.build_seconds)
+        .fold(f64::INFINITY, f64::min)
+        .max(1e-9);
+    let mut rows = Vec::new();
+    for (bi, b) in budgets.iter().enumerate() {
+        let winner = sweeps
+            .iter()
+            .filter_map(|s| s.solutions[bi].as_ref().map(|sol| (s.backend.as_str(), sol.cost)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        for s in &sweeps {
+            let (feasible, cost, lat, ratio) = match &s.solutions[bi] {
+                Some(sol) => (
+                    true,
+                    f(sol.cost, 0),
+                    f(sol.latency, 0),
+                    winner
+                        .map(|(_, wc)| f(sol.cost / wc.max(1e-9), 3))
+                        .unwrap_or_default(),
+                ),
+                None => (false, String::new(), String::new(), String::new()),
+            };
+            rows.push(vec![
+                name.to_string(),
+                f(*b, 0),
+                f(b / ZU7EV.clock_mhz, 1),
+                s.backend.clone(),
+                feasible.to_string(),
+                cost,
+                lat,
+                winner.map(|(w, _)| w.to_string()).unwrap_or_default(),
+                ratio,
+                format!("{:.6}", s.build_seconds),
+                f(s.build_seconds / fastest_build, 1),
+            ]);
+        }
+    }
+    (headers, rows)
+}
+
+// ---------------------------------------------------------------------------
 // Frontier serve stats (the serving subsystem's telemetry table)
 // ---------------------------------------------------------------------------
 
@@ -1064,6 +1130,32 @@ mod tests {
         let (h, rows) = frontier_sweep_rows(std::slice::from_ref(&sw));
         assert_eq!(h.last(), Some(&"epsilon"));
         assert!(rows.iter().all(|r| r.last() == Some(&"0.050".to_string())));
+    }
+
+    #[test]
+    fn backend_compare_covers_every_backend_and_names_a_winner() {
+        let pipe = Pipeline::new(PipelineConfig::smoke());
+        let db = pipe.synth_database();
+        let models = pipe.fit_models(&db);
+        let net = NetConfig::new(64, vec![(3, 8)], vec![], vec![16, 1]);
+        let budgets = [50_000.0, 200_000.0];
+        let (h, rows) = backend_compare_rows(&pipe, &models, "tiny", &net, &budgets);
+        assert_eq!(h.len(), rows[0].len());
+        assert_eq!(rows.len(), budgets.len() * crate::backend::ALL.len());
+        for name in crate::backend::ALL {
+            assert!(rows.iter().any(|r| r[3] == name), "missing backend {name}");
+        }
+        // At the loosest budget both backends are feasible, a winner is
+        // named, and the winner's own ratio is exactly 1.
+        let loose: Vec<&Vec<String>> = rows.iter().filter(|r| r[1] == "200000").collect();
+        assert!(loose.iter().all(|r| r[4] == "true"));
+        let winner = loose[0][7].clone();
+        assert!(crate::backend::ALL.contains(&winner.as_str()));
+        let wrow = loose.iter().find(|r| r[3] == winner).unwrap();
+        assert_eq!(wrow[8], "1.000");
+        assert!(loose
+            .iter()
+            .all(|r| r[8].parse::<f64>().unwrap() >= 1.0 - 1e-9));
     }
 
     #[test]

@@ -1356,7 +1356,7 @@ pub struct ServeSnapshot {
     pub store_errors: u64,
     /// Individual budget queries answered (single + batched).
     pub queries: u64,
-    /// `query_batch` invocations.
+    /// [`FrontierService::batch`] invocations.
     pub batches: u64,
     /// Wall-clock spent inside frontier builds.
     pub build_seconds: f64,
@@ -1426,6 +1426,26 @@ impl WorkloadKey {
     }
 }
 
+/// The backend identity a service folds into every key: the registry
+/// name of the hardware cost target ([`crate::backend`]). Two backends
+/// sharing one store can never exchange frontiers — identical layer
+/// plans cost differently on different hardware. The default backend
+/// ([`crate::backend::DEFAULT`], hls4ml) is normalized to `None` at
+/// service construction so its keys, slugs and store documents stay
+/// bit-identical to every pre-backend release (exactly how non-positive
+/// ε normalizes to exact mode).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BackendKey {
+    pub name: String,
+}
+
+impl BackendKey {
+    /// The fields mixed into [`FrontierKey::mix`].
+    fn mix_fields(&self) -> [u64; 1] {
+        [crate::rng::fnv1a(self.name.as_bytes())]
+    }
+}
+
 /// Service knobs.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -1452,6 +1472,11 @@ pub struct ServeConfig {
     /// `None` leaves keys workload-agnostic (bare toy services; the
     /// pipeline always sets this).
     pub workload: Option<WorkloadKey>,
+    /// Backend identity scoped into every key ([`BackendKey`]). `None`
+    /// — or the default backend, normalized away at construction —
+    /// leaves keys exactly as the pre-backend (hls4ml) pipeline minted
+    /// them, so existing warm stores keep hitting with zero rebuilds.
+    pub backend: Option<BackendKey>,
 }
 
 impl Default for ServeConfig {
@@ -1464,6 +1489,7 @@ impl Default for ServeConfig {
             max_points: None,
             epsilon: None,
             workload: None,
+            backend: None,
         }
     }
 }
@@ -1563,8 +1589,13 @@ impl FrontierService {
         // key with None while building a different frontier.
         let max_points = cfg.max_points.map(|c| c.max(2));
         let epsilon = cfg.epsilon.filter(|e| *e > 0.0);
+        // The default backend is the identity the pre-backend pipeline
+        // already minted keys under: normalizing it to None keeps every
+        // existing store document warm (and Some("hls4ml") can never
+        // diverge from None while serving the same frontiers).
+        let backend = cfg.backend.filter(|b| b.name != crate::backend::DEFAULT);
         FrontierService {
-            cfg: ServeConfig { capacity, max_points, epsilon, ..cfg },
+            cfg: ServeConfig { capacity, max_points, epsilon, backend, ..cfg },
             store,
             state: Mutex::new(LruState { entries: HashMap::new(), tick: 0 }),
             stats: ServeStats::default(),
@@ -1583,12 +1614,16 @@ impl FrontierService {
     /// key re-scoped by the guardrail config (a truncated or ε-coarsened
     /// frontier must never be mistaken for an exact one — the ε bits are
     /// part of the identity, so exact stores stay warm while ε stores
-    /// are distinct documents, with an `eps-` slug prefix) and, when
-    /// configured, the workload identity (name hash + sample-rate bits —
+    /// are distinct documents, with an `eps-` slug prefix), the
+    /// workload identity when configured (name hash + sample-rate bits —
     /// frontiers for different scenarios never collide in a shared
-    /// store, and the store slug gets a `<workload>-` prefix).
-    /// Model-backed entry points ([`resolve`](Self::resolve)/
-    /// [`query`](Self::query)/[`query_batch`](Self::query_batch))
+    /// store, and the store slug gets a `<workload>-` prefix), and the
+    /// backend identity when a non-default backend is configured (name
+    /// hash bits + a `<backend>-` slug prefix — a shared store never
+    /// mixes hardware targets, while the default hls4ml backend mints
+    /// exactly the pre-backend keys). Model-backed entry points
+    /// ([`resolve`](Self::resolve)/[`query`](Self::query)/
+    /// [`batch`](Self::batch) with a [`BatchSource::Models`] source)
     /// additionally fold in the cost-model fingerprint via
     /// [`model_key`](Self::model_key).
     pub fn key_for(&self, net: &NetConfig) -> FrontierKey {
@@ -1603,12 +1638,21 @@ impl FrontierService {
         if let Some(w) = &self.cfg.workload {
             fields.extend_from_slice(&w.mix_fields());
         }
+        // Backend bits follow the same only-when-set rule (the default
+        // backend was normalized to None at construction), so hls4ml
+        // keys are bit-identical to every pre-backend release.
+        if let Some(b) = &self.cfg.backend {
+            fields.extend_from_slice(&b.mix_fields());
+        }
         let mut key = FrontierKey::for_net(net, self.cfg.max_choices_per_layer).mix(&fields);
         if self.cfg.epsilon.is_some() {
             key.name = format!("eps-{}", key.name);
         }
         if let Some(w) = &self.cfg.workload {
             key.name = format!("{}-{}", sanitize(&w.name), key.name);
+        }
+        if let Some(b) = &self.cfg.backend {
+            key.name = format!("{}-{}", sanitize(&b.name), key.name);
         }
         key
     }
@@ -1735,9 +1779,7 @@ impl FrontierService {
     /// architectures through the LRU once and sharding the pure index
     /// lookups over the worker pool. Responses keep request order and
     /// carry per-layer reuse factors. [`BatchOptions`] selects the
-    /// problem source and (optionally) the key derivation; the former
-    /// `query_batch`/`query_batch_with` pair are deprecated shims over
-    /// this method.
+    /// problem source and (optionally) the key derivation.
     pub fn batch(&self, requests: &[BatchRequest], opts: &BatchOptions) -> Vec<BatchResponse> {
         match (&opts.source, opts.key_of) {
             (BatchSource::Models(models), key_of) => self.batch_impl(
@@ -1756,26 +1798,6 @@ impl FrontierService {
                 self.batch_impl(requests, key_of.unwrap_or(&|net| self.key_for(net)), *build)
             }
         }
-    }
-
-    /// Deprecated shim over [`batch`](Self::batch) (one PR of grace).
-    #[deprecated(note = "use FrontierService::batch(requests, &BatchOptions::models(models))")]
-    pub fn query_batch(
-        &self,
-        models: &CostModels,
-        requests: &[BatchRequest],
-    ) -> Vec<BatchResponse> {
-        self.batch(requests, &BatchOptions::models(models))
-    }
-
-    /// Deprecated shim over [`batch`](Self::batch) (one PR of grace).
-    #[deprecated(note = "use FrontierService::batch(requests, &BatchOptions::builder(build))")]
-    pub fn query_batch_with(
-        &self,
-        requests: &[BatchRequest],
-        build: &dyn Fn(&NetConfig) -> DeployProblem,
-    ) -> Vec<BatchResponse> {
-        self.batch(requests, &BatchOptions::builder(build))
     }
 
     fn batch_impl(
@@ -1854,25 +1876,6 @@ impl FrontierService {
             ServeStats::bump(&self.stats.evictions, &self.stats.reg.evictions);
         }
     }
-}
-
-// ---------------------------------------------------------------------------
-// Batch-request documents (the `ntorc serve` wire format)
-// ---------------------------------------------------------------------------
-
-/// Deprecated shim (one PR of grace): the request grammar now lives in
-/// [`crate::api`] as the versioned wire protocol, shared by file-mode
-/// serve, the HTTP front-end and the load generator. This wrapper
-/// preserves the old signature (anyhow errors, envelope fields beyond
-/// the request list dropped).
-#[deprecated(note = "use api::parse_request_doc (typed errors + v1 envelope)")]
-pub fn parse_requests(
-    doc: &Json,
-    named: &dyn Fn(&str) -> Option<NetConfig>,
-) -> Result<Vec<BatchRequest>> {
-    crate::api::parse_request_doc(doc, named)
-        .map(|p| p.requests)
-        .map_err(|e| anyhow!("{e}"))
 }
 
 #[cfg(test)]
@@ -2585,33 +2588,55 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_batch_shims_match_the_unified_entry_point() {
-        let build = |net: &NetConfig| toy_problem(net.dense[0] as u64, net.plan().len());
-        let requests = vec![
-            BatchRequest {
-                net: NetConfig::new(16, vec![], vec![], vec![4, 1]),
-                budget: 40.0,
+    fn backend_identity_rescopes_keys_and_slugs() {
+        let mk = |backend: Option<BackendKey>| {
+            FrontierService::new(ServeConfig { backend, ..ServeConfig::default() }, None)
+        };
+        let net = demo_net();
+        let agnostic = mk(None);
+        let hls4ml = mk(Some(BackendKey { name: "hls4ml".into() }));
+        let systolic = mk(Some(BackendKey { name: "systolic".into() }));
+        // The default backend IS the pre-backend identity: normalized
+        // away at construction, bit-identical keys and slugs, so every
+        // existing store document stays warm with zero rebuilds.
+        assert_eq!(hls4ml.config().backend, None);
+        assert_eq!(hls4ml.key_for(&net), agnostic.key_for(&net));
+        assert_eq!(agnostic.key_for(&net).name, "w32-c-3x4-l-5-d-6-1");
+        // A non-default backend is a distinct identity with a readable
+        // slug prefix, deterministic across service instances.
+        let ks = systolic.key_for(&net);
+        assert_ne!(ks.hash, agnostic.key_for(&net).hash);
+        assert!(ks.name.starts_with("systolic-w32-"));
+        assert_eq!(ks, mk(Some(BackendKey { name: "systolic".into() })).key_for(&net));
+        // Backend composes with the workload axis: all four identities
+        // (and the slug nesting backend-<workload>-...) are distinct.
+        let w = WorkloadKey { name: "rotor".into(), sample_rate_hz: 5e4 };
+        let both = FrontierService::new(
+            ServeConfig {
+                workload: Some(w.clone()),
+                backend: Some(BackendKey { name: "systolic".into() }),
+                ..ServeConfig::default()
             },
-            BatchRequest {
-                net: NetConfig::new(16, vec![], vec![], vec![8, 1]),
-                budget: 90.0,
-            },
-        ];
-        let a = FrontierService::new(ServeConfig::default(), None);
-        let b = FrontierService::new(ServeConfig::default(), None);
-        let via_shim = a.query_batch_with(&requests, &build);
-        let via_batch = b.batch(&requests, &BatchOptions::builder(&build));
-        for (x, y) in via_shim.iter().zip(&via_batch) {
-            assert_eq!(x.key, y.key);
-            assert_eq!(x.solution, y.solution);
-            assert_eq!(x.reuse, y.reuse);
+            None,
+        );
+        let wl_only = FrontierService::new(
+            ServeConfig { workload: Some(w), ..ServeConfig::default() },
+            None,
+        );
+        let kb = both.key_for(&net);
+        assert!(kb.name.starts_with("systolic-rotor-w32-"));
+        let hashes = [agnostic.key_for(&net).hash, ks.hash, wl_only.key_for(&net).hash, kb.hash];
+        for i in 0..hashes.len() {
+            for j in i + 1..hashes.len() {
+                assert_ne!(hashes[i], hashes[j], "axes {i} and {j} collide");
+            }
         }
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn parse_requests_accepts_named_inline_and_budget_lists() {
+    fn request_docs_parse_named_inline_and_budget_lists() {
+        // The request grammar lives in crate::api (typed errors + v1
+        // envelope), shared by file-mode serve, httpd and loadgen.
         let doc = parse_json(
             r#"{"requests": [
                 {"network": "tiny", "budget": 50000},
@@ -2623,7 +2648,7 @@ mod tests {
         let named = |name: &str| {
             (name == "tiny").then(|| NetConfig::new(16, vec![], vec![], vec![8, 1]))
         };
-        let reqs = parse_requests(&doc, &named).unwrap();
+        let reqs = crate::api::parse_request_doc(&doc, &named).unwrap().requests;
         assert_eq!(reqs.len(), 3);
         assert_eq!(reqs[0].budget, 50_000.0);
         assert_eq!(reqs[0].net.dense, vec![8, 1]);
@@ -2631,12 +2656,11 @@ mod tests {
         assert_eq!((reqs[1].budget, reqs[2].budget), (100.0, 200.0));
         // Bare-array form parses too.
         let bare = parse_json(r#"[{"network": "tiny", "budget": 1}]"#).unwrap();
-        assert_eq!(parse_requests(&bare, &named).unwrap().len(), 1);
+        assert_eq!(crate::api::parse_request_doc(&bare, &named).unwrap().requests.len(), 1);
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn parse_requests_rejects_malformed_documents() {
+    fn request_docs_reject_malformed_documents() {
         let named = |_: &str| -> Option<NetConfig> { None };
         for bad in [
             r#"{}"#,
@@ -2648,7 +2672,10 @@ mod tests {
             r#"{"requests": [{"net": {"window": 8, "conv": [], "lstm": [], "dense": [4, 1]}}]}"#,
         ] {
             let doc = parse_json(bad).unwrap();
-            assert!(parse_requests(&doc, &named).is_err(), "accepted: {bad}");
+            assert!(
+                crate::api::parse_request_doc(&doc, &named).is_err(),
+                "accepted: {bad}"
+            );
         }
     }
 }

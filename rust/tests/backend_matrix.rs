@@ -1,0 +1,207 @@
+//! Cross-backend invariants (the PR's acceptance bar): every hardware
+//! cost target behind the `Backend` trait must (1) mint distinct
+//! frontier-store keys for identical layer plans — zero cross-backend
+//! cache hits over a shared store — while the default hls4ml backend
+//! keeps minting the exact pre-backend keys (existing warm stores never
+//! rebuild), (2) compose with the workload and ε axes as one more
+//! independent key dimension, and (3) thread through the pipeline so a
+//! `--backend systolic` run files its frontiers under backend-scoped
+//! slugs. A third backend added to the registry inherits every test
+//! here for free.
+
+use ntorc::backend;
+use ntorc::coordinator::{Pipeline, PipelineConfig};
+use ntorc::layers::NetConfig;
+use ntorc::mip::{Choice, DeployProblem};
+use ntorc::rng::Rng;
+use ntorc::serve::{BackendKey, FrontierService, FrontierStore, ServeConfig, WorkloadKey};
+use ntorc::workload;
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ntorc_bemx_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Deterministic toy deployment problem (no cost models needed).
+fn toy_problem(tag: u64) -> DeployProblem {
+    let mut rng = Rng::new(0x3012AD ^ tag);
+    let layers = (0..3)
+        .map(|_| {
+            (0..4)
+                .map(|j| Choice {
+                    reuse: 1 << j,
+                    cost: 500.0 / (j + 1) as f64 + rng.range_f64(0.0, 20.0),
+                    latency: (8 * (j + 1)) as f64 + rng.range_f64(0.0, 3.0).floor(),
+                })
+                .collect()
+        })
+        .collect();
+    DeployProblem { layers, latency_budget: 0.0 }
+}
+
+#[test]
+fn backends_never_collide_in_a_shared_store() {
+    // One store directory, one layer plan, only the backend identity
+    // differs: distinct keys, one build and one document per backend —
+    // and re-resolution hits only the own backend's cache.
+    let dir = temp_dir("shared_store");
+    let net = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]);
+    let mk = |name: &str| {
+        FrontierService::new(
+            ServeConfig {
+                backend: Some(BackendKey { name: name.into() }),
+                ..ServeConfig::default()
+            },
+            Some(FrontierStore::new(&dir)),
+        )
+    };
+    let services: Vec<(FrontierService, u64)> = backend::ALL
+        .into_iter()
+        .enumerate()
+        .map(|(i, name)| (mk(name), i as u64))
+        .collect();
+    let keys: Vec<_> = services.iter().map(|(s, _)| s.key_for(&net)).collect();
+    for i in 0..keys.len() {
+        for j in i + 1..keys.len() {
+            assert_ne!(keys[i].hash, keys[j].hash, "backend keys collided");
+        }
+    }
+    // The default backend IS the pre-backend identity: its key is
+    // bit-identical to a backend-agnostic service's (no slug prefix),
+    // so existing store documents stay warm across the upgrade. Every
+    // other backend carries its name as the outermost slug prefix.
+    let agnostic = FrontierService::new(ServeConfig::default(), None);
+    for ((svc, _), name) in services.iter().zip(backend::ALL) {
+        if name == backend::DEFAULT {
+            assert_eq!(svc.config().backend, None, "default must normalize away");
+            assert_eq!(svc.key_for(&net), agnostic.key_for(&net));
+        } else {
+            assert!(
+                svc.key_for(&net).name.starts_with(&format!("{name}-")),
+                "slug {} should carry its backend prefix",
+                svc.key_for(&net).name
+            );
+        }
+    }
+    // Cold pass: every backend must build its own frontier despite the
+    // shared directory already holding the others' documents.
+    for (svc, tag) in &services {
+        svc.resolve_with(svc.key_for(&net), || toy_problem(*tag));
+        let s = svc.stats.snapshot();
+        assert_eq!((s.builds, s.store_hits), (1, 0), "cross-backend store hit");
+    }
+    assert_eq!(FrontierStore::new(&dir).list().len(), backend::ALL.len());
+    // Warm pass: each service hits only its own LRU entry.
+    for (svc, _) in &services {
+        svc.resolve_with(svc.key_for(&net), || unreachable!("must be cached"));
+        let s = svc.stats.snapshot();
+        assert_eq!((s.builds, s.mem_hits), (1, 1));
+    }
+    // Fresh services per backend over the same store: store hits only,
+    // and each loads the frontier built from its own problem.
+    for (i, name) in backend::ALL.into_iter().enumerate() {
+        let fresh = mk(name);
+        let served = fresh.resolve_with(fresh.key_for(&net), || {
+            unreachable!("store must answer")
+        });
+        let s = fresh.stats.snapshot();
+        assert_eq!((s.builds, s.store_hits), (0, 1), "{name}");
+        let expect = ntorc::frontier::ParetoFrontier::new(1).build(&toy_problem(i as u64));
+        assert_eq!(served.index.len(), expect.len(), "{name}: wrong document served");
+        for k in 0..expect.len() {
+            assert_eq!(served.index.point(k), expect.point(k), "{name}: point {k}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn backend_axis_composes_with_workload_and_eps() {
+    // The backend axis is one more independent key dimension: every
+    // (backend, workload, ε-mode) combination over one store directory
+    // gets its own key, its own build and its own document, with the
+    // slug nesting backend-<workload>-eps-<arch> outermost-first.
+    let dir = temp_dir("axes");
+    let net = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]);
+    let mk = |be: &str, wl: &str, epsilon: Option<f64>| {
+        FrontierService::new(
+            ServeConfig {
+                epsilon,
+                workload: Some(WorkloadKey {
+                    name: wl.into(),
+                    sample_rate_hz: workload::sample_rate_of(wl).unwrap(),
+                }),
+                backend: Some(BackendKey { name: be.into() }),
+                ..ServeConfig::default()
+            },
+            Some(FrontierStore::new(&dir)),
+        )
+    };
+    let mut services = Vec::new();
+    let mut tag = 0u64;
+    for be in backend::ALL {
+        for wl in ["rotor", "battery"] {
+            for epsilon in [None, Some(0.05)] {
+                services.push((mk(be, wl, epsilon), tag, be, wl, epsilon));
+                tag += 1;
+            }
+        }
+    }
+    let keys: Vec<_> = services.iter().map(|(s, ..)| s.key_for(&net)).collect();
+    for i in 0..keys.len() {
+        for j in i + 1..keys.len() {
+            assert_ne!(keys[i].hash, keys[j].hash, "key collision at {i},{j}");
+        }
+    }
+    for ((_, _, be, wl, epsilon), key) in services.iter().zip(&keys) {
+        let eps_slug = if epsilon.is_some() { "eps-" } else { "" };
+        let want = if *be == backend::DEFAULT {
+            format!("{wl}-{eps_slug}")
+        } else {
+            format!("{be}-{wl}-{eps_slug}")
+        };
+        assert!(key.name.starts_with(&want), "slug {} !~ {want}", key.name);
+    }
+    // Cold pass: every combination builds its own frontier despite the
+    // shared directory filling up around it; then the store holds one
+    // document per combination and fresh services only load their own.
+    for (svc, tag, ..) in &services {
+        svc.resolve_with(svc.key_for(&net), || toy_problem(*tag));
+        let s = svc.stats.snapshot();
+        assert_eq!((s.builds, s.store_hits), (1, 0), "cross-axis store hit");
+    }
+    assert_eq!(FrontierStore::new(&dir).list().len(), services.len());
+    for (_, tag, be, wl, epsilon) in &services {
+        let fresh = mk(be, wl, *epsilon);
+        let served = fresh.resolve_with(fresh.key_for(&net), || {
+            unreachable!("store must answer")
+        });
+        let s = fresh.stats.snapshot();
+        assert_eq!((s.builds, s.store_hits), (0, 1), "{be}/{wl}/eps={epsilon:?}");
+        let expect = ntorc::frontier::ParetoFrontier::new(1)
+            .with_epsilon(*epsilon)
+            .build(&toy_problem(*tag));
+        assert_eq!(served.index.len(), expect.len(), "{be}/{wl}: wrong document");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipelines_scope_frontier_keys_by_backend() {
+    // The end-to-end wiring: two pipelines differing only in backend
+    // file the same architecture under different keys, the systolic one
+    // with the backend as the outermost slug segment — and the hls4ml
+    // pipeline's key is exactly the pre-backend (workload-only) key.
+    let mut a = PipelineConfig::smoke();
+    a.set_workload("rotor").unwrap();
+    let mut b = PipelineConfig::smoke();
+    b.set_workload("rotor").unwrap();
+    b.set_backend("systolic").unwrap();
+    let net = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]);
+    let ka = Pipeline::new(a).serve().key_for(&net);
+    let kb = Pipeline::new(b).serve().key_for(&net);
+    assert_ne!(ka.hash, kb.hash);
+    assert!(ka.name.starts_with("rotor-"), "default backend leaves slugs unchanged");
+    assert!(kb.name.starts_with("systolic-rotor-"));
+}

@@ -26,6 +26,7 @@ fn serve_cfg() -> ServeConfig {
         max_points: None,
         epsilon: None,
         workload: None,
+        backend: None,
     }
 }
 
@@ -169,6 +170,57 @@ fn cold_query_then_warm_requery_over_the_wire() {
     assert_eq!(down.status, 200);
     let (served, _rejected) = server.join().unwrap();
     assert!(served >= 3, "three successful query batches were served, got {served}");
+}
+
+#[test]
+fn backend_assertion_is_enforced_on_the_wire() {
+    use ntorc::serve::BackendKey;
+    // A systolic-scoped server: /v1/stats names the active backend,
+    // matching assertions are answered, and a mismatched assertion is
+    // a 409 with the frozen unknown_backend code.
+    let svc = Arc::new(FrontierService::new(
+        ServeConfig { backend: Some(BackendKey { name: "systolic".into() }), ..serve_cfg() },
+        None,
+    ));
+    let server =
+        Server::start(http_cfg(2, 2), svc, ProblemSource::Builder(toy_builder(0)), named(), None)
+            .expect("server starts on an ephemeral port");
+    let mut client = HttpClient::new(server.addr().to_string());
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+    assert_eq!(
+        stats.get("ok").and_then(|o| o.get("backend")).expect("stats name a backend").as_str(),
+        Some("systolic")
+    );
+    let matching =
+        r#"{"v": 1, "backend": "systolic", "requests": [{"network": "tiny", "budget": 100}]}"#;
+    assert_eq!(client.post("/v1/query", matching).unwrap().status, 200);
+    let wrong =
+        r#"{"v": 1, "backend": "hls4ml", "requests": [{"network": "tiny", "budget": 100}]}"#;
+    let reply = client.post("/v1/query", wrong).unwrap();
+    assert_eq!(reply.status, 409);
+    assert_eq!(error_code_of(&reply.json().unwrap()), "unknown_backend");
+    client.post("/v1/shutdown", "{}").unwrap();
+    server.join().unwrap();
+
+    // An unscoped server answers for the hls4ml default: asserting it
+    // succeeds, anything else is refused.
+    let server = start(http_cfg(2, 2), None, 0, None);
+    let mut client = HttpClient::new(server.addr().to_string());
+    let stats = client.get("/v1/stats").unwrap().json().unwrap();
+    assert_eq!(
+        stats.get("ok").and_then(|o| o.get("backend")).expect("stats name a backend").as_str(),
+        Some("hls4ml")
+    );
+    let default_ok =
+        r#"{"v": 1, "backend": "hls4ml", "requests": [{"network": "tiny", "budget": 100}]}"#;
+    assert_eq!(client.post("/v1/query", default_ok).unwrap().status, 200);
+    let other =
+        r#"{"v": 1, "backend": "systolic", "requests": [{"network": "tiny", "budget": 100}]}"#;
+    let reply = client.post("/v1/query", other).unwrap();
+    assert_eq!(reply.status, 409);
+    assert_eq!(error_code_of(&reply.json().unwrap()), "unknown_backend");
+    client.post("/v1/shutdown", "{}").unwrap();
+    server.join().unwrap();
 }
 
 #[test]

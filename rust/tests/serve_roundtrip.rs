@@ -24,6 +24,7 @@ fn serve_cfg() -> ServeConfig {
         max_points: None,
         epsilon: None,
         workload: None,
+        backend: None,
     }
 }
 
