@@ -341,7 +341,14 @@ fn parse_net(j: &Json) -> Result<NetConfig, ApiError> {
             })
             .collect()
     };
-    let cfg = NetConfig { window, conv, lstm: usizes("lstm")?, dense: usizes("dense")? };
+    // `attn` is optional on the wire (absent = no attention blocks) so
+    // pre-attention clients keep working and shallow nets round-trip to
+    // the exact document bytes they produced before.
+    let attn = match j.as_obj().and_then(|o| o.get("attn")) {
+        Some(_) => usizes("attn")?,
+        None => vec![],
+    };
+    let cfg = NetConfig { window, conv, attn, lstm: usizes("lstm")?, dense: usizes("dense")? };
     if !cfg.is_valid() {
         return Err(ApiError::bad(format!("invalid network configuration: {cfg:?}")));
     }
@@ -351,7 +358,7 @@ fn parse_net(j: &Json) -> Result<NetConfig, ApiError> {
 /// Serialize one network in the inline `net` form [`parse_request_doc`]
 /// accepts (the exact inverse of [`parse_net`]).
 pub fn net_to_json(net: &NetConfig) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("window", Json::num(net.window as f64)),
         (
             "conv",
@@ -362,9 +369,13 @@ pub fn net_to_json(net: &NetConfig) -> Json {
                     .collect(),
             ),
         ),
-        ("lstm", Json::arr_usize(&net.lstm)),
-        ("dense", Json::arr_usize(&net.dense)),
-    ])
+    ];
+    if !net.attn.is_empty() {
+        fields.push(("attn", Json::arr_usize(&net.attn)));
+    }
+    fields.push(("lstm", Json::arr_usize(&net.lstm)));
+    fields.push(("dense", Json::arr_usize(&net.dense)));
+    Json::obj(fields)
 }
 
 /// Build a v1 request envelope from typed requests (what `loadgen` puts

@@ -354,7 +354,7 @@ impl Backend for SystolicBackend {
                     .collect()
             })
             .collect();
-        Ok(DeployProblem { layers, latency_budget })
+        Ok(DeployProblem { layers, latency_budget, fifo: None })
     }
 }
 

@@ -121,6 +121,7 @@ fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
             cfg.hpo.space = match v.as_str().unwrap_or("") {
                 "default" => SearchSpace::default(),
                 "small" => SearchSpace::small(),
+                "deep" => SearchSpace::deep(),
                 other => bail!("unknown space '{other}'"),
             }
         }
@@ -185,6 +186,31 @@ fn apply_one(cfg: &mut PipelineConfig, key: &str, v: &Json) -> Result<()> {
                 bail!("epsilon must be a finite non-negative number, got {e}");
             }
             cfg.frontier_epsilon = if e == 0.0 { None } else { Some(e) };
+        }
+        "frontier.point_budget" => {
+            let n = as_usize(v)?;
+            cfg.frontier_point_budget = if n == 0 { None } else { Some(n) };
+        }
+        "frontier.gamma" => {
+            let g = as_f64(v)?;
+            if !g.is_finite() || g < 0.0 {
+                bail!("gamma must be a finite non-negative number, got {g}");
+            }
+            cfg.frontier_gamma = if g == 0.0 { None } else { Some(g) };
+        }
+        "frontier.fifo_cost_per_slot" => {
+            let c = as_f64(v)?;
+            if !c.is_finite() || c < 0.0 {
+                bail!("fifo_cost_per_slot must be a finite non-negative number, got {c}");
+            }
+            cfg.fifo_cost_per_slot = if c == 0.0 { None } else { Some(c) };
+        }
+        "frontier.fifo_min_depth" => {
+            let d = as_f64(v)?;
+            if !d.is_finite() || d < 0.0 {
+                bail!("fifo_min_depth must be a finite non-negative number, got {d}");
+            }
+            cfg.fifo_min_depth = d;
         }
         // [forest]
         "forest.trees" => cfg.forest.n_trees = as_usize(v)?,
@@ -298,6 +324,16 @@ epsilon = 0.0         # epsilon-dominance coarsening (--epsilon): every
                       # served deployment costs at most (1+epsilon)x the
                       # exact optimum, under epsilon-scoped store keys
                       # (0 = exact frontiers)
+point_budget = 0      # adaptive epsilon: per-level delta chosen so each
+                      # merged level fits this many points; the realized
+                      # bound lands in eps_effective (0 = off; docs/SOLVER.md)
+gamma = 0.0           # FPTAS latency-axis coarsening — bicriteria, so
+                      # answers may exceed the budget by (1+gamma); keep 0
+                      # for serving (docs/SOLVER.md)
+fifo_cost_per_slot = 0.0   # stream-FIFO pricing: BRAM-equivalent cost per
+                           # buffered boundary slot; the DP then co-optimizes
+                           # reuse factors and buffer cost (0 = free handoffs)
+fifo_min_depth = 0.0  # floor FIFO depth in slots, only with fifo pricing on
 "#;
 
 #[cfg(test)]
@@ -330,6 +366,10 @@ mod tests {
         assert_eq!(cfg.store_format, StoreFormat::Bin);
         assert_eq!(cfg.solver, SolverKind::Frontier);
         assert_eq!(cfg.frontier_epsilon, None);
+        assert_eq!(cfg.frontier_point_budget, None);
+        assert_eq!(cfg.frontier_gamma, None);
+        assert_eq!(cfg.fifo_cost_per_slot, None);
+        assert_eq!(cfg.fifo_min_depth, 0.0);
         assert_eq!(cfg.http.addr, "127.0.0.1:7070");
         assert_eq!(cfg.http.threads, 4);
         assert_eq!(cfg.http.max_inflight_builds, 2);
@@ -371,6 +411,31 @@ mod tests {
         assert_eq!(cfg.frontier_epsilon, None);
         assert!(apply_override(&mut cfg, "frontier.epsilon=-0.1").is_err());
         assert!(apply_override(&mut cfg, "frontier.epsilon=exact").is_err());
+    }
+
+    #[test]
+    fn streaming_frontier_overrides_parse() {
+        let mut cfg = Preset::Smoke.pipeline();
+        apply_override(&mut cfg, "frontier.point_budget=256").unwrap();
+        assert_eq!(cfg.frontier_point_budget, Some(256));
+        apply_override(&mut cfg, "frontier.point_budget=0").unwrap();
+        assert_eq!(cfg.frontier_point_budget, None);
+        apply_override(&mut cfg, "frontier.gamma=0.1").unwrap();
+        assert_eq!(cfg.frontier_gamma, Some(0.1));
+        apply_override(&mut cfg, "frontier.gamma=0").unwrap();
+        assert_eq!(cfg.frontier_gamma, None);
+        assert!(apply_override(&mut cfg, "frontier.gamma=-1").is_err());
+        apply_override(&mut cfg, "frontier.fifo_cost_per_slot=0.5").unwrap();
+        assert_eq!(cfg.fifo_cost_per_slot, Some(0.5));
+        apply_override(&mut cfg, "frontier.fifo_min_depth=4").unwrap();
+        assert_eq!(cfg.fifo_min_depth, 4.0);
+        apply_override(&mut cfg, "frontier.fifo_cost_per_slot=0").unwrap();
+        assert_eq!(cfg.fifo_cost_per_slot, None);
+        assert!(apply_override(&mut cfg, "frontier.fifo_cost_per_slot=-2").is_err());
+        assert!(apply_override(&mut cfg, "frontier.fifo_min_depth=-1").is_err());
+        apply_override(&mut cfg, "hpo.space=deep").unwrap();
+        assert_eq!(cfg.hpo.space.max_attn, 4);
+        assert!(cfg.hpo.space.max_lstm >= 8);
     }
 
     #[test]

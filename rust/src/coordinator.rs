@@ -456,6 +456,22 @@ pub struct PipelineConfig {
     /// serves answers within (1+ε)× the exact optimum, under ε-scoped
     /// store keys. `None` = exact.
     pub frontier_epsilon: Option<f64>,
+    /// Optional adaptive per-level point budget (`frontier.point_budget`;
+    /// [`crate::frontier::ParetoFrontier::with_point_budget`]): δ chosen
+    /// per DP level, realized bound recorded per document. `None` = off.
+    pub frontier_point_budget: Option<usize>,
+    /// Optional FPTAS-style latency coarsening (`frontier.gamma`;
+    /// [`crate::frontier::ParetoFrontier::with_latency_gamma`]).
+    /// Bicriteria — deliberately not a serving default. `None` = off.
+    pub frontier_gamma: Option<f64>,
+    /// Optional stream-FIFO pricing (`frontier.fifo_cost_per_slot`):
+    /// BRAM-equivalent cost per buffered boundary slot; the frontier DP
+    /// then co-optimizes reuse factors and buffer cost. `None` = the
+    /// free-handoff model and bit-identical pre-streaming keys.
+    pub fifo_cost_per_slot: Option<f64>,
+    /// Minimum FIFO depth in slots (`frontier.fifo_min_depth`), used
+    /// only when [`fifo_cost_per_slot`](Self::fifo_cost_per_slot) is on.
+    pub fifo_min_depth: f64,
     /// Registry solver for direct (non-frontier-service) solves
     /// ([`crate::solver::SolverKind`], `solver.kind`).
     pub solver: SolverKind,
@@ -491,6 +507,10 @@ impl Default for PipelineConfig {
             frontier_store: None,
             frontier_max_points: None,
             frontier_epsilon: None,
+            frontier_point_budget: None,
+            frontier_gamma: None,
+            fifo_cost_per_slot: None,
+            fifo_min_depth: 0.0,
             solver: SolverKind::Frontier,
             store_max_docs: None,
             store_format: StoreFormat::Bin,
@@ -533,6 +553,10 @@ impl PipelineConfig {
             latency_budget: self.latency_budget,
             max_points: self.frontier_max_points,
             epsilon: self.frontier_epsilon,
+            point_budget: self.frontier_point_budget,
+            latency_gamma: self.frontier_gamma,
+            fifo_cost_per_slot: self.fifo_cost_per_slot,
+            fifo_min_depth: self.fifo_min_depth,
             workload: Some(WorkloadKey { name: self.workload.clone(), sample_rate_hz }),
             // The service normalizes the default backend to None, so an
             // hls4ml pipeline keeps minting pre-backend keys verbatim.
@@ -730,6 +754,8 @@ impl Pipeline {
             workers: self.cfg.workers.max(1),
             max_points: self.cfg.frontier_max_points,
             epsilon: self.cfg.frontier_epsilon,
+            point_budget: self.cfg.frontier_point_budget,
+            latency_gamma: self.cfg.frontier_gamma,
         }
     }
 

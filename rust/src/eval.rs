@@ -247,7 +247,7 @@ impl<'m> BatchEvaluator<'m> {
                     .collect::<Vec<_>>()
             })
             .collect();
-        DeployProblem { layers, latency_budget }
+        DeployProblem { layers, latency_budget, fifo: None }
     }
 }
 
@@ -375,6 +375,7 @@ mod tests {
                 })
                 .collect(),
             latency_budget: 50_000.0,
+            fifo: None,
         };
         models.cache().clear();
         let batched =

@@ -53,7 +53,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail};
 
 use crate::coordinator::parallel_map;
-use crate::mip::{self, BbStats, Choice, DeployProblem, Solution};
+use crate::mip::{self, BbStats, Choice, DeployProblem, FifoModel, Solution};
 use crate::ser::Json;
 
 /// Feasibility slack on latency-budget comparisons (matches `solve_bb`).
@@ -83,6 +83,21 @@ fn entry_lt(a: &Entry, b: &Entry) -> bool {
 }
 
 /// Counters from one frontier construction.
+///
+/// # Coarsening / thinning composition order
+///
+/// When several reduction knobs are set on one build they apply to each
+/// DP level in a **fixed, documented order**: (1) ε-dominance cost
+/// coarsening — the fixed [`with_epsilon`](ParetoFrontier::with_epsilon)
+/// δ and the adaptive [`with_point_budget`](ParetoFrontier::with_point_budget)
+/// δ resolve to their maximum, (2) latency-axis coarsening
+/// ([`with_latency_gamma`](ParetoFrontier::with_latency_gamma)), then
+/// (3) the [`with_max_points`](ParetoFrontier::with_max_points)
+/// guardrail thinning. ε runs *before* thinning so the
+/// approximation-grade bound shrinks the level first and the unbounded
+/// telemetry-grade stride only fires (setting [`truncated`]
+/// (FrontierStats::truncated)) if the level still overflows — pinned by
+/// `eps_runs_before_max_points_thinning`.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FrontierStats {
     /// Points on the final frontier.
@@ -110,6 +125,22 @@ pub struct FrontierStats {
     /// points-saved telemetry, disjoint from the dominance `pruned`
     /// counter.
     pub eps_pruned: u64,
+    /// Realized multiplicative cost-coarsening bound, Π(1+δ_level) − 1
+    /// over every per-level δ actually applied: ≈ `epsilon` for a
+    /// fixed-ε build, and the honest achieved bound when a
+    /// [`with_point_budget`](ParetoFrontier::with_point_budget) drives δ
+    /// adaptively per level. 0.0 = exact on the cost axis. Every query
+    /// answer costs at most (1+eps_effective)× the exact optimum.
+    pub eps_effective: f64,
+    /// Realized multiplicative latency-coarsening bound of the
+    /// FPTAS-style [`with_latency_gamma`](ParetoFrontier::with_latency_gamma)
+    /// mode (0.0 = latencies exact). Bicriteria: `query(b)` costs at
+    /// most what the exact optimum at budget b/(1+gamma_effective)
+    /// costs; `min_latency` stays exact so feasibility answers do too.
+    pub gamma_effective: f64,
+    /// Entries dropped by latency-axis coarsening (disjoint from
+    /// `pruned` and `eps_pruned`).
+    pub lat_pruned: u64,
 }
 
 /// The frontier engine. Construction knobs: how many worker threads the
@@ -121,11 +152,19 @@ pub struct ParetoFrontier {
     workers: usize,
     max_points: Option<usize>,
     epsilon: Option<f64>,
+    point_budget: Option<usize>,
+    latency_gamma: Option<f64>,
 }
 
 impl ParetoFrontier {
     pub fn new(workers: usize) -> ParetoFrontier {
-        ParetoFrontier { workers: workers.max(1), max_points: None, epsilon: None }
+        ParetoFrontier {
+            workers: workers.max(1),
+            max_points: None,
+            epsilon: None,
+            point_budget: None,
+            latency_gamma: None,
+        }
     }
 
     /// Opt-in guardrail: when any DP level exceeds `cap` points it is
@@ -174,77 +213,102 @@ impl ParetoFrontier {
         self.epsilon
     }
 
-    /// Apply the `max_points` guardrail to one DP level (no-op when the
-    /// cap is unset or the level fits). Thinned entries count as pruned.
-    fn cap_level(&self, level: Vec<Entry>, stats: &mut FrontierStats) -> Vec<Entry> {
-        let Some(cap) = self.max_points else { return level };
-        let n = level.len();
-        if n <= cap {
-            return level;
-        }
-        let kept: Vec<Entry> = strided_indices(n, cap).into_iter().map(|i| level[i]).collect();
-        stats.pruned += (n - kept.len()) as u64;
-        stats.truncated = true;
-        kept
+    /// Opt-in **adaptive ε**: instead of one global ε split uniformly
+    /// across levels, give the build a per-level *point budget*. A level
+    /// that already fits the budget is kept exact (δ = 0, zero error
+    /// spent); a level that overflows is coarsened with the smallest
+    /// cost-cell width δ that brings it within budget (binary search
+    /// over the cell width, deterministic). The realized bound
+    /// Π(1+δ_level) − 1 is recorded in
+    /// [`FrontierStats::eps_effective`] — every query answer is within
+    /// (1+eps_effective)× the exact optimum, by the same per-level
+    /// covering argument as [`with_epsilon`](Self::with_epsilon).
+    /// Composes with a fixed ε (per level the larger δ wins) and with
+    /// the `max_points` guardrail (budget coarsening runs first).
+    /// `None` changes nothing.
+    pub fn with_point_budget(mut self, budget: Option<usize>) -> ParetoFrontier {
+        self.point_budget = budget.map(|b| b.max(2));
+        self
     }
 
-    /// Apply ε-dominance coarsening to one DP level (no-op when ε is
-    /// unset). `level` is a strict staircase — latency increasing, cost
-    /// decreasing — so walking it in order, the first entry inside each
-    /// multiplicative cost cell of width (1+δ) is that cell's
-    /// minimum-latency (and maximum-cost) point; keeping exactly that
-    /// entry covers every dropped p with a survivor q such that
-    /// q.latency ≤ p.latency and q.cost ≤ (1+δ)·p.cost. The last
-    /// (cheapest) entry always survives, so the global cheapest
-    /// assignment and `max_latency` stay exact. Dropped entries are
-    /// counted in `eps_pruned`.
-    fn coarsen_level(
+    /// The configured adaptive point budget (`None` = off).
+    pub fn point_budget(&self) -> Option<usize> {
+        self.point_budget
+    }
+
+    /// Opt-in FPTAS-style **latency-axis coarsening**: each DP level is
+    /// bucketed into multiplicative *latency* cells of width (1+γ_level)
+    /// with γ_level = (1+gamma)^(1/n_layers) − 1, keeping per cell only
+    /// the cheapest (slowest) entry; the fastest entry always survives,
+    /// so `min_latency` and feasibility answers stay exact. The
+    /// guarantee is bicriteria rather than same-budget: for every
+    /// budget b, `query(b)` costs at most what the exact optimum at the
+    /// shrunk budget b/(1+gamma) costs (every exact point p keeps a
+    /// survivor q with q.cost ≤ p.cost and q.latency ≤ (1+gamma)·p.latency).
+    /// Because the same-budget cost can exceed the exact optimum at b
+    /// itself, this knob is **not** wired into serving defaults — it is
+    /// for offline deep-plan sweeps where a latency slack is acceptable.
+    /// `None` or a non-positive value changes nothing.
+    pub fn with_latency_gamma(mut self, gamma: Option<f64>) -> ParetoFrontier {
+        self.latency_gamma = gamma.filter(|g| *g > 0.0);
+        self
+    }
+
+    /// The configured latency coarsening γ (`None` = exact latencies).
+    pub fn latency_gamma(&self) -> Option<f64> {
+        self.latency_gamma
+    }
+
+    /// One full reduction pass over a DP level (or, in FIFO mode, one
+    /// choice group): cost coarsening first — the fixed ε δ and the
+    /// adaptive point-budget δ resolve to their maximum — then
+    /// latency-axis coarsening, then the `max_points` thinning. This is
+    /// the documented [`FrontierStats`] composition order. Returns the
+    /// reduced level and the cost δ actually applied, which the caller
+    /// folds into the `eps_effective` accumulator.
+    fn reduce_level(
         &self,
         level: Vec<Entry>,
-        delta: Option<f64>,
+        delta_fixed: Option<f64>,
+        gamma_level: Option<f64>,
+        budget: Option<usize>,
+        cap: Option<usize>,
         stats: &mut FrontierStats,
-    ) -> Vec<Entry> {
-        let Some(delta) = delta else { return level };
-        let n = level.len();
-        if n <= 2 {
-            return level;
+    ) -> (Vec<Entry>, f64) {
+        let mut delta = delta_fixed.unwrap_or(0.0);
+        if let Some(b) = budget {
+            if let Some(d) = adaptive_delta(&level, b) {
+                delta = delta.max(d);
+            }
         }
-        let inv_ln = 1.0 / delta.ln_1p();
-        // A δ this small buckets finer than f64 can distinguish (and the
-        // i64 cell index below would saturate, collapsing every cost
-        // into ONE cell — the opposite of a bound). Nothing would merge
-        // anyway: keep the level exact.
-        if !inv_ln.is_finite() || inv_ln > 1e15 {
-            return level;
-        }
-        // Cell index of a cost. Non-positive costs share one sentinel
-        // cell below every positive one (costs only decrease along the
-        // staircase, so that cell — if it appears — is a suffix).
-        let cell_of = |c: f64| -> i64 {
-            if c <= 0.0 {
-                i64::MIN
+        let level = {
+            let _e = crate::obs::span("eps_prune");
+            if delta > 0.0 {
+                coarsen_entries(level, delta, stats)
             } else {
-                (c.ln() * inv_ln).floor() as i64
+                level
             }
         };
-        let mut out = Vec::with_capacity(64);
-        let mut last_cell = i64::MAX;
-        for (i, e) in level.into_iter().enumerate() {
-            let cell = cell_of(e.cost);
-            if cell != last_cell || i == n - 1 {
-                last_cell = cell;
-                out.push(e);
-            }
-        }
-        stats.eps_pruned += (n - out.len()) as u64;
-        out
+        let level = match gamma_level {
+            Some(g) => coarsen_latency_entries(level, g, stats),
+            None => level,
+        };
+        let level = match cap {
+            Some(c) => cap_entries(level, c, stats),
+            None => level,
+        };
+        (level, delta)
     }
 
     /// Compute the complete latency→cost frontier of `prob` (its
     /// `latency_budget` field is irrelevant here: the index answers every
-    /// budget).
+    /// budget). Problems carrying a [`mip::FifoModel`] route through the
+    /// grouped FIFO-aware DP ([`build_fifo`](Self::build_fifo) below).
     pub fn build(&self, prob: &DeployProblem) -> FrontierIndex {
         let t0 = Instant::now();
+        if prob.fifo.is_some() {
+            return self.build_fifo(prob, t0);
+        }
         let _sp_prune = crate::obs::span("build/prune");
         let (pruned, maps) = prob.prune_dominated();
         drop(_sp_prune);
@@ -269,10 +333,15 @@ impl ParetoFrontier {
         }
 
         // Per-level coarsening factor: n_layers applications of (1+δ)
-        // compose to exactly (1+ε).
+        // compose to exactly (1+ε). Same split for the latency axis.
         let delta = self
             .epsilon
             .map(|e| (1.0 + e).powf(1.0 / n_layers as f64) - 1.0);
+        let gamma_level = self
+            .latency_gamma
+            .map(|g| (1.0 + g).powf(1.0 / n_layers as f64) - 1.0);
+        let mut eps_acc = 1.0f64;
+        let mut gamma_acc = 1.0f64;
 
         // Level 0: the first layer's staircase. `prune_dominated` already
         // sorted it by latency with strictly decreasing cost.
@@ -291,24 +360,40 @@ impl ParetoFrontier {
                 .collect();
             stats.candidates += first.len() as u64;
             stats.peak_level = stats.peak_level.max(first.len());
-            let first = {
-                let _e = crate::obs::span("eps_prune");
-                self.coarsen_level(first, delta, &mut stats)
-            };
-            let first = self.cap_level(first, &mut stats);
+            let (first, applied) = self.reduce_level(
+                first,
+                delta,
+                gamma_level,
+                self.point_budget,
+                self.max_points,
+                &mut stats,
+            );
+            eps_acc *= 1.0 + applied;
+            if let Some(g) = gamma_level {
+                gamma_acc *= 1.0 + g;
+            }
             levels.push(first);
         }
         for k in 1..n_layers {
             let _sp = crate::obs::span_with(|| format!("build/level{k}"));
             let merged = self.merge_level(levels.last().unwrap(), &pruned.layers[k], &mut stats);
             stats.peak_level = stats.peak_level.max(merged.len());
-            let merged = {
-                let _e = crate::obs::span("eps_prune");
-                self.coarsen_level(merged, delta, &mut stats)
-            };
-            let merged = self.cap_level(merged, &mut stats);
+            let (merged, applied) = self.reduce_level(
+                merged,
+                delta,
+                gamma_level,
+                self.point_budget,
+                self.max_points,
+                &mut stats,
+            );
+            eps_acc *= 1.0 + applied;
+            if let Some(g) = gamma_level {
+                gamma_acc *= 1.0 + g;
+            }
             levels.push(merged);
         }
+        stats.eps_effective = (eps_acc - 1.0).max(0.0);
+        stats.gamma_effective = (gamma_acc - 1.0).max(0.0);
 
         // Reconstruct each final point's assignment by walking the parent
         // pointers, map back to original choice indices, and canonicalize
@@ -328,6 +413,188 @@ impl ParetoFrontier {
                     e = levels[k - 1][e.prev as usize];
                 }
             }
+            let sol = prob.evaluate(&pick);
+            costs.push(sol.cost);
+            latencies.push(sol.latency);
+            for (k, &p) in pick.iter().enumerate() {
+                picks[i * n_layers + k] = p as u32;
+            }
+        }
+        stats.points = n_points;
+        stats.build_seconds = t0.elapsed().as_secs_f64();
+        FrontierIndex { costs, latencies, picks, n_layers, stats }
+    }
+
+    /// FIFO-aware DP. With pairwise boundary costs, cross-choice
+    /// dominance pruning is unsound — two partials ending in different
+    /// choices face different future boundary terms — so each DP level
+    /// is a flat vector of contiguous per-ending-choice *groups*, and
+    /// pruning/coarsening/capping run only within a group (partials in
+    /// one group share their entire future, so within-group dominance
+    /// is exact and the per-level (1+δ) covering argument carries over
+    /// group-wise). Building the next level's group j folds, over every
+    /// previous group jp, a shifted copy of that group: the shift
+    /// constant is layer k's (cost, latency) plus the boundary cost
+    /// fifo(k−1, jp, j), so the existing staircase-merge machinery
+    /// applies unchanged. The final level merges across groups exactly
+    /// (no future boundary remains). Deterministic and bit-identical at
+    /// any worker count: workers shard by the new choice index.
+    fn build_fifo(&self, prob: &DeployProblem, t0: Instant) -> FrontierIndex {
+        let n_layers = prob.layers.len();
+        let mut stats = FrontierStats {
+            workers: self.workers,
+            epsilon: self.epsilon.unwrap_or(0.0),
+            ..Default::default()
+        };
+        if n_layers == 0 {
+            stats.points = 1;
+            stats.build_seconds = t0.elapsed().as_secs_f64();
+            return FrontierIndex {
+                costs: vec![0.0],
+                latencies: vec![0.0],
+                picks: Vec::new(),
+                n_layers: 0,
+                stats,
+            };
+        }
+        let fifo = prob.fifo.as_ref().unwrap();
+        let delta = self
+            .epsilon
+            .map(|e| (1.0 + e).powf(1.0 / n_layers as f64) - 1.0);
+        let gamma_level = self
+            .latency_gamma
+            .map(|g| (1.0 + g).powf(1.0 / n_layers as f64) - 1.0);
+        let mut eps_acc = 1.0f64;
+        let mut gamma_acc = 1.0f64;
+        // Per-group shares of the level-wide knobs: m groups splitting
+        // one budget, never below the 2-point staircase minimum.
+        let share = |knob: Option<usize>, m: usize| knob.map(|v| (v / m).max(2));
+
+        // Levels stay flat (Entry.prev indexes the previous level's flat
+        // vector, reconstruction unchanged); offsets[k] holds the m_k+1
+        // group boundaries of level k.
+        let mut levels: Vec<Vec<Entry>> = Vec::with_capacity(n_layers);
+        let mut offsets: Vec<Vec<usize>> = Vec::with_capacity(n_layers);
+        {
+            let _sp = crate::obs::span("build/level0");
+            // One single-entry group per choice — no cross-choice prune.
+            let first: Vec<Entry> = prob.layers[0]
+                .iter()
+                .enumerate()
+                .map(|(j, c)| Entry {
+                    prev: 0,
+                    choice: j as u32,
+                    cost: c.cost,
+                    latency: c.latency,
+                })
+                .collect();
+            stats.candidates += first.len() as u64;
+            stats.peak_level = stats.peak_level.max(first.len());
+            offsets.push((0..=first.len()).collect());
+            levels.push(first);
+        }
+        for k in 1..n_layers {
+            let _sp = crate::obs::span_with(|| format!("build/level{k}"));
+            let prev = levels.last().unwrap();
+            let prev_off = offsets.last().unwrap();
+            let m_prev = prob.layers[k - 1].len();
+            let m = prob.layers[k].len();
+            let generated = (prev.len() * m) as u64;
+            stats.candidates += generated;
+            let workers = self.workers.min(m);
+            let groups: Vec<Vec<Entry>> = if workers <= 1 {
+                (0..m)
+                    .map(|j| {
+                        fold_fifo_group(
+                            prev,
+                            prev_off,
+                            &prob.layers[k - 1],
+                            &prob.layers[k],
+                            fifo,
+                            k - 1,
+                            j,
+                        )
+                    })
+                    .collect()
+            } else {
+                let shared_prev = Arc::new(prev.clone());
+                let shared_off = Arc::new(prev_off.clone());
+                let prev_choices = Arc::new(prob.layers[k - 1].clone());
+                let cur_choices = Arc::new(prob.layers[k].clone());
+                let shared_fifo = Arc::new(fifo.clone());
+                let jobs: Vec<Box<dyn FnOnce() -> Vec<Entry> + Send>> = (0..m)
+                    .map(|j| {
+                        let prev = Arc::clone(&shared_prev);
+                        let off = Arc::clone(&shared_off);
+                        let pc = Arc::clone(&prev_choices);
+                        let cc = Arc::clone(&cur_choices);
+                        let f = Arc::clone(&shared_fifo);
+                        Box::new(move || fold_fifo_group(&prev, &off, &pc, &cc, &f, k - 1, j))
+                            as Box<dyn FnOnce() -> Vec<Entry> + Send>
+                    })
+                    .collect();
+                parallel_map(workers, jobs)
+            };
+            let merged_len: usize = groups.iter().map(|g| g.len()).sum();
+            stats.pruned += generated - merged_len as u64;
+            stats.peak_level = stats.peak_level.max(merged_len);
+            let group_budget = share(self.point_budget, m);
+            let group_cap = share(self.max_points, m);
+            let mut max_applied = 0.0f64;
+            let mut flat = Vec::with_capacity(merged_len.min(4096));
+            let mut off = Vec::with_capacity(m + 1);
+            off.push(0);
+            for g in groups {
+                let (g, applied) =
+                    self.reduce_level(g, delta, gamma_level, group_budget, group_cap, &mut stats);
+                max_applied = max_applied.max(applied);
+                flat.extend(g);
+                off.push(flat.len());
+            }
+            // One chain passes through exactly one group per level, so
+            // the level's bound contribution is the worst group's δ.
+            eps_acc *= 1.0 + max_applied;
+            if let Some(g) = gamma_level {
+                gamma_acc *= 1.0 + g;
+            }
+            levels.push(flat);
+            offsets.push(off);
+        }
+        stats.eps_effective = (eps_acc - 1.0).max(0.0);
+        stats.gamma_effective = (gamma_acc - 1.0).max(0.0);
+
+        // Final level: no future boundary remains, so merging across the
+        // per-choice groups is exact.
+        let last = levels.last().unwrap();
+        let last_off = offsets.last().unwrap();
+        let mut final_entries: Vec<Entry> = Vec::new();
+        for w in last_off.windows(2) {
+            let seg = last[w[0]..w[1]].to_vec();
+            final_entries = if final_entries.is_empty() {
+                seg
+            } else {
+                merge_staircases(final_entries, seg)
+            };
+        }
+        stats.pruned += (last.len() - final_entries.len()) as u64;
+
+        let n_points = final_entries.len();
+        let mut costs = Vec::with_capacity(n_points);
+        let mut latencies = Vec::with_capacity(n_points);
+        let mut picks = vec![0u32; n_points * n_layers];
+        let mut pick = vec![0usize; n_layers];
+        for (i, entry) in final_entries.iter().enumerate() {
+            let mut e = *entry;
+            for k in (0..n_layers).rev() {
+                pick[k] = e.choice as usize;
+                if k > 0 {
+                    e = levels[k - 1][e.prev as usize];
+                }
+            }
+            // `evaluate` interleaves each boundary term right after its
+            // consumer layer — the DP's exact accumulation order — so
+            // the canonical sum reproduces the merged costs bit-for-bit
+            // and the staircase invariants survive canonicalization.
             let sol = prob.evaluate(&pick);
             costs.push(sol.cost);
             latencies.push(sol.latency);
@@ -409,6 +676,195 @@ pub fn strided_indices(n: usize, cap: usize) -> Vec<usize> {
     out
 }
 
+/// Apply a point cap to one DP level or choice group (no-op when it
+/// fits): thin to an evenly-strided staircase subset, first and last
+/// points always surviving. Thinned entries count as pruned and flag
+/// `truncated`.
+fn cap_entries(level: Vec<Entry>, cap: usize, stats: &mut FrontierStats) -> Vec<Entry> {
+    let n = level.len();
+    if n <= cap {
+        return level;
+    }
+    let kept: Vec<Entry> = strided_indices(n, cap).into_iter().map(|i| level[i]).collect();
+    stats.pruned += (n - kept.len()) as u64;
+    stats.truncated = true;
+    kept
+}
+
+/// ε-dominance cost coarsening of one strict staircase — latency
+/// increasing, cost decreasing — walking it in order, the first entry
+/// inside each multiplicative cost cell of width (1+δ) is that cell's
+/// minimum-latency (and maximum-cost) point; keeping exactly that entry
+/// covers every dropped p with a survivor q such that
+/// q.latency ≤ p.latency and q.cost ≤ (1+δ)·p.cost. The last (cheapest)
+/// entry always survives, so the global cheapest assignment and
+/// `max_latency` stay exact. Dropped entries are counted in
+/// `eps_pruned`.
+fn coarsen_entries(level: Vec<Entry>, delta: f64, stats: &mut FrontierStats) -> Vec<Entry> {
+    let n = level.len();
+    if n <= 2 {
+        return level;
+    }
+    let inv_ln = 1.0 / delta.ln_1p();
+    // A δ this small buckets finer than f64 can distinguish (and the
+    // i64 cell index below would saturate, collapsing every cost
+    // into ONE cell — the opposite of a bound). Nothing would merge
+    // anyway: keep the level exact.
+    if !inv_ln.is_finite() || inv_ln > 1e15 {
+        return level;
+    }
+    // Cell index of a cost. Non-positive costs share one sentinel
+    // cell below every positive one (costs only decrease along the
+    // staircase, so that cell — if it appears — is a suffix).
+    let cell_of = |c: f64| -> i64 {
+        if c <= 0.0 {
+            i64::MIN
+        } else {
+            (c.ln() * inv_ln).floor() as i64
+        }
+    };
+    let mut out = Vec::with_capacity(64);
+    let mut last_cell = i64::MAX;
+    for (i, e) in level.into_iter().enumerate() {
+        let cell = cell_of(e.cost);
+        if cell != last_cell || i == n - 1 {
+            last_cell = cell;
+            out.push(e);
+        }
+    }
+    stats.eps_pruned += (n - out.len()) as u64;
+    out
+}
+
+/// FPTAS latency-axis coarsening of one strict staircase: keep the
+/// cheapest (last) entry of each multiplicative latency cell of width
+/// (1+γ), plus the first (fastest) entry so `min_latency` — and with it
+/// every feasibility answer — stays exact. A dropped p leaves a
+/// survivor q with q.cost ≤ p.cost and q.latency ≤ (1+γ)·p.latency.
+fn coarsen_latency_entries(level: Vec<Entry>, gamma: f64, stats: &mut FrontierStats) -> Vec<Entry> {
+    let n = level.len();
+    if n <= 2 {
+        return level;
+    }
+    let inv_ln = 1.0 / gamma.ln_1p();
+    if !inv_ln.is_finite() || inv_ln > 1e15 {
+        return level;
+    }
+    // Zero latencies share one sentinel cell below every positive one
+    // (latencies only increase along the staircase: a prefix).
+    let cell_of = |l: f64| -> i64 {
+        if l <= 0.0 {
+            i64::MIN
+        } else {
+            (l.ln() * inv_ln).floor() as i64
+        }
+    };
+    let mut out = Vec::with_capacity(64);
+    for (i, e) in level.iter().enumerate() {
+        let keep =
+            i == 0 || i == n - 1 || cell_of(e.latency) != cell_of(level[i + 1].latency);
+        if keep {
+            out.push(*e);
+        }
+    }
+    stats.lat_pruned += (n - out.len()) as u64;
+    out
+}
+
+/// How many entries [`coarsen_entries`] at log cell width `w` = ln(1+δ)
+/// would keep, capped at `budget + 1` — the probe the adaptive-δ search
+/// drives. Replicates `coarsen_entries`' walk exactly (same cell
+/// arithmetic, same always-keep-last rule), with an early exit the
+/// moment the count exceeds the budget so too-narrow probe widths cost
+/// O(budget), not O(level).
+fn kept_after_delta(level: &[Entry], w: f64, budget: usize) -> usize {
+    let inv_ln = 1.0 / w;
+    if !inv_ln.is_finite() || inv_ln > 1e15 {
+        return level.len().min(budget + 1);
+    }
+    let cell_of = |c: f64| -> i64 {
+        if c <= 0.0 {
+            i64::MIN
+        } else {
+            (c.ln() * inv_ln).floor() as i64
+        }
+    };
+    let n = level.len();
+    let mut kept = 0usize;
+    let mut last_cell = i64::MAX;
+    for (i, e) in level.iter().enumerate() {
+        let cell = cell_of(e.cost);
+        if cell != last_cell || i == n - 1 {
+            last_cell = cell;
+            kept += 1;
+            if kept > budget {
+                return kept;
+            }
+        }
+    }
+    kept
+}
+
+/// The cost-cell width bringing an over-budget level within its point
+/// budget (None when the level already fits or multiplicative cells
+/// cannot apply). The range-derived width ln(cmax/cmin)/budget spans
+/// the level in ~`budget` cells, so on smoothly-spread levels it fits —
+/// nearly full — after at most a doubling or two, and is accepted
+/// as-is: one O(level) probe walk, no search. Only when the fitting
+/// width lands *far* under budget (a clustered level, where uniform
+/// cells waste most of their span on empty cost range) does a bisection
+/// on the log width sharpen it — this is where adaptive ε beats a fixed
+/// global ε: levels that fit spend zero error, levels that overflow
+/// spend roughly what they need and no more. Deterministic (pure
+/// arithmetic on the level's costs).
+fn adaptive_delta(level: &[Entry], budget: usize) -> Option<f64> {
+    let n = level.len();
+    if n <= budget {
+        return None;
+    }
+    let cmax = level.first().map(|e| e.cost)?;
+    let cmin = level.last().map(|e| e.cost)?;
+    if !(cmin > 0.0) || !cmax.is_finite() || cmax <= cmin {
+        return None;
+    }
+    let w_range = (cmax / cmin).ln() / budget as f64;
+    if !(w_range > 0.0) || !w_range.is_finite() {
+        return None;
+    }
+    let kept = |w: f64| kept_after_delta(level, w, budget);
+    // Cell-boundary rounding can leave a point or two over budget at the
+    // range-derived width; doubling always reaches a fitting width
+    // (one cell spans everything once w exceeds ln(cmax/cmin)).
+    let mut hi = w_range;
+    let mut guard = 0;
+    let mut kept_hi = kept(hi);
+    while kept_hi > budget {
+        hi *= 2.0;
+        guard += 1;
+        if guard > 64 {
+            return Some(hi.exp_m1());
+        }
+        kept_hi = kept(hi);
+    }
+    if kept_hi * 2 >= budget {
+        // Within 2× of the budget: the width is already sharp enough.
+        return Some(hi.exp_m1());
+    }
+    let mut lo = 0.0f64;
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        if !(mid > lo && mid < hi) {
+            break;
+        }
+        if kept(mid) <= budget {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi.exp_m1())
+}
+
 /// Merge the shifted copies of `frontier` for choices `lo..hi` into one
 /// pruned staircase.
 fn fold_choices(frontier: &[Entry], choices: &[Choice], lo: usize, hi: usize) -> Vec<Entry> {
@@ -431,6 +887,47 @@ fn fold_choices(frontier: &[Entry], choices: &[Choice], lo: usize, hi: usize) ->
     let mut acc = prune_staircase(shift(lo));
     for j in lo + 1..hi {
         acc = merge_staircases(acc, shift(j));
+    }
+    acc
+}
+
+/// FIFO-mode analogue of [`fold_choices`]: build the next level's group
+/// for new choice `j` by folding, over every previous-level group `jp`
+/// (a contiguous `prev_off` slice of the flat previous level), a shifted
+/// copy whose shift is layer-(boundary+1) choice `j`'s (cost, latency)
+/// plus the `fifo` boundary cost between choices `jp` and `j`. Each
+/// previous group is itself a sorted staircase and the shift is
+/// monotone, so every copy arrives sorted and the staircase merges
+/// apply unchanged. `prev` pointers are flat previous-level indexes.
+fn fold_fifo_group(
+    prev: &[Entry],
+    prev_off: &[usize],
+    prev_choices: &[Choice],
+    cur_choices: &[Choice],
+    fifo: &FifoModel,
+    boundary: usize,
+    j: usize,
+) -> Vec<Entry> {
+    let c = cur_choices[j];
+    let mut acc: Vec<Entry> = Vec::new();
+    for jp in 0..prev_choices.len() {
+        let extra = fifo.boundary_cost(boundary, &prev_choices[jp], &c);
+        let lo = prev_off[jp];
+        let seg: Vec<Entry> = prev[lo..prev_off[jp + 1]]
+            .iter()
+            .enumerate()
+            .map(|(i, e)| Entry {
+                prev: (lo + i) as u32,
+                choice: j as u32,
+                cost: e.cost + c.cost + extra,
+                latency: e.latency + c.latency,
+            })
+            .collect();
+        acc = if acc.is_empty() {
+            prune_staircase(seg)
+        } else {
+            merge_staircases(acc, seg)
+        };
     }
     acc
 }
@@ -712,9 +1209,8 @@ impl FrontierIndex {
                 "picks",
                 Json::Arr(self.picks.iter().map(|&p| Json::Num(p as f64)).collect()),
             ),
-            (
-                "stats",
-                Json::obj(vec![
+            ("stats", {
+                let mut stats = vec![
                     ("points", Json::num(self.stats.points as f64)),
                     ("candidates", Json::num(self.stats.candidates as f64)),
                     ("pruned", Json::num(self.stats.pruned as f64)),
@@ -724,8 +1220,22 @@ impl FrontierIndex {
                     ("truncated", Json::Bool(self.stats.truncated)),
                     ("epsilon", Json::num(self.stats.epsilon)),
                     ("eps_pruned", Json::num(self.stats.eps_pruned as f64)),
-                ]),
-            ),
+                ];
+                // Adaptive-ε / latency-coarsening fields are emitted only
+                // when a build actually used those modes, so documents
+                // from plain and fixed-ε builds stay byte-identical to
+                // every store written before the modes existed.
+                if self.stats.eps_effective != 0.0 {
+                    stats.push(("eps_effective", Json::num(self.stats.eps_effective)));
+                }
+                if self.stats.gamma_effective != 0.0 {
+                    stats.push(("gamma_effective", Json::num(self.stats.gamma_effective)));
+                }
+                if self.stats.lat_pruned != 0 {
+                    stats.push(("lat_pruned", Json::num(self.stats.lat_pruned as f64)));
+                }
+                Json::obj(stats)
+            }),
         ])
     }
 
@@ -789,6 +1299,26 @@ impl FrontierIndex {
                 Ok(_) => stat_u64("eps_pruned")?,
                 Err(_) => 0,
             },
+            eps_effective: match s.get("eps_effective") {
+                Ok(v) => v
+                    .as_f64()
+                    .filter(|e| e.is_finite() && *e >= 0.0)
+                    .ok_or_else(|| anyhow!("stats.eps_effective must be a non-negative number"))?,
+                Err(_) => 0.0,
+            },
+            gamma_effective: match s.get("gamma_effective") {
+                Ok(v) => v
+                    .as_f64()
+                    .filter(|g| g.is_finite() && *g >= 0.0)
+                    .ok_or_else(|| {
+                        anyhow!("stats.gamma_effective must be a non-negative number")
+                    })?,
+                Err(_) => 0.0,
+            },
+            lat_pruned: match s.get("lat_pruned") {
+                Ok(_) => stat_u64("lat_pruned")?,
+                Err(_) => 0,
+            },
         };
         FrontierIndex::from_parts(costs, latencies, picks, n_layers, stats)
             .map_err(|e| anyhow!("invalid frontier document: {e}"))
@@ -817,7 +1347,46 @@ pub fn adversarial_wide_grid(n_layers: usize, base: usize) -> DeployProblem {
                 .collect()
         })
         .collect();
-    DeployProblem { layers, latency_budget: 0.0 }
+    DeployProblem { layers, latency_budget: 0.0, fifo: None }
+}
+
+/// Deterministic adversarial *deep* instance for the adaptive-ε bench.
+/// Layer 0 is a "hub": `base⁶` all-Pareto choices whose costs span e²⁵ ≈
+/// 7×10¹⁰× multiplicatively (geometric staircase, widely-spaced
+/// latencies); every later layer is a *forced* single-choice pass
+/// (constant cost/latency), so the deep chain never adds diversity —
+/// every DP level after the hub is exactly the hub staircase, shifted.
+/// The instance is maximally non-uniform: all cost diversity lives on
+/// one level. An adaptive point budget B spends its entire error
+/// allowance once — at the hub — and carries B points through the deep
+/// chain; a fixed global ε with the *same* worst-case bound must split
+/// that allowance evenly over all `n_layers` levels, making its
+/// per-level δ ~n_layers× finer — too fine to merge the hub staircase —
+/// so it drags ~min(base⁶, n·B·…) points through every one of the
+/// remaining levels and through reconstruction. `perf_hotpaths` asserts
+/// the resulting ≥5× build-time gap at the equal recorded bound.
+pub fn adversarial_deep_plan(n_layers: usize, base: usize) -> DeployProblem {
+    assert!(n_layers >= 2, "need a deep plan");
+    assert!(base >= 2, "need at least two choices per layer");
+    let m_hub = base.pow(6);
+    // Multiplicative hub cost span: ln(cmax/cmin) = 25.
+    let w = 25.0f64;
+    let layers = (0..n_layers)
+        .map(|k| {
+            if k == 0 {
+                (0..m_hub)
+                    .map(|j| Choice {
+                        reuse: j + 1,
+                        cost: 1.0e6 * (w * (m_hub - 1 - j) as f64 / (m_hub - 1) as f64).exp(),
+                        latency: 1000.0 * (j + 1) as f64,
+                    })
+                    .collect()
+            } else {
+                vec![Choice { reuse: 1, cost: 1.0, latency: 1.0 }]
+            }
+        })
+        .collect();
+    DeployProblem { layers, latency_budget: 0.0, fifo: None }
 }
 
 /// Parse a JSON array of finite numbers (deserialization helper).
@@ -851,6 +1420,7 @@ mod tests {
                 vec![ch(1, 80.0, 5.0), ch(2, 50.0, 10.0), ch(4, 25.0, 25.0)],
             ],
             latency_budget: 30.0,
+            fifo: None,
         }
     }
 
@@ -868,7 +1438,7 @@ mod tests {
                     .collect()
             })
             .collect();
-        DeployProblem { layers, latency_budget: 0.0 }
+        DeployProblem { layers, latency_budget: 0.0, fifo: None }
     }
 
     #[test]
@@ -940,7 +1510,7 @@ mod tests {
 
     #[test]
     fn empty_problem_has_zero_point() {
-        let prob = DeployProblem { layers: vec![], latency_budget: 0.0 };
+        let prob = DeployProblem { layers: vec![], latency_budget: 0.0, fifo: None };
         let index = ParetoFrontier::new(1).build(&prob);
         assert_eq!(index.len(), 1);
         let s = index.query(0.0).expect("zero-latency point");
@@ -958,6 +1528,7 @@ mod tests {
                 ch(4, 50.0, 20.0),
             ]],
             latency_budget: 0.0,
+            fifo: None,
         };
         let index = ParetoFrontier::new(1).build(&prob);
         assert_eq!(index.len(), 2);
@@ -1152,7 +1723,7 @@ mod tests {
                     .collect()
             })
             .collect();
-        DeployProblem { layers, latency_budget: 0.0 }
+        DeployProblem { layers, latency_budget: 0.0, fifo: None }
     }
 
     #[test]
@@ -1416,5 +1987,370 @@ mod tests {
             o.insert("n_layers".into(), Json::Num(0.0));
         }
         assert!(FrontierIndex::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn eps_runs_before_max_points_thinning() {
+        // Composition-order pin (see the FrontierStats doc): ε-dominance
+        // coarsening runs first, and the max_points stride only fires if
+        // a level STILL overflows afterwards. The cap sits below the
+        // 4096-choice exact hub level but above every ε-shrunk level, so
+        // the stride must never fire: no `truncated` flag, and the build
+        // is point-for-point the ε-only build.
+        let prob = adversarial_deep_plan(2, 4);
+        let cap = 2048;
+        let eps_only = ParetoFrontier::new(1).with_epsilon(Some(0.05)).build(&prob);
+        assert!(eps_only.stats.peak_level > cap, "hub must overflow the cap pre-ε");
+        assert!(eps_only.stats.eps_pruned > 0);
+        let both = ParetoFrontier::new(1)
+            .with_epsilon(Some(0.05))
+            .with_max_points(Some(cap))
+            .build(&prob);
+        assert!(!both.stats.truncated, "thinning fired before ε-coarsening");
+        assert!(both.stats.eps_pruned > 0);
+        assert_eq!(both.len(), eps_only.len());
+        for i in 0..both.len() {
+            assert_eq!(both.point(i), eps_only.point(i));
+            assert_eq!(both.pick(i), eps_only.pick(i));
+        }
+    }
+
+    #[test]
+    fn adaptive_point_budget_bounds_the_wide_grid_within_recorded_eps() {
+        let prob = adversarial_wide_grid(6, 4);
+        let exact = ParetoFrontier::new(1).build(&prob);
+        let budget = 64;
+        let adaptive = ParetoFrontier::new(1).with_point_budget(Some(budget)).build(&prob);
+        adaptive.check_invariants().unwrap();
+        assert!(adaptive.len() <= budget);
+        let eps = adaptive.stats.eps_effective;
+        assert!(eps > 0.0, "overflowing levels must spend error");
+        // Per-level extremes survive adaptive coarsening exactly.
+        assert_eq!(adaptive.min_latency(), exact.min_latency());
+        assert_eq!(adaptive.max_latency(), exact.max_latency());
+        // Every answer: feasible, never cheaper than exact, within the
+        // recorded (1+eps_effective) bound.
+        for i in 0..80 {
+            let b = -10.0 + i as f64 * 60.0;
+            match (exact.query(b), adaptive.query(b)) {
+                (None, None) => {}
+                (Some(e), Some(a)) => {
+                    assert!(a.latency <= b + BUDGET_EPS, "budget {b}");
+                    assert!(a.cost >= e.cost - 1e-9, "budget {b}: adaptive beats exact");
+                    assert!(
+                        a.cost <= (1.0 + eps) * e.cost * (1.0 + 1e-12),
+                        "budget {b}: {} vs exact {} (eps_effective {eps})",
+                        a.cost,
+                        e.cost
+                    );
+                }
+                other => panic!("budget {b}: feasibility disagreement {other:?}"),
+            }
+        }
+        // A build whose levels all fit spends zero error and stays exact.
+        let huge = ParetoFrontier::new(1).with_point_budget(Some(100_000)).build(&prob);
+        assert_eq!(huge.stats.eps_effective, 0.0);
+        assert_eq!(huge.len(), exact.len());
+        for i in 0..exact.len() {
+            assert_eq!(huge.point(i), exact.point(i));
+            assert_eq!(huge.pick(i), exact.pick(i));
+        }
+    }
+
+    #[test]
+    fn property_adaptive_eps_frontier_within_recorded_bound() {
+        // Adaptive-ε satellite contract: for random problems, worker
+        // counts and budgets, the point-budget build is bit-identical
+        // across workers, canonical, and within (1+eps_effective)× of
+        // fresh B&B re-solves.
+        prop_check("adaptive-eps-within-bound", 8, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let n_layers = g.int(2, 5);
+            let n_choices = g.int(3, 6);
+            let budget = g.int(3, 8);
+            let prob = random_continuous_problem(&mut rng, n_layers, n_choices);
+            let index = ParetoFrontier::new(1).with_point_budget(Some(budget)).build(&prob);
+            index.check_invariants()?;
+            let four = ParetoFrontier::new(4).with_point_budget(Some(budget)).build(&prob);
+            if four.len() != index.len() {
+                return Err(format!(
+                    "workers changed point count: {} vs {}",
+                    index.len(),
+                    four.len()
+                ));
+            }
+            for i in 0..index.len() {
+                if four.point(i) != index.point(i) || four.pick(i) != index.pick(i) {
+                    return Err(format!("workers changed point {i}"));
+                }
+                let s = index.solution_at(i);
+                let e = prob.evaluate(&s.pick);
+                if e.cost != s.cost || e.latency != s.latency {
+                    return Err(format!("point {i} not canonical"));
+                }
+            }
+            let min_lat = prob.min_latency();
+            let max_lat: f64 = prob
+                .layers
+                .iter()
+                .map(|l| l.iter().map(|c| c.latency).fold(0.0, f64::max))
+                .sum();
+            let budgets: Vec<f64> = (0..20)
+                .map(|_| rng.range_f64(0.5 * min_lat, 1.1 * max_lat))
+                .collect();
+            index
+                .cross_check_bb_within(&prob, &budgets, index.stats.eps_effective)
+                .map_err(|e| format!("budget {budget}: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn latency_gamma_bicriteria_bound_holds() {
+        let prob = adversarial_wide_grid(6, 4);
+        let exact = ParetoFrontier::new(1).build(&prob);
+        let gamma = 0.2;
+        let coarse = ParetoFrontier::new(1).with_latency_gamma(Some(gamma)).build(&prob);
+        coarse.check_invariants().unwrap();
+        assert!(coarse.len() < exact.len(), "γ must shrink the wide grid");
+        assert!(coarse.stats.lat_pruned > 0);
+        assert!(
+            (coarse.stats.gamma_effective - gamma).abs() < 1e-9,
+            "realized γ {} vs requested {gamma}",
+            coarse.stats.gamma_effective
+        );
+        // The fastest point always survives: feasibility answers exact.
+        assert_eq!(coarse.min_latency(), exact.min_latency());
+        // Bicriteria bound: query(b) costs at most the exact optimum at
+        // the shrunk budget b/(1+γ); never cheaper than exact at b.
+        for i in 0..80 {
+            let b = i as f64 * 60.0;
+            let Some(c) = coarse.query(b) else { continue };
+            assert!(c.latency <= b + BUDGET_EPS, "budget {b}");
+            if let Some(e) = exact.query(b) {
+                assert!(c.cost >= e.cost - 1e-9, "budget {b}: coarse beats exact");
+            }
+            if let Some(s) = exact.query(b / (1.0 + gamma)) {
+                assert!(
+                    c.cost <= s.cost * (1.0 + 1e-12),
+                    "budget {b}: {} vs shrunk-budget optimum {}",
+                    c.cost,
+                    s.cost
+                );
+            }
+        }
+    }
+
+    /// Random FIFO model matching the mip unit tests' generator shape.
+    fn with_random_fifo(prob: DeployProblem, rng: &mut Rng) -> DeployProblem {
+        let fifo = FifoModel {
+            cost_per_slot: rng.range_f64(0.5, 5.0),
+            min_depth: rng.range_f64(0.0, 2.0),
+            widths: (1..prob.layers.len()).map(|_| rng.range_f64(1.0, 16.0)).collect(),
+        };
+        prob.with_fifo(fifo)
+    }
+
+    #[test]
+    fn property_fifo_frontier_matches_bb_and_workers_agree() {
+        // FIFO tentpole contract: the grouped FIFO DP is exact — every
+        // budget query equals a fresh FIFO-aware B&B solve — and stays
+        // bit-identical at any worker count.
+        prop_check("fifo-frontier-equals-bb", 8, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let n_layers = g.int(1, 4);
+            let n_choices = g.int(2, 5);
+            let prob =
+                with_random_fifo(random_problem(&mut rng, n_layers, n_choices), &mut rng);
+            let index = ParetoFrontier::new(1).build(&prob);
+            index.check_invariants()?;
+            let four = ParetoFrontier::new(4).build(&prob);
+            if four.len() != index.len() {
+                return Err(format!(
+                    "workers changed point count: {} vs {}",
+                    index.len(),
+                    four.len()
+                ));
+            }
+            for i in 0..index.len() {
+                if four.point(i) != index.point(i) || four.pick(i) != index.pick(i) {
+                    return Err(format!("workers changed point {i}"));
+                }
+                let s = index.solution_at(i);
+                let e = prob.evaluate(&s.pick);
+                if e.cost != s.cost || e.latency != s.latency {
+                    return Err(format!("point {i} not canonical"));
+                }
+            }
+            let min_lat = prob.min_latency();
+            let max_lat: f64 = prob
+                .layers
+                .iter()
+                .map(|l| l.iter().map(|c| c.latency).fold(0.0, f64::max))
+                .sum();
+            for _ in 0..40 {
+                let budget = rng.range_f64(0.5 * min_lat, 1.1 * max_lat).floor();
+                let p = prob.with_budget(budget);
+                let bb = mip::solve_bb(&p).map(|(s, _)| s);
+                let fr = index.query(budget);
+                match (&bb, &fr) {
+                    (None, None) => {}
+                    (Some(b), Some(f)) => {
+                        if (b.cost - f.cost).abs() > 1e-9 * (1.0 + b.cost.abs()) {
+                            return Err(format!(
+                                "budget {budget}: frontier {} != bb {}",
+                                f.cost, b.cost
+                            ));
+                        }
+                        if f.latency > budget + BUDGET_EPS {
+                            return Err(format!("budget {budget}: over budget"));
+                        }
+                    }
+                    _ => {
+                        return Err(format!(
+                            "budget {budget}: feasibility disagreement (bb {:?}, frontier {:?})",
+                            bb.as_ref().map(|s| s.cost),
+                            fr.as_ref().map(|s| s.cost)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_fifo_eps_frontier_within_bound() {
+        // The (1+ε) bound survives the FIFO term: within-group
+        // coarsening drops a partial only for a survivor with the same
+        // ending choice — hence an identical future boundary cost — so
+        // the per-level covering argument still composes.
+        prop_check("fifo-eps-within-bound", 6, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let n_layers = g.int(2, 4);
+            let n_choices = g.int(2, 5);
+            let eps = *g.choice(&[0.05, 0.25]);
+            let workers = g.int(1, 4);
+            let prob = with_random_fifo(
+                random_continuous_problem(&mut rng, n_layers, n_choices),
+                &mut rng,
+            );
+            let index = ParetoFrontier::new(workers).with_epsilon(Some(eps)).build(&prob);
+            index.check_invariants()?;
+            let min_lat = prob.min_latency();
+            let max_lat: f64 = prob
+                .layers
+                .iter()
+                .map(|l| l.iter().map(|c| c.latency).fold(0.0, f64::max))
+                .sum();
+            let budgets: Vec<f64> = (0..15)
+                .map(|_| rng.range_f64(0.5 * min_lat, 1.1 * max_lat))
+                .collect();
+            index
+                .cross_check_bb_within(&prob, &budgets, eps)
+                .map_err(|e| format!("eps {eps}: {e}"))?;
+            // Adaptive budgets compose with the FIFO groups, too.
+            let budget = g.int(3, 8);
+            let adaptive =
+                ParetoFrontier::new(workers).with_point_budget(Some(budget)).build(&prob);
+            adaptive.check_invariants()?;
+            adaptive
+                .cross_check_bb_within(&prob, &budgets, adaptive.stats.eps_effective)
+                .map_err(|e| format!("budget {budget}: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fifo_term_changes_the_frontier_when_buffers_are_expensive() {
+        // Two layers, two choices each: picks (fast, fast) and
+        // (slow, slow) are rate-matched; mixed picks mismatch. With an
+        // expensive FIFO model the frontier's cheap end must price the
+        // buffer in, so its picks differ from the FIFO-free build's.
+        let prob = DeployProblem {
+            layers: vec![
+                vec![ch(1, 100.0, 5.0), ch(8, 60.0, 10.0)],
+                vec![ch(1, 90.0, 5.0), ch(8, 55.0, 10.0)],
+            ],
+            latency_budget: 0.0,
+            fifo: None,
+        };
+        let free = ParetoFrontier::new(1).build(&prob);
+        let priced = ParetoFrontier::new(1)
+            .build(&prob.with_fifo(FifoModel::uniform(2, 200.0, 0.1)));
+        free.check_invariants().unwrap();
+        priced.check_invariants().unwrap();
+        // Boundary terms are part of every stored cost.
+        for i in 0..priced.len() {
+            let s = priced.solution_at(i);
+            let fifo_prob = prob.with_fifo(FifoModel::uniform(2, 200.0, 0.1));
+            assert!(fifo_prob.fifo_cost_of(&s.pick) > 0.0, "min_depth charges every pair");
+            assert_eq!(fifo_prob.evaluate(&s.pick).cost, s.cost);
+        }
+        // The FIFO-free build never charges buffers, so its costs are
+        // strictly below the priced build's at the same budget.
+        let (f, p) = (free.query(20.0).unwrap(), priced.query(20.0).unwrap());
+        assert!(p.cost > f.cost);
+    }
+
+    #[test]
+    fn adversarial_deep_plan_shape_and_adaptive_bound() {
+        let prob = adversarial_deep_plan(8, 2);
+        assert_eq!(prob.layers.len(), 8);
+        assert_eq!(prob.layers[0].len(), 64, "hub layer is base^6");
+        // The hub is an all-Pareto staircase with a huge multiplicative
+        // cost span; every later layer is a forced pass.
+        for w in prob.layers[0].windows(2) {
+            assert!(w[1].latency > w[0].latency && w[1].cost < w[0].cost);
+        }
+        let span = prob.layers[0][0].cost / prob.layers[0][63].cost;
+        assert!(span > 1e10, "hub cost span {span}");
+        for l in &prob.layers[1..] {
+            assert_eq!(l.len(), 1, "chain layers are forced");
+        }
+        let exact = ParetoFrontier::new(1).build(&prob);
+        let budget = 16;
+        let adaptive = ParetoFrontier::new(2).with_point_budget(Some(budget)).build(&prob);
+        adaptive.check_invariants().unwrap();
+        assert!(adaptive.len() <= budget);
+        let eps = adaptive.stats.eps_effective;
+        assert!(eps > 0.0);
+        for i in 0..40 {
+            let b = i as f64 * 2000.0;
+            match (exact.query(b), adaptive.query(b)) {
+                (None, None) => {}
+                (Some(e), Some(a)) => {
+                    assert!(a.cost >= e.cost - 1e-9);
+                    assert!(a.cost <= (1.0 + eps) * e.cost * (1.0 + 1e-12), "budget {b}");
+                }
+                other => panic!("budget {b}: feasibility disagreement {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn plain_and_fixed_eps_documents_keep_their_serialized_shape() {
+        // Store-compat pin: a build that never used the adaptive/latency
+        // modes serializes without the new stats fields, so plain and
+        // fixed-ε documents stay byte-compatible with pre-existing
+        // stores; an adaptive build round-trips its realized bound.
+        let plain = ParetoFrontier::new(1).build(&toy());
+        let text = plain.to_json().to_string();
+        assert!(!text.contains("eps_effective"), "plain doc grew a field: {text}");
+        assert!(!text.contains("gamma_effective"));
+        assert!(!text.contains("lat_pruned"));
+        let prob = adversarial_wide_grid(6, 4);
+        let adaptive = ParetoFrontier::new(1).with_point_budget(Some(64)).build(&prob);
+        assert!(adaptive.stats.eps_effective > 0.0);
+        let text = adaptive.to_json().to_string();
+        assert!(text.contains("eps_effective"));
+        let parsed = crate::ser::parse_json(&text).unwrap();
+        let back = FrontierIndex::from_json(&parsed).unwrap();
+        assert_eq!(back.stats.eps_effective, adaptive.stats.eps_effective);
+        let gamma = ParetoFrontier::new(1).with_latency_gamma(Some(0.2)).build(&prob);
+        let parsed = crate::ser::parse_json(&gamma.to_json().to_string()).unwrap();
+        let back = FrontierIndex::from_json(&parsed).unwrap();
+        assert_eq!(back.stats.gamma_effective, gamma.stats.gamma_effective);
+        assert_eq!(back.stats.lat_pruned, gamma.stats.lat_pruned);
     }
 }

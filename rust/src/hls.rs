@@ -441,6 +441,7 @@ pub fn generate_database(sim: &HlsSim, sweep: &SweepConfig) -> Vec<DbSample> {
                                     let cfg = crate::layers::NetConfig {
                                         window: inputs,
                                         conv: vec![(kernel, ch); n_conv],
+                                        attn: vec![],
                                         lstm: vec![units; n_lstm],
                                         dense: {
                                             let mut d = vec![neurons; n_dense];

@@ -35,6 +35,12 @@ pub struct SearchSpace {
     pub units: Vec<usize>,
     pub max_dense: usize, // hidden dense layers (1..=max, + output head)
     pub neurons: Vec<usize>,
+    /// Transformer-style attention blocks (0..=max; 0 = the paper's
+    /// shallow family, untouched by default).
+    pub max_attn: usize,
+    /// Model dims the attention gene can pick (must be non-empty even
+    /// when `max_attn` is 0 so the gene stays well-formed).
+    pub attn_dims: Vec<usize>,
 }
 
 impl Default for SearchSpace {
@@ -53,6 +59,8 @@ impl Default for SearchSpace {
             units: vec![4, 8, 16, 32, 64],
             max_dense: 4,
             neurons: vec![8, 16, 32, 64, 128],
+            max_attn: 0,
+            attn_dims: vec![16],
         }
     }
 }
@@ -69,12 +77,33 @@ impl SearchSpace {
             units: vec![4, 8],
             max_dense: 2,
             neurons: vec![8, 16],
+            max_attn: 0,
+            attn_dims: vec![16],
+        }
+    }
+
+    /// The deep-plan space: stacked LSTMs up to 8 deep and up to 4
+    /// transformer-style blocks (each lowering to 4 dense sublayers), so
+    /// sampled plans land in the 8–32 deployed-layer band the streaming
+    /// FIFO-cost solver is built for.
+    pub fn deep() -> Self {
+        SearchSpace {
+            windows: vec![64, 128, 256],
+            max_conv: 2,
+            filters: vec![8, 16],
+            kernels: vec![3, 5],
+            max_lstm: 8,
+            units: vec![8, 16, 32],
+            max_dense: 3,
+            neurons: vec![16, 32],
+            max_attn: 4,
+            attn_dims: vec![8, 16, 32],
         }
     }
 
     /// Genome: [window_i, n_conv, filter_i, kernel_i, n_lstm, units_i,
-    /// n_dense, neurons_i] — all small ints.
-    pub const GENES: usize = 8;
+    /// n_dense, neurons_i, n_attn, attn_dim_i] — all small ints.
+    pub const GENES: usize = 10;
 
     pub fn gene_card(&self, g: usize) -> usize {
         match g {
@@ -86,6 +115,8 @@ impl SearchSpace {
             5 => self.units.len(),
             6 => self.max_dense,
             7 => self.neurons.len(),
+            8 => self.max_attn + 1,
+            9 => self.attn_dims.len(),
             _ => unreachable!(),
         }
     }
@@ -107,6 +138,8 @@ impl SearchSpace {
         let units = self.units[genome[5]];
         let n_dense = genome[6] + 1; // at least one hidden dense
         let neurons = self.neurons[genome[7]];
+        let n_attn = genome[8];
+        let attn_dim = self.attn_dims[genome[9]];
 
         // Repair: ensure the window survives the conv stack.
         loop {
@@ -129,12 +162,13 @@ impl SearchSpace {
         NetConfig {
             window,
             conv: vec![(kernel, filters); n_conv],
+            attn: vec![attn_dim; n_attn],
             lstm: vec![units; n_lstm],
             dense,
         }
     }
 
-    /// Normalized feature vector in [0,1]^8 for the GP kernel.
+    /// Normalized feature vector in [0,1]^GENES for the GP kernel.
     pub fn features(&self, genome: &[usize]) -> Vec<f64> {
         (0..Self::GENES)
             .map(|g| {
@@ -804,6 +838,35 @@ mod tests {
             let cfg = space.decode(&g);
             assert!(cfg.is_valid(), "invalid decode: {cfg:?} from {g:?}");
         }
+    }
+
+    #[test]
+    fn default_space_never_emits_attention() {
+        // Shallow spaces stay shallow: the attn genes exist but decode to
+        // zero blocks, so legacy search behavior is unchanged.
+        let space = SearchSpace::default();
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let cfg = space.decode(&space.sample_genome(&mut rng));
+            assert!(cfg.attn.is_empty());
+        }
+    }
+
+    #[test]
+    fn deep_space_reaches_deep_plans() {
+        let space = SearchSpace::deep();
+        let mut rng = Rng::new(5);
+        let mut deepest = 0usize;
+        let mut saw_attn = false;
+        for _ in 0..400 {
+            let g = space.sample_genome(&mut rng);
+            let cfg = space.decode(&g);
+            assert!(cfg.is_valid(), "invalid deep decode: {cfg:?} from {g:?}");
+            deepest = deepest.max(cfg.plan().len());
+            saw_attn |= !cfg.attn.is_empty();
+        }
+        assert!(deepest >= 8, "deep space never produced a deep plan ({deepest})");
+        assert!(saw_attn, "deep space never sampled an attention block");
     }
 
     fn synthetic_eval(cfg: &NetConfig, _seed: u64) -> f64 {

@@ -100,12 +100,24 @@ impl LayerSpec {
 
 /// A member of the paper's network family: conv blocks, LSTM layers, dense
 /// stack (§II-A). Mirrors `python/compile/model.py::NetConfig`.
+///
+/// Beyond the paper's shallow stacks, deep plans (8–32 deployed layers)
+/// are expressed with the same four knobs plus `attn`: transformer-style
+/// blocks that sit between the conv stack and the LSTM stack. Each block
+/// of model dim `d` lowers to four dense GEMVs streamed over the
+/// sequence — QKV projection (`c→3d`), attention output projection
+/// (`d→d`), and a two-layer FFN (`d→4d→d`). The attention mix itself is
+/// elementwise (gated causal pooling, see `nn.rs`), so it adds no
+/// deployed GEMV of its own.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct NetConfig {
     /// Input window length n (Takens embedding size).
     pub window: usize,
     /// (kernel, filters) per conv block (conv 'valid' + ReLU + maxpool 2).
     pub conv: Vec<(usize, usize)>,
+    /// Model dim per transformer-style block (4 dense sublayers each);
+    /// runs on the conv output sequence, before any LSTM.
+    pub attn: Vec<usize>,
     /// Units per LSTM layer.
     pub lstm: Vec<usize>,
     /// Neurons per dense layer; last must be 1 (linear head).
@@ -119,9 +131,36 @@ impl NetConfig {
         lstm: Vec<usize>,
         dense: Vec<usize>,
     ) -> Self {
-        let cfg = NetConfig { window, conv, lstm, dense };
+        let cfg = NetConfig { window, conv, attn: vec![], lstm, dense };
         assert!(cfg.is_valid(), "invalid NetConfig: {cfg:?}");
         cfg
+    }
+
+    /// Add transformer-style attention blocks (validates the result).
+    pub fn with_attn(mut self, attn: Vec<usize>) -> Self {
+        self.attn = attn;
+        assert!(self.is_valid(), "invalid NetConfig: {self:?}");
+        self
+    }
+
+    /// Deep plan: `depth` stacked LSTM layers of `units` each, topped by
+    /// a small dense funnel.
+    pub fn stacked_lstm(window: usize, units: usize, depth: usize) -> Self {
+        NetConfig::new(window, vec![], vec![units; depth], vec![units / 2, 1])
+    }
+
+    /// Deep plan: `depth` conv blocks of (kernel, filters). The window
+    /// must survive `depth` rounds of `(s - k + 1) / 2`.
+    pub fn conv_tower(window: usize, kernel: usize, filters: usize, depth: usize) -> Self {
+        NetConfig::new(window, vec![(kernel, filters); depth], vec![], vec![filters, 1])
+    }
+
+    /// Deep plan: `blocks` transformer-style blocks of model dim `d`
+    /// over the raw window (the first QKV projection embeds the scalar
+    /// series), mean-pooled into a linear head.
+    pub fn transformer(window: usize, d: usize, blocks: usize) -> Self {
+        NetConfig::new(window, vec![], vec![], vec![d.max(2) / 2, 1])
+            .with_attn(vec![d; blocks])
     }
 
     /// Structural validity: dense head present, window survives the conv
@@ -144,11 +183,17 @@ impl NetConfig {
         if s == 0 {
             return false;
         }
-        self.lstm.iter().all(|&u| u >= 1) && self.dense.iter().all(|&n| n >= 1)
+        self.attn.iter().all(|&d| d >= 1)
+            && self.lstm.iter().all(|&u| u >= 1)
+            && self.dense.iter().all(|&n| n >= 1)
     }
 
     /// Walk the network into per-layer HLS4ML features. Mirrors
-    /// `model.py::layer_plan`.
+    /// `model.py::layer_plan`. Each attention block lowers to four dense
+    /// sublayers streamed over the sequence (seq = s); the elementwise
+    /// attention mix between QKV and the output projection deploys no
+    /// GEMV. With attention but no LSTM the sequence is mean-pooled (not
+    /// flattened) into the dense head.
     pub fn plan(&self) -> Vec<LayerSpec> {
         let mut plan = Vec::new();
         let (mut s, mut c) = (self.window, 1usize);
@@ -158,11 +203,19 @@ impl NetConfig {
             s = s_out / 2;
             c = f;
         }
+        for &d in &self.attn {
+            plan.push(LayerSpec::new(LayerKind::Dense, c, 3 * d, s));
+            plan.push(LayerSpec::new(LayerKind::Dense, d, d, s));
+            plan.push(LayerSpec::new(LayerKind::Dense, d, 4 * d, s));
+            plan.push(LayerSpec::new(LayerKind::Dense, 4 * d, d, s));
+            c = d;
+        }
         for &u in &self.lstm {
             plan.push(LayerSpec::new(LayerKind::Lstm, c + u, 4 * u, s));
             c = u;
         }
-        let mut feat = if self.lstm.is_empty() { s * c } else { c };
+        let flatten = self.lstm.is_empty() && self.attn.is_empty();
+        let mut feat = if flatten { s * c } else { c };
         for &n in &self.dense {
             plan.push(LayerSpec::new(LayerKind::Dense, feat, n, 1));
             feat = n;
@@ -171,7 +224,8 @@ impl NetConfig {
     }
 
     /// Forward-pass multiplies, paper §II-A formulas (mirrors
-    /// `model.py::workload_multiplies`).
+    /// `model.py::workload_multiplies`). Attention blocks add their four
+    /// GEMVs per timestep; the uniform-pool mix itself is multiply-free.
     pub fn workload_multiplies(&self) -> u64 {
         let mut total = 0u64;
         let (mut s, mut c) = (self.window, 1usize);
@@ -181,11 +235,16 @@ impl NetConfig {
             s = s_out / 2;
             c = f;
         }
+        for &d in &self.attn {
+            total += (s * (c * 3 * d + d * d + 2 * d * 4 * d)) as u64;
+            c = d;
+        }
         for &u in &self.lstm {
             total += ((s * c + u) * 4 * u) as u64;
             c = u;
         }
-        let mut feat = if self.lstm.is_empty() { s * c } else { c };
+        let flatten = self.lstm.is_empty() && self.attn.is_empty();
+        let mut feat = if flatten { s * c } else { c };
         for &n in &self.dense {
             total += (feat * n) as u64;
             feat = n;
@@ -193,12 +252,16 @@ impl NetConfig {
         total
     }
 
-    /// Number of trainable parameter tensors (w+b per layer).
+    /// Number of trainable parameter tensors (w+b per layer; attention
+    /// blocks carry four dense sublayers each).
     pub fn num_param_tensors(&self) -> usize {
-        2 * (self.conv.len() + self.lstm.len() + self.dense.len())
+        2 * (self.conv.len() + 4 * self.attn.len() + self.lstm.len() + self.dense.len())
     }
 
     /// Compact human-readable signature, e.g. `w256 c3x8,3x16 l16 d32,1`.
+    /// The `a[...]` segment appears only when attention blocks are
+    /// present, so shallow-plan signatures (and every key derived from
+    /// them) are byte-identical to earlier releases.
     pub fn signature(&self) -> String {
         let conv = self
             .conv
@@ -218,7 +281,18 @@ impl NetConfig {
             .map(|n| n.to_string())
             .collect::<Vec<_>>()
             .join(",");
-        format!("w{} c[{}] l[{}] d[{}]", self.window, conv, lstm, dense)
+        let attn = if self.attn.is_empty() {
+            String::new()
+        } else {
+            let a = self
+                .attn
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            format!(" a[{a}]")
+        };
+        format!("w{} c[{}]{} l[{}] d[{}]", self.window, conv, attn, lstm, dense)
     }
 }
 
@@ -287,14 +361,80 @@ mod tests {
 
     #[test]
     fn invalid_configs_rejected() {
-        let big_kernel = NetConfig { window: 8, conv: vec![(9, 4)], lstm: vec![], dense: vec![1] };
+        let big_kernel = NetConfig {
+            window: 8,
+            conv: vec![(9, 4)],
+            attn: vec![],
+            lstm: vec![],
+            dense: vec![1],
+        };
         assert!(!big_kernel.is_valid());
-        assert!(!NetConfig { window: 8, conv: vec![], lstm: vec![], dense: vec![] }.is_valid());
-        assert!(!NetConfig { window: 8, conv: vec![], lstm: vec![], dense: vec![4] }.is_valid());
+        let no_head =
+            NetConfig { window: 8, conv: vec![], attn: vec![], lstm: vec![], dense: vec![] };
+        assert!(!no_head.is_valid());
+        let bad_head =
+            NetConfig { window: 8, conv: vec![], attn: vec![], lstm: vec![], dense: vec![4] };
+        assert!(!bad_head.is_valid());
+        let zero_attn =
+            NetConfig { window: 8, conv: vec![], attn: vec![0], lstm: vec![], dense: vec![1] };
+        assert!(!zero_attn.is_valid());
     }
 
     #[test]
     fn signature_is_stable() {
         assert_eq!(demo().signature(), "w32 c[3x4] l[5] d[6,1]");
+    }
+
+    #[test]
+    fn shallow_signature_has_no_attn_segment() {
+        // Byte-compat contract: attn-free configs must serialize the exact
+        // pre-attention signature so derived frontier keys stay warm.
+        assert!(!demo().signature().contains(" a["));
+        let deep = demo().with_attn(vec![8]);
+        assert_eq!(deep.signature(), "w32 c[3x4] a[8] l[5] d[6,1]");
+    }
+
+    #[test]
+    fn attn_block_lowers_to_four_dense_sublayers() {
+        let cfg = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]).with_attn(vec![6]);
+        let plan = cfg.plan();
+        // conv + 4 attn sublayers + 2 dense.
+        assert_eq!(plan.len(), 7);
+        // Conv output: s = 15, c = 4. QKV embeds 4 -> 18, streamed over 15.
+        assert_eq!(plan[1], LayerSpec::new(LayerKind::Dense, 4, 18, 15));
+        assert_eq!(plan[2], LayerSpec::new(LayerKind::Dense, 6, 6, 15));
+        assert_eq!(plan[3], LayerSpec::new(LayerKind::Dense, 6, 24, 15));
+        assert_eq!(plan[4], LayerSpec::new(LayerKind::Dense, 24, 6, 15));
+        // Attention mean-pools (no flatten): dense head sees c = 6.
+        assert_eq!(plan[5], LayerSpec::new(LayerKind::Dense, 6, 8, 1));
+    }
+
+    #[test]
+    fn attn_workload_counts_the_four_gemvs() {
+        let cfg = NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1]).with_attn(vec![6]);
+        let plan_total: u64 = cfg.plan().iter().map(|l| l.gemv_mults()).sum();
+        assert_eq!(cfg.workload_multiplies(), plan_total);
+        assert_eq!(cfg.num_param_tensors(), 2 * (1 + 4 + 2));
+    }
+
+    #[test]
+    fn deep_constructors_hit_the_deep_layer_band() {
+        let lstm = NetConfig::stacked_lstm(64, 16, 8);
+        assert!(lstm.is_valid());
+        assert!((8..=32).contains(&lstm.plan().len()));
+
+        let tower = NetConfig::conv_tower(256, 3, 8, 6);
+        assert!(tower.is_valid());
+        assert!((8..=32).contains(&tower.plan().len()));
+
+        let tf = NetConfig::transformer(64, 16, 4);
+        assert!(tf.is_valid());
+        let plan = tf.plan();
+        assert_eq!(plan.len(), 4 * 4 + 2);
+        // First block embeds the scalar series; later blocks see d = 16.
+        assert_eq!(plan[0], LayerSpec::new(LayerKind::Dense, 1, 48, 64));
+        assert_eq!(plan[4], LayerSpec::new(LayerKind::Dense, 16, 48, 64));
+        // Mean-pool (not flatten) feeds the head: n_in = 16, not 64 * 16.
+        assert_eq!(plan[16], LayerSpec::new(LayerKind::Dense, 16, 8, 1));
     }
 }

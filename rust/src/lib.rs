@@ -63,7 +63,12 @@
 //! *proven* end-to-end bound: every budget query stays feasible and
 //! costs at most (1+ε)× the exact optimum (`[frontier] epsilon` /
 //! `--epsilon`; ε-frontiers live under ε-scoped store keys so they are
-//! never served as exact).
+//! never served as exact). Deep streaming plans get two more modes —
+//! an adaptive per-level point budget (`[frontier] point_budget`, the
+//! realized bound recorded per document) and stream-FIFO pricing
+//! (`[frontier] fifo_cost_per_slot`: the DP co-optimizes reuse factors
+//! and inter-layer buffer cost) — all documented in
+//! `rust/docs/SOLVER.md`.
 //!
 //! ## The frontier serving subsystem ([`serve`])
 //!

@@ -101,10 +101,10 @@ fn warn_truncated(snap: &ntorc::serve::ServeSnapshot) {
 }
 
 /// Resolve a `"network"` catalog name from request documents (the
-/// Table IV models the repo ships) — shared by `serve`, `httpd` and
-/// `loadgen` so the three speak about the same catalog.
+/// Table IV models plus the deep-plan catalog) — shared by `serve`,
+/// `httpd` and `loadgen` so the three speak about the same catalog.
 fn catalog_net(name: &str) -> Option<ntorc::layers::NetConfig> {
-    report::table4_models()
+    report::catalog_models()
         .into_iter()
         .find(|(n, _)| *n == name)
         .map(|(_, c)| c)
@@ -274,7 +274,15 @@ fn run(raw: &[String]) -> Result<()> {
                 ),
             };
             let mut sweeps = Vec::new();
-            for (name, net) in report::table4_models() {
+            // Default sweep covers the shallow Table IV models; deep
+            // catalog plans (report::deep_models) run on request via
+            // --network, since their per-budget B&B cross-checks are
+            // the expensive path the frontier exists to replace.
+            let nets = match args.get("network") {
+                Some(_) => report::catalog_models(),
+                None => report::table4_models(),
+            };
+            for (name, net) in nets {
                 if let Some(want) = args.get("network") {
                     if want != name {
                         continue;
@@ -309,7 +317,9 @@ fn run(raw: &[String]) -> Result<()> {
                 sweeps.push(sw);
             }
             if sweeps.is_empty() {
-                bail!("--network matched nothing (expected model1 or model2)");
+                let names: Vec<&str> =
+                    report::catalog_models().iter().map(|(n, _)| *n).collect();
+                bail!("--network matched nothing (expected one of {})", names.join(", "));
             }
             let (h, rows) = report::frontier_sweep_rows(&sweeps);
             emit(

@@ -28,6 +28,56 @@ pub struct Choice {
     pub latency: f64,
 }
 
+/// Inter-layer stream-buffer (FIFO) cost model.
+///
+/// On a dataflow target adjacent layers hand tokens over a stream; when
+/// the producer's issue rate outruns the consumer's, the handoff needs a
+/// skid buffer whose depth grows with the rate mismatch (StreamTensor's
+/// inter-kernel FIFO sizing). The reuse factor *is* the rate knob here —
+/// R-fold folding means one output token every ~R cycles — so each
+/// adjacent choice pair implies a FIFO depth and a BRAM-equivalent cost:
+///
+/// ```text
+/// depth(k, a, b) = min_depth + widths[k] · max(0, 1 − R_a / R_b)
+/// cost(k, a, b)  = cost_per_slot · depth(k, a, b)
+/// ```
+///
+/// where `a` produces into boundary `k` and `b` consumes from it. A
+/// producer with *smaller* reuse (more parallel MACs, higher token rate)
+/// than its consumer backs up and pays; matched or consumer-faster pairs
+/// pay only the minimum skid depth.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FifoModel {
+    /// BRAM-equivalent cost of one buffered slot.
+    pub cost_per_slot: f64,
+    /// Skid depth every boundary pays regardless of rates.
+    pub min_depth: f64,
+    /// Stream width (elements per token) of each layer boundary;
+    /// `widths.len() == n_layers − 1`.
+    pub widths: Vec<f64>,
+}
+
+impl FifoModel {
+    /// Uniform unit-width model over `n_layers − 1` boundaries.
+    pub fn uniform(n_layers: usize, cost_per_slot: f64, min_depth: f64) -> FifoModel {
+        FifoModel {
+            cost_per_slot,
+            min_depth,
+            widths: vec![1.0; n_layers.saturating_sub(1)],
+        }
+    }
+
+    /// BRAM-equivalent cost of the stream buffer at boundary `k`
+    /// (between layers `k` and `k+1`) for a given producer/consumer
+    /// choice pair. Latency is never affected — the buffer hides the
+    /// rate mismatch, it does not serialize the pipeline.
+    pub fn boundary_cost(&self, k: usize, producer: &Choice, consumer: &Choice) -> f64 {
+        let (rp, rc) = (producer.reuse as f64, consumer.reuse as f64);
+        let mismatch = if rc > 0.0 { (1.0 - rp / rc).max(0.0) } else { 0.0 };
+        self.cost_per_slot * (self.min_depth + self.widths[k] * mismatch)
+    }
+}
+
 /// A deployment instance.
 #[derive(Clone, Debug)]
 pub struct DeployProblem {
@@ -35,6 +85,10 @@ pub struct DeployProblem {
     pub layers: Vec<Vec<Choice>>,
     /// Total latency budget in cycles.
     pub latency_budget: f64,
+    /// Optional inter-layer stream-buffer cost (None = free handoff,
+    /// the shallow-plan default — keeps every PR 9 key/cost/document
+    /// bit-identical).
+    pub fifo: Option<FifoModel>,
 }
 
 /// A reuse-factor assignment.
@@ -52,15 +106,45 @@ impl DeployProblem {
         self.layers.iter().map(|l| l.len() as f64).product()
     }
 
+    /// Canonical objective: separable per-layer cost plus, when a
+    /// [`FifoModel`] is attached, the pairwise stream-buffer cost of
+    /// every adjacent boundary. All solvers re-evaluate through here.
     pub fn evaluate(&self, pick: &[usize]) -> Solution {
         assert_eq!(pick.len(), self.layers.len());
         let mut cost = 0.0;
         let mut latency = 0.0;
+        // Interleave each boundary term right after its consumer layer —
+        // the exact accumulation order the frontier DP uses — so frontier
+        // points canonicalize bit-identically through this summation.
         for (i, &j) in pick.iter().enumerate() {
             cost += self.layers[i][j].cost;
+            if i > 0 {
+                if let Some(f) = &self.fifo {
+                    cost += f.boundary_cost(
+                        i - 1,
+                        &self.layers[i - 1][pick[i - 1]],
+                        &self.layers[i][j],
+                    );
+                }
+            }
             latency += self.layers[i][j].latency;
         }
         Solution { pick: pick.to_vec(), cost, latency }
+    }
+
+    /// The stream-buffer share of an assignment's cost (0.0 without a
+    /// FIFO model) — the `fifo_bram` column in report sweeps.
+    pub fn fifo_cost_of(&self, pick: &[usize]) -> f64 {
+        let Some(f) = &self.fifo else { return 0.0 };
+        let mut total = 0.0;
+        for k in 0..pick.len().saturating_sub(1) {
+            total += f.boundary_cost(
+                k,
+                &self.layers[k][pick[k]],
+                &self.layers[k + 1][pick[k + 1]],
+            );
+        }
+        total
     }
 
     pub fn is_feasible(&self, pick: &[usize]) -> bool {
@@ -71,12 +155,35 @@ impl DeployProblem {
     /// re-solve (cross-checks, the [`crate::solver`] registry) takes,
     /// instead of a clone-then-mutate at each call site.
     pub fn with_budget(&self, latency_budget: f64) -> DeployProblem {
-        DeployProblem { layers: self.layers.clone(), latency_budget }
+        DeployProblem {
+            layers: self.layers.clone(),
+            latency_budget,
+            fifo: self.fifo.clone(),
+        }
+    }
+
+    /// The same instance with a FIFO model attached.
+    pub fn with_fifo(&self, fifo: FifoModel) -> DeployProblem {
+        assert_eq!(
+            fifo.widths.len(),
+            self.layers.len().saturating_sub(1),
+            "FifoModel widths must cover every adjacent boundary"
+        );
+        DeployProblem {
+            layers: self.layers.clone(),
+            latency_budget: self.latency_budget,
+            fifo: Some(fifo),
+        }
     }
 
     /// Remove dominated choices per layer (another choice has <= latency
     /// and <= cost, one strict). Returns the pruned problem and, per
     /// layer, the original index of each surviving choice.
+    ///
+    /// Only sound for the separable objective: with a [`FifoModel`]
+    /// attached a per-layer-dominated choice can still win through its
+    /// boundary terms, so FIFO-aware solvers must keep every choice
+    /// (see [`prune_for_solve`](Self::prune_for_solve)).
     pub fn prune_dominated(&self) -> (DeployProblem, Vec<Vec<usize>>) {
         let mut layers = Vec::with_capacity(self.layers.len());
         let mut maps = Vec::with_capacity(self.layers.len());
@@ -102,9 +209,25 @@ impl DeployProblem {
             layers.push(kept.iter().map(|&j| choices[j]).collect());
         }
         (
-            DeployProblem { layers, latency_budget: self.latency_budget },
+            DeployProblem {
+                layers,
+                latency_budget: self.latency_budget,
+                fifo: self.fifo.clone(),
+            },
             maps,
         )
+    }
+
+    /// Dominance pruning gated on the objective: per-layer pruning when
+    /// the cost is separable, identity (every choice kept) when a FIFO
+    /// model makes adjacent choices interact.
+    pub fn prune_for_solve(&self) -> (DeployProblem, Vec<Vec<usize>>) {
+        if self.fifo.is_some() {
+            let maps = self.layers.iter().map(|l| (0..l.len()).collect()).collect();
+            (self.clone(), maps)
+        } else {
+            self.prune_dominated()
+        }
     }
 
     /// Quick feasibility check: even the min-latency assignment must fit.
@@ -370,10 +493,42 @@ pub struct BbStats {
     pub lp_solves: u64,
 }
 
+/// Admissible lower bound on the total FIFO cost given the layers fixed
+/// so far: per boundary, the exact term when both endpoints are fixed,
+/// otherwise the minimum over every still-allowed producer/consumer
+/// pair. Never overestimates, so B&B pruning with it stays exact.
+fn fifo_lower_bound(prob: &DeployProblem, fixed: &[Option<usize>]) -> f64 {
+    let Some(f) = &prob.fifo else { return 0.0 };
+    let mut lb = 0.0;
+    for k in 0..prob.layers.len().saturating_sub(1) {
+        let prods: Vec<usize> = match fixed[k] {
+            Some(j) => vec![j],
+            None => (0..prob.layers[k].len()).collect(),
+        };
+        let cons: Vec<usize> = match fixed[k + 1] {
+            Some(j) => vec![j],
+            None => (0..prob.layers[k + 1].len()).collect(),
+        };
+        let mut best = f64::INFINITY;
+        for &jp in &prods {
+            for &jc in &cons {
+                let c = f.boundary_cost(k, &prob.layers[k][jp], &prob.layers[k + 1][jc]);
+                if c < best {
+                    best = c;
+                }
+            }
+        }
+        lb += best;
+    }
+    lb
+}
+
 /// Exact MCKP solve by LP-based branch & bound over the dominance-pruned
-/// problem. Returns None if no assignment satisfies the budget.
+/// problem (pruning is skipped when a FIFO model couples adjacent
+/// layers; the LP bound then gains an admissible per-boundary constant).
+/// Returns None if no assignment satisfies the budget.
 pub fn solve_bb(prob: &DeployProblem) -> Option<(Solution, BbStats)> {
-    let (pruned, maps) = prob.prune_dominated();
+    let (pruned, maps) = prob.prune_for_solve();
     if pruned.min_latency() > pruned.latency_budget + 1e-9 {
         return None;
     }
@@ -439,7 +594,10 @@ pub fn solve_bb(prob: &DeployProblem) -> Option<(Solution, BbStats)> {
                     .enumerate()
                     .filter_map(|(i, f)| f.map(|j| pruned.layers[i][j].cost))
                     .sum();
-                (x, obj + fixed_cost)
+                // The LP sees only the separable cost; the incumbent's
+                // cost includes the pairwise FIFO terms, so the bound
+                // must carry an admissible FIFO floor to stay exact.
+                (x, obj + fixed_cost + fifo_lower_bound(pruned, fixed))
             }
             LpResult::Infeasible => return,
             LpResult::Unbounded => return,
@@ -525,7 +683,12 @@ pub fn solve_bb(prob: &DeployProblem) -> Option<(Solution, BbStats)> {
 
 /// Exact solve by dynamic programming over the (integerized) latency
 /// budget. Independent oracle for `solve_bb` in tests and benches.
+/// With a FIFO model attached the state gains the last layer's choice
+/// so the pairwise boundary cost is charged exactly.
 pub fn solve_dp(prob: &DeployProblem) -> Option<Solution> {
+    if prob.fifo.is_some() {
+        return solve_dp_fifo(prob);
+    }
     let budget = prob.latency_budget.floor() as i64;
     if budget < 0 {
         return None;
@@ -584,6 +747,81 @@ pub fn solve_dp(prob: &DeployProblem) -> Option<Solution> {
     Some(prob.evaluate(&pick))
 }
 
+/// FIFO-aware DP: state is (layer, integer latency, last choice). The
+/// extra choice axis is what makes the pairwise boundary cost Markov —
+/// dp[j][l] is the cheapest way to finish layer i with choice j at
+/// total latency l, boundary terms up to i included.
+fn solve_dp_fifo(prob: &DeployProblem) -> Option<Solution> {
+    let budget = prob.latency_budget.floor() as i64;
+    if budget < 0 {
+        return None;
+    }
+    let n = prob.layers.len();
+    if n == 0 {
+        return Some(prob.evaluate(&[]));
+    }
+    let f = prob.fifo.as_ref().unwrap();
+    let lat = |c: &Choice| c.latency.ceil() as i64;
+    let b = budget as usize;
+    const INF: f64 = f64::INFINITY;
+    let mut dp: Vec<Vec<f64>> = vec![vec![INF; b + 1]; prob.layers[0].len()];
+    for (j, ch) in prob.layers[0].iter().enumerate() {
+        let l = lat(ch);
+        if (0..=budget).contains(&l) && ch.cost < dp[j][l as usize] {
+            dp[j][l as usize] = ch.cost;
+        }
+    }
+    // traces[i-1][j][l] = producer choice jp that reached (layer i, j, l).
+    let mut traces: Vec<Vec<Vec<i32>>> = Vec::with_capacity(n - 1);
+    for i in 1..n {
+        let mut ndp: Vec<Vec<f64>> = vec![vec![INF; b + 1]; prob.layers[i].len()];
+        let mut trace: Vec<Vec<i32>> = vec![vec![-1i32; b + 1]; prob.layers[i].len()];
+        for (jp, row) in dp.iter().enumerate() {
+            for (l, &c) in row.iter().enumerate() {
+                if c == INF {
+                    continue;
+                }
+                for (j, ch) in prob.layers[i].iter().enumerate() {
+                    let nl = l as i64 + lat(ch);
+                    if nl <= budget {
+                        let nl = nl as usize;
+                        let nc = c
+                            + ch.cost
+                            + f.boundary_cost(i - 1, &prob.layers[i - 1][jp], ch);
+                        if nc < ndp[j][nl] {
+                            ndp[j][nl] = nc;
+                            trace[j][nl] = jp as i32;
+                        }
+                    }
+                }
+            }
+        }
+        dp = ndp;
+        traces.push(trace);
+    }
+    let mut best: Option<(usize, usize)> = None;
+    let mut best_c = INF;
+    for (j, row) in dp.iter().enumerate() {
+        for (l, &c) in row.iter().enumerate() {
+            if c < best_c {
+                best_c = c;
+                best = Some((j, l));
+            }
+        }
+    }
+    let (mut j, mut l) = best?;
+    let mut pick = vec![0usize; n];
+    pick[n - 1] = j;
+    for i in (1..n).rev() {
+        let jp = traces[i - 1][j][l];
+        debug_assert!(jp >= 0);
+        l -= lat(&prob.layers[i][j]) as usize;
+        j = jp as usize;
+        pick[i - 1] = j;
+    }
+    Some(prob.evaluate(&pick))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -618,7 +856,51 @@ mod tests {
             .map(|l| l.iter().map(|c| c.latency).fold(0.0, f64::max))
             .sum();
         let budget = rng.range_f64(min_lat, max_lat).floor();
-        DeployProblem { layers, latency_budget: budget }
+        DeployProblem { layers, latency_budget: budget, fifo: None }
+    }
+
+    fn random_fifo_problem(
+        rng: &mut Rng,
+        n_layers: usize,
+        n_choices: usize,
+    ) -> DeployProblem {
+        let prob = random_problem(rng, n_layers, n_choices);
+        let widths: Vec<f64> = (1..n_layers)
+            .map(|_| rng.range_f64(1.0, 64.0).floor())
+            .collect();
+        prob.with_fifo(FifoModel {
+            cost_per_slot: rng.range_f64(0.5, 8.0),
+            min_depth: 2.0,
+            widths,
+        })
+    }
+
+    /// Exhaustive oracle for small instances — the ground truth the
+    /// FIFO-aware solvers are checked against.
+    fn brute_force(prob: &DeployProblem) -> Option<Solution> {
+        let n = prob.layers.len();
+        let mut pick = vec![0usize; n];
+        let mut best: Option<Solution> = None;
+        loop {
+            let sol = prob.evaluate(&pick);
+            if sol.latency <= prob.latency_budget + 1e-9
+                && best.as_ref().map_or(true, |b| sol.cost < b.cost)
+            {
+                best = Some(sol);
+            }
+            let mut i = 0;
+            loop {
+                if i == n {
+                    return best;
+                }
+                pick[i] += 1;
+                if pick[i] < prob.layers[i].len() {
+                    break;
+                }
+                pick[i] = 0;
+                i += 1;
+            }
+        }
     }
 
     #[test]
@@ -698,6 +980,7 @@ mod tests {
                 vec![ch(1, 80.0, 5.0), ch(2, 50.0, 10.0)],
             ],
             latency_budget: 20.0,
+            fifo: None,
         };
         let (sol, _) = solve_bb(&prob).unwrap();
         // Best: layer0 j=1 (60, 10) + layer1 j=1 (50, 10) = 110 @ 20.
@@ -711,6 +994,7 @@ mod tests {
         let prob = DeployProblem {
             layers: vec![vec![ch(1, 1.0, 100.0)]],
             latency_budget: 50.0,
+            fifo: None,
         };
         assert!(solve_bb(&prob).is_none());
         assert!(solve_dp(&prob).is_none());
@@ -726,6 +1010,7 @@ mod tests {
                 ch(8, 50.0, 30.0), // dominated (same cost, more latency)
             ]],
             latency_budget: 100.0,
+            fifo: None,
         };
         let (pruned, maps) = prob.prune_dominated();
         assert_eq!(pruned.layers[0].len(), 2);
@@ -804,8 +1089,104 @@ mod tests {
                 vec![ch(1, 0.0, 0.0); 3],
             ],
             latency_budget: 1.0,
+            fifo: None,
         };
         assert_eq!(prob.permutations(), 600.0);
+    }
+
+    #[test]
+    fn fifo_boundary_cost_charges_the_rate_mismatch() {
+        let f = FifoModel { cost_per_slot: 2.0, min_depth: 3.0, widths: vec![10.0] };
+        // Producer reuse 2, consumer reuse 8: producer is 4x faster,
+        // mismatch 1 - 2/8 = 0.75 -> depth 3 + 10*0.75 = 10.5.
+        let fast = ch(2, 0.0, 0.0);
+        let slow = ch(8, 0.0, 0.0);
+        assert!((f.boundary_cost(0, &fast, &slow) - 21.0).abs() < 1e-12);
+        // Consumer faster (or matched): only the skid depth.
+        assert!((f.boundary_cost(0, &slow, &fast) - 6.0).abs() < 1e-12);
+        assert!((f.boundary_cost(0, &fast, &fast) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fifo_evaluate_adds_boundary_terms_to_the_separable_cost() {
+        let base = DeployProblem {
+            layers: vec![
+                vec![ch(1, 10.0, 5.0), ch(4, 6.0, 9.0)],
+                vec![ch(2, 7.0, 4.0)],
+            ],
+            latency_budget: 20.0,
+            fifo: None,
+        };
+        let sep = base.evaluate(&[0, 0]);
+        let prob = base.with_fifo(FifoModel::uniform(2, 1.0, 0.0));
+        let sol = prob.evaluate(&[0, 0]);
+        // reuse 1 -> 2: mismatch 1 - 1/2 = 0.5.
+        assert!((sol.cost - (sep.cost + 0.5)).abs() < 1e-12);
+        assert_eq!(sol.latency, sep.latency, "FIFO cost never touches latency");
+        // reuse 4 -> 2: consumer faster, zero extra on a min_depth=0 model.
+        assert_eq!(prob.evaluate(&[1, 0]).cost, base.evaluate(&[1, 0]).cost);
+    }
+
+    #[test]
+    fn property_fifo_solvers_match_brute_force() {
+        prop_check("fifo-bb-dp-equal-brute-force", 40, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let n_layers = g.int(1, 4);
+            let n_choices = g.int(2, 4);
+            let prob = random_fifo_problem(&mut rng, n_layers, n_choices);
+            let oracle = brute_force(&prob);
+            let bb = solve_bb(&prob).map(|(s, _)| s);
+            let dp = solve_dp(&prob);
+            for (name, got) in [("bb", &bb), ("dp", &dp)] {
+                match (&oracle, got) {
+                    (None, None) => {}
+                    (Some(o), Some(s)) => {
+                        if (o.cost - s.cost).abs() > 1e-6 {
+                            return Err(format!(
+                                "{name} cost {} != brute-force {} (budget {})",
+                                s.cost, o.cost, prob.latency_budget
+                            ));
+                        }
+                        if s.latency > prob.latency_budget + 1e-9 {
+                            return Err(format!("{name} violates the budget"));
+                        }
+                    }
+                    (o, s) => {
+                        return Err(format!(
+                            "{name} feasibility disagreement: oracle {:?} got {:?}",
+                            o.as_ref().map(|x| x.cost),
+                            s.as_ref().map(|x| x.cost)
+                        ))
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fifo_changes_the_optimum_when_buffers_are_expensive() {
+        // Separable optimum pairs a fast producer with a slow consumer;
+        // a pricey FIFO model flips it to the rate-matched pair.
+        let base = DeployProblem {
+            layers: vec![
+                vec![ch(1, 10.0, 5.0), ch(8, 11.0, 5.0)],
+                vec![ch(8, 10.0, 5.0)],
+            ],
+            latency_budget: 20.0,
+            fifo: None,
+        };
+        let (sep, _) = solve_bb(&base).unwrap();
+        assert_eq!(sep.pick, vec![0, 0], "separable: cheaper fast producer wins");
+        let priced = base.with_fifo(FifoModel {
+            cost_per_slot: 4.0,
+            min_depth: 0.0,
+            widths: vec![1.0],
+        });
+        let (sol, _) = solve_bb(&priced).unwrap();
+        // Pair (1,8): mismatch 7/8 -> +3.5 on cost 20; pair (8,8): +0 on 21.
+        assert_eq!(sol.pick, vec![1, 0], "FIFO pricing flips to the matched pair");
+        assert_eq!(solve_dp(&priced).unwrap().cost, sol.cost);
     }
 
     #[test]

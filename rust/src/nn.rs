@@ -319,6 +319,117 @@ pub fn dense_bwd(x: &Tensor, w: &Tensor, dy: &Tensor) -> (Tensor, Tensor, Tensor
 }
 
 // ---------------------------------------------------------------------------
+// Attention block (softmax-free gated causal pooling)
+// ---------------------------------------------------------------------------
+//
+// Deep plans lower each transformer-style block to the four dense GEMVs in
+// `NetConfig::plan` (QKV, output projection, two FFN layers). The mix
+// between QKV and the projection is deliberately softmax-free so it costs
+// no deployed GEMV and stays O(S·d):
+//
+//   P_t = Σ_{t'≤t} σ(k_{t'}) ⊙ v_{t'}        (causal prefix pool)
+//   a_t = σ(q_t) ⊙ P_t / t
+//
+// i.e. a query-gated causal mean over key-gated values (an
+// attention-free-transformer flavor, not scaled dot-product) — every QKV
+// column is trainable, unlike a plain uniform mean which would leave the
+// q/k thirds without gradient. The FFN has a residual: out = o + FFN(o).
+
+/// Cache for the attention block backward pass.
+pub struct AttnCache {
+    x2: Tensor,      // (B*S, C) block input rows
+    sq: Tensor,      // (B, S, D) σ(q)
+    sk: Tensor,      // (B, S, D) σ(k)
+    v: Tensor,       // (B, S, D)
+    p: Tensor,       // (B, S, D) causal prefix pool
+    a2: Tensor,      // (B*S, D) mixed output (projection input)
+    o: Tensor,       // (B*S, D) projection output (FFN input)
+    pre1: Tensor,    // (B*S, 4D) FFN pre-activation
+    h1: Tensor,      // (B*S, 4D) FFN hidden (post-ReLU)
+    in_shape: (usize, usize, usize),
+}
+
+/// Forward: x (B,S,C); params `[w_qkv (C,3D), b_qkv, w_proj (D,D), b_proj,
+/// w_ffn1 (D,4D), b_ffn1, w_ffn2 (4D,D), b_ffn2]` -> (B,S,D).
+pub fn attn_block_fwd(x: &Tensor, params: &[Tensor]) -> (Tensor, AttnCache) {
+    let (b, s, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let d = params[0].shape[1] / 3;
+    let x2 = x.clone().reshape(&[b * s, c]);
+    let z = dense_fwd(&x2, &params[0], &params[1]); // (B*S, 3D)
+    let mut sq = Tensor::zeros(&[b, s, d]);
+    let mut sk = Tensor::zeros(&[b, s, d]);
+    let mut v = Tensor::zeros(&[b, s, d]);
+    for bi in 0..b {
+        for t in 0..s {
+            let zrow = z.row(bi * s + t);
+            for j in 0..d {
+                *sq.at3_mut(bi, t, j) = sigmoid(zrow[j]);
+                *sk.at3_mut(bi, t, j) = sigmoid(zrow[d + j]);
+                *v.at3_mut(bi, t, j) = zrow[2 * d + j];
+            }
+        }
+    }
+    let mut p = Tensor::zeros(&[b, s, d]);
+    let mut a = Tensor::zeros(&[b, s, d]);
+    for bi in 0..b {
+        let mut run = vec![0.0f32; d];
+        for t in 0..s {
+            for j in 0..d {
+                run[j] += sk.at3(bi, t, j) * v.at3(bi, t, j);
+                *p.at3_mut(bi, t, j) = run[j];
+                *a.at3_mut(bi, t, j) = sq.at3(bi, t, j) * run[j] / (t + 1) as f32;
+            }
+        }
+    }
+    let a2 = a.reshape(&[b * s, d]);
+    let o = dense_fwd(&a2, &params[2], &params[3]);
+    let pre1 = dense_fwd(&o, &params[4], &params[5]);
+    let h1 = relu(&pre1);
+    let f2 = dense_fwd(&h1, &params[6], &params[7]);
+    let out = o.add(&f2).reshape(&[b, s, d]);
+    (
+        out,
+        AttnCache { x2, sq, sk, v, p, a2, o, pre1, h1, in_shape: (b, s, c) },
+    )
+}
+
+/// Backward: dout (B,S,D) -> (dx (B,S,C), grads aligned with the 8 params).
+pub fn attn_block_bwd(cache: &AttnCache, params: &[Tensor], dout: &Tensor) -> (Tensor, Vec<Tensor>) {
+    let (b, s, c) = cache.in_shape;
+    let d = params[0].shape[1] / 3;
+    let dout2 = dout.clone().reshape(&[b * s, d]);
+    // Residual: out = o + ffn2(relu(ffn1(o))).
+    let (dh1, dw2, db2) = dense_bwd(&cache.h1, &params[6], &dout2);
+    let dpre1 = relu_bwd(&cache.pre1, &dh1);
+    let (do_ffn, dw1, db1) = dense_bwd(&cache.o, &params[4], &dpre1);
+    let do_total = dout2.add(&do_ffn);
+    let (da2, dwp, dbp) = dense_bwd(&cache.a2, &params[2], &do_total);
+    let da = da2.reshape(&[b, s, d]);
+    // Mix backward: suffix-sum the prefix-pool gradient.
+    let mut dz = Tensor::zeros(&[b * s, 3 * d]);
+    for bi in 0..b {
+        let mut suffix = vec![0.0f32; d]; // Σ_{t≥t'} dP_t
+        for t in (0..s).rev() {
+            for j in 0..d {
+                let sq = cache.sq.at3(bi, t, j);
+                let dsq = da.at3(bi, t, j) * cache.p.at3(bi, t, j) / (t + 1) as f32;
+                suffix[j] += da.at3(bi, t, j) * sq / (t + 1) as f32;
+                let sk = cache.sk.at3(bi, t, j);
+                let dsk = suffix[j] * cache.v.at3(bi, t, j);
+                let dv = suffix[j] * sk;
+                let row = bi * s + t;
+                dz.data[row * 3 * d + j] = dsq * sq * (1.0 - sq);
+                dz.data[row * 3 * d + d + j] = dsk * sk * (1.0 - sk);
+                dz.data[row * 3 * d + 2 * d + j] = dv;
+            }
+        }
+    }
+    let (dx2, dwq, dbq) = dense_bwd(&cache.x2, &params[0], &dz);
+    let dx = dx2.reshape(&[b, s, c]);
+    (dx, vec![dwq, dbq, dwp, dbp, dw1, db1, dw2, db2])
+}
+
+// ---------------------------------------------------------------------------
 // The full model
 // ---------------------------------------------------------------------------
 
@@ -353,6 +464,17 @@ impl NativeModel {
             _s = (_s - k + 1) / 2;
             c = f;
         }
+        for &d in &cfg.attn {
+            params.push(glorot(rng, c, 3 * d, c, 3 * d));
+            params.push(Tensor::zeros(&[3 * d]));
+            params.push(glorot(rng, d, d, d, d));
+            params.push(Tensor::zeros(&[d]));
+            params.push(glorot(rng, d, 4 * d, d, 4 * d));
+            params.push(Tensor::zeros(&[4 * d]));
+            params.push(glorot(rng, 4 * d, d, 4 * d, d));
+            params.push(Tensor::zeros(&[d]));
+            c = d;
+        }
         for &u in &cfg.lstm {
             params.push(glorot(rng, c + u, 4 * u, c + u, 4 * u));
             let mut bias = Tensor::zeros(&[4 * u]);
@@ -362,7 +484,9 @@ impl NativeModel {
             params.push(bias);
             c = u;
         }
-        let mut feat = if cfg.lstm.is_empty() {
+        // Flatten only in the pure conv/dense case; LSTM takes the last
+        // hidden state and attention mean-pools, both leaving feat = c.
+        let mut feat = if cfg.lstm.is_empty() && cfg.attn.is_empty() {
             let mut s = cfg.window;
             for &(k, _) in &cfg.conv {
                 s = (s - k + 1) / 2;
@@ -396,7 +520,14 @@ impl NativeModel {
     fn forward_cached(
         &self,
         x: &Tensor,
-    ) -> (Vec<f32>, Vec<ConvCache>, Vec<(Tensor, LstmCache)>, Vec<(Tensor, Tensor)>, Tensor) {
+    ) -> (
+        Vec<f32>,
+        Vec<ConvCache>,
+        Vec<AttnCache>,
+        Vec<(Tensor, LstmCache)>,
+        Vec<(Tensor, Tensor)>,
+        Tensor,
+    ) {
         let b = x.shape[0];
         assert_eq!(x.shape[1], self.cfg.window);
         let mut h = x.clone().reshape(&[b, self.cfg.window, 1]);
@@ -407,6 +538,13 @@ impl NativeModel {
             conv_caches.push(cache);
             h = out;
             p += 2;
+        }
+        let mut attn_caches: Vec<AttnCache> = Vec::new();
+        for _d in &self.cfg.attn {
+            let (out, cache) = attn_block_fwd(&h, &self.params[p..p + 8]);
+            attn_caches.push(cache);
+            h = out;
+            p += 8;
         }
         let mut lstm_caches: Vec<(Tensor, LstmCache)> = Vec::new();
         if !self.cfg.lstm.is_empty() {
@@ -424,6 +562,18 @@ impl NativeModel {
                 last.extend_from_slice(&h.data[base..base + u]);
             }
             h = Tensor::from_vec(&[bb, u], last);
+        } else if !self.cfg.attn.is_empty() {
+            // Mean-pool the sequence (matches NetConfig::plan: no flatten).
+            let (bb, s, dd) = (h.shape[0], h.shape[1], h.shape[2]);
+            let mut pooled = vec![0.0f32; bb * dd];
+            for bi in 0..bb {
+                for t in 0..s {
+                    for j in 0..dd {
+                        pooled[bi * dd + j] += h.at3(bi, t, j) / s as f32;
+                    }
+                }
+            }
+            h = Tensor::from_vec(&[bb, dd], pooled);
         } else {
             let flat: usize = h.shape[1] * h.shape[2];
             h = h.reshape(&[b, flat]);
@@ -437,14 +587,15 @@ impl NativeModel {
             p += 2;
         }
         let preds = h.data.clone();
-        (preds, conv_caches, lstm_caches, dense_caches, h)
+        (preds, conv_caches, attn_caches, lstm_caches, dense_caches, h)
     }
 
     /// MSE loss + full gradient, replicating the Layer-2 `mse_loss`.
     pub fn loss_and_grad(&self, x: &Tensor, y: &[f32]) -> (f32, Vec<Tensor>) {
         let b = x.shape[0];
         assert_eq!(y.len(), b);
-        let (preds, conv_caches, lstm_caches, dense_caches, _out) = self.forward_cached(x);
+        let (preds, conv_caches, attn_caches, lstm_caches, dense_caches, _out) =
+            self.forward_cached(x);
         let loss = preds
             .iter()
             .zip(y)
@@ -502,6 +653,22 @@ impl NativeModel {
                 let _ = input;
                 dout = dx;
             }
+        } else if !self.cfg.attn.is_empty() {
+            // Mean-pool backward: spread the gradient uniformly over time.
+            let mut s = self.cfg.window;
+            for &(k, _) in &self.cfg.conv {
+                s = (s - k + 1) / 2;
+            }
+            let dd = *self.cfg.attn.last().unwrap();
+            let mut d_seq = Tensor::zeros(&[b, s, dd]);
+            for bi in 0..b {
+                for t in 0..s {
+                    for j in 0..dd {
+                        *d_seq.at3_mut(bi, t, j) = dout.at2(bi, j) / s as f32;
+                    }
+                }
+            }
+            dout = d_seq;
         } else if !self.cfg.conv.is_empty() {
             // un-flatten to (B, S, C) for the conv backward.
             let mut s = self.cfg.window;
@@ -513,6 +680,16 @@ impl NativeModel {
             dout = dout.reshape(&[b, s, c]);
         } else {
             dout = dout.reshape(&[b, self.cfg.window, 1]);
+        }
+
+        // Attention stack backward.
+        for i in (0..self.cfg.attn.len()).rev() {
+            p -= 8;
+            let (dx, block_grads) = attn_block_bwd(&attn_caches[i], &self.params[p..p + 8], &dout);
+            for (off, g) in block_grads.into_iter().enumerate() {
+                grads[p + off] = g;
+            }
+            dout = dx;
         }
 
         // Conv stack backward.
@@ -700,6 +877,47 @@ mod tests {
     #[test]
     fn grad_check_stacked_lstm() {
         grad_check(NetConfig::new(5, vec![], vec![3, 2], vec![1]), 5, 2e-3);
+    }
+
+    #[test]
+    fn grad_check_attn_dense() {
+        grad_check(NetConfig::new(6, vec![], vec![], vec![3, 1]).with_attn(vec![2]), 6, 3e-3);
+    }
+
+    #[test]
+    fn grad_check_conv_attn_lstm() {
+        grad_check(
+            NetConfig::new(12, vec![(3, 2)], vec![3], vec![1]).with_attn(vec![2]),
+            8,
+            3e-3,
+        );
+    }
+
+    #[test]
+    fn grad_check_stacked_attn() {
+        grad_check(NetConfig::new(5, vec![], vec![], vec![1]).with_attn(vec![2, 2]), 9, 3e-3);
+    }
+
+    #[test]
+    fn attn_training_reduces_loss() {
+        let cfg = NetConfig::new(16, vec![], vec![], vec![4, 1]).with_attn(vec![4]);
+        let mut rng = Rng::new(21);
+        let mut model = NativeModel::init(cfg.clone(), &mut rng);
+        let mut opt = Adam::new(
+            &model.params,
+            AdamConfig { lr: 5e-3, ..AdamConfig::default() },
+        );
+        let b = 16;
+        let x = rand_tensor(&mut rng, &[b, cfg.window]);
+        let y: Vec<f32> = (0..b)
+            .map(|i| x.row(i).iter().sum::<f32>() / cfg.window as f32)
+            .collect();
+        let first = train_step(&mut model, &mut opt, &x, &y);
+        let mut last = first;
+        for _ in 0..250 {
+            last = train_step(&mut model, &mut opt, &x, &y);
+        }
+        assert!(last < first * 0.5, "loss {first} -> {last}");
     }
 
     #[test]

@@ -127,7 +127,7 @@ pub fn build_quant_problem(
         );
         qchoices.push(qs);
     }
-    (DeployProblem { layers, latency_budget }, qchoices)
+    (DeployProblem { layers, latency_budget, fifo: None }, qchoices)
 }
 
 /// Total predicted RMSE inflation of a joint solution.

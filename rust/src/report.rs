@@ -455,6 +455,28 @@ pub fn table4_models() -> Vec<(&'static str, NetConfig)> {
     ]
 }
 
+/// The deep-plan catalog: 8–32-layer networks from the
+/// [`NetConfig`] deep constructors, servable by name next to the
+/// Table IV models (`ntorc serve` / `httpd` / `loadgen`, and
+/// `ntorc frontier --network <name>`). These are the streaming-era
+/// plans whose frontiers the adaptive-ε and FIFO-aware DP paths are
+/// sized for.
+pub fn deep_models() -> Vec<(&'static str, NetConfig)> {
+    vec![
+        ("deep_lstm8", NetConfig::stacked_lstm(64, 16, 8)),
+        ("conv_tower6", NetConfig::conv_tower(256, 3, 8, 6)),
+        ("transformer4", NetConfig::transformer(64, 16, 4)),
+    ]
+}
+
+/// Every network the CLI can name: the Table IV shallow plans plus the
+/// deep catalog.
+pub fn catalog_models() -> Vec<(&'static str, NetConfig)> {
+    let mut v = table4_models();
+    v.extend(deep_models());
+    v
+}
+
 pub struct Table4Row {
     pub network: String,
     pub solver: String,
@@ -629,8 +651,8 @@ pub fn table4_run(
         SolverKind::Frontier,
         &SolverOpts {
             workers: pipe.cfg.workers.max(1),
-            max_points: None,
             epsilon: Some(eps),
+            ..SolverOpts::default()
         },
     );
     let t0 = std::time::Instant::now();
@@ -730,11 +752,14 @@ pub fn frontier_sweep_run(
     let collapse_seconds = t0.elapsed().as_secs_f64();
     let t0 = std::time::Instant::now();
     // The sweep's whole contract is the cross-check below — exact, or
-    // within the proven (1+ε) bound. The telemetry-grade `max_points`
-    // thinning can break either, so this reporting path never applies
-    // it (matching the pre-guardrail behavior of `ntorc frontier`).
+    // within a proven (1+ε)-style cost bound. The telemetry-grade
+    // `max_points` thinning breaks that bound and bicriteria γ answers
+    // trade latency headroom instead of bounding cost, so this
+    // reporting path never applies either (matching the pre-guardrail
+    // behavior of `ntorc frontier`).
     let index = solver::configured_frontier(&SolverOpts {
         max_points: None,
+        latency_gamma: None,
         ..pipe.solver_opts()
     })
     .build(&prob);
@@ -742,10 +767,14 @@ pub fn frontier_sweep_run(
     let t0 = std::time::Instant::now();
     let solutions = index.sweep(budgets);
     let query_seconds = t0.elapsed().as_secs_f64();
-    // The replaced path, timed and cross-checked per budget.
+    // The replaced path, timed and cross-checked per budget — within
+    // the *realized* bound: ε for fixed-ε builds, the recorded
+    // per-level product for adaptive point-budget builds (their max
+    // when both modes are on, since the applied per-level δ is the
+    // larger of the two).
     let t0 = std::time::Instant::now();
     let stats = index
-        .cross_check_bb_within(&prob, budgets, epsilon)
+        .cross_check_bb_within(&prob, budgets, epsilon.max(index.stats.eps_effective))
         .unwrap_or_else(|e| panic!("{name}: frontier/B&B cross-check failed: {e}"));
     let bb_seconds_total = t0.elapsed().as_secs_f64();
     FrontierSweep {
@@ -769,13 +798,21 @@ pub fn frontier_sweep_rows(sweeps: &[FrontierSweep]) -> (Vec<&'static str>, Vec<
     let headers = vec![
         "network", "budget_cycles", "budget_us", "feasible", "cost", "latency_cycles",
         "frontier_points", "build_s", "sweep_queries_s", "bb_resolve_s", "epsilon",
+        "eps_effective", "fifo_bram",
     ];
     let mut rows = Vec::new();
     for sw in sweeps {
         for (b, sol) in sw.budgets.iter().zip(&sw.solutions) {
-            let (feasible, cost, lat) = match sol {
-                Some(s) => (true, f(s.cost, 0), f(s.latency, 0)),
-                None => (false, String::new(), String::new()),
+            let (feasible, cost, lat, fifo_bram) = match sol {
+                Some(s) => (
+                    true,
+                    f(s.cost, 0),
+                    f(s.latency, 0),
+                    // Stream-buffer share of the cost (0 under the
+                    // free-handoff model).
+                    f(sw.prob.fifo_cost_of(&s.pick), 1),
+                ),
+                None => (false, String::new(), String::new(), String::new()),
             };
             rows.push(vec![
                 sw.network.clone(),
@@ -789,6 +826,10 @@ pub fn frontier_sweep_rows(sweeps: &[FrontierSweep]) -> (Vec<&'static str>, Vec<
                 format!("{:.6}", sw.query_seconds),
                 format!("{:.6}", sw.bb_seconds_total),
                 f(sw.epsilon, 3),
+                // Realized adaptive-ε bound (equals `epsilon` for the
+                // fixed-ε path, 0 for exact builds).
+                f(sw.index.stats.eps_effective, 4),
+                fifo_bram,
             ]);
         }
     }
@@ -1032,6 +1073,22 @@ mod tests {
     }
 
     #[test]
+    fn deep_models_sit_in_the_deep_layer_band() {
+        let deep = deep_models();
+        assert_eq!(deep.len(), 3);
+        for (name, cfg) in &deep {
+            let n = cfg.plan().len();
+            assert!((8..=32).contains(&n), "{name}: {n} layers outside 8..=32");
+        }
+        // Names never collide with the shallow catalog.
+        let all = catalog_models();
+        let mut names: Vec<&str> = all.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
+    }
+
+    #[test]
     fn fig4_rows_cover_all_kinds() {
         let pipe = Pipeline::new(PipelineConfig::smoke());
         let (h, rows) = fig4_rows(&pipe);
@@ -1128,8 +1185,14 @@ mod tests {
         assert_eq!(sw.epsilon, 0.05);
         assert_eq!(sw.index.stats.epsilon, 0.05);
         let (h, rows) = frontier_sweep_rows(std::slice::from_ref(&sw));
-        assert_eq!(h.last(), Some(&"epsilon"));
-        assert!(rows.iter().all(|r| r.last() == Some(&"0.050".to_string())));
+        let eps_col = h.iter().position(|&c| c == "epsilon").unwrap();
+        assert!(rows.iter().all(|r| r[eps_col] == "0.050"));
+        // Fixed-ε builds report their configured ε as the realized bound.
+        let eff_col = h.iter().position(|&c| c == "eps_effective").unwrap();
+        assert!(rows.iter().all(|r| r[eff_col] == "0.0500"));
+        // No FIFO model on this sweep: the buffer column is zero.
+        let fifo_col = h.iter().position(|&c| c == "fifo_bram").unwrap();
+        assert!(rows.iter().all(|r| r[fifo_col] == "0.0"));
     }
 
     #[test]

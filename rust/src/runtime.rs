@@ -89,7 +89,7 @@ impl ModelMeta {
             name: name.to_string(),
             window,
             batch,
-            cfg: NetConfig { window, conv, lstm, dense },
+            cfg: NetConfig { window, conv, attn: vec![], lstm, dense },
             param_shapes,
             workload_multiplies: j.get("workload_multiplies")?.as_f64().context("workload")? as u64,
             predict_file: files.get("predict")?.as_str().context("predict file")?.to_string(),

@@ -289,6 +289,7 @@ mod tests {
                 vec![ch(1, 40.0, 2.0), ch(2, 20.0, 8.0)],
             ],
             latency_budget: 35.0,
+            fifo: None,
         }
     }
 
@@ -333,7 +334,7 @@ mod tests {
                         .collect()
                 })
                 .collect();
-            let prob = DeployProblem { layers, latency_budget: 0.0 };
+            let prob = DeployProblem { layers, latency_budget: 0.0, fifo: None };
             let index = ParetoFrontier::new(1).build(&prob);
             for _ in 0..6 {
                 let budget = rng.range_f64(10.0, 200.0).floor();
@@ -396,7 +397,7 @@ mod tests {
                 })
                 .collect();
             let budget = rng.range_f64(20.0, 120.0).floor();
-            let prob = DeployProblem { layers, latency_budget: budget };
+            let prob = DeployProblem { layers, latency_budget: budget, fifo: None };
             let exact = solve_bb(&prob);
             let st = stochastic_search(&prob, 300, rng.next_u64());
             let sa = simulated_annealing(&prob, 300, SaConfig::default(), rng.next_u64());

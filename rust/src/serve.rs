@@ -85,7 +85,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::{parallel_map, CostModels, LATENCY_BUDGET_CYCLES};
 use crate::frontier::{FrontierIndex, FrontierStats};
 use crate::layers::{LayerKind, NetConfig};
-use crate::mip::{DeployProblem, Solution};
+use crate::mip::{DeployProblem, FifoModel, Solution};
 use crate::rng::hash_fields;
 use crate::ser::{parse_json, BinReader, BinWriter, Json};
 use crate::solver::{configured_frontier, SolverOpts};
@@ -372,6 +372,13 @@ impl ServedFrontier {
             },
             epsilon: r.f64()?,
             eps_pruned: r.u64()?,
+            // Not part of the v1 binary layout (kept byte-stable): the
+            // adaptive-ε / latency-γ observability stats ride only the
+            // JSON interchange format. Answers are unaffected — the
+            // coarsening is baked into the point slabs themselves.
+            eps_effective: 0.0,
+            gamma_effective: 0.0,
+            lat_pruned: 0,
         };
         let mut reuse: Vec<Vec<usize>> = Vec::with_capacity(n_layers);
         for k in 0..n_layers {
@@ -1468,6 +1475,30 @@ pub struct ServeConfig {
     /// versa). `None` (or a non-positive value, normalized at
     /// construction) = exact.
     pub epsilon: Option<f64>,
+    /// Adaptive per-level point budget forwarded to
+    /// [`ParetoFrontier::with_point_budget`](crate::frontier::ParetoFrontier::with_point_budget)
+    /// (δ chosen per level, realized bound in
+    /// `FrontierStats::eps_effective`). Folded into every key with a
+    /// `pb-` slug prefix; `None` = off. Values below 2 are normalized up
+    /// at construction, mirroring the library clamp.
+    pub point_budget: Option<usize>,
+    /// FPTAS-style latency-axis coarsening forwarded to
+    /// [`ParetoFrontier::with_latency_gamma`](crate::frontier::ParetoFrontier::with_latency_gamma).
+    /// Bicriteria (answers may use up to (1+γ)× the asked budget), so it
+    /// is key-scoped (`gam-` prefix) and off by default; non-positive
+    /// values normalize to `None`.
+    pub latency_gamma: Option<f64>,
+    /// Stream-FIFO pricing: BRAM-equivalent cost per buffered slot on
+    /// each adjacent layer boundary ([`FifoModel`]). When set, resolved
+    /// problems carry a [`FifoModel`] whose per-boundary widths are the
+    /// producing layer's output feature dim, and the DP co-optimizes
+    /// reuse factors and buffer cost. Key-scoped (`fifo-` prefix, cost +
+    /// min-depth bits); `None` (or non-positive, normalized) = the
+    /// free-handoff model with keys bit-identical to FIFO-free releases.
+    pub fifo_cost_per_slot: Option<f64>,
+    /// Minimum FIFO depth per boundary (slots), only meaningful when
+    /// [`fifo_cost_per_slot`](Self::fifo_cost_per_slot) is set.
+    pub fifo_min_depth: f64,
     /// Workload identity scoped into every key ([`WorkloadKey`]).
     /// `None` leaves keys workload-agnostic (bare toy services; the
     /// pipeline always sets this).
@@ -1488,6 +1519,10 @@ impl Default for ServeConfig {
             latency_budget: LATENCY_BUDGET_CYCLES,
             max_points: None,
             epsilon: None,
+            point_budget: None,
+            latency_gamma: None,
+            fifo_cost_per_slot: None,
+            fifo_min_depth: 0.0,
             workload: None,
             backend: None,
         }
@@ -1589,13 +1624,25 @@ impl FrontierService {
         // key with None while building a different frontier.
         let max_points = cfg.max_points.map(|c| c.max(2));
         let epsilon = cfg.epsilon.filter(|e| *e > 0.0);
+        let point_budget = cfg.point_budget.map(|b| b.max(2));
+        let latency_gamma = cfg.latency_gamma.filter(|g| *g > 0.0);
+        let fifo_cost_per_slot = cfg.fifo_cost_per_slot.filter(|c| *c > 0.0);
         // The default backend is the identity the pre-backend pipeline
         // already minted keys under: normalizing it to None keeps every
         // existing store document warm (and Some("hls4ml") can never
         // diverge from None while serving the same frontiers).
         let backend = cfg.backend.filter(|b| b.name != crate::backend::DEFAULT);
         FrontierService {
-            cfg: ServeConfig { capacity, max_points, epsilon, backend, ..cfg },
+            cfg: ServeConfig {
+                capacity,
+                max_points,
+                epsilon,
+                point_budget,
+                latency_gamma,
+                fifo_cost_per_slot,
+                backend,
+                ..cfg
+            },
             store,
             state: Mutex::new(LruState { entries: HashMap::new(), tick: 0 }),
             stats: ServeStats::default(),
@@ -1635,6 +1682,19 @@ impl FrontierService {
         if let Some(e) = self.cfg.epsilon {
             fields.push(e.to_bits());
         }
+        // The streaming-solver knobs follow the same only-when-set rule:
+        // a service with none of them configured mints byte-identical
+        // keys (and store documents) to every pre-streaming release.
+        if let Some(b) = self.cfg.point_budget {
+            fields.push(b as u64);
+        }
+        if let Some(g) = self.cfg.latency_gamma {
+            fields.push(g.to_bits());
+        }
+        if let Some(c) = self.cfg.fifo_cost_per_slot {
+            fields.push(c.to_bits());
+            fields.push(self.cfg.fifo_min_depth.to_bits());
+        }
         if let Some(w) = &self.cfg.workload {
             fields.extend_from_slice(&w.mix_fields());
         }
@@ -1647,6 +1707,15 @@ impl FrontierService {
         let mut key = FrontierKey::for_net(net, self.cfg.max_choices_per_layer).mix(&fields);
         if self.cfg.epsilon.is_some() {
             key.name = format!("eps-{}", key.name);
+        }
+        if self.cfg.point_budget.is_some() {
+            key.name = format!("pb-{}", key.name);
+        }
+        if self.cfg.latency_gamma.is_some() {
+            key.name = format!("gam-{}", key.name);
+        }
+        if self.cfg.fifo_cost_per_slot.is_some() {
+            key.name = format!("fifo-{}", key.name);
         }
         if let Some(w) = &self.cfg.workload {
             key.name = format!("{}-{}", sanitize(&w.name), key.name);
@@ -1664,16 +1733,41 @@ impl FrontierService {
         self.key_for(net).mix(&[models.fingerprint()])
     }
 
+    /// The stream-FIFO pricing model for `plan` under this config, or
+    /// `None` when FIFO pricing is off. One boundary per adjacent layer
+    /// pair; the boundary width is the producing layer's output feature
+    /// dim (the elements a rate mismatch must buffer per handoff).
+    pub fn fifo_model_for(&self, plan: &[crate::layers::LayerSpec]) -> Option<FifoModel> {
+        let cost = self.cfg.fifo_cost_per_slot?;
+        if plan.len() < 2 {
+            return None;
+        }
+        let widths = plan[..plan.len() - 1].iter().map(|l| l.n_out as f64).collect();
+        Some(FifoModel { cost_per_slot: cost, min_depth: self.cfg.fifo_min_depth, widths })
+    }
+
+    /// Attach the configured FIFO model to a freshly built problem (a
+    /// no-op when pricing is off or the builder's layer count diverges
+    /// from the plan).
+    fn price_streams(&self, prob: DeployProblem, plan: &[crate::layers::LayerSpec]) -> DeployProblem {
+        match self.fifo_model_for(plan) {
+            Some(f) if prob.layers.len() == plan.len() => prob.with_fifo(f),
+            _ => prob,
+        }
+    }
+
     /// Resolve the frontier for one network, collapsing the cost models
     /// into the deployment problem only on a full miss.
     pub fn resolve(&self, models: &CostModels, net: &NetConfig) -> Arc<ServedFrontier> {
         self.resolve_with(self.model_key(models, net), || {
-            models.build_problem_parallel(
-                &net.plan(),
+            let plan = net.plan();
+            let prob = models.build_problem_parallel(
+                &plan,
                 self.cfg.latency_budget,
                 self.cfg.max_choices_per_layer,
                 self.cfg.workers,
-            )
+            );
+            self.price_streams(prob, &plan)
         })
     }
 
@@ -1722,6 +1816,8 @@ impl FrontierService {
                 workers: self.cfg.workers,
                 max_points: self.cfg.max_points,
                 epsilon: self.cfg.epsilon,
+                point_budget: self.cfg.point_budget,
+                latency_gamma: self.cfg.latency_gamma,
             })
             .build(&prob)
         };
@@ -1786,17 +1882,21 @@ impl FrontierService {
                 requests,
                 key_of.unwrap_or(&|net| self.model_key(models, net)),
                 &|net| {
-                    models.build_problem_parallel(
-                        &net.plan(),
+                    let plan = net.plan();
+                    let prob = models.build_problem_parallel(
+                        &plan,
                         self.cfg.latency_budget,
                         self.cfg.max_choices_per_layer,
                         self.cfg.workers,
-                    )
+                    );
+                    self.price_streams(prob, &plan)
                 },
             ),
-            (BatchSource::Builder(build), key_of) => {
-                self.batch_impl(requests, key_of.unwrap_or(&|net| self.key_for(net)), *build)
-            }
+            (BatchSource::Builder(build), key_of) => self.batch_impl(
+                requests,
+                key_of.unwrap_or(&|net| self.key_for(net)),
+                &|net| self.price_streams(build(net), &net.plan()),
+            ),
         }
     }
 
@@ -1905,7 +2005,7 @@ mod tests {
                     .collect()
             })
             .collect();
-        DeployProblem { layers, latency_budget: 0.0 }
+        DeployProblem { layers, latency_budget: 0.0, fifo: None }
     }
 
     fn toy_key(tag: u64) -> FrontierKey {

@@ -188,11 +188,26 @@ pub struct SolverOpts {
     /// ([`ParetoFrontier::with_epsilon`]): answers within (1+ε)× the
     /// exact optimum. `None` = exact.
     pub epsilon: Option<f64>,
+    /// Adaptive per-level point budget
+    /// ([`ParetoFrontier::with_point_budget`]): δ chosen per level, the
+    /// realized bound lands in `FrontierStats::eps_effective`. `None` =
+    /// off.
+    pub point_budget: Option<usize>,
+    /// FPTAS-style latency-axis coarsening
+    /// ([`ParetoFrontier::with_latency_gamma`]) — bicriteria, offline
+    /// sweeps only. `None` = exact latencies.
+    pub latency_gamma: Option<f64>,
 }
 
 impl Default for SolverOpts {
     fn default() -> Self {
-        SolverOpts { workers: 1, max_points: None, epsilon: None }
+        SolverOpts {
+            workers: 1,
+            max_points: None,
+            epsilon: None,
+            point_budget: None,
+            latency_gamma: None,
+        }
     }
 }
 
@@ -212,6 +227,8 @@ pub fn configured_frontier(opts: &SolverOpts) -> ParetoFrontier {
     ParetoFrontier::new(opts.workers.max(1))
         .with_max_points(opts.max_points)
         .with_epsilon(opts.epsilon)
+        .with_point_budget(opts.point_budget)
+        .with_latency_gamma(opts.latency_gamma)
 }
 
 #[cfg(test)]
@@ -233,7 +250,7 @@ mod tests {
                     .collect()
             })
             .collect();
-        DeployProblem { layers, latency_budget: 0.0 }
+        DeployProblem { layers, latency_budget: 0.0, fifo: None }
     }
 
     #[test]

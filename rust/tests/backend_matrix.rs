@@ -37,7 +37,7 @@ fn toy_problem(tag: u64) -> DeployProblem {
                 .collect()
         })
         .collect();
-    DeployProblem { layers, latency_budget: 0.0 }
+    DeployProblem { layers, latency_budget: 0.0, fifo: None }
 }
 
 #[test]

@@ -25,6 +25,10 @@ fn serve_cfg() -> ServeConfig {
         latency_budget: 50_000.0,
         max_points: None,
         epsilon: None,
+        point_budget: None,
+        latency_gamma: None,
+        fifo_cost_per_slot: None,
+        fifo_min_depth: 0.0,
         workload: None,
         backend: None,
     }
@@ -56,7 +60,7 @@ fn toy_builder(delay_ms: u64) -> Arc<dyn Fn(&NetConfig) -> DeployProblem + Send 
                     .collect()
             })
             .collect();
-        DeployProblem { layers, latency_budget: 0.0 }
+        DeployProblem { layers, latency_budget: 0.0, fifo: None }
     })
 }
 

@@ -23,6 +23,10 @@ fn serve_cfg() -> ServeConfig {
         latency_budget: 50_000.0,
         max_points: None,
         epsilon: None,
+        point_budget: None,
+        latency_gamma: None,
+        fifo_cost_per_slot: None,
+        fifo_min_depth: 0.0,
         workload: None,
         backend: None,
     }

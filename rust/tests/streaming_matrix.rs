@@ -1,0 +1,185 @@
+//! Streaming-mode key scoping (the PR's acceptance bar): the FIFO /
+//! adaptive-ε / latency-γ serving knobs must (1) mint distinct frontier
+//! keys per mode — zero cross-mode hits over one shared store, (2)
+//! leave keys bit-identical to the pre-streaming release whenever every
+//! knob is off (including knobs set to their normalized-off values),
+//! and (3) carry deep catalog plans through the same key/serve/store
+//! machinery as the shallow Table IV models.
+
+use ntorc::layers::NetConfig;
+use ntorc::mip::{Choice, DeployProblem};
+use ntorc::rng::Rng;
+use ntorc::serve::{FrontierService, FrontierStore, ServeConfig};
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ntorc_stmx_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Deterministic toy deployment problem (no cost models needed).
+fn toy_problem(tag: u64) -> DeployProblem {
+    let mut rng = Rng::new(0x57AE_A0 ^ tag);
+    let layers = (0..3)
+        .map(|_| {
+            (0..4)
+                .map(|j| Choice {
+                    reuse: 1 << j,
+                    cost: 500.0 / (j + 1) as f64 + rng.range_f64(0.0, 20.0),
+                    latency: (8 * (j + 1)) as f64 + rng.range_f64(0.0, 3.0).floor(),
+                })
+                .collect()
+        })
+        .collect();
+    DeployProblem { layers, latency_budget: 0.0, fifo: None }
+}
+
+fn shallow_net() -> NetConfig {
+    NetConfig::new(32, vec![(3, 4)], vec![], vec![8, 1])
+}
+
+/// One service per streaming mode, all sharing `dir`.
+fn mode_services(dir: &std::path::Path) -> Vec<(&'static str, FrontierService)> {
+    let mk = |cfg: ServeConfig| FrontierService::new(cfg, Some(FrontierStore::new(dir)));
+    vec![
+        ("plain", mk(ServeConfig::default())),
+        (
+            "fifo",
+            mk(ServeConfig { fifo_cost_per_slot: Some(0.5), ..ServeConfig::default() }),
+        ),
+        (
+            "fifo-deep",
+            // Same per-slot cost, different min depth: still distinct.
+            mk(ServeConfig {
+                fifo_cost_per_slot: Some(0.5),
+                fifo_min_depth: 2.0,
+                ..ServeConfig::default()
+            }),
+        ),
+        (
+            "adaptive",
+            mk(ServeConfig { point_budget: Some(64), ..ServeConfig::default() }),
+        ),
+        (
+            "gamma",
+            mk(ServeConfig { latency_gamma: Some(0.1), ..ServeConfig::default() }),
+        ),
+    ]
+}
+
+#[test]
+fn streaming_modes_never_collide_in_a_shared_store() {
+    let dir = temp_dir("shared");
+    let net = shallow_net();
+    let services = mode_services(&dir);
+    let keys: Vec<_> = services.iter().map(|(_, s)| s.key_for(&net)).collect();
+    for i in 0..keys.len() {
+        for j in i + 1..keys.len() {
+            assert_ne!(
+                keys[i].hash, keys[j].hash,
+                "{} / {} keys collided",
+                services[i].0, services[j].0
+            );
+        }
+    }
+    // Readable slugs: each mode carries its prefix, plain carries none.
+    assert!(!keys[0].name.contains("fifo-"));
+    assert!(!keys[0].name.contains("pb-"));
+    assert!(!keys[0].name.contains("gam-"));
+    assert!(keys[1].name.starts_with("fifo-"));
+    assert!(keys[2].name.starts_with("fifo-"));
+    assert!(keys[3].name.starts_with("pb-"));
+    assert!(keys[4].name.starts_with("gam-"));
+    // Cold pass: every mode builds its own frontier despite the shared
+    // directory filling up around it — zero cross-mode store hits.
+    for (i, (name, svc)) in services.iter().enumerate() {
+        svc.resolve_with(svc.key_for(&net), || toy_problem(i as u64));
+        let s = svc.stats.snapshot();
+        assert_eq!((s.builds, s.store_hits), (1, 0), "{name}: cross-mode store hit");
+    }
+    assert_eq!(FrontierStore::new(&dir).list().len(), services.len());
+    // Fresh services per mode over the same store: store hits only, and
+    // each loads the document built from its own problem.
+    for (i, (name, _)) in mode_services(&dir).into_iter().enumerate() {
+        let fresh = mode_services(&dir).remove(i).1;
+        let served = fresh.resolve_with(fresh.key_for(&net), || {
+            unreachable!("store must answer")
+        });
+        let s = fresh.stats.snapshot();
+        assert_eq!((s.builds, s.store_hits), (0, 1), "{name}");
+        let expect = ntorc::frontier::ParetoFrontier::new(1).build(&toy_problem(i as u64));
+        assert_eq!(served.index.len(), expect.len(), "{name}: wrong document served");
+        for k in 0..expect.len() {
+            assert_eq!(served.index.point(k), expect.point(k), "{name}: point {k}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn knobs_at_their_off_values_keep_pre_streaming_keys() {
+    // The byte-compat pin: a config whose streaming knobs are all at
+    // their normalized-off values mints EXACTLY the default key — same
+    // hash, same slug — so shallow-plan stores written before the
+    // streaming release stay warm. (The absolute PR 9 hash itself is
+    // pinned by serve::tests::key_hash_is_pinned.)
+    for net in [shallow_net(), NetConfig::new(64, vec![], vec![8], vec![16, 1])] {
+        let plain = FrontierService::new(ServeConfig::default(), None);
+        let off = FrontierService::new(
+            ServeConfig {
+                point_budget: None,
+                latency_gamma: Some(0.0), // normalizes to None
+                fifo_cost_per_slot: Some(-1.0), // normalizes to None
+                fifo_min_depth: 3.0, // irrelevant without fifo pricing
+                ..ServeConfig::default()
+            },
+            None,
+        );
+        assert_eq!(plain.key_for(&net), off.key_for(&net));
+    }
+}
+
+#[test]
+fn fifo_widths_follow_the_plan_and_deep_plans_flow_through_serving() {
+    let svc = FrontierService::new(
+        ServeConfig { fifo_cost_per_slot: Some(0.25), fifo_min_depth: 1.5, ..ServeConfig::default() },
+        None,
+    );
+    // Per-boundary widths are the producing layer's output feature dim.
+    let net = shallow_net();
+    let plan = net.plan();
+    let fifo = svc.fifo_model_for(&plan).expect("pricing is on");
+    assert_eq!(fifo.widths.len(), plan.len() - 1);
+    for (w, l) in fifo.widths.iter().zip(&plan) {
+        assert_eq!(*w, l.n_out as f64);
+    }
+    assert_eq!(fifo.cost_per_slot, 0.25);
+    assert_eq!(fifo.min_depth, 1.5);
+    // Single-layer plans have no boundary to price.
+    let single = NetConfig::new(16, vec![], vec![], vec![1]);
+    assert!(svc.fifo_model_for(&single.plan()).is_none());
+
+    // A deep catalog plan (transformer lowering, 18 deployed layers)
+    // keys and serves exactly like the shallow models: its own distinct
+    // key per mode, resolved and cached through the same store.
+    let deep = NetConfig::transformer(64, 16, 4);
+    assert_eq!(deep.plan().len(), 18);
+    let dir = temp_dir("deep");
+    for cfg in [
+        ServeConfig::default(),
+        ServeConfig { fifo_cost_per_slot: Some(0.5), ..ServeConfig::default() },
+    ] {
+        let svc = FrontierService::new(cfg, Some(FrontierStore::new(&dir)));
+        assert_ne!(svc.key_for(&deep).hash, svc.key_for(&shallow_net()).hash);
+        svc.resolve_with(svc.key_for(&deep), || toy_problem(99));
+        let s = svc.stats.snapshot();
+        assert_eq!(s.builds, 1);
+        // Warm within the same service.
+        svc.resolve_with(svc.key_for(&deep), || unreachable!("must be cached"));
+        assert_eq!(svc.stats.snapshot().mem_hits, 1);
+    }
+    // Two documents: the FIFO-mode deep frontier never shadowed the
+    // plain one.
+    assert_eq!(FrontierStore::new(&dir).list().len(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
